@@ -1,0 +1,138 @@
+//! The paper's framework claim (§3.3): "the framework is generic to host
+//! various synchronization algorithms ... the development of sync
+//! algorithms can be completely separated from training code."
+//!
+//! This example demonstrates that separation: a *new* synchronization
+//! algorithm — sign-compressed EASGD, which pushes only the sign of the
+//! replica-to-central difference (1-bit-SGD-style, per the paper's related
+//! work on quantization) — implemented purely against the public
+//! `SyncStrategy` trait and run as a shadow thread, with zero changes to
+//! trainers, workers, or the coordinator.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example custom_sync
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use shadowsync::config::{EmbeddingConfig, RunConfig, SyncAlgo};
+use shadowsync::coordinator;
+use shadowsync::metrics::Metrics;
+use shadowsync::net::{Network, Role};
+use shadowsync::runtime::Runtime;
+use shadowsync::sync::driver::spawn_shadow;
+use shadowsync::sync::{SyncCtx, SyncPsGroup, SyncStrategy};
+use shadowsync::tensor::HogwildBuffer;
+
+/// Sign-compressed elastic sync: moves each side a *fixed step* in the
+/// direction of the other, costing 1 bit/param on the wire instead of 32.
+struct SignEasgd {
+    group: Arc<SyncPsGroup>,
+    step: f32,
+}
+
+impl SyncStrategy for SignEasgd {
+    fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
+        let central = &self.group.central;
+        let mut gap = 0f64;
+        for i in 0..ctx.local.len() {
+            let l = ctx.local.get(i);
+            let c = central.get(i);
+            let d = l - c;
+            gap += d.abs() as f64;
+            let s = self.step * d.signum();
+            central.set(i, c + s.min(d.abs()).max(-d.abs()));
+            ctx.local.set(i, l - s.min(d.abs()).max(-d.abs()));
+        }
+        // 1 bit per param each way (vs 32 for full EASGD)
+        let bytes = (ctx.local.len() as u64).div_ceil(8) * 2;
+        ctx.metrics.record_sync(bytes);
+        Ok((gap / ctx.local.len() as f64) as f32)
+    }
+
+    fn name(&self) -> &'static str {
+        "sign-easgd"
+    }
+}
+
+fn main() -> Result<()> {
+    // 1) quick unit-style demo of the strategy semantics
+    let mut net = Network::new(None);
+    let node = net.add_node(Role::Trainer);
+    let group = Arc::new(SyncPsGroup::build(&vec![0.0; 8], 1, &mut net));
+    let local = HogwildBuffer::from_slice(&vec![1.0; 8]);
+    let metrics = Metrics::new();
+    let mut s = SignEasgd { group: group.clone(), step: 0.05 };
+    let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+    for _ in 0..40 {
+        s.sync_round(&ctx)?;
+    }
+    println!(
+        "after 40 sign-sync rounds: local[0]={:.2}, central[0]={:.2} (converging at ±step)",
+        local.get(0),
+        group.central.get(0)
+    );
+
+    // 2) full training run: baseline S-EASGD vs the custom strategy wired
+    //    into real trainers via the shadow driver
+    let cfg = RunConfig {
+        preset: "tiny".into(),
+        artifacts_dir: "artifacts".into(),
+        num_trainers: 2,
+        worker_threads: 2,
+        num_embedding_ps: 2,
+        num_sync_ps: 1,
+        train_examples: 40_000,
+        eval_examples: 8_000,
+        embedding: EmbeddingConfig { rows_per_table: 1_000, ..Default::default() },
+        shadow_interval_ms: 2,
+        ..Default::default()
+    };
+    let rt = Runtime::cpu()?;
+    let baseline = coordinator::run_timed(&cfg, &rt)?;
+    println!(
+        "\nbaseline  S-EASGD : eval loss {:.5}, NE {:.4}, sync bytes {}",
+        baseline.eval.avg_loss(),
+        baseline.eval.ne(),
+        baseline.metrics.sync_bytes
+    );
+
+    // same cluster, but we drive our own shadow threads with SignEasgd
+    let mut cfg2 = cfg.clone();
+    cfg2.algo = SyncAlgo::None; // coordinator spawns no built-in sync
+    let cluster = coordinator::build(&cfg2, &rt)?;
+    let group = Arc::new(SyncPsGroup::build(
+        &cluster.model.w0,
+        1,
+        // a private accounting fabric for the custom tier
+        &mut Network::new(None),
+    ));
+    let mut shadows = Vec::new();
+    for t in &cluster.trainers {
+        shadows.push(spawn_shadow(
+            Box::new(SignEasgd { group: group.clone(), step: 0.004 }),
+            t.replica.clone(),
+            t.node,
+            cluster.net.clone(),
+            cluster.metrics.clone(),
+            t.stop_shadow.clone(),
+            std::time::Duration::from_millis(2),
+            t.id,
+        ));
+    }
+    coordinator::train(&cluster)?;
+    for h in shadows {
+        h.join().unwrap()?;
+    }
+    let custom = coordinator::finish(cluster)?;
+    println!(
+        "custom  sign-EASGD: eval loss {:.5}, NE {:.4}, sync bytes {} ({}x less wire)",
+        custom.eval.avg_loss(),
+        custom.eval.ne(),
+        custom.metrics.sync_bytes,
+        (baseline.metrics.sync_bytes.max(1)) / custom.metrics.sync_bytes.max(1),
+    );
+    println!("\nno trainer/coordinator code was modified to host the new algorithm");
+    Ok(())
+}

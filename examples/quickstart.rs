@@ -1,0 +1,42 @@
+//! Quickstart: train a tiny DLRM one-pass with Shadow EASGD and print the
+//! metrics the paper reports (train loss, eval loss, NE, EPS, avg sync gap).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use shadowsync::config::{EmbeddingConfig, RunConfig};
+use shadowsync::coordinator;
+use shadowsync::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let cfg = RunConfig {
+        preset: "tiny".into(),
+        artifacts_dir: "artifacts".into(),
+        num_trainers: 2,
+        worker_threads: 2,
+        num_embedding_ps: 2,
+        num_sync_ps: 1,
+        train_examples: 40_000,
+        eval_examples: 8_000,
+        embedding: EmbeddingConfig { rows_per_table: 1_000, ..Default::default() },
+        ..Default::default()
+    };
+    println!("ShadowSync quickstart: {} on preset {:?}", cfg.label(), cfg.preset);
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let out = coordinator::run_timed(&cfg, &rt)?;
+    println!("\n== results ==");
+    println!("examples trained   {}", out.metrics.examples);
+    println!("train loss         {:.5}", out.train_loss);
+    println!("eval loss          {:.5}", out.eval.avg_loss());
+    println!("eval NE            {:.5}  (1.0 = base-rate predictor)", out.eval.ne());
+    println!("calibration        {:.4}", out.eval.calibration());
+    println!("EPS                {:.0}", out.eps);
+    println!("avg sync gap       {:.2}  (paper Eq. 2)", out.avg_sync_gap);
+    println!("sync rounds        {}", out.metrics.syncs);
+    println!("sync PS traffic    {} bytes", out.sync_ps_bytes);
+    println!("ELP                {}", out.elp);
+    Ok(())
+}

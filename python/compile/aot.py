@@ -1,0 +1,91 @@
+"""AOT compiler: lower the L2 train/eval steps to HLO text per preset.
+
+Emits HLO *text* (NOT lowered.compiler_ir(...).serialize()): jax >= 0.5
+writes HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via `make artifacts`:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Per preset this writes
+    train_<name>.hlo.txt   (w, dense, pooled_emb, labels) ->
+                           (loss_sum, grad_w, grad_emb)
+    eval_<name>.hlo.txt    (w, dense, pooled_emb, labels) ->
+                           (loss_sum, sum_p, sum_label)
+    <name>.meta.json       shapes + param count, consumed by rust/src/runtime
+plus w0_<name>.bin, the seeded initial flat parameter vector (f32 LE), so the
+rust trainer and the python reference start from identical bits.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .presets import PRESETS
+
+SEED = 20200630  # paper date; used for w0 init
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_preset(preset):
+    b = preset.batch
+    specs = (
+        jax.ShapeDtypeStruct((preset.num_params,), jnp.float32),              # w
+        jax.ShapeDtypeStruct((b, preset.num_dense), jnp.float32),             # dense
+        jax.ShapeDtypeStruct((b, preset.num_tables, preset.emb_dim), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.float32),                              # labels
+    )
+    train = jax.jit(model.train_step(preset)).lower(*specs)
+    evalf = jax.jit(model.eval_step(preset)).lower(*specs)
+    return to_hlo_text(train), to_hlo_text(evalf)
+
+
+def write_preset(preset, out_dir: str) -> None:
+    train_txt, eval_txt = lower_preset(preset)
+    with open(os.path.join(out_dir, f"train_{preset.name}.hlo.txt"), "w") as f:
+        f.write(train_txt)
+    with open(os.path.join(out_dir, f"eval_{preset.name}.hlo.txt"), "w") as f:
+        f.write(eval_txt)
+    meta = preset.meta()
+    meta["seed"] = SEED
+    meta["artifact_version"] = 1
+    with open(os.path.join(out_dir, f"{preset.name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    w0 = model.init_params(preset, SEED)
+    import numpy as np
+
+    np.asarray(w0, dtype="<f4").tofile(os.path.join(out_dir, f"w0_{preset.name}.bin"))
+    print(f"  {preset.name}: P={preset.num_params} B={preset.batch} "
+          f"train={len(train_txt)}B eval={len(eval_txt)}B")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default=",".join(PRESETS),
+                    help="comma-separated preset names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n for n in args.presets.split(",") if n]
+    print(f"AOT-lowering {len(names)} preset(s) -> {args.out_dir}")
+    for name in names:
+        write_preset(PRESETS[name], args.out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

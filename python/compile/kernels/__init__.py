@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the DLRM compute hot-spots.
+
+- `interaction`: pairwise dot-product feature interaction (fwd + custom VJP)
+- `linear_act`: fused dense layer act(x @ W + b) (fwd + custom VJP)
+- `ref`: pure-jnp oracles used by pytest/hypothesis for correctness
+"""
+
+from .interaction import interaction, gather_tril, tril_indices_flat  # noqa: F401
+from .mlp import linear_act  # noqa: F401
+from .util import pick_block, vmem_bytes_interaction, vmem_bytes_linear  # noqa: F401

@@ -1,0 +1,98 @@
+"""Pallas kernel for DLRM pairwise dot-product feature interaction.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): GPU DLRMs implement this as
+a batched GEMM on tensor cores; here each batch block of the [B, F, D]
+embedding stack is staged into VMEM via BlockSpec, Z = E @ E^T is one MXU
+dot_general per block, and the strict-lower-triangle gather stays *outside*
+the kernel (a static XLA gather) because scatter/gather inside Mosaic kernels
+is the wrong idiom — masked selects and dense matmuls are.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import pick_block
+
+
+def _fwd_kernel(e_ref, z_ref):
+    e = e_ref[...]  # [Bblk, F, D] in VMEM
+    # One MXU-shaped dot_general per block: contract D, batch over Bblk.
+    z_ref[...] = jax.lax.dot_general(
+        e, e, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+
+
+def _bwd_kernel(e_ref, dz_ref, de_ref):
+    e = e_ref[...]
+    dz = dz_ref[...]
+    sym = dz + jnp.swapaxes(dz, 1, 2)  # Z is built from E twice -> symmetrize
+    de_ref[...] = jax.lax.dot_general(
+        sym, e, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+
+
+def _fwd_call(emb, block):
+    b, f, d = emb.shape
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(b // block,),
+        in_specs=[pl.BlockSpec((block, f, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block, f, f), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, f), jnp.float32),
+        interpret=True,
+    )(emb)
+
+
+def _bwd_call(emb, dz, block):
+    b, f, d = emb.shape
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((block, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, f, f), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, f, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, d), jnp.float32),
+        interpret=True,
+    )(emb, dz)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def interaction(emb, block=None):
+    """z[b,i,j] = <emb[b,i,:], emb[b,j,:]> for emb: [B, F, D].
+
+    `block` is the batch tile staged into VMEM per grid step (must divide B;
+    auto-picked when None). Differentiable via a hand-written Pallas VJP.
+    """
+    return _fwd_call(emb, block or pick_block(emb.shape[0]))
+
+
+def _vjp_fwd(emb, block):
+    return _fwd_call(emb, block or pick_block(emb.shape[0])), emb
+
+
+def _vjp_bwd(block, emb, dz):
+    return (_bwd_call(emb, dz, block or pick_block(emb.shape[0])),)
+
+
+interaction.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def tril_indices_flat(f: int):
+    """Static flat indices of the strict lower triangle of an FxF matrix,
+    ordered row-major — the layout rust's feature extractor also assumes."""
+    rows, cols = jnp.tril_indices(f, k=-1)
+    return rows * f + cols
+
+
+def gather_tril(z):
+    """[B, F, F] -> [B, F*(F-1)/2] strict-lower-triangle features."""
+    b, f, _ = z.shape
+    return z.reshape(b, f * f)[:, tril_indices_flat(f)]

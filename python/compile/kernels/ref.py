@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps) assert
+that every Pallas kernel matches its oracle to float32 tolerance, and that the
+custom VJPs match jax.grad through the oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def interaction_fwd(emb):
+    """Pairwise dot products of feature embeddings.
+
+    emb: [B, F, D]  ->  z: [B, F, F] with z[b,i,j] = <emb[b,i], emb[b,j]>.
+    (Triangle extraction happens outside the kernel with a static gather.)
+    """
+    return jnp.einsum("bfd,bgd->bfg", emb, emb)
+
+
+def interaction_bwd(emb, dz):
+    """VJP of interaction_fwd w.r.t. emb: dE = (dZ + dZ^T) @ E."""
+    return jnp.einsum("bfg,bgd->bfd", dz + jnp.swapaxes(dz, 1, 2), emb)
+
+
+def linear_act_fwd(x, w, b, relu=True):
+    """Dense layer y = act(x @ w + b). x: [B, In], w: [In, Out], b: [Out]."""
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def linear_act_bwd(x, w, y, dy, relu=True):
+    """VJP of linear_act_fwd. `y` is the forward output (used for the ReLU
+    mask; exact for y != 0, and the subgradient at 0 is taken as 0)."""
+    g = jnp.where(y > 0.0, dy, 0.0) if relu else dy
+    dx = g @ w.T
+    dw = x.T @ g
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db

@@ -1,0 +1,26 @@
+"""Small shared helpers for kernel blocking."""
+
+
+def pick_block(b: int, target: int = 128) -> int:
+    """Largest divisor of b that is <= target.
+
+    Pallas grids need the block to tile the batch exactly; presets use batch
+    sizes (32/64/128/200) whose divisors land close to the VMEM-friendly
+    target.
+    """
+    if b <= target:
+        return b
+    for cand in range(target, 0, -1):
+        if b % cand == 0:
+            return cand
+    return 1  # unreachable: 1 always divides b
+
+
+def vmem_bytes_interaction(block: int, f: int, d: int) -> int:
+    """Estimated VMEM footprint of one interaction fwd grid step (f32)."""
+    return 4 * (block * f * d + block * f * f)
+
+
+def vmem_bytes_linear(block: int, n_in: int, n_out: int) -> int:
+    """Estimated VMEM footprint of one fused linear+act fwd grid step (f32)."""
+    return 4 * (block * n_in + n_in * n_out + n_out + block * n_out)

@@ -1,0 +1,158 @@
+"""L2: the DLRM dense-side compute graph (forward + backward), in JAX.
+
+The model covers exactly the layers the paper data-parallelizes across
+trainers (Fig. 2): bottom MLP over dense features, pairwise dot-product
+feature interaction, top MLP to a CTR logit, binary cross-entropy loss.
+Embedding lookup/pooling/update is *model*-parallel and lives on the rust
+embedding parameter servers; this graph receives already-pooled embeddings
+and emits the gradient w.r.t. them, which rust scatters back into the tables.
+
+Parameter layout contract with rust (DESIGN.md §1): all MLP weights+biases
+travel as one flat f32 vector `w` of length `preset.num_params`, ordered
+bottom-MLP-first, each layer as [W row-major | b]. Rust treats `w` opaquely —
+Hogwild apply, EASGD interpolation, AllReduce and BMUF are flat-vector ops —
+so the layout only needs to agree between `flatten_params` here and the
+initializer below (which rust re-implements bit-for-bit, seeded).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .presets import ModelPreset
+
+
+def unflatten_params(w, preset: ModelPreset):
+    """Slice the flat vector into [(W, b), ...] for bottom then top MLP."""
+    bot, top = preset.mlp_dims()
+    layers, off = [], 0
+    for n_in, n_out in bot + top:
+        wmat = jax.lax.dynamic_slice_in_dim(w, off, n_in * n_out).reshape(n_in, n_out)
+        off += n_in * n_out
+        bvec = jax.lax.dynamic_slice_in_dim(w, off, n_out)
+        off += n_out
+        layers.append((wmat, bvec))
+    nbot = len(bot)
+    return layers[:nbot], layers[nbot:]
+
+
+def init_params(preset: ModelPreset, seed: int = 0):
+    """He-uniform init of the flat parameter vector.
+
+    Rust's `dense_init` reproduces this exactly (same splitmix64-based
+    scheme), so a rust trainer and this reference start from identical bits.
+    Uses a simple counter-based generator rather than jax PRNG on purpose:
+    splitmix64 is trivial to replicate in rust.
+    """
+    import numpy as np
+
+    bot, top = preset.mlp_dims()
+    out = np.empty(preset.num_params, dtype=np.float32)
+    off = 0
+
+    def splitmix64(x):
+        x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        z = x
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return z ^ (z >> 31)
+
+    idx = np.arange(preset.num_params, dtype=np.uint64)
+    base = np.uint64(splitmix64(seed ^ 0x5EED_0F_DA7A))
+    # vectorized splitmix64 over (base + i)
+    x = (idx + base + np.uint64(0x9E3779B97F4A7C15)) * np.uint64(1)
+    z = x
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    u = (z >> np.uint64(40)).astype(np.float32) / np.float32(1 << 24)  # [0,1)
+
+    for n_in, n_out in bot + top:
+        scale = np.sqrt(6.0 / n_in).astype(np.float32)
+        nw = n_in * n_out
+        out[off : off + nw] = (u[off : off + nw] * 2.0 - 1.0) * scale
+        off += nw
+        out[off : off + n_out] = 0.0  # biases start at zero
+        off += n_out
+    return jnp.asarray(out)
+
+
+def forward(w, dense, pooled_emb, preset: ModelPreset):
+    """Dense-side DLRM forward. Returns the per-example logit [B]."""
+    bot, top = unflatten_params(w, preset)
+    x = dense
+    for wmat, bvec in bot:
+        x = kernels.linear_act(x, wmat, bvec, True)
+    # Bottom-MLP output joins the pooled embeddings as feature 0.
+    feats = jnp.concatenate([x[:, None, :], pooled_emb], axis=1)  # [B, F, D]
+    z = kernels.gather_tril(kernels.interaction(feats))           # [B, F(F-1)/2]
+    t = jnp.concatenate([x, z], axis=1)                           # [B, top_in]
+    for i, (wmat, bvec) in enumerate(top):
+        t = kernels.linear_act(t, wmat, bvec, i + 1 < len(top))
+    return t[:, 0]
+
+
+def bce_with_logits(logits, labels):
+    """Numerically stable binary cross-entropy, summed over the batch."""
+    return jnp.sum(jnp.maximum(logits, 0.0) - logits * labels
+                   + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def loss_fn(w, dense, pooled_emb, labels, preset: ModelPreset):
+    return bce_with_logits(forward(w, dense, pooled_emb, preset), labels)
+
+
+def train_step(preset: ModelPreset):
+    """(w, dense, pooled_emb, labels) -> (loss_sum, grad_w, grad_emb).
+
+    This is the function AOT-lowered per preset; the optimizer step itself
+    (Adagrad) is applied rust-side so Hogwild semantics stay in rust.
+    """
+
+    def step(w, dense, pooled_emb, labels):
+        loss, (gw, gemb) = jax.value_and_grad(loss_fn, argnums=(0, 2))(
+            w, dense, pooled_emb, labels, preset
+        )
+        return loss, gw, gemb
+
+    return step
+
+
+def eval_step(preset: ModelPreset):
+    """(w, dense, pooled_emb, labels) -> (loss_sum, sum_p, sum_label).
+
+    sum_p / sum_label feed the normalized-entropy and calibration metrics
+    rust aggregates across the evaluation pass.
+    """
+
+    def step(w, dense, pooled_emb, labels):
+        logits = forward(w, dense, pooled_emb, preset)
+        return (
+            bce_with_logits(logits, labels),
+            jnp.sum(jax.nn.sigmoid(logits)),
+            jnp.sum(labels),
+        )
+
+    return step
+
+
+# --- pure-jnp reference twin (no pallas) for gradient cross-checks ---------
+
+
+def forward_ref(w, dense, pooled_emb, preset: ModelPreset):
+    from .kernels import ref
+
+    bot, top = unflatten_params(w, preset)
+    x = dense
+    for wmat, bvec in bot:
+        x = ref.linear_act_fwd(x, wmat, bvec, True)
+    feats = jnp.concatenate([x[:, None, :], pooled_emb], axis=1)
+    z = kernels.gather_tril(ref.interaction_fwd(feats))
+    t = jnp.concatenate([x, z], axis=1)
+    for i, (wmat, bvec) in enumerate(top):
+        t = ref.linear_act_fwd(t, wmat, bvec, i + 1 < len(top))
+    return t[:, 0]
+
+
+def loss_fn_ref(w, dense, pooled_emb, labels, preset: ModelPreset):
+    return bce_with_logits(forward_ref(w, dense, pooled_emb, preset), labels)

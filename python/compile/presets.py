@@ -1,0 +1,89 @@
+"""Model presets shared by the AOT compiler, tests, and (via meta.json) rust.
+
+The paper trains three production DLRMs (Model-A/B/C) whose exact shapes are
+confidential. We define open stand-ins with the same architecture family
+(Naumov et al. 2019): bottom MLP over dense features, sum-pooled embeddings,
+pairwise dot-product feature interaction, top MLP to a single CTR logit.
+
+Only the *dense* side is compiled here; embedding tables live on the rust
+embedding parameter servers (model parallelism), so a preset's `num_tables`
+and `emb_dim` fix the pooled-embedding input shape but table row counts are a
+rust-side config knob.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelPreset:
+    """Static shape description of one DLRM variant (dense side)."""
+
+    name: str
+    batch: int                 # examples per training step (baked into the HLO)
+    num_dense: int             # numerical features per example
+    num_tables: int            # categorical features == embedding tables
+    emb_dim: int               # embedding dimension D (bottom MLP also ends at D)
+    bot_mlp: tuple             # hidden sizes of bottom MLP; last entry must be emb_dim
+    top_mlp: tuple             # hidden sizes of top MLP; final 1-unit logit appended
+
+    @property
+    def num_feats(self) -> int:
+        """F = embedding features + the bottom-MLP output treated as a feature."""
+        return self.num_tables + 1
+
+    @property
+    def num_interactions(self) -> int:
+        """Strict lower triangle of the FxF dot-product matrix."""
+        f = self.num_feats
+        return f * (f - 1) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.emb_dim + self.num_interactions
+
+    def mlp_dims(self):
+        """[(in, out), ...] for bottom then top MLP (logit layer included)."""
+        bot, top = [], []
+        prev = self.num_dense
+        for h in self.bot_mlp:
+            bot.append((prev, h))
+            prev = h
+        assert prev == self.emb_dim, f"{self.name}: bottom MLP must end at emb_dim"
+        prev = self.top_in
+        for h in tuple(self.top_mlp) + (1,):
+            top.append((prev, h))
+            prev = h
+        return bot, top
+
+    @property
+    def num_params(self) -> int:
+        """P: length of the flat dense-parameter vector w."""
+        bot, top = self.mlp_dims()
+        return sum(i * o + o for i, o in bot + top)
+
+    def meta(self) -> dict:
+        d = asdict(self)
+        d.update(
+            num_feats=self.num_feats,
+            num_interactions=self.num_interactions,
+            top_in=self.top_in,
+            num_params=self.num_params,
+        )
+        return d
+
+
+# Stand-ins for the paper's Model-A/B/C, plus a tiny preset for tests and CI.
+PRESETS = {
+    p.name: p
+    for p in [
+        ModelPreset("tiny", batch=32, num_dense=4, num_tables=4, emb_dim=8,
+                    bot_mlp=(16, 8), top_mlp=(16,)),
+        ModelPreset("model_a", batch=64, num_dense=13, num_tables=8, emb_dim=16,
+                    bot_mlp=(64, 32, 16), top_mlp=(64, 32)),
+        ModelPreset("model_b", batch=128, num_dense=13, num_tables=12, emb_dim=16,
+                    bot_mlp=(128, 64, 16), top_mlp=(128, 64)),
+        # batch 200 matches the paper's ShadowSync row in Table 1.
+        ModelPreset("model_c", batch=200, num_dense=13, num_tables=16, emb_dim=24,
+                    bot_mlp=(128, 64, 24), top_mlp=(128, 64, 32)),
+    ]
+}

@@ -1,0 +1,57 @@
+"""AOT path: HLO text is emitted, parseable in shape, and meta is consistent."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.presets import PRESETS
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.write_preset(PRESETS["tiny"], str(out))
+    return str(out)
+
+
+def test_hlo_text_has_entry_and_params(tiny_artifacts):
+    txt = open(os.path.join(tiny_artifacts, "train_tiny.hlo.txt")).read()
+    assert "ENTRY" in txt and "HloModule" in txt
+    p = PRESETS["tiny"]
+    # all four parameters appear with their exact shapes
+    assert f"f32[{p.num_params}]" in txt
+    assert f"f32[{p.batch},{p.num_dense}]" in txt
+    assert f"f32[{p.batch},{p.num_tables},{p.emb_dim}]" in txt
+
+
+def test_hlo_no_custom_calls(tiny_artifacts):
+    """interpret=True pallas must lower to plain HLO — a Mosaic custom-call
+    would be unloadable by the rust CPU PJRT client."""
+    for name in ("train_tiny.hlo.txt", "eval_tiny.hlo.txt"):
+        txt = open(os.path.join(tiny_artifacts, name)).read()
+        assert "custom-call" not in txt, f"{name} contains a custom-call"
+
+
+def test_meta_matches_preset(tiny_artifacts):
+    meta = json.load(open(os.path.join(tiny_artifacts, "tiny.meta.json")))
+    p = PRESETS["tiny"]
+    assert meta["num_params"] == p.num_params
+    assert meta["batch"] == p.batch
+    assert meta["num_feats"] == p.num_tables + 1
+    assert meta["num_interactions"] == p.num_feats * (p.num_feats - 1) // 2
+    assert meta["seed"] == aot.SEED
+
+
+def test_w0_bin_roundtrip(tiny_artifacts):
+    p = PRESETS["tiny"]
+    w0 = np.fromfile(os.path.join(tiny_artifacts, "w0_tiny.bin"), dtype="<f4")
+    assert w0.shape == (p.num_params,)
+    np.testing.assert_array_equal(w0, np.asarray(model.init_params(p, aot.SEED)))
+
+
+def test_all_presets_distinct_param_counts():
+    counts = [p.num_params for p in PRESETS.values()]
+    assert len(set(counts)) == len(counts)

@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (pytest + hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- interaction
+
+
+class TestInteraction:
+    def test_matches_ref(self):
+        e = rand(0, (32, 5, 8))
+        np.testing.assert_allclose(
+            kernels.interaction(e), ref.interaction_fwd(e), rtol=1e-5, atol=1e-5
+        )
+
+    def test_symmetry(self):
+        z = kernels.interaction(rand(1, (16, 4, 8)))
+        np.testing.assert_allclose(z, jnp.swapaxes(z, 1, 2), rtol=1e-6)
+
+    def test_diagonal_is_squared_norm(self):
+        e = rand(2, (8, 3, 4))
+        z = kernels.interaction(e)
+        diag = jnp.diagonal(z, axis1=1, axis2=2)
+        np.testing.assert_allclose(diag, jnp.sum(e * e, axis=2), rtol=1e-5)
+
+    def test_grad_matches_ref(self):
+        e = rand(3, (16, 4, 8))
+
+        def f_pallas(e):
+            return jnp.sum(jnp.sin(kernels.interaction(e)))
+
+        def f_ref(e):
+            return jnp.sum(jnp.sin(ref.interaction_fwd(e)))
+
+        np.testing.assert_allclose(
+            jax.grad(f_pallas)(e), jax.grad(f_ref)(e), rtol=1e-4, atol=1e-5
+        )
+
+    def test_explicit_block(self):
+        e = rand(4, (32, 4, 8))
+        np.testing.assert_allclose(
+            kernels.interaction(e, 8), kernels.interaction(e, 32), rtol=1e-6
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.sampled_from([4, 8, 16, 24, 32]),
+        f=st.integers(2, 9),
+        d=st.sampled_from([2, 4, 8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, b, f, d, seed):
+        e = rand(seed, (b, f, d))
+        np.testing.assert_allclose(
+            kernels.interaction(e), ref.interaction_fwd(e), rtol=1e-4, atol=1e-5
+        )
+
+    def test_gather_tril_order(self):
+        # row-major strict lower triangle: (1,0),(2,0),(2,1),(3,0)...
+        f = 4
+        z = jnp.arange(f * f, dtype=jnp.float32).reshape(1, f, f)
+        got = kernels.gather_tril(z)[0]
+        want = [z[0, i, j] for i in range(f) for j in range(i)]
+        np.testing.assert_array_equal(got, jnp.array(want))
+
+
+# ------------------------------------------------------------------ fused MLP
+
+
+class TestLinearAct:
+    @pytest.mark.parametrize("relu", [True, False])
+    def test_matches_ref(self, relu):
+        x, w, b = rand(0, (32, 12)), rand(1, (12, 7)), rand(2, (7,))
+        np.testing.assert_allclose(
+            kernels.linear_act(x, w, b, relu),
+            ref.linear_act_fwd(x, w, b, relu),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    @pytest.mark.parametrize("relu", [True, False])
+    def test_grad_matches_jax(self, relu):
+        x, w, b = rand(3, (16, 6)), rand(4, (6, 5)), rand(5, (5,))
+
+        def f(fn):
+            def g(x, w, b):
+                return jnp.sum(jnp.cos(fn(x, w, b, relu)))
+            return g
+
+        got = jax.grad(f(kernels.linear_act), argnums=(0, 1, 2))(x, w, b)
+        want = jax.grad(f(ref.linear_act_fwd), argnums=(0, 1, 2))(x, w, b)
+        for g, wnt in zip(got, want):
+            np.testing.assert_allclose(g, wnt, rtol=1e-4, atol=1e-5)
+
+    def test_cross_block_dw_accumulation(self):
+        # dW reduces over the batch across grid steps; force multiple blocks.
+        x, w, b = rand(6, (32, 4)), rand(7, (4, 3)), rand(8, (3,))
+
+        def f(fn, blk):
+            def g(w_):
+                return jnp.sum(fn(x, w_, b, True, blk) ** 2)
+            return g
+
+        got = jax.grad(f(lambda *a: kernels.linear_act(*a), 4))(w)
+        want = jax.grad(lambda w_: jnp.sum(ref.linear_act_fwd(x, w_, b) ** 2))(w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.sampled_from([4, 8, 16, 32]),
+        n_in=st.integers(1, 24),
+        n_out=st.integers(1, 24),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, b, n_in, n_out, relu, seed):
+        x = rand(seed, (b, n_in))
+        w = rand(seed + 1, (n_in, n_out))
+        bias = rand(seed + 2, (n_out,))
+        np.testing.assert_allclose(
+            kernels.linear_act(x, w, bias, relu),
+            ref.linear_act_fwd(x, w, bias, relu),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+class TestPickBlock:
+    @given(b=st.integers(1, 4096), target=st.integers(1, 128))
+    @settings(max_examples=100, deadline=None)
+    def test_divides_and_bounded(self, b, target):
+        blk = kernels.pick_block(b, target)
+        assert b % blk == 0
+        assert blk <= max(target, 1) or blk == b <= target
+
+    def test_known_values(self):
+        # default target 128 (see EXPERIMENTS.md §Perf: fewer, larger grid
+        # blocks measurably speed the lowered module on CPU PJRT)
+        assert kernels.pick_block(200) == 100
+        assert kernels.pick_block(128) == 128
+        assert kernels.pick_block(32) == 32
+        assert kernels.pick_block(200, 32) == 25

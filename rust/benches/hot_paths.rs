@@ -1,0 +1,95 @@
+//! End-to-end hot-path benchmarks (cargo bench — custom harness since
+//! criterion isn't in the offline vendor set).
+//!
+//! These are the per-stage instruments for the §Perf pass: the worker-loop
+//! stages (batch generation, embedding lookup, XLA train step, Hogwild
+//! Adagrad apply, embedding update) and the full loop, per preset.
+//! `BENCH_MS` overrides the per-benchmark budget (default 1500 ms).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use shadowsync::config::{EmbeddingConfig, ModelMeta};
+use shadowsync::data::{Batch, TeacherModel};
+use shadowsync::embedding::EmbeddingSystem;
+use shadowsync::net::{Network, Role};
+use shadowsync::optim::HogwildAdagrad;
+use shadowsync::runtime::Runtime;
+use shadowsync::tensor::HogwildBuffer;
+use shadowsync::util::bench::bench;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    if !artifacts_dir().join("tiny.meta.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let budget = Duration::from_millis(
+        std::env::var("BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500),
+    );
+    let rt = Runtime::cpu().unwrap();
+
+    for preset in ["tiny", "model_a", "model_c"] {
+        let meta = match ModelMeta::load(&artifacts_dir(), preset) {
+            Ok(m) => m,
+            Err(_) => continue,
+        };
+        let emb_cfg = EmbeddingConfig::default();
+        let model = rt.load_model(&meta, &artifacts_dir()).unwrap();
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let embeddings = EmbeddingSystem::build(&meta, &emb_cfg, 2, &mut net, 7).unwrap();
+        let teacher = TeacherModel::new(&meta, &emb_cfg, 7);
+        let mut batch = Batch::empty(&meta, &emb_cfg);
+        let ids: Vec<u64> = (0..meta.batch as u64).collect();
+        teacher.fill_batch(&mut batch, &ids);
+
+        let replica = HogwildBuffer::from_slice(&model.w0);
+        let opt = HogwildAdagrad::new(meta.num_params, 0.02, 1e-8);
+        let mut io = model.new_io();
+
+        let r = bench(&format!("{preset}/gen_batch"), budget, || {
+            teacher.fill_batch(&mut batch, &ids);
+            std::hint::black_box(&batch);
+        });
+        let gen_eps = r.throughput(meta.batch as f64);
+
+        bench(&format!("{preset}/emb_lookup"), budget, || {
+            embeddings.lookup_batch(&batch.indices, batch.size, &mut io.pooled_host, trainer, &net);
+            std::hint::black_box(&io.pooled_host);
+        });
+
+        let r = bench(&format!("{preset}/xla_train_step"), budget, || {
+            replica.read_into(&mut io.w_host);
+            let loss = model.train_step(&mut io, &batch.dense, &batch.labels).unwrap();
+            std::hint::black_box(loss);
+        });
+        let step_eps = r.throughput(meta.batch as f64);
+
+        bench(&format!("{preset}/adagrad_apply"), budget, || {
+            opt.apply(&replica, &io.grad_w);
+        });
+
+        bench(&format!("{preset}/emb_update"), budget, || {
+            embeddings.update_batch(&batch.indices, batch.size, &io.grad_emb, trainer, &net);
+        });
+
+        let r = bench(&format!("{preset}/full_worker_iteration"), budget, || {
+            embeddings.lookup_batch(&batch.indices, batch.size, &mut io.pooled_host, trainer, &net);
+            replica.read_into(&mut io.w_host);
+            let loss = model.train_step(&mut io, &batch.dense, &batch.labels).unwrap();
+            opt.apply(&replica, &io.grad_w);
+            embeddings.update_batch(&batch.indices, batch.size, &io.grad_emb, trainer, &net);
+            std::hint::black_box(loss);
+        });
+        println!(
+            "  -> {preset}: single-thread EPS {:.0} (xla-only {:.0}, gen {:.0})\n",
+            r.throughput(meta.batch as f64),
+            step_eps,
+            gen_eps,
+        );
+    }
+}

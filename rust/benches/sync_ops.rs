@@ -1,0 +1,86 @@
+//! Synchronization-primitive benchmarks: what a shadow round costs at
+//! various parameter sizes, and how the AllReduce scales with membership.
+//! These correspond to the sync columns of the paper's Fig. 5/6 and feed
+//! the §Perf iteration log.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use shadowsync::metrics::Metrics;
+use shadowsync::net::{Network, Role};
+use shadowsync::sync::{AllReduceGroup, SyncPsGroup};
+use shadowsync::tensor::{ops, HogwildBuffer};
+use shadowsync::util::bench::bench;
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1200),
+    );
+
+    // EASGD elastic round at dense-param sizes from tiny to paper-ish
+    for p in [537usize, 9_009, 42_585, 1_000_000] {
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let group = SyncPsGroup::build(&vec![0.1; p], 2, &mut net);
+        let local = HogwildBuffer::from_slice(&vec![0.2; p]);
+        let r = bench(&format!("easgd_round/P={p}"), budget, || {
+            std::hint::black_box(group.elastic_sync(&local, 0.5, tnode, &net));
+        });
+        println!("  -> {:.1} M params/s\n", p as f64 / (r.mean_ns / 1e3) );
+    }
+
+    // Hogwild snapshot + interpolation primitives
+    for p in [9_009usize, 1_000_000] {
+        let buf = HogwildBuffer::from_slice(&vec![1.0; p]);
+        let mut out = vec![0f32; p];
+        bench(&format!("replica_snapshot/P={p}"), budget, || {
+            buf.read_into(&mut out);
+            std::hint::black_box(&out);
+        });
+        let target = vec![0.5f32; p];
+        bench(&format!("lerp_toward/P={p}"), budget, || {
+            buf.lerp_toward_slice(&target, 0.01);
+        });
+        let mut a = vec![1.0f32; p];
+        let b = vec![2.0f32; p];
+        bench(&format!("plain_lerp/P={p}"), budget, || {
+            ops::lerp(&mut a, &b, 0.01);
+            std::hint::black_box(&a);
+        });
+    }
+
+    // AllReduce across real threads (the MA/BMUF shadow collective)
+    for members in [2usize, 4] {
+        let p = 42_585;
+        let group = Arc::new(AllReduceGroup::new(members, p));
+        let metrics = Arc::new(Metrics::new());
+        let _ = &metrics;
+        // peers loop until told to stop
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut peers = Vec::new();
+        for _ in 1..members {
+            let g = group.clone();
+            let stop = stop.clone();
+            peers.push(std::thread::spawn(move || {
+                let mut v = vec![1.0f32; p];
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    if g.allreduce_mean(&mut v).is_err() {
+                        break;
+                    }
+                }
+                g.leave();
+            }));
+        }
+        let mut mine = vec![2.0f32; p];
+        bench(&format!("allreduce_mean/n={members}/P={p}"), budget, || {
+            group.allreduce_mean(&mut mine).unwrap();
+            std::hint::black_box(&mine);
+        });
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        group.leave(); // unblock any pending round, then collect peers
+        for h in peers {
+            h.join().unwrap();
+        }
+    }
+    println!("\nsync_ops done");
+}

@@ -1,0 +1,385 @@
+//! Configuration: model metadata (from AOT artifacts) + system/run config.
+//!
+//! `ModelMeta` is the rust-side view of `artifacts/<preset>.meta.json`
+//! written by `python/compile/aot.py` — the single source of truth for the
+//! shapes baked into the HLO. `RunConfig` describes one distributed-training
+//! run: topology (trainers / worker threads / embedding PSs / sync PSs),
+//! the sync algorithm + mode, optimizer hyper-parameters, and data sizes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Static shape info of one AOT-compiled model preset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub batch: usize,
+    pub num_dense: usize,
+    pub num_tables: usize,
+    pub emb_dim: usize,
+    pub num_feats: usize,
+    pub num_interactions: usize,
+    pub num_params: usize,
+    pub seed: u64,
+    pub bot_mlp: Vec<usize>,
+    pub top_mlp: Vec<usize>,
+}
+
+impl ModelMeta {
+    pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Self> {
+        let path = artifacts_dir.join(format!("{preset}.meta.json"));
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first?)"))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Self> {
+        let j = Json::parse(src)?;
+        let list = |key: &str| -> Result<Vec<usize>> {
+            j.get(key)
+                .with_context(|| format!("missing {key}"))?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect()
+        };
+        let m = Self {
+            name: j.get("name").context("missing name")?.as_str()?.to_string(),
+            batch: j.req_usize("batch")?,
+            num_dense: j.req_usize("num_dense")?,
+            num_tables: j.req_usize("num_tables")?,
+            emb_dim: j.req_usize("emb_dim")?,
+            num_feats: j.req_usize("num_feats")?,
+            num_interactions: j.req_usize("num_interactions")?,
+            num_params: j.req_usize("num_params")?,
+            seed: j.req_usize("seed")? as u64,
+            bot_mlp: list("bot_mlp")?,
+            top_mlp: list("top_mlp")?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.num_feats != self.num_tables + 1 {
+            bail!("meta inconsistent: num_feats != num_tables + 1");
+        }
+        let f = self.num_feats;
+        if self.num_interactions != f * (f - 1) / 2 {
+            bail!("meta inconsistent: num_interactions");
+        }
+        if *self.bot_mlp.last().unwrap_or(&0) != self.emb_dim {
+            bail!("meta inconsistent: bottom MLP must end at emb_dim");
+        }
+        // recompute P from the layer dims and cross-check
+        if self.layer_dims().iter().map(|(i, o)| i * o + o).sum::<usize>() != self.num_params {
+            bail!("meta inconsistent: num_params");
+        }
+        Ok(())
+    }
+
+    /// [(in, out), ...] bottom then top MLP incl. the final 1-unit logit —
+    /// mirrors `ModelPreset.mlp_dims` on the python side.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::new();
+        let mut prev = self.num_dense;
+        for &h in &self.bot_mlp {
+            dims.push((prev, h));
+            prev = h;
+        }
+        let top_in = self.emb_dim + self.num_interactions;
+        prev = top_in;
+        for &h in self.top_mlp.iter().chain(std::iter::once(&1)) {
+            dims.push((prev, h));
+            prev = h;
+        }
+        dims
+    }
+
+    pub fn train_hlo(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("train_{}.hlo.txt", self.name))
+    }
+
+    pub fn eval_hlo(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("eval_{}.hlo.txt", self.name))
+    }
+
+    pub fn w0_bin(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("w0_{}.bin", self.name))
+    }
+}
+
+/// Which synchronization algorithm the shadow/foreground driver runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncAlgo {
+    /// Elastic averaging against central params on sync PSs (centralized).
+    Easgd,
+    /// Model averaging via AllReduce (decentralized).
+    Ma,
+    /// Blockwise model-update filtering via AllReduce (decentralized).
+    Bmuf,
+    /// No synchronization at all (independent sub-models baseline).
+    None,
+}
+
+impl std::str::FromStr for SyncAlgo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "easgd" => Self::Easgd,
+            "ma" => Self::Ma,
+            "bmuf" => Self::Bmuf,
+            "none" => Self::None,
+            _ => bail!("unknown sync algo {s:?} (easgd|ma|bmuf|none)"),
+        })
+    }
+}
+
+impl std::fmt::Display for SyncAlgo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::Easgd => "easgd",
+            Self::Ma => "ma",
+            Self::Bmuf => "bmuf",
+            Self::None => "none",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Shadow (background thread, free-running) vs fixed-rate (foreground,
+/// every-k-iterations) synchronization — the paper's central comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    Shadow,
+    /// Sync every `gap` worker-thread iterations, inline in training.
+    FixedRate { gap: u32 },
+    /// Foreground sync whose gap interpolates from `start` to `end` over
+    /// the one-pass shard — the paper's §4.1.1 conjecture that "a
+    /// time-varying sync gap would be favorable for FR-EASGD".
+    Decaying { start: u32, end: u32 },
+}
+
+impl SyncMode {
+    pub fn label(&self, algo: SyncAlgo) -> String {
+        match self {
+            SyncMode::Shadow => format!("S-{}", algo.to_string().to_uppercase()),
+            SyncMode::FixedRate { gap } => {
+                format!("FR-{}-{gap}", algo.to_string().to_uppercase())
+            }
+            SyncMode::Decaying { start, end } => {
+                format!("FR-{}-{start}→{end}", algo.to_string().to_uppercase())
+            }
+        }
+    }
+}
+
+/// Optimizer applied by the embedding PSs, Hogwild-style, with auxiliary
+/// state collocated with the rows (paper §3.2: "Adagrad, Adam, Rmsprop or
+/// other algorithms").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EmbOptimizer {
+    /// row-wise Adagrad: `G_r += mean(g²)` (the paper's production default)
+    Adagrad,
+    /// row-wise RMSProp: `G_r = ρ·G_r + (1-ρ)·mean(g²)`
+    RmsProp { decay: f32 },
+    /// Adam with per-element first moment and row-wise second moment; no
+    /// bias correction (a per-row step counter would be racy under Hogwild)
+    Adam { beta1: f32, beta2: f32 },
+}
+
+impl std::str::FromStr for EmbOptimizer {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "adagrad" => Self::Adagrad,
+            "rmsprop" => Self::RmsProp { decay: 0.99 },
+            "adam" => Self::Adam { beta1: 0.9, beta2: 0.999 },
+            _ => bail!("unknown embedding optimizer {s:?} (adagrad|rmsprop|adam)"),
+        })
+    }
+}
+
+/// Embedding-side configuration (tables live rust-side; rows are a run knob).
+#[derive(Debug, Clone)]
+pub struct EmbeddingConfig {
+    /// rows per table (all tables equal size for simplicity)
+    pub rows_per_table: usize,
+    /// sparse indices per (example, table) — multi-hot pooling width
+    pub indices_per_feature: usize,
+    pub learning_rate: f32,
+    pub adagrad_eps: f32,
+    pub optimizer: EmbOptimizer,
+}
+
+impl Default for EmbeddingConfig {
+    fn default() -> Self {
+        Self {
+            rows_per_table: 10_000,
+            indices_per_feature: 3,
+            learning_rate: 0.04,
+            adagrad_eps: 1e-8,
+            optimizer: EmbOptimizer::Adagrad,
+        }
+    }
+}
+
+/// One full distributed-training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub preset: String,
+    pub artifacts_dir: PathBuf,
+    /// n in the paper: number of trainer processes (replication parallelism)
+    pub num_trainers: usize,
+    /// m: Hogwild worker threads per trainer (24 in the paper)
+    pub worker_threads: usize,
+    pub num_embedding_ps: usize,
+    /// sync PSs (EASGD only; decentralized algos use 0)
+    pub num_sync_ps: usize,
+    pub algo: SyncAlgo,
+    pub mode: SyncMode,
+    /// elastic parameter alpha (Algorithms 2–4)
+    pub alpha: f32,
+    /// BMUF step size eta and block momentum
+    pub bmuf_eta: f32,
+    pub bmuf_momentum: f32,
+    /// dense-side Adagrad
+    pub learning_rate: f32,
+    pub adagrad_eps: f32,
+    pub embedding: EmbeddingConfig,
+    /// one-pass training set size (examples) and eval set size
+    pub train_examples: u64,
+    pub eval_examples: u64,
+    pub data_seed: u64,
+    /// reader service batches buffered per trainer
+    pub reader_queue_depth: usize,
+    /// optional cap on reader throughput (batches/sec per trainer); models
+    /// the under-provisioned reader service of the paper's 20-trainer run
+    pub reader_rate_limit: Option<f64>,
+    /// throttle between shadow sync rounds (0 = free-running)
+    pub shadow_interval_ms: u64,
+    /// simulated wall time of one MA/BMUF collective (models paper-scale
+    /// AllReduce wire time; 0 = in-process instantaneous)
+    pub collective_wire_ms: u64,
+    /// inject simulated wire latency per network transfer (quality runs
+    /// leave this off; see `sim/` for throughput modelling)
+    pub simulate_network: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            preset: "tiny".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            num_trainers: 2,
+            worker_threads: 2,
+            num_embedding_ps: 2,
+            num_sync_ps: 1,
+            algo: SyncAlgo::Easgd,
+            mode: SyncMode::Shadow,
+            alpha: 0.5,
+            bmuf_eta: 1.0,
+            bmuf_momentum: 0.0,
+            learning_rate: 0.02,
+            adagrad_eps: 1e-8,
+            embedding: EmbeddingConfig::default(),
+            train_examples: 100_000,
+            eval_examples: 20_000,
+            data_seed: 1,
+            reader_queue_depth: 4,
+            reader_rate_limit: None,
+            shadow_interval_ms: 0,
+            collective_wire_ms: 0,
+            simulate_network: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.num_trainers == 0 || self.worker_threads == 0 {
+            bail!("need at least one trainer and one worker thread");
+        }
+        if self.num_embedding_ps == 0 {
+            bail!("need at least one embedding PS");
+        }
+        if self.algo == SyncAlgo::Easgd && self.num_sync_ps == 0 {
+            bail!("EASGD is centralized: need at least one sync PS");
+        }
+        if !(0.0..=1.0).contains(&self.alpha) {
+            bail!("alpha must be in [0, 1]");
+        }
+        Ok(())
+    }
+
+    /// Example Level Parallelism (paper Definition 2):
+    /// batch × Hogwild threads × replicas.
+    pub fn elp(&self, batch: usize) -> u64 {
+        batch as u64 * self.worker_threads as u64 * self.num_trainers as u64
+    }
+
+    pub fn label(&self) -> String {
+        self.mode.label(self.algo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+      "artifact_version": 1, "batch": 32, "bot_mlp": [16, 8], "emb_dim": 8,
+      "name": "tiny", "num_dense": 4, "num_feats": 5, "num_interactions": 10,
+      "num_params": 537, "num_tables": 4, "seed": 20200630,
+      "top_in": 18, "top_mlp": [16]
+    }"#;
+
+    #[test]
+    fn parses_meta() {
+        let m = ModelMeta::parse(META).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.num_params, 537);
+        assert_eq!(m.layer_dims(), vec![(4, 16), (16, 8), (18, 16), (16, 1)]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_meta() {
+        let bad = META.replace("\"num_params\": 537", "\"num_params\": 538");
+        assert!(ModelMeta::parse(&bad).is_err());
+        let bad2 = META.replace("\"num_feats\": 5", "\"num_feats\": 6");
+        assert!(ModelMeta::parse(&bad2).is_err());
+    }
+
+    #[test]
+    fn sync_algo_parse_and_label() {
+        assert_eq!("easgd".parse::<SyncAlgo>().unwrap(), SyncAlgo::Easgd);
+        assert!("nope".parse::<SyncAlgo>().is_err());
+        assert_eq!(SyncMode::Shadow.label(SyncAlgo::Easgd), "S-EASGD");
+        assert_eq!(SyncMode::FixedRate { gap: 30 }.label(SyncAlgo::Ma), "FR-MA-30");
+    }
+
+    #[test]
+    fn run_config_validation() {
+        let mut c = RunConfig::default();
+        c.validate().unwrap();
+        c.num_sync_ps = 0;
+        assert!(c.validate().is_err()); // EASGD needs a sync PS
+        c.algo = SyncAlgo::Ma;
+        c.validate().unwrap();
+        c.alpha = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn elp_matches_paper_formula() {
+        let c = RunConfig {
+            num_trainers: 20,
+            worker_threads: 24,
+            ..RunConfig::default()
+        };
+        assert_eq!(c.elp(200), 96_000); // paper Table 1: ShadowSync row
+    }
+}

@@ -1,0 +1,362 @@
+//! The master/coordinator: builds the cluster, assigns roles, runs the
+//! one-pass training job, and evaluates the output model.
+//!
+//! Mirrors the paper's master (§3.1): it assigns worker roles
+//! (trainers / embedding PSs / sync PSs), wires the reader service, sends
+//! the "training plan" (here: the [`RunConfig`] + compiled artifacts), runs
+//! the pass, then returns `h` (embedding tables) plus `w^(1)` — the first
+//! trainer's replica — as the output model, exactly the paper's convention.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelMeta, RunConfig, SyncAlgo, SyncMode};
+use crate::data::reader::{Reader, Shard};
+use crate::data::TeacherModel;
+use crate::embedding::EmbeddingSystem;
+use crate::metrics::{EpsMeter, EvalAccum, Metrics, MetricsSnapshot};
+use crate::net::{Network, Role};
+use crate::runtime::{Model, Runtime};
+use crate::sync::driver::spawn_shadow;
+use crate::sync::{AllReduceGroup, EasgdSync, SyncPsGroup};
+use crate::trainer::{spawn_worker, ForegroundPlan, Trainer, WorkerEnv};
+
+/// Everything a finished run reports (feeds the experiment tables).
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub label: String,
+    pub num_trainers: usize,
+    pub worker_threads: usize,
+    /// average training loss over the pass (per example, log-loss)
+    pub train_loss: f64,
+    /// held-out evaluation aggregates (loss, NE, calibration)
+    pub eval: EvalAccum,
+    /// wall-clock examples/sec (paper Definition 1)
+    pub eps: f64,
+    pub wall_secs: f64,
+    /// paper Eq. 2
+    pub avg_sync_gap: f64,
+    pub metrics: MetricsSnapshot,
+    /// bytes through the sync-PS tier (EASGD) or ring (MA/BMUF)
+    pub sync_ps_bytes: u64,
+    pub elp: u64,
+}
+
+impl TrainOutcome {
+    /// Relative loss increase vs a baseline outcome (paper Table 3).
+    pub fn rel_increase(new: f64, old: f64) -> f64 {
+        (new - old) / old
+    }
+}
+
+/// A built, not-yet-started cluster (exposed for tests and examples that
+/// want to poke at the pieces).
+pub struct Cluster {
+    pub cfg: RunConfig,
+    pub meta: ModelMeta,
+    pub model: Arc<Model>,
+    pub net: Arc<Network>,
+    pub metrics: Arc<Metrics>,
+    pub embeddings: Arc<EmbeddingSystem>,
+    pub sync_ps: Option<Arc<SyncPsGroup>>,
+    pub group: Option<Arc<AllReduceGroup>>,
+    pub trainers: Vec<Trainer>,
+    pub teacher: Arc<TeacherModel>,
+}
+
+/// Build the cluster: roles, placement, artifacts — the master's plan.
+pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
+    cfg.validate()?;
+    let meta = ModelMeta::load(&cfg.artifacts_dir, &cfg.preset)?;
+    let model = runtime
+        .load_model(&meta, &cfg.artifacts_dir)
+        .with_context(|| format!("loading artifacts for preset {:?}", cfg.preset))?;
+
+    let mut net = Network::new(if cfg.simulate_network {
+        Some(crate::net::PAPER_NIC_BYTES_PER_SEC)
+    } else {
+        None
+    });
+    let trainer_nodes: Vec<_> = (0..cfg.num_trainers).map(|_| net.add_node(Role::Trainer)).collect();
+    let embeddings = Arc::new(EmbeddingSystem::build(
+        &meta,
+        &cfg.embedding,
+        cfg.num_embedding_ps,
+        &mut net,
+        cfg.data_seed ^ 0xE0B5,
+    )?);
+    let sync_ps = match cfg.algo {
+        SyncAlgo::Easgd => Some(Arc::new(SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net))),
+        _ => None,
+    };
+    let group = match cfg.algo {
+        SyncAlgo::Ma | SyncAlgo::Bmuf => {
+            Some(Arc::new(AllReduceGroup::new(cfg.num_trainers, meta.num_params)))
+        }
+        _ => None,
+    };
+    let trainers = trainer_nodes
+        .iter()
+        .enumerate()
+        .map(|(i, &node)| Trainer::new(i, node, &model.w0, cfg))
+        .collect();
+    let teacher = Arc::new(TeacherModel::new(&meta, &cfg.embedding, cfg.data_seed));
+    Ok(Cluster {
+        cfg: cfg.clone(),
+        meta,
+        model,
+        net: Arc::new(net),
+        metrics: Arc::new(Metrics::new()),
+        embeddings,
+        sync_ps,
+        group,
+        trainers,
+        teacher,
+    })
+}
+
+/// Run the full one-pass training job and evaluate `w^(1)` + `h`.
+pub fn run(cfg: &RunConfig, runtime: &Runtime) -> Result<TrainOutcome> {
+    let cluster = build(cfg, runtime)?;
+    train(&cluster)?;
+    finish(cluster)
+}
+
+/// Drive the training pass on a built cluster.
+pub fn train(cluster: &Cluster) -> Result<()> {
+    let cfg = &cluster.cfg;
+    let mut worker_handles = Vec::new();
+    let mut shadow_handles = Vec::new();
+
+    for trainer in &cluster.trainers {
+        // reader service shard for this trainer
+        let shard = Shard {
+            trainer: trainer.id,
+            num_trainers: cfg.num_trainers,
+            total_examples: cfg.train_examples,
+            batch: cluster.meta.batch,
+        };
+        let reader = Reader::spawn(
+            &cluster.meta,
+            &cfg.embedding,
+            cluster.teacher.clone(),
+            shard.clone(),
+            cfg.reader_queue_depth,
+            cfg.reader_rate_limit,
+        );
+        let queue = Arc::new(Mutex::new(reader.rx));
+
+        // sync wiring per mode
+        match cfg.mode {
+            SyncMode::Shadow => {
+                if cfg.algo != SyncAlgo::None {
+                    let strategy = crate::sync::build_strategy(
+                        cfg,
+                        cluster.meta.num_params,
+                        trainer.id,
+                        &cluster.model.w0,
+                        cluster.sync_ps.clone(),
+                        cluster.group.clone(),
+                    )?;
+                    shadow_handles.push(spawn_shadow(
+                        strategy,
+                        trainer.replica.clone(),
+                        trainer.node,
+                        cluster.net.clone(),
+                        cluster.metrics.clone(),
+                        trainer.stop_shadow.clone(),
+                        Duration::from_millis(cfg.shadow_interval_ms),
+                        trainer.id,
+                    ));
+                }
+                for w in 0..cfg.worker_threads {
+                    worker_handles.push(spawn_worker(
+                        trainer,
+                        w,
+                        env(cluster),
+                        queue.clone(),
+                        ForegroundPlan::None,
+                    ));
+                }
+            }
+            SyncMode::Decaying { start, end } => {
+                // the paper's §4.1.1 conjecture: only defined for EASGD
+                let per_worker_total =
+                    shard.num_batches() / cfg.worker_threads.max(1) as u64;
+                for w in 0..cfg.worker_threads {
+                    let plan = match cfg.algo {
+                        SyncAlgo::Easgd => ForegroundPlan::DecayingEasgd {
+                            strategy: EasgdSync::new(
+                                cluster.sync_ps.clone().expect("easgd sync ps"),
+                                cfg.alpha,
+                            ),
+                            start,
+                            end,
+                            total: per_worker_total,
+                        },
+                        _ => ForegroundPlan::None,
+                    };
+                    worker_handles.push(spawn_worker(trainer, w, env(cluster), queue.clone(), plan));
+                }
+            }
+            SyncMode::FixedRate { gap } => {
+                for w in 0..cfg.worker_threads {
+                    let plan = match cfg.algo {
+                        SyncAlgo::Easgd => ForegroundPlan::PerWorkerEasgd {
+                            strategy: EasgdSync::new(
+                                cluster.sync_ps.clone().expect("easgd sync ps"),
+                                cfg.alpha,
+                            ),
+                            gap,
+                        },
+                        SyncAlgo::Ma | SyncAlgo::Bmuf if w == 0 => {
+                            ForegroundPlan::TrainerCollective {
+                                strategy: crate::sync::build_strategy(
+                                    cfg,
+                                    cluster.meta.num_params,
+                                    trainer.id,
+                                    &cluster.model.w0,
+                                    cluster.sync_ps.clone(),
+                                    cluster.group.clone(),
+                                )?,
+                                gap,
+                            }
+                        }
+                        _ => ForegroundPlan::None,
+                    };
+                    worker_handles.push(spawn_worker(trainer, w, env(cluster), queue.clone(), plan));
+                }
+            }
+        }
+    }
+
+    // workers drain their shards; then shadows stop and leave their groups
+    for h in worker_handles {
+        h.join().expect("worker panicked")?;
+    }
+    for t in &cluster.trainers {
+        crate::trainer::stop_shadow(t);
+    }
+    for h in shadow_handles {
+        h.join().expect("shadow panicked")?;
+    }
+    Ok(())
+}
+
+fn env(cluster: &Cluster) -> WorkerEnv {
+    WorkerEnv {
+        model: cluster.model.clone(),
+        embeddings: cluster.embeddings.clone(),
+        net: cluster.net.clone(),
+        metrics: cluster.metrics.clone(),
+    }
+}
+
+/// Evaluate `w^(1)` + `h` on the held-out range and assemble the outcome.
+pub fn finish(cluster: Cluster) -> Result<TrainOutcome> {
+    let cfg = &cluster.cfg;
+    let eps_meter = EpsMeter::start(); // wall time of eval excluded below
+    let _ = &eps_meter;
+    let eval = evaluate(&cluster, cfg.eval_examples)?;
+    let m = cluster.metrics.snapshot();
+    Ok(TrainOutcome {
+        label: cfg.label(),
+        num_trainers: cfg.num_trainers,
+        worker_threads: cfg.worker_threads,
+        train_loss: m.avg_loss,
+        eval,
+        eps: 0.0,     // filled by run_timed
+        wall_secs: 0.0,
+        avg_sync_gap: cluster.metrics.avg_sync_gap(),
+        sync_ps_bytes: cluster.net.role_bytes(Role::SyncPs),
+        metrics: m,
+        elp: cfg.elp(cluster.meta.batch),
+    })
+}
+
+/// `run` + wall-clock EPS measurement around the training pass only.
+pub fn run_timed(cfg: &RunConfig, runtime: &Runtime) -> Result<TrainOutcome> {
+    let cluster = build(cfg, runtime)?;
+    let meter = EpsMeter::start();
+    train(&cluster)?;
+    let wall = meter.elapsed_secs();
+    let examples = cluster.metrics.snapshot().examples;
+    let mut out = finish(cluster)?;
+    out.eps = examples as f64 / wall.max(1e-9);
+    out.wall_secs = wall;
+    Ok(out)
+}
+
+/// One-pass evaluation of the output model (`w^(1)`, `h`) on the held-out
+/// stream `[train_examples, train_examples + n)`.
+pub fn evaluate(cluster: &Cluster, n: u64) -> Result<EvalAccum> {
+    let meta = &cluster.meta;
+    let cfg = &cluster.cfg;
+    let mut accum = EvalAccum::default();
+    let mut io = cluster.model.new_io();
+    // the paper returns the first trainer's replica as the model
+    cluster.trainers[0].replica.read_into(&mut io.w_host);
+    let mut batch = crate::data::Batch::empty(meta, &cfg.embedding);
+    let mut ids = vec![0u64; meta.batch];
+    let batches = n / meta.batch as u64;
+    let trainer_node = cluster.trainers[0].node;
+    for b in 0..batches {
+        for (r, id) in ids.iter_mut().enumerate() {
+            *id = cfg.train_examples + b * meta.batch as u64 + r as u64;
+        }
+        cluster.teacher.fill_batch(&mut batch, &ids);
+        cluster.embeddings.lookup_batch(
+            &batch.indices,
+            batch.size,
+            &mut io.pooled_host,
+            trainer_node,
+            &cluster.net,
+        );
+        let out = cluster.model.eval_step(&mut io, &batch.dense, &batch.labels)?;
+        accum.add(out.loss_sum as f64, out.pred_sum as f64, out.label_sum as f64, meta.batch as u64);
+    }
+    Ok(accum)
+}
+
+/// Write the output model (`w^(1)` + embedding shards) to a checkpoint dir.
+pub fn checkpoint(cluster: &Cluster, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let w = cluster.trainers[0].replica.to_vec();
+    let mut bytes = Vec::with_capacity(w.len() * 4);
+    for v in &w {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(dir.join("w.bin"), &bytes)?;
+    let mut manifest = String::from("table,row_lo,row_hi,dim\n");
+    for shard in cluster.embeddings.shards() {
+        manifest.push_str(&format!(
+            "{},{},{},{}\n",
+            shard.table, shard.row_lo, shard.row_hi, shard.dim
+        ));
+        let mut sb = Vec::new();
+        for r in shard.row_lo..shard.row_hi {
+            for v in shard.row(r) {
+                sb.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(
+            dir.join(format!("emb_t{}_r{}.bin", shard.table, shard.row_lo)),
+            &sb,
+        )?;
+    }
+    std::fs::write(dir.join("MANIFEST.csv"), manifest)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_increase() {
+        assert!((TrainOutcome::rel_increase(1.02, 1.0) - 0.02).abs() < 1e-12);
+    }
+}

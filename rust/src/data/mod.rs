@@ -1,0 +1,21 @@
+//! Synthetic click-through-rate data + the reader service.
+//!
+//! Substitution (DESIGN.md §3): the paper trains on confidential production
+//! datasets (48.7B examples). We replace them with a *counter-based* synthetic
+//! CTR stream: a fixed random teacher DLRM assigns every example index a
+//! click probability, and every feature of example `i` is derived purely from
+//! `(seed, i, field)` via splitmix64. Properties this preserves:
+//!
+//! - **one-pass training over a fixed, finite dataset** — the regime the
+//!   paper's entire problem statement rests on (each of n trainers sees 1/n
+//!   of the data, no second pass);
+//! - **learnable structure** (labels come from a smooth function of the
+//!   features, so loss curves separate good syncing from bad);
+//! - **coordination-free sharding** — any worker can materialize any example,
+//!   so the reader service can partition by `i % n` with no data movement.
+
+pub mod gen;
+pub mod reader;
+
+pub use gen::{Batch, TeacherModel};
+pub use reader::{Reader, ReaderHandle};

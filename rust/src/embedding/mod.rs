@@ -1,0 +1,16 @@
+//! Embedding tables, sharding, and the embedding parameter servers.
+//!
+//! Model parallelism exactly as in the paper (§3.1–3.2): the embedding
+//! tables are partitioned into row-range shards, bin-packed onto embedding
+//! PSs by profiled cost, and there is **one** copy of `h` in the system.
+//! Trainer worker threads look up *pooled* embeddings (each shard pools the
+//! rows it owns — "local embedding pooling" — and the trainer sums the
+//! partials) and push gradients back, which the PS applies with row-wise
+//! Adagrad in a lock-free Hogwild fashion. All optimizer state collocates
+//! with the rows.
+
+pub mod ps;
+pub mod table;
+
+pub use ps::EmbeddingSystem;
+pub use table::TableShard;

@@ -1,0 +1,276 @@
+//! One row-range shard of an embedding table, with Hogwild row-wise Adagrad.
+
+use crate::config::EmbOptimizer;
+use crate::net::NodeId;
+use crate::tensor::HogwildBuffer;
+use crate::util::rng::{mix3, u01};
+
+/// Rows `[row_lo, row_hi)` of one table, hosted on one embedding PS.
+pub struct TableShard {
+    pub table: usize,
+    pub row_lo: u32,
+    pub row_hi: u32,
+    pub dim: usize,
+    /// PS node hosting this shard (for traffic accounting)
+    pub ps_node: NodeId,
+    /// [(hi-lo) * dim] embedding weights, Hogwild-shared
+    weights: HogwildBuffer,
+    /// [(hi-lo)] row-wise second-moment state (Adagrad sum / RMSProp /
+    /// Adam v), collocated with the rows (paper §3.2)
+    accum: HogwildBuffer,
+    /// [(hi-lo) * dim] Adam first moment (allocated only when needed)
+    moment: Option<HogwildBuffer>,
+    opt: EmbOptimizer,
+}
+
+impl TableShard {
+    /// Deterministic init: row j gets hash-derived U(-1/√D, 1/√D) entries,
+    /// independent of how the table is sharded (so placement never changes
+    /// the model).
+    pub fn new(
+        table: usize,
+        row_lo: u32,
+        row_hi: u32,
+        dim: usize,
+        ps_node: NodeId,
+        seed: u64,
+    ) -> Self {
+        Self::with_optimizer(table, row_lo, row_hi, dim, ps_node, seed, EmbOptimizer::Adagrad)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_optimizer(
+        table: usize,
+        row_lo: u32,
+        row_hi: u32,
+        dim: usize,
+        ps_node: NodeId,
+        seed: u64,
+        opt: EmbOptimizer,
+    ) -> Self {
+        let rows = (row_hi - row_lo) as usize;
+        let scale = 1.0 / (dim as f32).sqrt();
+        let mut w = vec![0f32; rows * dim];
+        for r in 0..rows {
+            let j = row_lo + r as u32;
+            for d in 0..dim {
+                let word = mix3(seed ^ 0xE0B_0E0B, ((table as u64) << 32) | j as u64, d as u64);
+                w[r * dim + d] = (u01(word) * 2.0 - 1.0) * scale;
+            }
+        }
+        Self {
+            table,
+            row_lo,
+            row_hi,
+            dim,
+            ps_node,
+            weights: HogwildBuffer::from_slice(&w),
+            accum: HogwildBuffer::zeros(rows),
+            moment: match opt {
+                EmbOptimizer::Adam { .. } => Some(HogwildBuffer::zeros(rows * dim)),
+                _ => None,
+            },
+            opt,
+        }
+    }
+
+    #[inline]
+    pub fn owns(&self, row: u32) -> bool {
+        (self.row_lo..self.row_hi).contains(&row)
+    }
+
+    pub fn num_rows(&self) -> usize {
+        (self.row_hi - self.row_lo) as usize
+    }
+
+    /// Lock-free read of row `row` accumulated into `out` (+=): the shard's
+    /// contribution to sum-pooling ("local embedding pooling" on the PS).
+    #[inline]
+    pub fn pool_row_into(&self, row: u32, out: &mut [f32]) {
+        debug_assert!(self.owns(row));
+        debug_assert_eq!(out.len(), self.dim);
+        let base = (row - self.row_lo) as usize * self.dim;
+        self.weights.accumulate_range(base, out); // §Perf: one bounds check
+    }
+
+    /// Hogwild optimizer update for one row; races with concurrent lookups
+    /// and updates by design. The default (Adagrad): `G_r += mean(g²)`,
+    /// `w_r -= lr * g / (sqrt(G_r) + eps)`.
+    #[inline]
+    pub fn update_row(&self, row: u32, grad: &[f32], lr: f32, eps: f32) {
+        debug_assert!(self.owns(row));
+        debug_assert_eq!(grad.len(), self.dim);
+        let r = (row - self.row_lo) as usize;
+        let g2: f32 = grad.iter().map(|g| g * g).sum::<f32>() / self.dim as f32;
+        match self.opt {
+            EmbOptimizer::Adagrad => {
+                let acc = self.accum.get(r) + g2;
+                self.accum.set(r, acc);
+                let step = lr / (acc.sqrt() + eps);
+                self.weights.axpy_range(r * self.dim, step, grad); // §Perf
+            }
+            EmbOptimizer::RmsProp { decay } => {
+                let acc = decay * self.accum.get(r) + (1.0 - decay) * g2;
+                self.accum.set(r, acc);
+                let step = lr / (acc.sqrt() + eps);
+                self.weights.axpy_range(r * self.dim, step, grad);
+            }
+            EmbOptimizer::Adam { beta1, beta2 } => {
+                let v = beta2 * self.accum.get(r) + (1.0 - beta2) * g2;
+                self.accum.set(r, v);
+                let step = lr / (v.sqrt() + eps);
+                let m = self.moment.as_ref().expect("adam moment state");
+                let base = r * self.dim;
+                for (d, &g) in grad.iter().enumerate() {
+                    let mi = beta1 * m.get(base + d) + (1.0 - beta1) * g;
+                    m.set(base + d, mi);
+                    self.weights.set(base + d, self.weights.get(base + d) - step * mi);
+                }
+            }
+        }
+    }
+
+    /// Copy of one row (for checkpointing / tests).
+    pub fn row(&self, row: u32) -> Vec<f32> {
+        let base = (row - self.row_lo) as usize * self.dim;
+        (0..self.dim).map(|d| self.weights.get(base + d)).collect()
+    }
+
+    /// Total parameter bytes held by this shard (weights + optimizer state).
+    pub fn bytes(&self) -> u64 {
+        let moment = self.moment.as_ref().map_or(0, |m| m.len() * 4);
+        (self.num_rows() * self.dim * 4 + self.num_rows() * 4 + moment) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard() -> TableShard {
+        TableShard::new(0, 10, 20, 4, NodeId(0), 7)
+    }
+
+    #[test]
+    fn init_is_deterministic_and_shard_invariant() {
+        let a = TableShard::new(2, 0, 32, 8, NodeId(0), 5);
+        let b = TableShard::new(2, 16, 32, 8, NodeId(1), 5); // different shard split
+        assert_eq!(a.row(20), b.row(20));
+        let c = TableShard::new(3, 0, 32, 8, NodeId(0), 5); // different table
+        assert_ne!(a.row(20), c.row(20));
+    }
+
+    #[test]
+    fn init_scale() {
+        let s = TableShard::new(0, 0, 100, 16, NodeId(0), 1);
+        let bound = 1.0 / 4.0;
+        for j in 0..100 {
+            for v in s.row(j) {
+                assert!(v.abs() <= bound, "v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooling_accumulates() {
+        let s = shard();
+        let mut out = vec![1.0f32; 4];
+        let r = s.row(12);
+        s.pool_row_into(12, &mut out);
+        for (o, ri) in out.iter().zip(&r) {
+            assert!((o - (1.0 + ri)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn update_moves_against_gradient() {
+        let s = shard();
+        let before = s.row(15);
+        s.update_row(15, &[1.0, -1.0, 0.0, 2.0], 0.1, 1e-8);
+        let after = s.row(15);
+        assert!(after[0] < before[0]);
+        assert!(after[1] > before[1]);
+        assert_eq!(after[2], before[2]);
+        assert!(after[3] < before[3]);
+    }
+
+    #[test]
+    fn adagrad_state_grows() {
+        let s = shard();
+        s.update_row(10, &[1.0; 4], 0.1, 1e-8);
+        let first = s.row(10);
+        s.update_row(10, &[1.0; 4], 0.1, 1e-8);
+        let second = s.row(10);
+        // second step smaller than first in magnitude
+        let d1: f32 = first.iter().zip(s.row(10)).map(|(a, b)| (a - b).abs()).sum();
+        let _ = d1;
+        let base = TableShard::new(0, 10, 20, 4, NodeId(0), 7).row(10);
+        let step1: f32 = base.iter().zip(&first).map(|(a, b)| (a - b).abs()).sum();
+        let step2: f32 = first.iter().zip(&second).map(|(a, b)| (a - b).abs()).sum();
+        assert!(step2 < step1);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        assert_eq!(shard().bytes(), (10 * 4 * 4 + 10 * 4) as u64);
+        let adam = TableShard::with_optimizer(
+            0, 10, 20, 4, NodeId(0), 7,
+            EmbOptimizer::Adam { beta1: 0.9, beta2: 0.999 },
+        );
+        // + first-moment state
+        assert_eq!(adam.bytes(), (10 * 4 * 4 + 10 * 4 + 10 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn rmsprop_state_decays_so_steps_stay_larger_than_adagrad() {
+        let mk = |opt| TableShard::with_optimizer(0, 0, 4, 4, NodeId(0), 7, opt);
+        let ada = mk(EmbOptimizer::Adagrad);
+        let rms = mk(EmbOptimizer::RmsProp { decay: 0.9 });
+        // many identical gradients: adagrad's accumulator grows without
+        // bound (vanishing steps); rmsprop's plateaus (steady steps)
+        for _ in 0..50 {
+            ada.update_row(1, &[1.0; 4], 0.01, 1e-8);
+            rms.update_row(1, &[1.0; 4], 0.01, 1e-8);
+        }
+        let a0 = ada.row(1);
+        let r0 = rms.row(1);
+        ada.update_row(1, &[1.0; 4], 0.01, 1e-8);
+        rms.update_row(1, &[1.0; 4], 0.01, 1e-8);
+        let step_ada = (a0[0] - ada.row(1)[0]).abs();
+        let step_rms = (r0[0] - rms.row(1)[0]).abs();
+        assert!(step_rms > 2.0 * step_ada, "rms {step_rms} vs ada {step_ada}");
+    }
+
+    #[test]
+    fn adam_momentum_carries_direction() {
+        let t = TableShard::with_optimizer(
+            0, 0, 4, 4, NodeId(0), 7,
+            EmbOptimizer::Adam { beta1: 0.9, beta2: 0.999 },
+        );
+        // push with a positive gradient, then a zero gradient: momentum
+        // keeps moving the weights down
+        t.update_row(2, &[1.0; 4], 0.05, 1e-8);
+        let after_push = t.row(2);
+        t.update_row(2, &[0.0; 4], 0.05, 1e-8);
+        let after_coast = t.row(2);
+        assert!(after_coast[0] < after_push[0], "momentum did not coast");
+    }
+
+    #[test]
+    fn all_optimizers_descend() {
+        for opt in [
+            EmbOptimizer::Adagrad,
+            EmbOptimizer::RmsProp { decay: 0.99 },
+            EmbOptimizer::Adam { beta1: 0.9, beta2: 0.999 },
+        ] {
+            let t = TableShard::with_optimizer(0, 0, 8, 4, NodeId(0), 9, opt);
+            // minimize 0.5*|w_row|^2 (grad = w)
+            for _ in 0..400 {
+                let g = t.row(3);
+                t.update_row(3, &g, 0.1, 1e-8);
+            }
+            let final_norm: f32 = t.row(3).iter().map(|x| x * x).sum();
+            assert!(final_norm < 1e-3, "{opt:?} did not descend: {final_norm}");
+        }
+    }
+}

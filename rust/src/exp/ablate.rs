@@ -1,0 +1,124 @@
+//! Ablations beyond the paper's tables, for the design choices §3.3 calls
+//! out in prose.
+
+use anyhow::Result;
+
+use crate::config::{SyncAlgo, SyncMode};
+use crate::runtime::Runtime;
+
+use super::{fmt_loss, quality_cfg, run_quality, ExpOpts, Report};
+
+const TRAIN_EXAMPLES: u64 = 200_000;
+
+/// §3.3: "if we directly copy the averaged weight back, we will lose the
+/// updates to the local replicas [made] when the background synchronization
+/// is happening" — the asymmetric elastic pull is claimed essential.
+/// α=1.0 under S-MA *is* the copy-back variant.
+pub fn run_elastic(opts: &ExpOpts) -> Result<String> {
+    let rt = Runtime::cpu()?;
+    let mut rows = Vec::new();
+    for (label, alpha) in [("elastic pull (α=0.5)", 0.5f32), ("copy-back (α=1.0)", 1.0)] {
+        let mut cfg = quality_cfg(opts, 4, 3, SyncAlgo::Ma, SyncMode::Shadow, TRAIN_EXAMPLES);
+        cfg.alpha = alpha;
+        cfg.shadow_interval_ms = 1;
+        // paper-scale AllReduce wall time: the window during which Hogwild
+        // workers make progress that copy-back would discard (in-process the
+        // collective is near-instant, so we model the wire; DESIGN.md §3)
+        cfg.collective_wire_ms = 25;
+        let o = run_quality(&cfg, &rt)?;
+        rows.push(vec![
+            label.to_string(),
+            fmt_loss(o.train_loss),
+            fmt_loss(o.eval.avg_loss()),
+            format!("{:.4}", o.eval.ne()),
+            format!("{}", o.metrics.syncs),
+        ]);
+    }
+    let mut r = Report::new(
+        "Ablation: elastic pull vs copy-back under S-MA",
+        "paper §3.3 (the asymmetric-interpolation modification)",
+    );
+    r.para("4 trainers × 3 threads, S-MA, shadow free-running, 25 ms simulated AllReduce wall time per round.");
+    r.table(&["variant", "train loss", "eval loss", "eval NE", "sync rounds"], &rows);
+    r.para(
+        "Expected: copy-back discards the Hogwild updates that landed during \
+         each background AllReduce, degrading (or at best matching) quality — \
+         supporting the paper's claim that the elastic pull is what makes \
+         background MA safe.",
+    );
+    Ok(r.finish())
+}
+
+/// Throttling the shadow loop interpolates between FR-like infrequent sync
+/// and the paper's free-running shadow; sweeps the implicit sync gap.
+pub fn run_shadow_rate(opts: &ExpOpts) -> Result<String> {
+    let rt = Runtime::cpu()?;
+    let mut rows = Vec::new();
+    for interval_ms in [0u64, 2, 10, 50] {
+        let mut cfg = quality_cfg(opts, 4, 3, SyncAlgo::Easgd, SyncMode::Shadow, TRAIN_EXAMPLES);
+        cfg.shadow_interval_ms = interval_ms;
+        let o = run_quality(&cfg, &rt)?;
+        rows.push(vec![
+            format!("{interval_ms} ms"),
+            format!("{:.3}", o.avg_sync_gap),
+            fmt_loss(o.train_loss),
+            fmt_loss(o.eval.avg_loss()),
+            format!("{:.4}", o.eval.ne()),
+        ]);
+    }
+    let mut r = Report::new(
+        "Ablation: shadow-loop pacing",
+        "extension of paper §4.1 (sync-rate sensitivity, background edition)",
+    );
+    r.para("4 trainers × 3 threads, S-EASGD, 1 sync PS; the shadow thread sleeps `interval` between rounds.");
+    r.table(
+        &["shadow interval", "avg sync gap (Eq. 2)", "train loss", "eval loss", "eval NE"],
+        &rows,
+    );
+    r.para(
+        "Expected: quality is robust over a wide pacing range (the paper's \
+         free-running choice is convenient, not critical), degrading only \
+         once the gap grows to FR-EASGD-100 territory.",
+    );
+    Ok(r.finish())
+}
+
+/// The paper's §4.1.1 conjecture, tested: "a time-varying sync gap would be
+/// favorable for FR-EASGD under our setting" — loose syncing early (more
+/// exploration), tight toward the end of the pass.
+pub fn run_decay_gap(opts: &ExpOpts) -> Result<String> {
+    let rt = Runtime::cpu()?;
+    let variants: [(&str, SyncMode); 4] = [
+        ("FR-EASGD-5 (constant)", SyncMode::FixedRate { gap: 5 }),
+        ("FR-EASGD-30 (constant)", SyncMode::FixedRate { gap: 30 }),
+        ("FR-EASGD-100→5 (decaying)", SyncMode::Decaying { start: 100, end: 5 }),
+        ("FR-EASGD-5→100 (inverted)", SyncMode::Decaying { start: 5, end: 100 }),
+    ];
+    let mut rows = Vec::new();
+    for (label, mode) in variants {
+        let cfg = quality_cfg(opts, 4, 3, SyncAlgo::Easgd, mode, TRAIN_EXAMPLES);
+        let o = run_quality(&cfg, &rt)?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2}", o.avg_sync_gap),
+            fmt_loss(o.train_loss),
+            fmt_loss(o.eval.avg_loss()),
+            format!("{:.4}", o.eval.ne()),
+        ]);
+    }
+    let mut r = Report::new(
+        "Extension: time-varying sync gap for FR-EASGD",
+        "paper §4.1.1 closing conjecture",
+    );
+    r.para("4 trainers × 3 threads, 1 sync PS; the decaying variants anneal the per-worker gap linearly across the one-pass shard.");
+    r.table(
+        &["variant", "measured avg gap", "train loss", "eval loss", "eval NE"],
+        &rows,
+    );
+    r.para(
+        "The paper conjectures (from FR-5 ≈ FR-100 eval at 20 trainers) that \
+         small gaps help late and loose gaps help early; the decaying variant \
+         tests exactly that against both constants and the inverted schedule.",
+    );
+    Ok(r.finish())
+}

@@ -1,0 +1,82 @@
+//! Figure 6: ShadowSync vs fixed-rate for the decentralized algorithms
+//! (BMUF, MA): (a) measured model quality, (b) EPS scaling.
+//!
+//! Paper setup: Model-B on Dataset-2 at 5/10/15/20 trainers; FR rate set to
+//! 1 sync/min to match the measured S-BMUF/S-MA background rates. Scaled
+//! stand-in: FR gap chosen to match the measured S-* sync gap the same way.
+
+use anyhow::Result;
+
+use crate::config::{SyncAlgo, SyncMode};
+use crate::runtime::Runtime;
+use crate::sim::CostModel;
+
+use super::{fmt_loss, quality_cfg, ExpOpts, Report};
+
+const TRAIN_EXAMPLES: u64 = 240_000;
+const SCALES: [usize; 3] = [2, 4, 8];
+/// FR gap matched to the shadow loop's observed cadence (paper: 1/min)
+const FR_GAP: u32 = 30;
+
+pub fn run_quality(opts: &ExpOpts) -> Result<String> {
+    let rt = Runtime::cpu()?;
+    let mut rows = Vec::new();
+    for algo in [SyncAlgo::Bmuf, SyncAlgo::Ma] {
+        for mode in [SyncMode::Shadow, SyncMode::FixedRate { gap: FR_GAP }] {
+            for &n in &SCALES {
+                let cfg = quality_cfg(opts, n, 3, algo, mode, TRAIN_EXAMPLES);
+                let o = super::run_quality(&cfg, &rt)?;
+                rows.push(vec![
+                    cfg.label(),
+                    n.to_string(),
+                    fmt_loss(o.train_loss),
+                    fmt_loss(o.eval.avg_loss()),
+                    format!("{:.2}", o.avg_sync_gap),
+                ]);
+            }
+        }
+    }
+    let mut r = Report::new(
+        "Figure 6(a): BMUF & MA, ShadowSync vs fixed-rate (quality)",
+        "paper Figure 6(a) (Model-B on Dataset-2)",
+    );
+    r.para(&format!(
+        "One pass over {} examples, 3 Hogwild threads/trainer; FR gap {} \
+         (matched to the shadow cadence, as the paper matched 1/min).",
+        ((TRAIN_EXAMPLES as f64) * opts.scale) as u64,
+        FR_GAP,
+    ));
+    r.table(&["algorithm", "trainers", "train loss", "eval loss", "avg sync gap"], &rows);
+    r.para(
+        "Shape check (paper): the ShadowSync variants are comparable to or \
+         better than their fixed-rate counterparts at every scale.",
+    );
+    Ok(r.finish())
+}
+
+pub fn run_eps(_opts: &ExpOpts) -> Result<String> {
+    let cm = CostModel::paper_scale();
+    let mut rows = Vec::new();
+    for n in [5, 10, 15, 20] {
+        let mk = |algo, mode| cm.simulate(n, 24, algo, mode, 0).eps;
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.0}", mk(SyncAlgo::Bmuf, SyncMode::Shadow)),
+            format!("{:.0}", mk(SyncAlgo::Bmuf, SyncMode::FixedRate { gap: 120 })),
+            format!("{:.0}", mk(SyncAlgo::Ma, SyncMode::Shadow)),
+            format!("{:.0}", mk(SyncAlgo::Ma, SyncMode::FixedRate { gap: 120 })),
+        ]);
+    }
+    let mut r = Report::new(
+        "Figure 6(b): BMUF & MA EPS scaling",
+        "paper Figure 6(b) (all variants scale linearly)",
+    );
+    r.para("Paper-scale model, 24 threads; FR collective every 120 iterations (≈1/min).");
+    r.table(&["trainers", "S-BMUF", "FR-BMUF", "S-MA", "FR-MA"], &rows);
+    r.para(
+        "Shape check: synchronization is not a bottleneck here — every \
+         variant scales linearly (the AllReduce touches one thread per \
+         trainer at a low rate).",
+    );
+    Ok(r.finish())
+}

@@ -1,0 +1,78 @@
+//! Figure 8: Hogwild worker threads vs single thread (the §4.4
+//! justification of 24 threads).
+//!
+//! Left panel (quality vs thread count): measured — Hogwild staleness is a
+//! *semantic* effect, so it reproduces at reduced scale. Right panel (EPS vs
+//! thread count): paper-scale model — the memory-bandwidth saturation knee
+//! at ~24 threads is hardware physics this box cannot exhibit.
+//!
+//! Paper setup: Model-C on Dataset-3, S-EASGD, 5 and 10 trainers,
+//! threads ∈ {1, 12, 24, 32, 64}.
+
+use anyhow::Result;
+
+use crate::config::{SyncAlgo, SyncMode};
+use crate::runtime::Runtime;
+use crate::sim::CostModel;
+
+use super::{fmt_loss, quality_cfg, run_quality, ExpOpts, Report};
+
+const TRAIN_EXAMPLES: u64 = 200_000;
+/// scaled stand-ins for the paper's {1, 12, 24, 32, 64}
+const REAL_THREADS: [usize; 4] = [1, 2, 4, 8];
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let mut r = Report::new(
+        "Figure 8: Hogwild threads vs single thread",
+        "paper Figure 8 (Model-C on Dataset-3, S-EASGD)",
+    );
+
+    // ---- left panel: measured quality vs threads ----
+    let rt = Runtime::cpu()?;
+    let mut rows = Vec::new();
+    for &m in &REAL_THREADS {
+        let cfg = quality_cfg(opts, 2, m, SyncAlgo::Easgd, SyncMode::Shadow, TRAIN_EXAMPLES);
+        let o = run_quality(&cfg, &rt)?;
+        rows.push(vec![
+            m.to_string(),
+            fmt_loss(o.train_loss),
+            fmt_loss(o.eval.avg_loss()),
+            format!("{:.4}", o.eval.ne()),
+        ]);
+    }
+    r.para(&format!(
+        "**Left — measured quality vs Hogwild threads** (2 trainers, one pass \
+         over {} examples; thread counts {:?} stand in for the paper's \
+         1–64 — staleness grows with concurrent updaters either way):",
+        ((TRAIN_EXAMPLES as f64) * opts.scale) as u64,
+        REAL_THREADS,
+    ));
+    r.table(&["threads", "train loss", "eval loss", "eval NE"], &rows);
+    r.para("Shape check: a mild quality degradation as thread count rises.");
+
+    // ---- right panel: paper-scale EPS vs threads ----
+    let cm = CostModel::paper_scale();
+    let mut rows_eps = Vec::new();
+    for m in [1usize, 12, 24, 32, 64] {
+        let e5 = cm.simulate(5, m, SyncAlgo::Easgd, SyncMode::Shadow, 1);
+        let e10 = cm.simulate(10, m, SyncAlgo::Easgd, SyncMode::Shadow, 1);
+        rows_eps.push(vec![
+            m.to_string(),
+            format!("{:.0}", e5.eps),
+            format!("{:.0}", e10.eps),
+            format!("{:.1}", cm.effective_threads(m)),
+        ]);
+    }
+    r.para(
+        "**Right — EPS vs threads** (paper-scale model; the effective-threads \
+         column is the memory-bandwidth contention model, ~saturated at 24 \
+         threads exactly as the paper measured ~70% bandwidth utilization):",
+    );
+    r.table(&["threads", "EPS (5 trainers)", "EPS (10 trainers)", "effective threads"], &rows_eps);
+    r.para(
+        "Shape check: EPS nearly stops growing at ≥24 threads while the \
+         quality cost of Hogwild stays mild — the paper's justification for \
+         running 24.",
+    );
+    Ok(r.finish())
+}

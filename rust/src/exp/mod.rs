@@ -1,0 +1,208 @@
+//! The experiment harness: one module per table/figure of the paper's §4,
+//! plus ablations. `shadowsync exp --id <id>` regenerates the artifact.
+//!
+//! Two kinds of numbers (DESIGN.md §5):
+//! - **quality** (losses, sync gaps): measured by really training on the
+//!   synthetic one-pass stream at reduced scale — same structure as the
+//!   paper's runs (n trainers × m Hogwild threads, embedding PSs, sync
+//!   PSs/AllReduce, shadow or fixed-rate sync);
+//! - **throughput** (EPS curves): produced by the calibrated steady-state
+//!   model in [`crate::sim`] at the paper's full scale (20×24 threads on
+//!   25 Gbit), since one core cannot exhibit cluster physics in vivo.
+//!
+//! Shapes — orderings, crossovers, saturation points — are the reproduction
+//! target, not absolute values (the substrate is synthetic; see DESIGN.md).
+
+pub mod ablate;
+pub mod calibrate;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table2;
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::{EmbeddingConfig, RunConfig, SyncAlgo, SyncMode};
+use crate::coordinator::TrainOutcome;
+use crate::runtime::Runtime;
+
+/// Options shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub artifacts_dir: PathBuf,
+    /// where reports land (one markdown file per experiment)
+    pub out_dir: PathBuf,
+    /// multiplies dataset sizes (1.0 = defaults; 0.2 = smoke)
+    pub scale: f64,
+    /// seed for the synthetic stream
+    pub seed: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            scale: 1.0,
+            seed: 20200630,
+        }
+    }
+}
+
+pub const ALL_IDS: &[&str] = &[
+    "table1",
+    "table2a",
+    "table2b",
+    "fig5",
+    "table3",
+    "fig6a",
+    "fig6b",
+    "fig7",
+    "fig8",
+    "ablate-elastic",
+    "ablate-shadow-rate",
+    "ablate-decay-gap",
+    "calibrate",
+];
+
+/// Run one experiment by id; returns (and persists) the report text.
+pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
+    let report = match id {
+        "table1" => table1::run(opts)?,
+        "table2a" => table2::run_a(opts)?,
+        "table2b" => table2::run_b(opts)?,
+        "fig5" => fig5::run(opts)?,
+        "table3" => fig5::run_table3(opts)?,
+        "fig6a" => fig6::run_quality(opts)?,
+        "fig6b" => fig6::run_eps(opts)?,
+        "fig7" => fig7::run(opts)?,
+        "fig8" => fig8::run(opts)?,
+        "ablate-elastic" => ablate::run_elastic(opts)?,
+        "ablate-shadow-rate" => ablate::run_shadow_rate(opts)?,
+        "ablate-decay-gap" => ablate::run_decay_gap(opts)?,
+        "calibrate" => calibrate::run(opts)?,
+        _ => bail!("unknown experiment {id:?}; known: {}", ALL_IDS.join(", ")),
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = opts.out_dir.join(format!("{id}.md"));
+    std::fs::write(&path, &report)?;
+    println!("{report}");
+    println!("(written to {})", path.display());
+    Ok(report)
+}
+
+/// Markdown report builder shared by the experiment modules.
+#[derive(Default)]
+pub struct Report {
+    buf: String,
+}
+
+impl Report {
+    pub fn new(title: &str, paper_ref: &str) -> Self {
+        let mut r = Report::default();
+        let _ = writeln!(r.buf, "# {title}\n\nPaper artifact: {paper_ref}\n");
+        r
+    }
+
+    pub fn para(&mut self, text: &str) {
+        let _ = writeln!(self.buf, "{text}\n");
+    }
+
+    pub fn table(&mut self, headers: &[&str], rows: &[Vec<String>]) {
+        let _ = writeln!(self.buf, "| {} |", headers.join(" | "));
+        let _ = writeln!(
+            self.buf,
+            "|{}|",
+            headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in rows {
+            let _ = writeln!(self.buf, "| {} |", row.join(" | "));
+        }
+        let _ = writeln!(self.buf);
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+/// The scaled-down stand-in for the paper's quality runs: `model_a`, a few
+/// trainers × a few Hogwild threads. Dataset sizes scale with `opts.scale`.
+pub fn quality_cfg(
+    opts: &ExpOpts,
+    trainers: usize,
+    threads: usize,
+    algo: SyncAlgo,
+    mode: SyncMode,
+    train_examples: u64,
+) -> RunConfig {
+    RunConfig {
+        preset: "model_a".into(),
+        artifacts_dir: opts.artifacts_dir.clone(),
+        num_trainers: trainers,
+        worker_threads: threads,
+        num_embedding_ps: trainers.max(2),
+        num_sync_ps: if algo == SyncAlgo::Easgd { 1 } else { 0 },
+        algo,
+        mode,
+        train_examples: ((train_examples as f64) * opts.scale) as u64,
+        eval_examples: ((train_examples as f64) * opts.scale * 0.2) as u64,
+        data_seed: opts.seed,
+        embedding: EmbeddingConfig { rows_per_table: 2_000, ..Default::default() },
+        // pace the shadow loop so measured sync gaps land in the paper's
+        // regime (~1–15 iterations/round) at this testbed's batch rate
+        shadow_interval_ms: 25,
+        ..Default::default()
+    }
+}
+
+/// Run one quality config and return its outcome (shared runtime).
+pub fn run_quality(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
+    crate::coordinator::run_timed(cfg, rt)
+}
+
+pub fn fmt_loss(x: f64) -> String {
+    format!("{x:.5}")
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:+.3}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_markdown_table() {
+        let mut r = Report::new("T", "Table 9");
+        r.table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        let s = r.finish();
+        assert!(s.contains("# T"));
+        assert!(s.contains("| a | b |"));
+        assert!(s.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn unknown_id_is_rejected() {
+        let opts = ExpOpts { out_dir: std::env::temp_dir(), ..Default::default() };
+        assert!(run("nope", &opts).is_err());
+    }
+
+    #[test]
+    fn quality_cfg_scales_dataset() {
+        let opts = ExpOpts { scale: 0.5, ..Default::default() };
+        let cfg = quality_cfg(&opts, 4, 3, SyncAlgo::Easgd, SyncMode::Shadow, 100_000);
+        assert_eq!(cfg.train_examples, 50_000);
+        assert_eq!(cfg.num_sync_ps, 1);
+        let cfg2 = quality_cfg(&opts, 4, 3, SyncAlgo::Ma, SyncMode::Shadow, 100_000);
+        assert_eq!(cfg2.num_sync_ps, 0);
+        cfg.validate().unwrap();
+        cfg2.validate().unwrap();
+    }
+}

@@ -1,0 +1,79 @@
+//! Table 2: model quality of S-EASGD vs FR-EASGD-{5,10,30,100}.
+//!
+//! Paper setup: Model-A on Dataset-1 (48.7B examples), (a) 11 trainers /
+//! 12 embedding PSs / 1 sync PS, (b) 20 trainers / 29 / 6. Scaled stand-in:
+//! `model_a` on the synthetic stream, (a) 4 trainers × 3 threads / 1 sync
+//! PS, (b) 8 trainers × 3 threads / 2 sync PSs, same one-pass discipline.
+
+use anyhow::Result;
+
+use crate::config::{SyncAlgo, SyncMode};
+use crate::runtime::Runtime;
+
+use super::{fmt_loss, quality_cfg, run_quality, ExpOpts, Report};
+
+const TRAIN_EXAMPLES: u64 = 240_000;
+const GAPS: [u32; 4] = [5, 10, 30, 100];
+
+fn run_panel(opts: &ExpOpts, trainers: usize, sync_ps: usize, panel: &str) -> Result<String> {
+    let rt = Runtime::cpu()?;
+    let mut rows = Vec::new();
+
+    let mut cfg = quality_cfg(opts, trainers, 3, SyncAlgo::Easgd, SyncMode::Shadow, TRAIN_EXAMPLES);
+    cfg.num_sync_ps = sync_ps;
+    let s = run_quality(&cfg, &rt)?;
+    rows.push(vec![
+        "S-EASGD".to_string(),
+        format!("{:.2}", s.avg_sync_gap),
+        fmt_loss(s.train_loss),
+        fmt_loss(s.eval.avg_loss()),
+        format!("{:.4}", s.eval.ne()),
+    ]);
+
+    for gap in GAPS {
+        let mut cfg = quality_cfg(
+            opts,
+            trainers,
+            3,
+            SyncAlgo::Easgd,
+            SyncMode::FixedRate { gap },
+            TRAIN_EXAMPLES,
+        );
+        cfg.num_sync_ps = sync_ps;
+        let o = run_quality(&cfg, &rt)?;
+        rows.push(vec![
+            format!("FR-EASGD-{gap}"),
+            format!("{gap}"),
+            fmt_loss(o.train_loss),
+            fmt_loss(o.eval.avg_loss()),
+            format!("{:.4}", o.eval.ne()),
+        ]);
+    }
+
+    let mut r = Report::new(
+        &format!("Table 2({panel}): S-EASGD vs FR-EASGD model quality"),
+        &format!("paper Table 2({panel}) — {trainers} trainers (scaled stand-in)"),
+    );
+    r.para(&format!(
+        "{} trainers × 3 Hogwild threads, {} sync PS(s), one pass over {} \
+         synthetic examples (paper: Model-A on Dataset-1).",
+        trainers,
+        sync_ps,
+        ((TRAIN_EXAMPLES as f64) * opts.scale) as u64,
+    ));
+    r.table(&["algorithm", "sync gap", "train loss", "eval loss", "eval NE"], &rows);
+    r.para(
+        "Expected shape (paper): S-EASGD's measured average gap lands in the \
+         small-gap regime and its losses are on par with or better than the \
+         best fixed-rate setting; FR eval loss degrades as the gap grows.",
+    );
+    Ok(r.finish())
+}
+
+pub fn run_a(opts: &ExpOpts) -> Result<String> {
+    run_panel(opts, 4, 1, "a")
+}
+
+pub fn run_b(opts: &ExpOpts) -> Result<String> {
+    run_panel(opts, 8, 2, "b")
+}

@@ -1,0 +1,32 @@
+//! # ShadowSync
+//!
+//! A full reproduction of *“ShadowSync: Performing Synchronization in the
+//! Background for Highly Scalable Distributed Training”* (Zheng et al.,
+//! 2020) as a rust distributed-training coordinator over AOT-compiled
+//! JAX/Pallas compute (PJRT CPU).
+//!
+//! Architecture (DESIGN.md):
+//! - **L3 (this crate)** — trainers with Hogwild worker threads, embedding
+//!   parameter servers, optional sync parameter servers, and per-trainer
+//!   **shadow threads** that synchronize dense-parameter replicas in the
+//!   background (S-EASGD / S-MA / S-BMUF) or in the foreground at a fixed
+//!   rate (FR-*), a reader service, bin-packing placement, metrics, a
+//!   cluster-scale throughput simulator, and the paper's experiment harness.
+//! - **L2/L1 (python, build-time only)** — the DLRM forward/backward with
+//!   Pallas kernels, lowered to HLO text consumed by [`runtime`].
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embedding;
+pub mod exp;
+pub mod metrics;
+pub mod net;
+pub mod optim;
+pub mod placement;
+pub mod runtime;
+pub mod sim;
+pub mod sync;
+pub mod tensor;
+pub mod trainer;
+pub mod util;

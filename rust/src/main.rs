@@ -1,0 +1,197 @@
+//! `shadowsync` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train        run one distributed-training job (flags below)
+//!   exp          regenerate a paper table/figure: --id table2a|fig5|... |all
+//!   elp          print the ELP of a configuration (paper Definition 2)
+//!   sim          query the paper-scale throughput model directly
+//!   list         list presets and experiments
+//!
+//! Examples:
+//!   shadowsync train --preset model_a --trainers 4 --threads 3 \
+//!       --algo easgd --mode shadow --examples 200000
+//!   shadowsync exp --id table2a
+//!   shadowsync sim --trainers 5,10,20 --algo easgd --mode fixed --gap 5 --sync-ps 2
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use shadowsync::config::{RunConfig, SyncAlgo, SyncMode};
+use shadowsync::coordinator;
+use shadowsync::exp::{self, ExpOpts};
+use shadowsync::runtime::Runtime;
+use shadowsync::sim::CostModel;
+use shadowsync::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("elp") => cmd_elp(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("list") | None => cmd_list(),
+        Some(other) => bail!("unknown subcommand {other:?} (train|exp|elp|sim|list)"),
+    }
+}
+
+fn parse_mode(args: &Args) -> Result<SyncMode> {
+    match args.get_or("mode", "shadow") {
+        "shadow" => Ok(SyncMode::Shadow),
+        "fixed" | "fr" => Ok(SyncMode::FixedRate { gap: args.parse_or("gap", 30u32)? }),
+        "decay" => Ok(SyncMode::Decaying {
+            start: args.parse_or("gap-start", 100u32)?,
+            end: args.parse_or("gap-end", 5u32)?,
+        }),
+        m => bail!("unknown --mode {m:?} (shadow|fixed|decay)"),
+    }
+}
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig {
+        preset: args.get_or("preset", "tiny").to_string(),
+        artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+        num_trainers: args.parse_or("trainers", 2usize)?,
+        worker_threads: args.parse_or("threads", 2usize)?,
+        num_embedding_ps: args.parse_or("embedding-ps", 2usize)?,
+        num_sync_ps: args.parse_or("sync-ps", 1usize)?,
+        algo: args.get_or("algo", "easgd").parse()?,
+        mode: parse_mode(args)?,
+        alpha: args.parse_or("alpha", 0.5f32)?,
+        bmuf_eta: args.parse_or("bmuf-eta", 1.0f32)?,
+        bmuf_momentum: args.parse_or("bmuf-momentum", 0.0f32)?,
+        learning_rate: args.parse_or("lr", 0.02f32)?,
+        train_examples: args.parse_or("examples", 100_000u64)?,
+        eval_examples: args.parse_or("eval-examples", 20_000u64)?,
+        data_seed: args.parse_or("seed", 1u64)?,
+        shadow_interval_ms: args.parse_or("shadow-interval-ms", 0u64)?,
+        ..Default::default()
+    };
+    cfg.embedding.rows_per_table = args.parse_or("rows", cfg.embedding.rows_per_table)?;
+    cfg.embedding.optimizer = args.parse_or("emb-opt", cfg.embedding.optimizer)?;
+    if let Some(r) = args.get("reader-rate") {
+        cfg.reader_rate_limit = Some(r.parse()?);
+    }
+    if cfg.algo != SyncAlgo::Easgd {
+        cfg.num_sync_ps = 0;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    println!(
+        "{}: preset={} trainers={} threads={} embedding_ps={} sync_ps={}",
+        cfg.label(),
+        cfg.preset,
+        cfg.num_trainers,
+        cfg.worker_threads,
+        cfg.num_embedding_ps,
+        cfg.num_sync_ps
+    );
+    let rt = Runtime::cpu()?;
+    if let Some(dir) = args.get("checkpoint") {
+        // build → train → checkpoint → evaluate, keeping the cluster alive
+        let cluster = coordinator::build(&cfg, &rt)?;
+        let meter = std::time::Instant::now();
+        coordinator::train(&cluster)?;
+        let wall = meter.elapsed().as_secs_f64();
+        coordinator::checkpoint(&cluster, &PathBuf::from(dir))?;
+        println!("checkpoint written to {dir}");
+        let examples = cluster.metrics.snapshot().examples;
+        let mut out = coordinator::finish(cluster)?;
+        out.eps = examples as f64 / wall.max(1e-9);
+        out.wall_secs = wall;
+        print_outcome(&out);
+        return Ok(());
+    }
+    let out = coordinator::run_timed(&cfg, &rt)?;
+    print_outcome(&out);
+    Ok(())
+}
+
+fn print_outcome(out: &coordinator::TrainOutcome) {
+    println!("examples      {}", out.metrics.examples);
+    println!("train loss    {:.5}", out.train_loss);
+    println!("eval loss     {:.5}", out.eval.avg_loss());
+    println!("eval NE       {:.5}", out.eval.ne());
+    println!("calibration   {:.4}", out.eval.calibration());
+    println!("EPS           {:.0}", out.eps);
+    println!("wall secs     {:.2}", out.wall_secs);
+    println!("avg sync gap  {:.3}", out.avg_sync_gap);
+    println!("sync rounds   {}", out.metrics.syncs);
+    println!("sync bytes    {}", out.metrics.sync_bytes);
+    println!("ELP           {}", out.elp);
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let opts = ExpOpts {
+        artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+        out_dir: PathBuf::from(args.get_or("out", "results")),
+        scale: args.parse_or("scale", 1.0f64)?,
+        seed: args.parse_or("seed", 20200630u64)?,
+    };
+    let id = args.get_or("id", "all");
+    if id == "all" {
+        for id in exp::ALL_IDS {
+            println!("\n=== experiment {id} ===");
+            exp::run(id, &opts)?;
+        }
+    } else {
+        exp::run(id, &opts)?;
+    }
+    Ok(())
+}
+
+fn cmd_elp(args: &Args) -> Result<()> {
+    let trainers = args.parse_or("trainers", 20usize)?;
+    let threads = args.parse_or("threads", 24usize)?;
+    let batch = args.parse_or("batch", 200usize)?;
+    let cfg = RunConfig { num_trainers: trainers, worker_threads: threads, ..Default::default() };
+    println!(
+        "ELP = batch({batch}) × hogwild({threads}) × replicas({trainers}) = {}",
+        cfg.elp(batch)
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cm = CostModel::paper_scale();
+    let algo: SyncAlgo = args.get_or("algo", "easgd").parse()?;
+    let mode = parse_mode(args)?;
+    let sync_ps = args.parse_or("sync-ps", 2usize)?;
+    let threads = args.parse_or("threads", 24usize)?;
+    println!("paper-scale model: {algo} {mode:?} sync_ps={sync_ps} threads={threads}");
+    println!(
+        "{:>9} {:>12} {:>14} {:>12} {:>10}",
+        "trainers", "EPS", "avg sync gap", "syncPS util", "train frac"
+    );
+    for n in args.parse_list("trainers", &[5usize, 10, 15, 20])? {
+        let p = cm.simulate(n, threads, algo, mode, sync_ps);
+        println!(
+            "{:>9} {:>12.0} {:>14.2} {:>11.0}% {:>10.3}",
+            n,
+            p.eps,
+            p.avg_sync_gap,
+            100.0 * p.sync_ps_util,
+            p.train_fraction
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("presets: tiny, model_a, model_b, model_c (see python/compile/presets.py)");
+    println!("experiments: {}", exp::ALL_IDS.join(", "));
+    println!("subcommands: train, exp, elp, sim, list  (see --help text in main.rs)");
+    Ok(())
+}

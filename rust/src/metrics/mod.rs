@@ -1,0 +1,247 @@
+//! Training metrics: EPS, loss, normalized entropy, sync-gap (paper Eq. 2),
+//! and network byte accounting.
+//!
+//! All counters are lock-free atomics so worker threads on the hot path pay
+//! one `fetch_add` per batch; aggregation happens off-path.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Instant;
+
+/// f64 accumulator over an AtomicU64 (CAS add on bits) — exact, unlike the
+/// Hogwild parameter buffers.
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn add(&self, d: f64) {
+        let mut cur = self.0.load(Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + d).to_bits();
+            match self.0.compare_exchange_weak(cur, new, Relaxed, Relaxed) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Relaxed))
+    }
+}
+
+/// Shared run-wide counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// examples fully processed (fwd+bwd applied)
+    pub examples: AtomicU64,
+    /// worker-thread iterations (batches)
+    pub iterations: AtomicU64,
+    /// summed training loss (loss_sum outputs)
+    pub loss_sum: AtomicF64,
+    /// examples contributing to loss_sum
+    pub loss_examples: AtomicU64,
+    /// sync rounds completed (per Eq. 2's "num of EASGD syncs")
+    pub syncs: AtomicU64,
+    /// bytes moved for synchronization (sync PS or AllReduce traffic)
+    pub sync_bytes: AtomicU64,
+    /// bytes moved for embedding lookups+updates
+    pub embedding_bytes: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, batch: usize, loss_sum: f64) {
+        self.examples.fetch_add(batch as u64, Relaxed);
+        self.iterations.fetch_add(1, Relaxed);
+        self.loss_sum.add(loss_sum);
+        self.loss_examples.fetch_add(batch as u64, Relaxed);
+    }
+
+    pub fn record_sync(&self, bytes: u64) {
+        self.syncs.fetch_add(1, Relaxed);
+        self.sync_bytes.fetch_add(bytes, Relaxed);
+    }
+
+    /// Average training loss per example so far.
+    pub fn avg_loss(&self) -> f64 {
+        let n = self.loss_examples.load(Relaxed);
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.loss_sum.get() / n as f64
+        }
+    }
+
+    /// Paper Eq. 2: avg sync gap = iterations/sec ÷ syncs/sec — computed on
+    /// totals (the run is one pass, so the ratio of totals is the average).
+    pub fn avg_sync_gap(&self) -> f64 {
+        let s = self.syncs.load(Relaxed);
+        if s == 0 {
+            f64::INFINITY
+        } else {
+            self.iterations.load(Relaxed) as f64 / s as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            examples: self.examples.load(Relaxed),
+            iterations: self.iterations.load(Relaxed),
+            avg_loss: self.avg_loss(),
+            syncs: self.syncs.load(Relaxed),
+            sync_bytes: self.sync_bytes.load(Relaxed),
+            embedding_bytes: self.embedding_bytes.load(Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub examples: u64,
+    pub iterations: u64,
+    pub avg_loss: f64,
+    pub syncs: u64,
+    pub sync_bytes: u64,
+    pub embedding_bytes: u64,
+}
+
+/// EPS meter: examples/sec over the whole run (paper Definition 1).
+pub struct EpsMeter {
+    start: Instant,
+}
+
+impl EpsMeter {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn eps(&self, examples: u64) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt == 0.0 {
+            0.0
+        } else {
+            examples as f64 / dt
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Binary-entropy normalizer: normalized entropy = avg logloss / H(base_ctr)
+/// (He et al. 2014, the metric family the paper reports).
+pub fn normalized_entropy(avg_logloss: f64, base_ctr: f64) -> f64 {
+    let p = base_ctr.clamp(1e-9, 1.0 - 1e-9);
+    let h = -(p * p.ln() + (1.0 - p) * (1.0 - p).ln());
+    avg_logloss / h
+}
+
+/// Evaluation aggregate: summed logloss + calibration inputs.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EvalAccum {
+    pub loss_sum: f64,
+    pub pred_sum: f64,
+    pub label_sum: f64,
+    pub examples: u64,
+}
+
+impl EvalAccum {
+    pub fn add(&mut self, loss_sum: f64, pred_sum: f64, label_sum: f64, n: u64) {
+        self.loss_sum += loss_sum;
+        self.pred_sum += pred_sum;
+        self.label_sum += label_sum;
+        self.examples += n;
+    }
+
+    pub fn avg_loss(&self) -> f64 {
+        self.loss_sum / self.examples.max(1) as f64
+    }
+
+    pub fn base_ctr(&self) -> f64 {
+        self.label_sum / self.examples.max(1) as f64
+    }
+
+    /// predicted clicks / actual clicks — 1.0 is perfectly calibrated.
+    pub fn calibration(&self) -> f64 {
+        self.pred_sum / self.label_sum.max(1e-9)
+    }
+
+    pub fn ne(&self) -> f64 {
+        normalized_entropy(self.avg_loss(), self.base_ctr())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn atomic_f64_exact_under_contention() {
+        let a = Arc::new(AtomicF64::default());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let a = a.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        a.add(0.5);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(a.get(), 20_000.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(32, 22.4);
+        m.record_batch(32, 20.8);
+        let s = m.snapshot();
+        assert_eq!(s.examples, 64);
+        assert_eq!(s.iterations, 2);
+        assert!((s.avg_loss - 43.2 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sync_gap_eq2() {
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_batch(8, 1.0);
+        }
+        for _ in 0..20 {
+            m.record_sync(64);
+        }
+        assert_eq!(m.avg_sync_gap(), 5.0);
+        assert_eq!(m.snapshot().sync_bytes, 20 * 64);
+        let empty = Metrics::new();
+        assert!(empty.avg_sync_gap().is_infinite());
+    }
+
+    #[test]
+    fn ne_of_base_rate_predictor_is_one() {
+        // predicting exactly the base rate gives NE = 1.0
+        let p: f64 = 0.3;
+        let avg_ll = -(p * p.ln() + (1.0 - p) * (1.0 - p).ln());
+        assert!((normalized_entropy(avg_ll, p) - 1.0).abs() < 1e-12);
+        // a better-than-base model gives NE < 1
+        assert!(normalized_entropy(avg_ll * 0.8, p) < 1.0);
+    }
+
+    #[test]
+    fn eval_accum() {
+        let mut e = EvalAccum::default();
+        e.add(30.0, 28.0, 30.0, 100);
+        e.add(30.0, 32.0, 30.0, 100);
+        assert_eq!(e.avg_loss(), 0.3);
+        assert_eq!(e.base_ctr(), 0.3);
+        assert!((e.calibration() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,142 @@
+//! Cluster "network": per-node byte accounting with optional simulated
+//! bandwidth delay.
+//!
+//! In-process realization (DESIGN.md §3): trainers, embedding PSs and sync
+//! PSs are actors inside one process, so the wire is a function call. What
+//! the experiments need from the network layer is (a) *traffic accounting*
+//! per node — the paper diagnoses the FR-EASGD-5 plateau by looking at sync
+//! PS NIC saturation — and (b) optionally injecting transfer delay so small
+//! real-mode runs can exhibit bandwidth effects. Throughput *modelling* at
+//! paper scale happens in `sim/` instead.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+/// Node roles for per-role aggregation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Trainer,
+    EmbeddingPs,
+    SyncPs,
+    Reader,
+}
+
+/// One node's NIC counters.
+#[derive(Debug, Default)]
+pub struct Nic {
+    pub tx_bytes: AtomicU64,
+    pub rx_bytes: AtomicU64,
+}
+
+/// The cluster fabric: one NIC per node plus an optional bandwidth model.
+pub struct Network {
+    nodes: Vec<(Role, Nic)>,
+    /// simulated per-NIC bandwidth in bytes/sec (None = only account)
+    pub bandwidth: Option<f64>,
+}
+
+/// Handle for one endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeId(pub usize);
+
+impl Network {
+    pub fn new(bandwidth: Option<f64>) -> Self {
+        Self { nodes: Vec::new(), bandwidth }
+    }
+
+    pub fn add_node(&mut self, role: Role) -> NodeId {
+        self.nodes.push((role, Nic::default()));
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Record a transfer of `bytes` from `src` to `dst`; if a bandwidth model
+    /// is installed, block the calling thread for the wire time. Transfers
+    /// are full-duplex (tx and rx accounted separately).
+    pub fn transfer(&self, src: NodeId, dst: NodeId, bytes: u64) {
+        self.nodes[src.0].1.tx_bytes.fetch_add(bytes, Relaxed);
+        self.nodes[dst.0].1.rx_bytes.fetch_add(bytes, Relaxed);
+        if let Some(bw) = self.bandwidth {
+            let secs = bytes as f64 / bw;
+            if secs > 1e-6 {
+                std::thread::sleep(Duration::from_secs_f64(secs));
+            }
+        }
+    }
+
+    pub fn tx(&self, n: NodeId) -> u64 {
+        self.nodes[n.0].1.tx_bytes.load(Relaxed)
+    }
+
+    pub fn rx(&self, n: NodeId) -> u64 {
+        self.nodes[n.0].1.rx_bytes.load(Relaxed)
+    }
+
+    /// Total bytes through NICs of a given role (tx + rx).
+    pub fn role_bytes(&self, role: Role) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|(r, _)| *r == role)
+            .map(|(_, nic)| nic.tx_bytes.load(Relaxed) + nic.rx_bytes.load(Relaxed))
+            .sum()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// 25 Gbit Ethernet (the paper's testbed NIC), in bytes/sec.
+pub const PAPER_NIC_BYTES_PER_SEC: f64 = 25.0e9 / 8.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn accounting_only_by_default() {
+        let mut net = Network::new(None);
+        let a = net.add_node(Role::Trainer);
+        let b = net.add_node(Role::SyncPs);
+        let net = Arc::new(net);
+        net.transfer(a, b, 100);
+        net.transfer(b, a, 40);
+        assert_eq!(net.tx(a), 100);
+        assert_eq!(net.rx(b), 100);
+        assert_eq!(net.tx(b), 40);
+        assert_eq!(net.role_bytes(Role::SyncPs), 140);
+        assert_eq!(net.role_bytes(Role::Trainer), 140);
+    }
+
+    #[test]
+    fn concurrent_transfers_sum_exactly() {
+        let mut net = Network::new(None);
+        let a = net.add_node(Role::Trainer);
+        let b = net.add_node(Role::EmbeddingPs);
+        let net = Arc::new(net);
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let net = net.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        net.transfer(a, b, 7);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(net.rx(b), 4 * 1000 * 7);
+    }
+
+    #[test]
+    fn bandwidth_injects_delay() {
+        let mut net = Network::new(Some(1e6)); // 1 MB/s
+        let a = net.add_node(Role::Trainer);
+        let b = net.add_node(Role::SyncPs);
+        let t0 = std::time::Instant::now();
+        net.transfer(a, b, 20_000); // 20ms at 1MB/s
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+}

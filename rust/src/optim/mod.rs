@@ -1,0 +1,138 @@
+//! Optimizers.
+//!
+//! The paper's setup: Adagrad on both the dense replicas (applied Hogwild
+//! within a trainer) and the embedding tables (applied Hogwild on the
+//! embedding PSs, auxiliary state collocated with the rows, §3.2), plus the
+//! block-momentum update used by the BMUF global step.
+
+use std::sync::Arc;
+
+use crate::tensor::HogwildBuffer;
+
+/// Dense Adagrad over a Hogwild-shared parameter vector.
+///
+/// Both the parameters and the squared-gradient accumulator live in shared
+/// lock-free buffers; worker threads apply updates racily (the paper's
+/// within-trainer Hogwild, which deliberately breaks the sparse-access
+/// assumption of the original Hogwild paper).
+pub struct HogwildAdagrad {
+    pub lr: f32,
+    pub eps: f32,
+    accum: Arc<HogwildBuffer>,
+}
+
+impl HogwildAdagrad {
+    pub fn new(num_params: usize, lr: f32, eps: f32) -> Self {
+        Self { lr, eps, accum: Arc::new(HogwildBuffer::zeros(num_params)) }
+    }
+
+    /// Apply one gradient to the shared parameters: for every i,
+    /// `G_i += g_i^2; w_i -= lr * g_i / (sqrt(G_i) + eps)`. Racy by design.
+    pub fn apply(&self, params: &HogwildBuffer, grad: &[f32]) {
+        use std::sync::atomic::Ordering::Relaxed;
+        debug_assert_eq!(params.len(), grad.len());
+        debug_assert_eq!(self.accum.len(), grad.len());
+        // §Perf: zipped atomic slices — one bounds check per batch, not 4/elt
+        let n = grad.len();
+        let accum = self.accum.range(0, n);
+        let ps = params.range(0, n);
+        for ((&g, a), p) in grad.iter().zip(accum).zip(ps) {
+            let acc = f32::from_bits(a.load(Relaxed)) + g * g;
+            a.store(acc.to_bits(), Relaxed);
+            let step = self.lr * g / (acc.sqrt() + self.eps);
+            let v = f32::from_bits(p.load(Relaxed)) - step;
+            p.store(v.to_bits(), Relaxed);
+        }
+    }
+
+    pub fn accum(&self) -> &HogwildBuffer {
+        &self.accum
+    }
+}
+
+/// Block-momentum state for the BMUF global step (Algorithm 4 comment line:
+/// "can do momentum update, Nesterov acceleration etc.").
+pub struct BlockMomentum {
+    pub eta: f32,
+    pub momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl BlockMomentum {
+    pub fn new(num_params: usize, eta: f32, momentum: f32) -> Self {
+        Self { eta, momentum, velocity: vec![0.0; num_params] }
+    }
+
+    /// `v = mu*v + eta*desc; global += v`. Plain (non-shared) vectors: the
+    /// BMUF global copy is private to one shadow thread.
+    pub fn step(&mut self, global: &mut [f32], desc: &[f32]) {
+        debug_assert_eq!(global.len(), desc.len());
+        for ((v, g), &d) in self.velocity.iter_mut().zip(global.iter_mut()).zip(desc) {
+            *v = self.momentum * *v + self.eta * d;
+            *g += *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn adagrad_descends_quadratic() {
+        // minimize f(w) = 0.5*|w - target|^2 with grad = w - target
+        let n = 16;
+        let params = HogwildBuffer::from_slice(&vec![0.0; n]);
+        let target = vec![3.0f32; n];
+        let opt = HogwildAdagrad::new(n, 0.5, 1e-8);
+        let mut grad = vec![0.0f32; n];
+        for _ in 0..800 {
+            for i in 0..n {
+                grad[i] = params.get(i) - target[i];
+            }
+            opt.apply(&params, &grad);
+        }
+        for v in params.to_vec() {
+            assert!((v - 3.0).abs() < 0.15, "v={v}");
+        }
+    }
+
+    #[test]
+    fn adagrad_step_shrinks_with_accumulation() {
+        let params = HogwildBuffer::from_slice(&[0.0]);
+        let opt = HogwildAdagrad::new(1, 0.1, 1e-8);
+        opt.apply(&params, &[1.0]);
+        let first = -params.get(0);
+        opt.apply(&params, &[1.0]);
+        let second = -params.get(0) - first;
+        assert!(second < first, "second step {second} !< first {first}");
+        assert!((first - 0.1).abs() < 1e-4); // lr * g / sqrt(g^2)
+    }
+
+    #[test]
+    fn block_momentum_accumulates() {
+        let mut bm = BlockMomentum::new(2, 1.0, 0.5);
+        let mut global = vec![0.0f32; 2];
+        bm.step(&mut global, &[1.0, 2.0]);
+        assert_eq!(global, vec![1.0, 2.0]);
+        bm.step(&mut global, &[1.0, 2.0]);
+        // v = 0.5*1 + 1 = 1.5 -> global = 2.5
+        assert_eq!(global, vec![2.5, 5.0]);
+    }
+
+    #[test]
+    fn zero_momentum_is_plain_step() {
+        check("bmuf-eta", 20, |g| {
+            let n = g.usize_in(1, 16);
+            let eta = g.f32_in(0.1, 2.0);
+            let desc = g.vec_normal(n, 1.0);
+            let mut bm = BlockMomentum::new(n, eta, 0.0);
+            let mut global = vec![0.0f32; n];
+            bm.step(&mut global, &desc);
+            for (gi, di) in global.iter().zip(&desc) {
+                assert!((gi - eta * di).abs() < 1e-5);
+            }
+        });
+    }
+}

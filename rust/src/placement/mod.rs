@@ -1,0 +1,136 @@
+//! Cost-balanced placement of parameter shards onto servers.
+//!
+//! The paper (§3.1) profiles embedding-lookup cost per table and solves a
+//! bin-packing problem to spread load evenly across the embedding PSs (and
+//! the same for sync-PS parameter shards). We implement the classic LPT
+//! (longest-processing-time-first) greedy: sort items by cost descending,
+//! always assign to the least-loaded bin — 4/3-optimal for makespan.
+
+/// An item to place: id + profiled cost (e.g. expected lookups/sec × rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Item {
+    pub id: usize,
+    pub cost: f64,
+}
+
+/// Result: `assignment[item.id] = bin`, plus per-bin load.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub assignment: Vec<usize>,
+    pub bin_load: Vec<f64>,
+}
+
+impl Placement {
+    pub fn max_load(&self) -> f64 {
+        self.bin_load.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn min_load(&self) -> f64 {
+        self.bin_load.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// max/mean load ratio — 1.0 is perfectly balanced.
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.bin_load.iter().sum::<f64>() / self.bin_load.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            self.max_load() / mean
+        }
+    }
+}
+
+/// LPT greedy bin packing of `items` onto `bins` bins.
+pub fn lpt(items: &[Item], bins: usize) -> Placement {
+    assert!(bins > 0, "need at least one bin");
+    let max_id = items.iter().map(|i| i.id).max().map_or(0, |m| m + 1);
+    let mut assignment = vec![usize::MAX; max_id];
+    let mut bin_load = vec![0f64; bins];
+    let mut order: Vec<&Item> = items.iter().collect();
+    order.sort_by(|a, b| b.cost.partial_cmp(&a.cost).unwrap().then(a.id.cmp(&b.id)));
+    for it in order {
+        let (best, _) = bin_load
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .unwrap();
+        assignment[it.id] = best;
+        bin_load[best] += it.cost;
+    }
+    Placement { assignment, bin_load }
+}
+
+/// Split a parameter vector of `len` into `shards` near-equal contiguous
+/// ranges `[lo, hi)` — used to spread `w^PS` across sync PSs.
+pub fn equal_ranges(len: usize, shards: usize) -> Vec<(usize, usize)> {
+    assert!(shards > 0);
+    let base = len / shards;
+    let extra = len % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut lo = 0;
+    for s in 0..shards {
+        let sz = base + usize::from(s < extra);
+        out.push((lo, lo + sz));
+        lo += sz;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn lpt_balances_simple() {
+        let items: Vec<Item> =
+            [7.0, 5.0, 4.0, 3.0, 1.0].iter().enumerate().map(|(id, &c)| Item { id, cost: c }).collect();
+        let p = lpt(&items, 2);
+        // LPT: 7 | 5,4 -> 7+3 | 9+1 -> loads {10, 10}
+        assert_eq!(p.max_load(), 10.0);
+        assert_eq!(p.min_load(), 10.0);
+        assert!(p.assignment.iter().all(|&b| b < 2));
+    }
+
+    #[test]
+    fn lpt_invariants() {
+        check("lpt", 40, |g| {
+            let n_items = g.usize_in(0, 40);
+            let bins = g.usize_in(1, 8);
+            let items: Vec<Item> = (0..n_items)
+                .map(|id| Item { id, cost: g.f32_in(0.1, 10.0) as f64 })
+                .collect();
+            let p = lpt(&items, bins);
+            // every item assigned to a valid bin
+            for it in &items {
+                assert!(p.assignment[it.id] < bins);
+            }
+            // loads add up
+            let total: f64 = items.iter().map(|i| i.cost).sum();
+            assert!((p.bin_load.iter().sum::<f64>() - total).abs() < 1e-9 * (1.0 + total));
+            // LPT guarantee: makespan <= 4/3 OPT + largest; OPT >= total/bins
+            if n_items > 0 {
+                let largest = items.iter().map(|i| i.cost).fold(0.0, f64::max);
+                assert!(p.max_load() <= (4.0 / 3.0) * (total / bins as f64) + largest + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn equal_ranges_partition() {
+        check("ranges", 40, |g| {
+            let len = g.usize_in(0, 1000);
+            let shards = g.usize_in(1, 9);
+            let rs = equal_ranges(len, shards);
+            assert_eq!(rs.len(), shards);
+            assert_eq!(rs[0].0, 0);
+            assert_eq!(rs[shards - 1].1, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].1, w[1].0); // contiguous
+            }
+            let sizes: Vec<usize> = rs.iter().map(|(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1); // near-equal
+        });
+    }
+}

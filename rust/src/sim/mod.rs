@@ -1,0 +1,112 @@
+//! Cluster-scale throughput model (the EPS side of the paper's figures).
+//!
+//! This box has one core; 20 trainers × 24 worker threads cannot exhibit
+//! the paper's throughput physics in vivo. The quality experiments run the
+//! *real* system at reduced scale; the EPS-scaling curves (Fig. 5, 6b, 8)
+//! come from this steady-state model of the paper's testbed, built from the
+//! two saturation mechanisms the paper identifies explicitly:
+//!
+//! 1. **Trainer memory bandwidth** (§4.4): the interaction layers are
+//!    memory-bound; ~50% utilization at 12 worker threads, saturated by 24.
+//!    Modelled as a smooth-knee effective-parallelism curve.
+//! 2. **Sync-PS NIC saturation** (§4.1.2): FR-EASGD syncs from *every
+//!    worker thread* inline, so sync traffic scales with `n·m/k` and the
+//!    sync-PS NICs clip it; because the sync is foreground, clipping
+//!    throttles training itself. Shadow syncing uses leftover bandwidth and
+//!    instead lets the *sync gap* grow.
+//!
+//! Parameters are calibrated per `CostModel::paper_scale` to the paper's
+//! testbed (20-core Xeon, 25 Gbit NICs, batch 200, 24 threads); the
+//! small-scale constants (per-batch compute) are measured from this repo's
+//! real runs by `exp::calibrate`.
+
+pub mod model;
+
+pub use model::{CostModel, SimPoint};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SyncAlgo, SyncMode};
+
+    fn m() -> CostModel {
+        CostModel::paper_scale()
+    }
+
+    #[test]
+    fn shadow_easgd_scales_linearly() {
+        let pts: Vec<SimPoint> = (5..=20)
+            .map(|n| m().simulate(n, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2))
+            .collect();
+        for w in pts.windows(2) {
+            let r = w[1].eps / w[0].eps;
+            let n_ratio = w[1].trainers as f64 / w[0].trainers as f64;
+            assert!((r - n_ratio).abs() < 0.02, "not linear: {r} vs {n_ratio}");
+        }
+    }
+
+    #[test]
+    fn fr_easgd_5_plateaus_but_fr_30_does_not() {
+        let eps = |n, k| m().simulate(n, 24, SyncAlgo::Easgd, SyncMode::FixedRate { gap: k }, 2).eps;
+        // FR-5 saturates the 2 sync PSs somewhere in the mid-teens
+        let e14 = eps(14, 5);
+        let e20 = eps(20, 5);
+        assert!(e20 < e14 * 1.15, "FR-5 should plateau: {e14} -> {e20}");
+        // FR-30 keeps scaling
+        let f14 = eps(14, 30);
+        let f20 = eps(20, 30);
+        assert!(f20 > f14 * 1.35, "FR-30 should keep scaling: {f14} -> {f20}");
+        // shadow beats FR-5 at scale
+        let s20 = m().simulate(20, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2).eps;
+        assert!(s20 > e20 * 1.3);
+    }
+
+    #[test]
+    fn four_sync_ps_fixes_fr5_plateau() {
+        let eps2 = m().simulate(20, 24, SyncAlgo::Easgd, SyncMode::FixedRate { gap: 5 }, 2).eps;
+        let eps4 = m().simulate(20, 24, SyncAlgo::Easgd, SyncMode::FixedRate { gap: 5 }, 4).eps;
+        assert!(eps4 > eps2 * 1.5, "doubling sync PSs should relieve the clip");
+        // and with 4 PSs the 5→20 curve is near-linear again (paper Fig 5 last panel)
+        let e5 = m().simulate(5, 24, SyncAlgo::Easgd, SyncMode::FixedRate { gap: 5 }, 4).eps;
+        assert!(eps4 / e5 > 3.3, "ratio {}", eps4 / e5);
+    }
+
+    #[test]
+    fn shadow_gap_grows_with_trainers_when_ps_bound() {
+        // paper: 15→20 trainers gave gaps 8.60 … 12.48 with 2 sync PSs
+        let g15 = m().simulate(15, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2).avg_sync_gap;
+        let g20 = m().simulate(20, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2).avg_sync_gap;
+        assert!(g20 > g15, "gap should grow: {g15} -> {g20}");
+        assert!(g15 > 2.0 && g20 < 40.0, "gaps implausible: {g15}, {g20}");
+    }
+
+    #[test]
+    fn hogwild_threads_saturate_after_24() {
+        // paper Fig 8 right: EPS almost stops growing at >= 24 threads
+        let eps = |t| m().simulate(5, t, SyncAlgo::Easgd, SyncMode::Shadow, 1).eps;
+        assert!(eps(24) / eps(12) > 1.4, "12->24 should still grow");
+        assert!(eps(32) / eps(24) < 1.12, "24->32 should be nearly flat");
+        assert!(eps(64) / eps(32) < 1.05, "32->64 flat");
+    }
+
+    #[test]
+    fn decentralized_algos_scale_linearly_shadow_and_fr() {
+        for algo in [SyncAlgo::Ma, SyncAlgo::Bmuf] {
+            for mode in [SyncMode::Shadow, SyncMode::FixedRate { gap: 60 }] {
+                let e5 = m().simulate(5, 24, algo, mode, 0).eps;
+                let e20 = m().simulate(20, 24, algo, mode, 0).eps;
+                assert!(e20 / e5 > 3.4, "{algo:?}/{mode:?} ratio {}", e20 / e5);
+            }
+        }
+    }
+
+    #[test]
+    fn reader_cap_binds() {
+        let mut cm = m();
+        cm.reader_eps_cap = Some(50_000.0);
+        let p = cm.simulate(20, 24, SyncAlgo::Easgd, SyncMode::Shadow, 6);
+        assert!(p.eps <= 50_000.0 * 1.001);
+        // reader-bound training slows, so the shadow gap collapses toward ~1
+        assert!(p.avg_sync_gap < 3.0, "gap {}", p.avg_sync_gap);
+    }
+}

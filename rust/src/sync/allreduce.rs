@@ -1,0 +1,212 @@
+//! In-process AllReduce for the decentralized algorithms (MA, BMUF).
+//!
+//! Semantics match a ring all-reduce over the trainers: every active member
+//! contributes a vector, everyone receives the element-wise mean. Because
+//! training is one-pass, trainers finish their shards at different times;
+//! members therefore [`AllReduceGroup::leave`] the group when done and
+//! rounds complete over the *remaining* membership (a real collective over
+//! dynamic process groups behaves the same way after a resize).
+//!
+//! Wire-cost accounting uses the ring formula: each member moves
+//! `2·(n-1)/n · bytes` in each direction per round.
+
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{ensure, Result};
+
+struct State {
+    active: usize,
+    joined: usize,
+    sum: Vec<f32>,
+    result: Vec<f32>,
+    generation: u64,
+}
+
+/// A dynamic-membership mean-AllReduce group.
+pub struct AllReduceGroup {
+    state: Mutex<State>,
+    cv: Condvar,
+    pub len: usize,
+}
+
+impl AllReduceGroup {
+    /// `members` trainers, vectors of length `len`.
+    pub fn new(members: usize, len: usize) -> Self {
+        Self {
+            state: Mutex::new(State {
+                active: members,
+                joined: 0,
+                sum: vec![0.0; len],
+                result: vec![0.0; len],
+                generation: 0,
+            }),
+            cv: Condvar::new(),
+            len,
+        }
+    }
+
+    fn finalize(st: &mut State) {
+        let n = st.joined as f32;
+        for (r, s) in st.result.iter_mut().zip(&st.sum) {
+            *r = s / n;
+        }
+        st.sum.fill(0.0);
+        st.joined = 0;
+        st.generation += 1;
+    }
+
+    /// Contribute `data`, block until the round completes, and replace
+    /// `data` with the mean over this round's contributors. Returns the
+    /// number of contributors (for wire-cost accounting).
+    pub fn allreduce_mean(&self, data: &mut [f32]) -> Result<usize> {
+        ensure!(data.len() == self.len, "allreduce length mismatch");
+        let mut st = self.state.lock().unwrap();
+        ensure!(st.active > 0, "allreduce on an empty group");
+        for (s, &d) in st.sum.iter_mut().zip(data.iter()) {
+            *s += d;
+        }
+        st.joined += 1;
+        let my_gen = st.generation;
+        if st.joined == st.active {
+            let n = st.joined;
+            Self::finalize(&mut st);
+            data.copy_from_slice(&st.result);
+            self.cv.notify_all();
+            return Ok(n);
+        }
+        while st.generation == my_gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        data.copy_from_slice(&st.result);
+        // contributors of the completed round = active at completion + any
+        // leavers mid-round; report current active + 0 conservatively:
+        Ok(st.active.max(1))
+    }
+
+    /// Permanently remove one member. If everyone else is already waiting,
+    /// the pending round completes without the leaver.
+    pub fn leave(&self) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.active > 0);
+        st.active -= 1;
+        if st.active > 0 && st.joined == st.active {
+            Self::finalize(&mut st);
+            self.cv.notify_all();
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        self.state.lock().unwrap().active
+    }
+
+    /// Ring all-reduce bytes each member moves per direction per round.
+    pub fn ring_bytes_per_member(&self, participants: usize) -> u64 {
+        if participants <= 1 {
+            return 0;
+        }
+        let vec_bytes = (self.len * 4) as u64;
+        2 * vec_bytes * (participants as u64 - 1) / participants as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mean_matches_sequential_sum() {
+        let n = 4;
+        let g = Arc::new(AllReduceGroup::new(n, 8));
+        let mut hs = Vec::new();
+        for r in 0..n {
+            let g = g.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut v = vec![(r + 1) as f32; 8];
+                let parts = g.allreduce_mean(&mut v).unwrap();
+                (v, parts)
+            }));
+        }
+        for h in hs {
+            let (v, _) = h.join().unwrap();
+            // mean of 1,2,3,4 = 2.5
+            assert!(v.iter().all(|&x| (x - 2.5).abs() < 1e-6), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn repeated_rounds_stay_consistent() {
+        let n = 3;
+        let g = Arc::new(AllReduceGroup::new(n, 4));
+        let mut hs = Vec::new();
+        for r in 0..n {
+            let g = g.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut acc = Vec::new();
+                for round in 0..50 {
+                    let mut v = vec![(r * 50 + round) as f32; 4];
+                    g.allreduce_mean(&mut v).unwrap();
+                    acc.push(v[0]);
+                }
+                acc
+            }));
+        }
+        let results: Vec<Vec<f32>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        for round in 0..50 {
+            let want = (0..n).map(|r| (r * 50 + round) as f32).sum::<f32>() / n as f32;
+            for res in &results {
+                assert!((res[round] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn leaver_unblocks_pending_round() {
+        let g = Arc::new(AllReduceGroup::new(3, 2));
+        let g2 = g.clone();
+        let waiter = std::thread::spawn(move || {
+            let mut v = vec![6.0, 6.0];
+            g2.allreduce_mean(&mut v).unwrap();
+            v
+        });
+        let g3 = g.clone();
+        let waiter2 = std::thread::spawn(move || {
+            let mut v = vec![2.0, 2.0];
+            g3.allreduce_mean(&mut v).unwrap();
+            v
+        });
+        // give the waiters time to block, then the third member leaves
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        g.leave();
+        let v = waiter.join().unwrap();
+        let v2 = waiter2.join().unwrap();
+        // round completed over the two contributors: mean = 4
+        assert_eq!(v, vec![4.0, 4.0]);
+        assert_eq!(v2, vec![4.0, 4.0]);
+        assert_eq!(g.active(), 2);
+    }
+
+    #[test]
+    fn singleton_group_is_identity() {
+        let g = AllReduceGroup::new(1, 3);
+        let mut v = vec![1.0, 2.0, 3.0];
+        let parts = g.allreduce_mean(&mut v).unwrap();
+        assert_eq!(parts, 1);
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+        assert_eq!(g.ring_bytes_per_member(1), 0);
+    }
+
+    #[test]
+    fn ring_cost_formula() {
+        let g = AllReduceGroup::new(4, 100);
+        // 2 * 400 bytes * 3/4 = 600
+        assert_eq!(g.ring_bytes_per_member(4), 600);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let g = AllReduceGroup::new(1, 3);
+        let mut v = vec![0.0; 2];
+        assert!(g.allreduce_mean(&mut v).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Blockwise Model-Update Filtering synchronization (paper Algorithm 4;
+//! Chen & Huo 2016).
+//!
+//! Decentralized like MA, but instead of adopting the AllReduce average
+//! directly, each trainer maintains a private `w^global` and treats
+//! `average - w^global` as a surrogate gradient ("descent direction"),
+//! applies it with step size η and optional block momentum, then pulls the
+//! local replica elastically toward the updated `w^global`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{AllReduceGroup, SyncCtx, SyncStrategy};
+use crate::optim::BlockMomentum;
+use crate::tensor::ops;
+
+pub struct BmufSync {
+    group: Arc<AllReduceGroup>,
+    pub alpha: f32,
+    momentum: BlockMomentum,
+    /// private `w^global` (Algorithm 4 line 2)
+    global: Vec<f32>,
+    /// `w^copy` AllReduce scratch
+    copy: Vec<f32>,
+    /// `w^desc` descent direction scratch
+    desc: Vec<f32>,
+    left: bool,
+}
+
+impl BmufSync {
+    pub fn new(group: Arc<AllReduceGroup>, alpha: f32, eta: f32, mu: f32, w0: &[f32]) -> Self {
+        Self {
+            group,
+            alpha,
+            momentum: BlockMomentum::new(w0.len(), eta, mu),
+            global: w0.to_vec(),
+            copy: vec![0.0; w0.len()],
+            desc: vec![0.0; w0.len()],
+            left: false,
+        }
+    }
+}
+
+impl SyncStrategy for BmufSync {
+    fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
+        // w_copy <- local; w_copy <- AllReduce(w_copy)/n
+        ctx.local.read_into(&mut self.copy);
+        let participants = self.group.allreduce_mean(&mut self.copy)?;
+        // w_desc <- w_copy - w_global
+        ops::sub(&mut self.desc, &self.copy, &self.global);
+        let gap = ops::l2_norm(&self.desc) / (self.desc.len() as f32).sqrt();
+        // w_global <- w_global + momentum(eta * w_desc)
+        self.momentum.step(&mut self.global, &self.desc);
+        // w_i <- (1-alpha) w_i + alpha w_global
+        ctx.local.lerp_toward_slice(&self.global, self.alpha);
+        let bytes = self.group.ring_bytes_per_member(participants);
+        ctx.metrics.record_sync(bytes);
+        ctx.net.transfer(ctx.trainer_node, ctx.trainer_node, bytes);
+        Ok(gap)
+    }
+
+    fn leave(&mut self) {
+        if !self.left {
+            self.group.leave();
+            self.left = true;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "bmuf"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+    use crate::net::{Network, Role};
+    use crate::tensor::HogwildBuffer;
+
+    #[test]
+    fn eta1_mu0_tracks_average() {
+        // with eta=1, mu=0: w_global becomes the average, like MA
+        let group = Arc::new(AllReduceGroup::new(1, 3));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&[4.0, 8.0, -2.0]);
+        let mut b = BmufSync::new(group, 1.0, 1.0, 0.0, &[0.0, 0.0, 0.0]);
+        let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+        b.sync_round(&ctx).unwrap();
+        // singleton: average = local; w_global = 0 + (local - 0) = local;
+        // alpha=1 -> local unchanged
+        assert_eq!(b.global, vec![4.0, 8.0, -2.0]);
+        assert_eq!(local.to_vec(), vec![4.0, 8.0, -2.0]);
+    }
+
+    #[test]
+    fn conservative_alpha_moves_partially() {
+        let group = Arc::new(AllReduceGroup::new(1, 2));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&[10.0, 10.0]);
+        // w0=0, so after one round w_global = 10 (eta=1), local pulls 25% in
+        let mut b = BmufSync::new(group, 0.25, 1.0, 0.0, &[0.0, 0.0]);
+        let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+        b.sync_round(&ctx).unwrap();
+        assert_eq!(local.to_vec(), vec![10.0, 10.0]); // global == local already
+        // now pretend workers moved local further
+        local.write_from(&[20.0, 20.0]);
+        b.sync_round(&ctx).unwrap();
+        // avg=20, desc=10, global=20; local moves 25% of (20-20)=0 -> stays
+        assert_eq!(b.global, vec![20.0, 20.0]);
+    }
+
+    #[test]
+    fn momentum_smooths_direction() {
+        let group = Arc::new(AllReduceGroup::new(1, 1));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&[1.0]);
+        let mut b = BmufSync::new(group, 0.0, 1.0, 0.5, &[0.0]);
+        let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+        b.sync_round(&ctx).unwrap();
+        // v = 1, global = 1
+        assert_eq!(b.global, vec![1.0]);
+        b.sync_round(&ctx).unwrap();
+        // desc = 1 - 1 = 0; v = 0.5; global = 1.5 (momentum carries past)
+        assert_eq!(b.global, vec![1.5]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Sync drivers: the shadow thread (background) and the foreground
+//! fixed-rate hook.
+//!
+//! **Shadow** (the paper's framework, Algorithm 1 lines 10–12): one extra
+//! thread per trainer loops sync rounds while worker threads train — the
+//! synchronization is "neither part of the backward pass nor happens every
+//! k iterations". An optional interval throttles the loop (the
+//! `ablate-shadow-rate` experiment sweeps it; 0 = free-running as in the
+//! paper).
+//!
+//! **Foreground fixed-rate**: the baselines. For EASGD every worker thread
+//! syncs inline every `gap` of its own iterations (this is what makes
+//! FR-EASGD's sync-PS traffic `m×` larger). For AllReduce algorithms the
+//! trainer's designated syncer (worker 0) runs the collective every `gap`
+//! trainer-level iterations while a write-lock gate stops that trainer's
+//! other workers — synchronization literally interrupts training.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::metrics::Metrics;
+use crate::net::{Network, NodeId};
+use crate::tensor::HogwildBuffer;
+
+use super::SyncStrategy;
+
+/// Shared flag a trainer raises when its shard is exhausted.
+pub type StopFlag = Arc<AtomicBool>;
+
+/// Spawn the shadow thread for one trainer.
+///
+/// The thread loops `strategy.sync_round` until `stop` is raised, then calls
+/// `strategy.leave()` so decentralized groups shrink. Returns the join
+/// handle; the thread returns the number of rounds it ran.
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_shadow(
+    mut strategy: Box<dyn SyncStrategy>,
+    local: Arc<HogwildBuffer>,
+    trainer_node: NodeId,
+    net: Arc<Network>,
+    metrics: Arc<Metrics>,
+    stop: StopFlag,
+    interval: Duration,
+    trainer_id: usize,
+) -> JoinHandle<Result<u64>> {
+    std::thread::Builder::new()
+        .name(format!("shadow-{trainer_id}"))
+        .spawn(move || {
+            let mut rounds = 0u64;
+            while !stop.load(Relaxed) {
+                let ctx = super::SyncCtx {
+                    local: &local,
+                    trainer_node,
+                    net: &net,
+                    metrics: &metrics,
+                };
+                strategy.sync_round(&ctx)?;
+                rounds += 1;
+                if !interval.is_zero() {
+                    std::thread::sleep(interval);
+                }
+            }
+            strategy.leave();
+            Ok(rounds)
+        })
+        .expect("spawn shadow thread")
+}
+
+/// Foreground gate: workers hold a read lock while training; a fixed-rate
+/// AllReduce syncer takes the write lock, stopping the trainer's world.
+#[derive(Default)]
+pub struct Gate {
+    lock: RwLock<()>,
+}
+
+impl Gate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Workers wrap each iteration in this.
+    pub fn working(&self) -> std::sync::RwLockReadGuard<'_, ()> {
+        self.lock.read().unwrap()
+    }
+
+    /// The foreground syncer wraps the collective in this.
+    pub fn stop_the_world(&self) -> std::sync::RwLockWriteGuard<'_, ()> {
+        self.lock.write().unwrap()
+    }
+}
+
+/// Per-trainer shared iteration counter driving fixed-rate scheduling.
+#[derive(Default)]
+pub struct IterCounter(AtomicU64);
+
+impl IterCounter {
+    pub fn bump(&self) -> u64 {
+        self.0.fetch_add(1, Relaxed) + 1
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Role;
+    use crate::sync::{NoSync, SyncCtx, SyncStrategy};
+
+    struct CountingSync {
+        rounds: Arc<AtomicU64>,
+        left: Arc<AtomicBool>,
+    }
+
+    impl SyncStrategy for CountingSync {
+        fn sync_round(&mut self, _ctx: &SyncCtx<'_>) -> Result<f32> {
+            self.rounds.fetch_add(1, Relaxed);
+            Ok(0.0)
+        }
+        fn leave(&mut self) {
+            self.left.store(true, Relaxed);
+        }
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    #[test]
+    fn shadow_thread_runs_until_stopped_then_leaves() {
+        let rounds = Arc::new(AtomicU64::new(0));
+        let left = Arc::new(AtomicBool::new(false));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_shadow(
+            Box::new(CountingSync { rounds: rounds.clone(), left: left.clone() }),
+            Arc::new(HogwildBuffer::zeros(4)),
+            node,
+            Arc::new(net),
+            Arc::new(Metrics::new()),
+            stop.clone(),
+            Duration::from_millis(1),
+            0,
+        );
+        while rounds.load(Relaxed) < 5 {
+            std::thread::yield_now();
+        }
+        stop.store(true, Relaxed);
+        let n = h.join().unwrap().unwrap();
+        assert!(n >= 5);
+        assert!(left.load(Relaxed));
+    }
+
+    #[test]
+    fn shadow_free_runs_without_interval() {
+        let rounds = Arc::new(AtomicU64::new(0));
+        let left = Arc::new(AtomicBool::new(false));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_shadow(
+            Box::new(CountingSync { rounds: rounds.clone(), left }),
+            Arc::new(HogwildBuffer::zeros(4)),
+            node,
+            Arc::new(net),
+            Arc::new(Metrics::new()),
+            stop.clone(),
+            Duration::ZERO,
+            1,
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        stop.store(true, Relaxed);
+        let n = h.join().unwrap().unwrap();
+        assert!(n > 100, "free-running shadow only did {n} rounds");
+    }
+
+    #[test]
+    fn gate_blocks_workers_during_sync() {
+        let gate = Arc::new(Gate::new());
+        let in_crit = Arc::new(AtomicU64::new(0));
+        let g = gate.clone();
+        let ic = in_crit.clone();
+        let w = gate.stop_the_world();
+        let worker = std::thread::spawn(move || {
+            let _guard = g.working();
+            ic.store(1, Relaxed);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(in_crit.load(Relaxed), 0, "worker entered during stop-the-world");
+        drop(w);
+        worker.join().unwrap();
+        assert_eq!(in_crit.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn iter_counter() {
+        let c = IterCounter::default();
+        assert_eq!(c.bump(), 1);
+        assert_eq!(c.bump(), 2);
+        assert_eq!(c.get(), 2);
+    }
+
+    #[test]
+    fn nosync_is_noop() {
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&[1.0]);
+        let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+        assert_eq!(NoSync.sync_round(&ctx).unwrap(), 0.0);
+        assert_eq!(metrics.snapshot().syncs, 0);
+    }
+}

@@ -1,0 +1,61 @@
+//! EASGD synchronization (paper Algorithm 2; Zhang et al. 2015).
+//!
+//! Centralized: the trainer's replica and the central `w^PS` on the sync-PS
+//! tier move toward each other by the elastic parameter α. The update is
+//! deliberately *asymmetric* — neither side is overwritten — because both
+//! the PS (in sync with other trainers) and the Hogwild workers (which kept
+//! training during the round) have information worth keeping.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{ps::SyncPsGroup, SyncCtx, SyncStrategy};
+
+pub struct EasgdSync {
+    group: Arc<SyncPsGroup>,
+    pub alpha: f32,
+}
+
+impl EasgdSync {
+    pub fn new(group: Arc<SyncPsGroup>, alpha: f32) -> Self {
+        Self { group, alpha }
+    }
+}
+
+impl SyncStrategy for EasgdSync {
+    fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
+        let gap = self.group.elastic_sync(ctx.local, self.alpha, ctx.trainer_node, ctx.net);
+        ctx.metrics.record_sync(self.group.round_bytes());
+        Ok(gap)
+    }
+
+    fn name(&self) -> &'static str {
+        "easgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+    use crate::net::{Network, Role};
+    use crate::tensor::HogwildBuffer;
+
+    #[test]
+    fn round_counts_and_moves() {
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let group = Arc::new(SyncPsGroup::build(&vec![0.0; 10], 2, &mut net));
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&vec![2.0; 10]);
+        let mut s = EasgdSync::new(group.clone(), 0.5);
+        let ctx = SyncCtx { local: &local, trainer_node: tnode, net: &net, metrics: &metrics };
+        let gap = s.sync_round(&ctx).unwrap();
+        assert!((gap - 2.0).abs() < 1e-6);
+        assert_eq!(metrics.snapshot().syncs, 1);
+        assert_eq!(metrics.snapshot().sync_bytes, 80);
+        assert!(local.to_vec().iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        assert!(group.central.to_vec().iter().all(|&x| (x - 1.0).abs() < 1e-6));
+    }
+}

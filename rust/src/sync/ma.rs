@@ -1,0 +1,145 @@
+//! Model averaging synchronization (paper Algorithm 3; Zinkevich et al.).
+//!
+//! Decentralized: snapshot the local replica, AllReduce-mean it with the
+//! other trainers, then elastically pull the replica toward the average.
+//! The elastic pull (rather than the original MA's copy-back) is the
+//! paper's key modification: during a background AllReduce the Hogwild
+//! workers keep training, and a copy-back would discard that progress.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{AllReduceGroup, SyncCtx, SyncStrategy};
+use crate::tensor::ops;
+
+pub struct MaSync {
+    group: Arc<AllReduceGroup>,
+    pub alpha: f32,
+    /// `w^global` scratch (Algorithm 3 line 5)
+    global: Vec<f32>,
+    /// simulated collective wall time (models the paper's "time-consuming
+    /// AllReduce" window during which Hogwild workers keep training)
+    round_delay: std::time::Duration,
+    left: bool,
+}
+
+impl MaSync {
+    pub fn new(group: Arc<AllReduceGroup>, alpha: f32, num_params: usize) -> Self {
+        Self {
+            group,
+            alpha,
+            global: vec![0.0; num_params],
+            round_delay: std::time::Duration::ZERO,
+            left: false,
+        }
+    }
+
+    /// Model a collective that takes `d` of wall time (paper-scale wire).
+    pub fn with_round_delay(mut self, d: std::time::Duration) -> Self {
+        self.round_delay = d;
+        self
+    }
+
+    /// Direct copy-back variant (original MA), used by the
+    /// `ablate-elastic` experiment to show why the elastic pull matters.
+    pub fn set_copy_back(&mut self) {
+        self.alpha = 1.0;
+    }
+}
+
+impl SyncStrategy for MaSync {
+    fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
+        // w_global <- copy of local
+        ctx.local.read_into(&mut self.global);
+        // w_global <- AllReduce(w_global) / n; workers keep training during
+        // this window — exactly what copy-back (alpha=1) would throw away
+        if !self.round_delay.is_zero() {
+            std::thread::sleep(self.round_delay);
+        }
+        let participants = self.group.allreduce_mean(&mut self.global)?;
+        let gap = ops::mean_abs_diff(&self.global, &ctx.local.to_vec());
+        // w_i <- (1-alpha) w_i + alpha w_global  (elastic, not copy-back)
+        ctx.local.lerp_toward_slice(&self.global, self.alpha);
+        let bytes = self.group.ring_bytes_per_member(participants);
+        ctx.metrics.record_sync(bytes);
+        // ring traffic: account tx toward the (virtual) successor NIC
+        ctx.net.transfer(ctx.trainer_node, ctx.trainer_node, bytes);
+        Ok(gap)
+    }
+
+    fn leave(&mut self) {
+        if !self.left {
+            self.group.leave();
+            self.left = true;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ma"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+    use crate::net::{Network, NodeId, Role};
+    use crate::tensor::HogwildBuffer;
+
+    fn harness(n: usize, p: usize) -> (Arc<AllReduceGroup>, Network, Vec<NodeId>) {
+        let group = Arc::new(AllReduceGroup::new(n, p));
+        let mut net = Network::new(None);
+        let nodes = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
+        (group, net, nodes)
+    }
+
+    #[test]
+    fn two_trainers_average_elastically() {
+        let (group, net, nodes) = harness(2, 4);
+        let locals: Vec<_> = [2.0f32, 6.0]
+            .iter()
+            .map(|&v| Arc::new(HogwildBuffer::from_slice(&vec![v; 4])))
+            .collect();
+        let metrics = Metrics::new();
+        std::thread::scope(|s| {
+            for (i, local) in locals.iter().enumerate() {
+                let group = group.clone();
+                let net = &net;
+                let metrics = &metrics;
+                let node = nodes[i];
+                s.spawn(move || {
+                    let mut ma = MaSync::new(group, 0.5, 4);
+                    let ctx = SyncCtx { local, trainer_node: node, net, metrics };
+                    ma.sync_round(&ctx).unwrap();
+                });
+            }
+        });
+        // average = 4; each local moves halfway toward it
+        assert!(locals[0].to_vec().iter().all(|&x| (x - 3.0).abs() < 1e-6));
+        assert!(locals[1].to_vec().iter().all(|&x| (x - 5.0).abs() < 1e-6));
+        assert_eq!(metrics.snapshot().syncs, 2);
+    }
+
+    #[test]
+    fn copy_back_overwrites() {
+        let (group, net, nodes) = harness(1, 2);
+        let local = HogwildBuffer::from_slice(&[1.0, 3.0]);
+        let metrics = Metrics::new();
+        let mut ma = MaSync::new(group, 0.5, 2);
+        ma.set_copy_back();
+        let ctx = SyncCtx { local: &local, trainer_node: nodes[0], net: &net, metrics: &metrics };
+        ma.sync_round(&ctx).unwrap();
+        // singleton group: average == self, so copy-back is identity here
+        assert_eq!(local.to_vec(), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn leave_is_idempotent() {
+        let (group, _, _) = harness(2, 2);
+        let mut ma = MaSync::new(group.clone(), 0.5, 2);
+        ma.leave();
+        ma.leave();
+        assert_eq!(group.active(), 1);
+    }
+}

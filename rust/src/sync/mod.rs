@@ -1,0 +1,107 @@
+//! Parameter synchronization — the paper's contribution.
+//!
+//! A [`SyncStrategy`] performs one synchronization *round* for one trainer's
+//! dense-parameter replica. The same strategies run in two modes
+//! ([`crate::config::SyncMode`]):
+//!
+//! - **Shadow** (the paper's proposal): a dedicated per-trainer *shadow
+//!   thread* loops rounds continuously in the background, never stalling
+//!   the Hogwild worker threads ([`driver::spawn_shadow`]).
+//! - **Fixed-rate** (the baselines): the sync is executed in the foreground
+//!   of the training loop every `k` iterations ([`driver::Foreground`]) —
+//!   inline in each worker thread for centralized EASGD (which is why its
+//!   sync-PS traffic is `m×` the shadow variant's), or stop-the-world per
+//!   trainer for the AllReduce-based MA/BMUF.
+//!
+//! Three algorithms are provided (paper Algorithms 2–4): EASGD (centralized,
+//! against sync PSs), MA and BMUF (decentralized, over AllReduce). All three
+//! use the *asymmetric elastic interpolation* the paper highlights as its
+//! key modification: after a round, the local replica moves α of the way
+//! toward the global/central model instead of being overwritten, so Hogwild
+//! progress made during the (background) round isn't thrown away.
+
+pub mod allreduce;
+pub mod bmuf;
+pub mod driver;
+pub mod easgd;
+pub mod ma;
+pub mod ps;
+
+use anyhow::Result;
+
+use crate::metrics::Metrics;
+use crate::net::{Network, NodeId};
+use crate::tensor::HogwildBuffer;
+
+/// Everything a sync round needs from its trainer.
+pub struct SyncCtx<'a> {
+    /// this trainer's dense replica `w^(i)` (Hogwild-shared with workers)
+    pub local: &'a HogwildBuffer,
+    pub trainer_node: NodeId,
+    pub net: &'a Network,
+    pub metrics: &'a Metrics,
+}
+
+/// One synchronization algorithm instance, owned by whichever thread drives
+/// it (shadow thread or foreground hook).
+pub trait SyncStrategy: Send {
+    /// Execute one synchronization round. Returns the mean |local-global|
+    /// gap observed (a convergence-health signal), when meaningful.
+    fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32>;
+
+    /// Called when this trainer permanently stops syncing (end of its data
+    /// shard) so decentralized groups can shrink their membership.
+    fn leave(&mut self) {}
+
+    fn name(&self) -> &'static str;
+}
+
+pub use allreduce::AllReduceGroup;
+pub use bmuf::BmufSync;
+pub use easgd::EasgdSync;
+pub use ma::MaSync;
+pub use ps::SyncPsGroup;
+
+/// Build the strategy instance for trainer `rank` from a run config.
+pub fn build_strategy(
+    cfg: &crate::config::RunConfig,
+    num_params: usize,
+    rank: usize,
+    w0: &[f32],
+    sync_ps: Option<std::sync::Arc<SyncPsGroup>>,
+    group: Option<std::sync::Arc<AllReduceGroup>>,
+) -> Result<Box<dyn SyncStrategy>> {
+    use crate::config::SyncAlgo;
+    let _ = rank; // ranks are implicit in-process; kept for API parity
+    Ok(match cfg.algo {
+        SyncAlgo::Easgd => Box::new(EasgdSync::new(
+            sync_ps.expect("EASGD needs sync PSs"),
+            cfg.alpha,
+        )),
+        SyncAlgo::Ma => Box::new(
+            MaSync::new(group.expect("MA needs an AllReduce group"), cfg.alpha, num_params)
+                .with_round_delay(std::time::Duration::from_millis(cfg.collective_wire_ms)),
+        ),
+        SyncAlgo::Bmuf => Box::new(BmufSync::new(
+            group.expect("BMUF needs an AllReduce group"),
+            cfg.alpha,
+            cfg.bmuf_eta,
+            cfg.bmuf_momentum,
+            w0,
+        )),
+        SyncAlgo::None => Box::new(NoSync),
+    })
+}
+
+/// The "independent sub-models" baseline: no synchronization at all.
+pub struct NoSync;
+
+impl SyncStrategy for NoSync {
+    fn sync_round(&mut self, _ctx: &SyncCtx<'_>) -> Result<f32> {
+        Ok(0.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}

@@ -1,0 +1,128 @@
+//! Sync parameter servers: the centralized home of `w^PS` for EASGD.
+//!
+//! The central parameter vector is sharded into near-equal contiguous
+//! ranges, one per sync PS (the paper load-balances these with the same
+//! profiling + bin-packing as the embedding shards; ranges of a homogeneous
+//! dense vector are already perfectly balanced, which is what LPT would
+//! produce). Trainers sync shard-by-shard so traffic is attributed to the
+//! right PS NIC — the saturation of exactly these NICs is what causes the
+//! paper's FR-EASGD-5 EPS plateau (Fig. 5).
+
+use crate::net::{Network, NodeId, Role};
+use crate::placement::equal_ranges;
+use crate::tensor::HogwildBuffer;
+
+/// One shard: parameter range `[lo, hi)` hosted on `node`.
+#[derive(Debug)]
+pub struct SyncShard {
+    pub lo: usize,
+    pub hi: usize,
+    pub node: NodeId,
+}
+
+/// The sync-PS tier: the central `w^PS` plus its sharding.
+pub struct SyncPsGroup {
+    /// central parameters, Hogwild-shared across all trainers' syncs
+    pub central: HogwildBuffer,
+    pub shards: Vec<SyncShard>,
+}
+
+impl SyncPsGroup {
+    /// Initialize `w^PS ← w0` across `num_ps` servers (Algorithm 1 line 3).
+    pub fn build(w0: &[f32], num_ps: usize, net: &mut Network) -> Self {
+        let shards = equal_ranges(w0.len(), num_ps.max(1))
+            .into_iter()
+            .map(|(lo, hi)| SyncShard { lo, hi, node: net.add_node(Role::SyncPs) })
+            .collect();
+        Self { central: HogwildBuffer::from_slice(w0), shards }
+    }
+
+    /// One EASGD elastic round for `local` against every shard:
+    /// `w^PS ← (1-α) w^PS + α w^(i)`; `w^(i) ← (1-α) w^(i) + α w^PS`
+    /// (Algorithm 2), executed per shard with traffic accounting.
+    /// Returns mean |local - central| before the move.
+    pub fn elastic_sync(
+        &self,
+        local: &HogwildBuffer,
+        alpha: f32,
+        trainer: NodeId,
+        net: &Network,
+    ) -> f32 {
+        debug_assert_eq!(local.len(), self.central.len());
+        let mut gap_weighted = 0f64;
+        for s in &self.shards {
+            let bytes = ((s.hi - s.lo) * 4) as u64;
+            // trainer pushes its range, PS answers with the moved range
+            net.transfer(trainer, s.node, bytes);
+            let gap = HogwildBuffer::elastic_pair(local, &self.central, s.lo, s.hi, alpha);
+            net.transfer(s.node, trainer, bytes);
+            gap_weighted += gap as f64 * (s.hi - s.lo) as f64;
+        }
+        (gap_weighted / self.central.len().max(1) as f64) as f32
+    }
+
+    /// Bytes a full round moves through the sync-PS tier (both directions).
+    pub fn round_bytes(&self) -> u64 {
+        2 * 4 * self.central.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Network;
+
+    #[test]
+    fn build_initializes_central_to_w0() {
+        let mut net = Network::new(None);
+        let w0 = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let g = SyncPsGroup::build(&w0, 2, &mut net);
+        assert_eq!(g.central.to_vec(), w0);
+        assert_eq!(g.shards.len(), 2);
+        assert_eq!(g.shards[0].lo, 0);
+        assert_eq!(g.shards[1].hi, 5);
+    }
+
+    #[test]
+    fn elastic_sync_contracts_toward_each_other() {
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let g = SyncPsGroup::build(&vec![0.0; 16], 3, &mut net);
+        let local = HogwildBuffer::from_slice(&vec![8.0; 16]);
+        let gap = g.elastic_sync(&local, 0.5, trainer, &net);
+        assert!((gap - 8.0).abs() < 1e-5);
+        // alpha=0.5: both meet at 4.0
+        assert!(local.to_vec().iter().all(|&x| (x - 4.0).abs() < 1e-5));
+        assert!(g.central.to_vec().iter().all(|&x| (x - 4.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn repeated_sync_converges_replicas_through_hub() {
+        // two replicas never talk directly; they converge via w^PS
+        let mut net = Network::new(None);
+        let t0 = net.add_node(Role::Trainer);
+        let t1 = net.add_node(Role::Trainer);
+        let g = SyncPsGroup::build(&vec![0.0; 8], 1, &mut net);
+        let a = HogwildBuffer::from_slice(&vec![1.0; 8]);
+        let b = HogwildBuffer::from_slice(&vec![-1.0; 8]);
+        for _ in 0..100 {
+            g.elastic_sync(&a, 0.3, t0, &net);
+            g.elastic_sync(&b, 0.3, t1, &net);
+        }
+        let (av, bv) = (a.to_vec(), b.to_vec());
+        for (x, y) in av.iter().zip(&bv) {
+            assert!((x - y).abs() < 1e-3, "replicas did not converge: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn traffic_lands_on_sync_ps_nics() {
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let g = SyncPsGroup::build(&vec![0.0; 100], 4, &mut net);
+        let local = HogwildBuffer::from_slice(&vec![1.0; 100]);
+        g.elastic_sync(&local, 0.5, trainer, &net);
+        assert_eq!(net.role_bytes(Role::SyncPs), g.round_bytes());
+        assert_eq!(g.round_bytes(), 800);
+    }
+}

@@ -1,0 +1,267 @@
+//! Flat f32 parameter vectors and the lock-free Hogwild buffer.
+//!
+//! The L2↔L3 contract (DESIGN.md §1) moves all dense model parameters as one
+//! flat f32 vector, so every coordination primitive in this crate — Hogwild
+//! gradient application, EASGD elastic interpolation, AllReduce, BMUF block
+//! updates — is a flat vector op over [`HogwildBuffer`] / `&[f32]`.
+//!
+//! [`HogwildBuffer`] stores f32 bits in `AtomicU32` with `Relaxed` ordering:
+//! concurrent read-modify-write is *racy by design* (lost updates are the
+//! documented Hogwild semantics, exactly as in the paper §3.2, which breaks
+//! the sparse-access assumption on purpose) while staying defined behaviour
+//! in rust (no UB data races on atomics).
+
+pub mod ops;
+
+use std::sync::atomic::{AtomicU32, Ordering::Relaxed};
+
+/// Lock-free shared f32 buffer for Hogwild parameter access.
+pub struct HogwildBuffer {
+    data: Vec<AtomicU32>,
+}
+
+impl HogwildBuffer {
+    pub fn zeros(len: usize) -> Self {
+        let mut data = Vec::with_capacity(len);
+        data.resize_with(len, || AtomicU32::new(0));
+        Self { data }
+    }
+
+    pub fn from_slice(src: &[f32]) -> Self {
+        Self { data: src.iter().map(|&x| AtomicU32::new(x.to_bits())).collect() }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        f32::from_bits(self.data[i].load(Relaxed))
+    }
+
+    #[inline]
+    pub fn set(&self, i: usize, v: f32) {
+        self.data[i].store(v.to_bits(), Relaxed);
+    }
+
+    /// Racy elementwise `self[i] += delta[i]` (Hogwild add — lost updates
+    /// possible under contention, by design).
+    pub fn add_assign(&self, delta: &[f32]) {
+        debug_assert_eq!(delta.len(), self.len());
+        for (a, &d) in self.data.iter().zip(delta) {
+            let v = f32::from_bits(a.load(Relaxed)) + d;
+            a.store(v.to_bits(), Relaxed);
+        }
+    }
+
+    /// Racy `self[i] += scale * delta[i]`.
+    pub fn axpy(&self, scale: f32, delta: &[f32]) {
+        debug_assert_eq!(delta.len(), self.len());
+        for (a, &d) in self.data.iter().zip(delta) {
+            let v = f32::from_bits(a.load(Relaxed)) + scale * d;
+            a.store(v.to_bits(), Relaxed);
+        }
+    }
+
+    /// Loss-free atomic add on one element (CAS loop). Used where the *sum*
+    /// must be exact (metrics accumulators), not on the parameter hot path.
+    pub fn fetch_add_exact(&self, i: usize, d: f32) {
+        let a = &self.data[i];
+        let mut cur = a.load(Relaxed);
+        loop {
+            let new = (f32::from_bits(cur) + d).to_bits();
+            match a.compare_exchange_weak(cur, new, Relaxed, Relaxed) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Raw atomic view of a range — the bounds check happens once here
+    /// instead of per element (§Perf: embedding pooling/update hot path).
+    #[inline]
+    pub fn range(&self, lo: usize, hi: usize) -> &[AtomicU32] {
+        &self.data[lo..hi]
+    }
+
+    /// `out[d] += self[lo+d]` over a contiguous range (lock-free read).
+    #[inline]
+    pub fn accumulate_range(&self, lo: usize, out: &mut [f32]) {
+        let src = &self.data[lo..lo + out.len()];
+        for (o, a) in out.iter_mut().zip(src) {
+            *o += f32::from_bits(a.load(Relaxed));
+        }
+    }
+
+    /// `self[lo+d] -= scale * grad[d]` over a contiguous range (racy).
+    #[inline]
+    pub fn axpy_range(&self, lo: usize, scale: f32, grad: &[f32]) {
+        for (a, &g) in self.data[lo..lo + grad.len()].iter().zip(grad) {
+            let v = f32::from_bits(a.load(Relaxed)) - scale * g;
+            a.store(v.to_bits(), Relaxed);
+        }
+    }
+
+    /// Snapshot into a caller-provided buffer (no allocation on hot path).
+    pub fn read_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        for (o, a) in out.iter_mut().zip(&self.data) {
+            *o = f32::from_bits(a.load(Relaxed));
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut v = vec![0f32; self.len()];
+        self.read_into(&mut v);
+        v
+    }
+
+    pub fn write_from(&self, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.len());
+        for (a, &s) in self.data.iter().zip(src) {
+            a.store(s.to_bits(), Relaxed);
+        }
+    }
+
+    /// Racy elastic interpolation toward a plain slice:
+    /// `self = (1-alpha) * self + alpha * target`. One half of the EASGD
+    /// asymmetric update (Algorithm 2).
+    pub fn lerp_toward_slice(&self, target: &[f32], alpha: f32) {
+        debug_assert_eq!(target.len(), self.len());
+        for (a, &t) in self.data.iter().zip(target) {
+            let v = f32::from_bits(a.load(Relaxed));
+            a.store((v + alpha * (t - v)).to_bits(), Relaxed);
+        }
+    }
+
+    /// Symmetric-pair elastic move between two shared buffers over a range:
+    /// reads both, moves each toward the other by `alpha` (EASGD lines 4–5).
+    /// Returns the mean absolute gap observed (a sync-health metric).
+    pub fn elastic_pair(local: &Self, central: &Self, lo: usize, hi: usize, alpha: f32) -> f32 {
+        debug_assert_eq!(local.len(), central.len());
+        let mut gap = 0f64;
+        for i in lo..hi {
+            let l = local.get(i);
+            let c = central.get(i);
+            let d = l - c;
+            gap += d.abs() as f64;
+            central.set(i, c + alpha * d);
+            local.set(i, l - alpha * d);
+        }
+        if hi > lo { (gap / (hi - lo) as f64) as f32 } else { 0.0 }
+    }
+}
+
+impl std::fmt::Debug for HogwildBuffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "HogwildBuffer(len={})", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use std::sync::Arc;
+
+    #[test]
+    fn roundtrip() {
+        let b = HogwildBuffer::from_slice(&[1.0, -2.5, 3.25]);
+        assert_eq!(b.to_vec(), vec![1.0, -2.5, 3.25]);
+        b.set(1, 7.0);
+        assert_eq!(b.get(1), 7.0);
+    }
+
+    #[test]
+    fn axpy_matches_scalar() {
+        let b = HogwildBuffer::from_slice(&[1.0, 2.0, 3.0]);
+        b.axpy(-0.5, &[2.0, 4.0, 6.0]);
+        assert_eq!(b.to_vec(), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn lerp_toward_slice_converges() {
+        let b = HogwildBuffer::from_slice(&[0.0; 8]);
+        let target = [4.0f32; 8];
+        for _ in 0..200 {
+            b.lerp_toward_slice(&target, 0.1);
+        }
+        assert!(b.to_vec().iter().all(|&x| (x - 4.0).abs() < 1e-3));
+    }
+
+    #[test]
+    fn elastic_pair_preserves_sum_and_contracts() {
+        check("elastic-pair", 30, |g| {
+            let n = g.usize_in(1, 64);
+            let alpha = g.f32_in(0.01, 0.5);
+            let l = HogwildBuffer::from_slice(&g.vec_normal(n, 1.0));
+            let c = HogwildBuffer::from_slice(&g.vec_normal(n, 1.0));
+            let sum_before: f32 = l.to_vec().iter().chain(c.to_vec().iter()).sum();
+            let gap0: f32 = l
+                .to_vec()
+                .iter()
+                .zip(c.to_vec())
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            let reported = HogwildBuffer::elastic_pair(&l, &c, 0, n, alpha);
+            let sum_after: f32 = l.to_vec().iter().chain(c.to_vec().iter()).sum();
+            let gap1: f32 = l
+                .to_vec()
+                .iter()
+                .zip(c.to_vec())
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            // interpolation is mass-preserving and contracts the gap
+            assert!((sum_before - sum_after).abs() < 1e-3 * (1.0 + sum_before.abs()));
+            assert!(gap1 <= gap0 + 1e-5);
+            assert!((reported - gap0 / n as f32).abs() < 1e-4 * (1.0 + gap0));
+        });
+    }
+
+    #[test]
+    fn fetch_add_exact_under_contention() {
+        let b = Arc::new(HogwildBuffer::zeros(1));
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let b = b.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    b.fetch_add_exact(0, 1.0);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(b.get(0), 40_000.0);
+    }
+
+    #[test]
+    fn hogwild_add_is_racy_but_bounded() {
+        // under contention the racy add may lose updates but never corrupts:
+        // the result stays within [0, total].
+        let b = Arc::new(HogwildBuffer::zeros(4));
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let b = b.clone();
+            hs.push(std::thread::spawn(move || {
+                let d = [1.0f32; 4];
+                for _ in 0..5_000 {
+                    b.add_assign(&d);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        for v in b.to_vec() {
+            assert!(v > 0.0 && v <= 20_000.0, "v={v}");
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Plain-slice vector ops used by the sync algorithms and optimizers.
+//! Kept free-standing (not methods) so the simulator and tests reuse them.
+
+/// y += a * x
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = (1 - alpha) * y + alpha * x  (elastic interpolation)
+pub fn lerp(y: &mut [f32], x: &[f32], alpha: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * (xi - *yi);
+    }
+}
+
+/// out = a - b
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    for ((o, &ai), &bi) in out.iter_mut().zip(a).zip(b) {
+        *o = ai - bi;
+    }
+}
+
+pub fn scale(y: &mut [f32], a: f32) {
+    for yi in y.iter_mut() {
+        *yi *= a;
+    }
+}
+
+pub fn l2_norm(x: &[f32]) -> f32 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32
+}
+
+pub fn mean_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a.iter().zip(b).map(|(&x, &y)| (x - y).abs() as f64).sum();
+    (s / a.len() as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn axpy_and_lerp() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, 2.0, &[3.0, 4.0]);
+        assert_eq!(y, vec![7.0, 10.0]);
+        lerp(&mut y, &[0.0, 0.0], 0.5);
+        assert_eq!(y, vec![3.5, 5.0]);
+    }
+
+    #[test]
+    fn lerp_alpha_bounds() {
+        check("lerp-bounds", 50, |g| {
+            let n = g.usize_in(1, 32);
+            let a = g.vec_normal(n, 2.0);
+            let b = g.vec_normal(n, 2.0);
+            let mut y = a.clone();
+            lerp(&mut y, &b, 1.0); // alpha=1 -> copy of b
+            for (yi, bi) in y.iter().zip(&b) {
+                assert!((yi - bi).abs() < 1e-5);
+            }
+            let mut z = a.clone();
+            lerp(&mut z, &b, 0.0); // alpha=0 -> unchanged
+            assert_eq!(z, a);
+        });
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(mean_abs_diff(&[1.0, 2.0], &[2.0, 4.0]), 1.5);
+        assert_eq!(mean_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sub_scale() {
+        let mut out = vec![0.0; 2];
+        sub(&mut out, &[5.0, 7.0], &[2.0, 3.0]);
+        assert_eq!(out, vec![3.0, 4.0]);
+        scale(&mut out, 0.5);
+        assert_eq!(out, vec![1.5, 2.0]);
+    }
+}

@@ -1,0 +1,221 @@
+//! The trainer: one dense-parameter replica shared by `m` Hogwild worker
+//! threads, plus the hooks the sync drivers attach to.
+//!
+//! Worker-thread loop (paper §3.1–3.2, Fig. 2):
+//! 1. pull a batch from the trainer's reader queue;
+//! 2. embedding lookup → pooled `[B, T, D]` from the embedding-PS tier
+//!    (model parallelism);
+//! 3. snapshot the local replica `w^(i)` and run the AOT-compiled
+//!    forward+backward (L2/L1) via PJRT;
+//! 4. apply `grad_w` to the shared replica with Hogwild Adagrad
+//!    (data parallelism: lock-free within the trainer);
+//! 5. push `grad_emb` back to the embedding PSs (Hogwild row-wise Adagrad).
+//!
+//! Synchronization never appears in this loop for shadow mode; fixed-rate
+//! modes inject it via [`ForegroundPlan`].
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::data::Batch;
+use crate::embedding::EmbeddingSystem;
+use crate::metrics::Metrics;
+use crate::net::{Network, NodeId};
+use crate::optim::HogwildAdagrad;
+use crate::runtime::Model;
+use crate::sync::driver::{Gate, IterCounter, StopFlag};
+use crate::sync::{EasgdSync, SyncCtx, SyncStrategy};
+use crate::tensor::HogwildBuffer;
+
+/// Shared state of one trainer (everything its threads hang off).
+pub struct Trainer {
+    pub id: usize,
+    pub node: NodeId,
+    /// `w^(i)`: this trainer's dense replica
+    pub replica: Arc<HogwildBuffer>,
+    pub optimizer: Arc<HogwildAdagrad>,
+    pub gate: Arc<Gate>,
+    pub iters: Arc<IterCounter>,
+    pub stop_shadow: StopFlag,
+}
+
+impl Trainer {
+    pub fn new(id: usize, node: NodeId, w0: &[f32], cfg: &RunConfig) -> Self {
+        Self {
+            id,
+            node,
+            replica: Arc::new(HogwildBuffer::from_slice(w0)),
+            optimizer: Arc::new(HogwildAdagrad::new(w0.len(), cfg.learning_rate, cfg.adagrad_eps)),
+            gate: Arc::new(Gate::new()),
+            iters: Arc::new(IterCounter::default()),
+            stop_shadow: Arc::new(std::sync::atomic::AtomicBool::new(false)),
+        }
+    }
+}
+
+/// Foreground sync work assigned to one worker thread (fixed-rate modes).
+pub enum ForegroundPlan {
+    /// Shadow or no-sync mode: workers never sync.
+    None,
+    /// FR-EASGD: this worker syncs with the sync PSs every `gap` of its own
+    /// iterations (every worker thread gets one — the m× traffic).
+    PerWorkerEasgd { strategy: EasgdSync, gap: u32 },
+    /// FR-EASGD with the paper's §4.1.1 conjecture: the gap anneals from
+    /// `start` to `end` across this worker's expected `total` iterations
+    /// (loose early for exploration, tight toward the end).
+    DecayingEasgd { strategy: EasgdSync, start: u32, end: u32, total: u64 },
+    /// FR-MA / FR-BMUF: this worker (the trainer's designated syncer) runs
+    /// the collective every `gap` trainer-level iterations under the gate.
+    TrainerCollective { strategy: Box<dyn SyncStrategy>, gap: u32 },
+}
+
+/// Everything a worker thread borrows, bundled to keep spawns tidy.
+pub struct WorkerEnv {
+    pub model: Arc<Model>,
+    pub embeddings: Arc<EmbeddingSystem>,
+    pub net: Arc<Network>,
+    pub metrics: Arc<Metrics>,
+}
+
+/// Spawn one worker thread. `queue` is the trainer's shared reader output.
+pub fn spawn_worker(
+    trainer: &Trainer,
+    worker_id: usize,
+    env: WorkerEnv,
+    queue: Arc<Mutex<Receiver<Batch>>>,
+    mut plan: ForegroundPlan,
+) -> JoinHandle<Result<u64>> {
+    let replica = trainer.replica.clone();
+    let optimizer = trainer.optimizer.clone();
+    let gate = trainer.gate.clone();
+    let iters = trainer.iters.clone();
+    let node = trainer.node;
+    let tid = trainer.id;
+    std::thread::Builder::new()
+        .name(format!("worker-{tid}.{worker_id}"))
+        .spawn(move || {
+            let mut io = env.model.new_io();
+            let mut my_iters = 0u64;
+            let mut last_collective = 0u64;
+            let mut last_decay_sync = 0u64;
+            loop {
+                // pull next batch; the queue lock is held across recv, which
+                // is fine: idle peers sleep on the same batch source anyway
+                let batch = {
+                    let q = queue.lock().unwrap();
+                    match q.recv() {
+                        Ok(b) => b,
+                        Err(_) => break, // shard exhausted
+                    }
+                };
+                {
+                    // training itself happens under the gate's read lock so
+                    // foreground collectives can stop-the-world
+                    let _working = gate.working();
+                    env.embeddings.lookup_batch(
+                        &batch.indices,
+                        batch.size,
+                        &mut io.pooled_host,
+                        node,
+                        &env.net,
+                    );
+                    replica.read_into(&mut io.w_host);
+                    let loss = env.model.train_step(&mut io, &batch.dense, &batch.labels)?;
+                    optimizer.apply(&replica, &io.grad_w);
+                    env.embeddings.update_batch(
+                        &batch.indices,
+                        batch.size,
+                        &io.grad_emb,
+                        node,
+                        &env.net,
+                    );
+                    env.metrics.record_batch(batch.size, loss as f64);
+                }
+                my_iters += 1;
+                let trainer_iters = iters.bump();
+
+                match &mut plan {
+                    ForegroundPlan::None => {}
+                    ForegroundPlan::PerWorkerEasgd { strategy, gap } => {
+                        if my_iters % *gap as u64 == 0 {
+                            let ctx = SyncCtx {
+                                local: &replica,
+                                trainer_node: node,
+                                net: &env.net,
+                                metrics: &env.metrics,
+                            };
+                            strategy.sync_round(&ctx)?;
+                        }
+                    }
+                    ForegroundPlan::DecayingEasgd { strategy, start, end, total } => {
+                        let frac = (my_iters as f64 / (*total).max(1) as f64).min(1.0);
+                        let gap = (*start as f64 + frac * (*end as f64 - *start as f64))
+                            .round()
+                            .max(1.0) as u64;
+                        if my_iters >= last_decay_sync + gap {
+                            last_decay_sync = my_iters;
+                            let ctx = SyncCtx {
+                                local: &replica,
+                                trainer_node: node,
+                                net: &env.net,
+                                metrics: &env.metrics,
+                            };
+                            strategy.sync_round(&ctx)?;
+                        }
+                    }
+                    ForegroundPlan::TrainerCollective { strategy, gap } => {
+                        if trainer_iters >= last_collective + *gap as u64 {
+                            last_collective = trainer_iters;
+                            let _world = gate.stop_the_world();
+                            let ctx = SyncCtx {
+                                local: &replica,
+                                trainer_node: node,
+                                net: &env.net,
+                                metrics: &env.metrics,
+                            };
+                            strategy.sync_round(&ctx)?;
+                        }
+                    }
+                }
+            }
+            // a departing collective syncer must leave its group or the
+            // other trainers' rounds would hang
+            if let ForegroundPlan::TrainerCollective { strategy, .. } = &mut plan {
+                strategy.leave();
+            }
+            Ok(my_iters)
+        })
+        .expect("spawn worker")
+}
+
+/// Raise the trainer's shadow-stop flag (after workers drained).
+pub fn stop_shadow(trainer: &Trainer) {
+    trainer.stop_shadow.store(true, Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    // Worker threads need compiled artifacts; end-to-end coverage lives in
+    // rust/tests/train_integration.rs. Here: plan plumbing only.
+    use super::*;
+    use crate::net::Role;
+
+    #[test]
+    fn trainer_state_initializes_replica_from_w0() {
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let cfg = RunConfig::default();
+        let t = Trainer::new(3, node, &[1.0, 2.0, 3.0], &cfg);
+        assert_eq!(t.id, 3);
+        assert_eq!(t.replica.to_vec(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.iters.get(), 0);
+        assert!(!t.stop_shadow.load(Relaxed));
+        stop_shadow(&t);
+        assert!(t.stop_shadow.load(Relaxed));
+    }
+}

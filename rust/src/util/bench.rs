@@ -1,0 +1,114 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-time per iteration with warmup, reports mean / p50 / p95 /
+//! p99 and throughput. Used by `rust/benches/*.rs` (cargo bench with
+//! `harness = false`) and by the perf pass in EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// items/sec given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{:.0}ns", ns)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` after ~budget/5 warmup; per-iteration
+/// timing. Use `std::hint::black_box` inside `f` on inputs/outputs.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let warm_until = Instant::now() + budget / 5;
+    let mut warm_iters = 0u64;
+    while Instant::now() < warm_until {
+        f();
+        warm_iters += 1;
+    }
+    let est = (budget.as_nanos() / 5).max(1) as f64 / warm_iters.max(1) as f64;
+    // batch iterations so timer overhead stays <1% for fast bodies
+    let batch = ((50.0 * 30.0 / est).ceil() as usize).clamp(1, 1000);
+
+    let mut samples = Vec::new();
+    let end = Instant::now() + budget * 4 / 5;
+    while Instant::now() < end {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: n * batch,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p50_ns: pct(0.50),
+        p95_ns: pct(0.95),
+        p99_ns: pct(0.99),
+    };
+    println!(
+        "{:40} mean {:>10}  p50 {:>10}  p95 {:>10}  p99 {:>10}  ({} iters)",
+        res.name,
+        fmt_ns(res.mean_ns),
+        fmt_ns(res.p50_ns),
+        fmt_ns(res.p95_ns),
+        fmt_ns(res.p99_ns),
+        res.iters
+    );
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleepish_body() {
+        let r = bench("spin50us", Duration::from_millis(200), || {
+            let t = Instant::now();
+            while t.elapsed() < Duration::from_micros(50) {}
+        });
+        assert!(r.mean_ns > 40_000.0 && r.mean_ns < 500_000.0, "mean={}", r.mean_ns);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e6,
+            p50_ns: 1e6,
+            p95_ns: 1e6,
+            p99_ns: 1e6,
+        };
+        assert!((r.throughput(100.0) - 100_000.0).abs() < 1.0);
+    }
+}

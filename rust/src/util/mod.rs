@@ -1,0 +1,39 @@
+//! Small self-contained substrates: RNG, JSON, CLI parsing, bench + property
+//! test harnesses.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (serde, clap,
+//! criterion, proptest, rand) are implemented here at the scale this project
+//! needs. Each submodule is tested in place.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Format a float with engineering-style thousands separators (for tables).
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{:.0}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_count_bands() {
+        assert_eq!(fmt_count(12.0), "12");
+        assert_eq!(fmt_count(9_600.0), "9.6k");
+        assert_eq!(fmt_count(96_000_000.0), "96.00M");
+        assert_eq!(fmt_count(4.87e10), "48.70G");
+    }
+}

@@ -1,0 +1,95 @@
+//! Property-testing mini-harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |g| ...)` runs a closure over `cases` seeded
+//! generators; a failure reports the reproducing seed. No shrinking — cases
+//! are kept small enough to eyeball. The seed can be pinned via
+//! `SHADOWSYNC_PROPTEST_SEED` for reproduction.
+
+use super::rng::Rng;
+
+/// A per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.u01()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        self.rng.fill_normal(&mut v, sigma);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("SHADOWSYNC_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `body` for `cases` generated cases; panics with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut body: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed on case {case} \
+                 (rerun with SHADOWSYNC_PROPTEST_SEED={base})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("abs-nonneg", 50, |g| {
+            let x = g.f32_in(-10.0, 10.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failing_property() {
+        check("always-small", 50, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 10, "x={x}");
+        });
+    }
+
+    #[test]
+    fn generators_within_bounds() {
+        check("bounds", 100, |g| {
+            let n = g.usize_in(1, 17);
+            assert!((1..=17).contains(&n));
+            let v = g.vec_f32(n, -2.0, 3.0);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|&x| (-2.0..=3.0).contains(&x)));
+        });
+    }
+}

@@ -1,0 +1,189 @@
+//! Deterministic, splittable pseudo-random generation.
+//!
+//! Two generators:
+//! - [`splitmix64`] — the stateless mixer. Used for *counter-based* random
+//!   streams: the synthetic dataset derives every feature of example `i`
+//!   purely from `(seed, i, field)`, so any worker can materialize any
+//!   example without coordination (the property the sharded reader and the
+//!   one-pass partition rely on).
+//! - [`Rng`] — a small xoshiro-style sequential generator for everything
+//!   that just needs a stream (shuffles, property tests, init).
+//!
+//! `dense_init` reproduces `python/compile/model.py::init_params` bit-for-bit
+//! so rust trainers and the JAX reference start from identical parameters.
+
+/// The splitmix64 finalizer: a high-quality 64-bit mixer.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Combine a seed and up to two stream coordinates into one mixed word.
+#[inline]
+pub fn mix3(seed: u64, a: u64, b: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(a ^ splitmix64(b)))
+}
+
+/// Uniform f32 in [0, 1) from a mixed word (top 24 bits, like the python side).
+#[inline]
+pub fn u01(word: u64) -> f32 {
+    (word >> 40) as f32 / (1u32 << 24) as f32
+}
+
+/// Standard normal via Box–Muller on two mixed words.
+#[inline]
+pub fn normal(w1: u64, w2: u64) -> f32 {
+    let u1 = (u01(w1) + 1e-7).min(1.0 - 1e-7);
+    let u2 = u01(w2);
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+}
+
+/// Sequential PRNG (xorshift64* core) with convenience samplers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: splitmix64(seed).max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    #[inline]
+    pub fn u01(&mut self) -> f32 {
+        u01(self.next_u64())
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform integer in [lo, hi].
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        let (a, b) = (self.next_u64(), self.next_u64());
+        normal(a, b)
+    }
+
+    /// Fill a slice with iid N(0, sigma^2).
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out.iter_mut() {
+            *v = sigma * self.normal();
+        }
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Reproduce python `init_params`: He-uniform weights + zero biases over the
+/// flat layout, derived from the vectorized splitmix64 counter stream.
+pub fn dense_init(layer_dims: &[(usize, usize)], seed: u64) -> Vec<f32> {
+    let num_params: usize = layer_dims.iter().map(|(i, o)| i * o + o).sum();
+    let base = splitmix64(seed ^ 0x5EED_0FDA_7A);
+    let mut out = vec![0f32; num_params];
+    let mut off = 0usize;
+    for &(n_in, n_out) in layer_dims {
+        // f64 sqrt then cast, matching numpy's np.sqrt(6.0/n).astype(float32)
+        let scale = (6.0f64 / n_in as f64).sqrt() as f32;
+        for k in 0..n_in * n_out {
+            let idx = (off + k) as u64;
+            let u = u01(splitmix64(idx.wrapping_add(base)));
+            out[off + k] = (u * 2.0 - 1.0) * scale;
+        }
+        off += n_in * n_out;
+        off += n_out; // biases stay zero
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_vector() {
+        // reference value from the python implementation
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn u01_in_range() {
+        let mut r = Rng::new(42);
+        for _ in 0..10_000 {
+            let u = r.u01();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 50_000;
+        let (mut s, mut s2) = (0f64, 0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn dense_init_shape_and_bounds() {
+        let dims = [(4, 16), (16, 8)];
+        let w = dense_init(&dims, 9);
+        assert_eq!(w.len(), 4 * 16 + 16 + 16 * 8 + 8);
+        // biases zero
+        assert!(w[64..80].iter().all(|&x| x == 0.0));
+        assert!(w[80 + 128..].iter().all(|&x| x == 0.0));
+        let bound = (6.0f32 / 4.0).sqrt();
+        assert!(w[..64].iter().all(|&x| x.abs() <= bound));
+        assert!(w[..64].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        assert_eq!(Rng::new(3).next_u64(), Rng::new(3).next_u64());
+        assert_ne!(Rng::new(3).next_u64(), Rng::new(4).next_u64());
+        assert_eq!(mix3(1, 2, 3), mix3(1, 2, 3));
+        assert_ne!(mix3(1, 2, 3), mix3(1, 3, 2));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut v: Vec<u32> = (0..100).collect();
+        Rng::new(5).shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,151 @@
+//! Cross-module property suite (no artifacts needed): invariants that span
+//! subsystems, run through the in-repo property-test harness.
+
+use shadowsync::config::{EmbOptimizer, RunConfig, SyncAlgo, SyncMode};
+use shadowsync::metrics::{normalized_entropy, Metrics};
+use shadowsync::sim::CostModel;
+use shadowsync::tensor::HogwildBuffer;
+use shadowsync::util::proptest::check;
+
+#[test]
+fn sim_eps_is_monotone_in_trainers_for_every_mode() {
+    check("sim-monotone-trainers", 40, |g| {
+        let cm = CostModel::paper_scale();
+        let threads = g.usize_in(1, 48);
+        let sync_ps = g.usize_in(1, 6);
+        let algo = match g.usize_in(0, 2) {
+            0 => SyncAlgo::Easgd,
+            1 => SyncAlgo::Ma,
+            _ => SyncAlgo::Bmuf,
+        };
+        let mode = match g.usize_in(0, 2) {
+            0 => SyncMode::Shadow,
+            1 => SyncMode::FixedRate { gap: g.usize_in(1, 120) as u32 },
+            _ => SyncMode::Decaying {
+                start: g.usize_in(10, 100) as u32,
+                end: g.usize_in(1, 10) as u32,
+            },
+        };
+        let mut prev = 0.0;
+        for n in [1usize, 2, 4, 8, 16, 32] {
+            let p = cm.simulate(n, threads, algo, mode, sync_ps);
+            assert!(
+                p.eps >= prev - 1e-6,
+                "EPS decreased {prev} -> {} at n={n} ({algo:?} {mode:?})",
+                p.eps
+            );
+            assert!(p.train_fraction > 0.0 && p.train_fraction <= 1.0);
+            assert!((0.0..=1.0).contains(&p.sync_ps_util));
+            prev = p.eps;
+        }
+    });
+}
+
+#[test]
+fn sim_shadow_always_at_least_matches_foreground_eps() {
+    check("shadow-dominates", 60, |g| {
+        let cm = CostModel::paper_scale();
+        let n = g.usize_in(1, 32);
+        let threads = g.usize_in(1, 48);
+        let gap = g.usize_in(1, 200) as u32;
+        let sync_ps = g.usize_in(1, 6);
+        for algo in [SyncAlgo::Easgd, SyncAlgo::Ma, SyncAlgo::Bmuf] {
+            let shadow = cm.simulate(n, threads, algo, SyncMode::Shadow, sync_ps).eps;
+            let fr = cm.simulate(n, threads, algo, SyncMode::FixedRate { gap }, sync_ps).eps;
+            // the paper's core throughput claim, as a universal invariant
+            assert!(shadow >= fr - 1e-6, "{algo:?}: shadow {shadow} < FR-{gap} {fr} at n={n}");
+        }
+    });
+}
+
+#[test]
+fn elastic_sync_is_a_contraction_between_replicas() {
+    check("easgd-contraction", 30, |g| {
+        let p = g.usize_in(1, 128);
+        let alpha = g.f32_in(0.05, 0.95);
+        let a = HogwildBuffer::from_slice(&g.vec_normal(p, 2.0));
+        let b = HogwildBuffer::from_slice(&g.vec_normal(p, 2.0));
+        let gap0 = shadowsync::tensor::ops::mean_abs_diff(&a.to_vec(), &b.to_vec());
+        // one full elastic round for each replica against a shared hub
+        let mut net = shadowsync::net::Network::new(None);
+        let t0 = net.add_node(shadowsync::net::Role::Trainer);
+        let hub = shadowsync::sync::SyncPsGroup::build(&vec![0.0; p], 1, &mut net);
+        for _ in 0..200 {
+            hub.elastic_sync(&a, alpha, t0, &net);
+            hub.elastic_sync(&b, alpha, t0, &net);
+        }
+        let gap1 = shadowsync::tensor::ops::mean_abs_diff(&a.to_vec(), &b.to_vec());
+        assert!(gap1 < 0.05 * gap0.max(1e-3), "no consensus: {gap0} -> {gap1}");
+    });
+}
+
+#[test]
+fn embedding_optimizers_share_lookup_semantics() {
+    // swapping the PS optimizer must never change what a *lookup* returns
+    // before any update lands (init is optimizer-independent)
+    use shadowsync::embedding::TableShard;
+    use shadowsync::net::NodeId;
+    check("emb-opt-lookup", 20, |g| {
+        let rows = g.usize_in(4, 64) as u32;
+        let dim = g.usize_in(1, 16);
+        let seed = g.rng.next_u64();
+        let mk = |opt| TableShard::with_optimizer(1, 0, rows, dim, NodeId(0), seed, opt);
+        let a = mk(EmbOptimizer::Adagrad);
+        let b = mk(EmbOptimizer::Adam { beta1: 0.9, beta2: 0.999 });
+        let c = mk(EmbOptimizer::RmsProp { decay: 0.95 });
+        let r = g.usize_in(0, rows as usize - 1) as u32;
+        assert_eq!(a.row(r), b.row(r));
+        assert_eq!(a.row(r), c.row(r));
+    });
+}
+
+#[test]
+fn ne_is_scale_free_and_one_at_base_rate() {
+    check("ne-properties", 50, |g| {
+        let p = g.f32_in(0.05, 0.95) as f64;
+        let h = -(p * p.ln() + (1.0 - p) * (1.0 - p).ln());
+        // base-rate predictor has NE exactly 1
+        assert!((normalized_entropy(h, p) - 1.0).abs() < 1e-9);
+        // better log-loss => smaller NE, monotonically
+        let better = normalized_entropy(h * 0.7, p);
+        let worse = normalized_entropy(h * 1.3, p);
+        assert!(better < 1.0 && worse > 1.0);
+    });
+}
+
+#[test]
+fn metrics_totals_are_exact_under_many_threads() {
+    use std::sync::Arc;
+    let m = Arc::new(Metrics::new());
+    let hs: Vec<_> = (0..8)
+        .map(|_| {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                for _ in 0..2_000 {
+                    m.record_batch(13, 0.25);
+                    m.record_sync(7);
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    let s = m.snapshot();
+    assert_eq!(s.examples, 8 * 2_000 * 13);
+    assert_eq!(s.iterations, 8 * 2_000);
+    assert_eq!(s.syncs, 8 * 2_000);
+    assert_eq!(s.sync_bytes, 8 * 2_000 * 7);
+    assert!((s.avg_loss - 0.25 / 13.0).abs() < 1e-12);
+    assert!((m.avg_sync_gap() - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn run_config_label_roundtrips_modes() {
+    let mut cfg = RunConfig::default();
+    cfg.mode = SyncMode::Decaying { start: 100, end: 5 };
+    assert_eq!(cfg.label(), "FR-EASGD-100→5");
+    cfg.algo = SyncAlgo::Bmuf;
+    cfg.mode = SyncMode::Shadow;
+    assert_eq!(cfg.label(), "S-BMUF");
+}

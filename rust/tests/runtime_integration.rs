@@ -1,0 +1,135 @@
+//! Integration: load real AOT artifacts and execute them via PJRT.
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use shadowsync::config::ModelMeta;
+use shadowsync::runtime::Runtime;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("tiny.meta.json").exists()
+}
+
+#[test]
+fn tiny_train_step_runs_and_descends() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let meta = ModelMeta::load(&artifacts_dir(), "tiny").unwrap();
+    let model = rt.load_model(&meta, &artifacts_dir()).unwrap();
+    let mut io = model.new_io();
+
+    let b = meta.batch;
+    let dense: Vec<f32> = (0..b * meta.num_dense).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+    let labels: Vec<f32> = (0..b).map(|i| (i % 3 == 0) as u8 as f32).collect();
+    io.pooled_host.iter_mut().enumerate().for_each(|(i, v)| *v = ((i % 11) as f32 - 5.0) / 50.0);
+
+    // plain SGD on the flat params must reduce the loss
+    let first = model.train_step(&mut io, &dense, &labels).unwrap();
+    assert!(first.is_finite() && first > 0.0);
+    let mut loss = first;
+    for _ in 0..40 {
+        loss = model.train_step(&mut io, &dense, &labels).unwrap();
+        for (w, g) in io.w_host.iter_mut().zip(io.grad_w.clone()) {
+            *w -= 0.05 * g;
+        }
+    }
+    assert!(
+        loss < 0.8 * first,
+        "loss did not descend: first={first} last={loss}"
+    );
+    // gradients flow to the embeddings too
+    assert!(io.grad_emb.iter().any(|&g| g != 0.0));
+}
+
+#[test]
+fn eval_step_aggregates_match_batch() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let meta = ModelMeta::load(&artifacts_dir(), "tiny").unwrap();
+    let model = rt.load_model(&meta, &artifacts_dir()).unwrap();
+    let mut io = model.new_io();
+    let b = meta.batch;
+    let dense = vec![0.1f32; b * meta.num_dense];
+    let labels: Vec<f32> = (0..b).map(|i| (i % 4 == 0) as u8 as f32).collect();
+    let out = model.eval_step(&mut io, &dense, &labels).unwrap();
+    let want_labels: f32 = labels.iter().sum();
+    assert_eq!(out.label_sum, want_labels);
+    assert!(out.pred_sum > 0.0 && out.pred_sum < b as f32);
+    assert!(out.loss_sum.is_finite() && out.loss_sum > 0.0);
+}
+
+#[test]
+fn concurrent_execution_is_correct() {
+    // The Executable Send+Sync claim: many threads execute the same
+    // compiled module; each must get its own correct results.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let meta = ModelMeta::load(&artifacts_dir(), "tiny").unwrap();
+    let model = rt.load_model(&meta, &artifacts_dir()).unwrap();
+    let model = Arc::new(model);
+
+    // reference: loss per distinct label pattern, computed serially
+    let b = meta.batch;
+    let dense = vec![0.2f32; b * meta.num_dense];
+    let mk_labels = |k: usize| -> Vec<f32> { (0..b).map(|i| (i % (k + 2) == 0) as u8 as f32).collect() };
+    let mut want = Vec::new();
+    {
+        let mut io = model.new_io();
+        for k in 0..4 {
+            want.push(model.train_step(&mut io, &dense, &mk_labels(k)).unwrap());
+        }
+    }
+    let mut handles = Vec::new();
+    for k in 0..4usize {
+        let model = model.clone();
+        let dense = dense.clone();
+        let labels = mk_labels(k);
+        handles.push(std::thread::spawn(move || {
+            let mut io = model.new_io();
+            let mut losses = Vec::new();
+            for _ in 0..10 {
+                losses.push(model.train_step(&mut io, &dense, &labels).unwrap());
+            }
+            losses
+        }));
+    }
+    for (k, h) in handles.into_iter().enumerate() {
+        for loss in h.join().unwrap() {
+            assert!(
+                (loss - want[k]).abs() < 1e-4 * want[k].abs(),
+                "thread {k}: got {loss}, want {}",
+                want[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn w0_matches_python_init() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let meta = ModelMeta::load(&artifacts_dir(), "tiny").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_model(&meta, &artifacts_dir()).unwrap();
+    // rust reimplementation of init_params must agree bit-for-bit
+    let ours = shadowsync::util::rng::dense_init(&meta.layer_dims(), meta.seed);
+    assert_eq!(ours.len(), model.w0.len());
+    let diffs = ours.iter().zip(&model.w0).filter(|(a, b)| a != b).count();
+    assert_eq!(diffs, 0, "{diffs} mismatching params between rust and python init");
+}

@@ -1,0 +1,167 @@
+//! Cross-module sync semantics under real multi-threading (no artifacts
+//! needed): shadow threads + Hogwild workers + sync PSs / AllReduce groups
+//! interacting on shared replicas.
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+use std::time::Duration;
+
+use shadowsync::metrics::Metrics;
+use shadowsync::net::{Network, Role};
+use shadowsync::sync::driver::spawn_shadow;
+use shadowsync::sync::{AllReduceGroup, BmufSync, EasgdSync, MaSync, SyncPsGroup, SyncStrategy};
+use shadowsync::tensor::HogwildBuffer;
+
+/// Simulated "workers": threads that keep pulling a replica toward a
+/// trainer-specific target while shadow threads sync replicas to consensus.
+fn spawn_pullers(
+    replica: Arc<HogwildBuffer>,
+    target: f32,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while !stop.load(Relaxed) {
+            let t = vec![target; replica.len()];
+            replica.lerp_toward_slice(&t, 0.05);
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    })
+}
+
+#[test]
+fn shadow_easgd_reaches_consensus_across_trainers() {
+    let p = 64;
+    let n = 3;
+    let mut net = Network::new(None);
+    let nodes: Vec<_> = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
+    let sync_ps = Arc::new(SyncPsGroup::build(&vec![0.0; p], 2, &mut net));
+    let net = Arc::new(net);
+    let metrics = Arc::new(Metrics::new());
+
+    let replicas: Vec<_> = (0..n)
+        .map(|i| Arc::new(HogwildBuffer::from_slice(&vec![i as f32 * 4.0; p])))
+        .collect();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut shadows = Vec::new();
+    let mut pullers = Vec::new();
+    for (i, r) in replicas.iter().enumerate() {
+        // workers pull toward trainer-specific optima (0, 4, 8)
+        pullers.push(spawn_pullers(r.clone(), i as f32 * 4.0, stop.clone()));
+        shadows.push(spawn_shadow(
+            Box::new(EasgdSync::new(sync_ps.clone(), 0.3)),
+            r.clone(),
+            nodes[i],
+            net.clone(),
+            metrics.clone(),
+            stop.clone(),
+            Duration::from_micros(500),
+            i,
+        ));
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    stop.store(true, Relaxed);
+    for h in shadows {
+        h.join().unwrap().unwrap();
+    }
+    for h in pullers {
+        h.join().unwrap();
+    }
+    // central copy must sit strictly inside the span of trainer targets —
+    // the hub pulled everyone toward consensus while workers kept training
+    let central = sync_ps.central.to_vec();
+    let mean = central.iter().sum::<f32>() / p as f32;
+    assert!(mean > 0.5 && mean < 7.5, "central mean {mean} not in consensus band");
+    assert!(metrics.snapshot().syncs > 10);
+    // every replica was pulled off its private optimum
+    let r0 = replicas[0].to_vec();
+    assert!(r0.iter().sum::<f32>() / p as f32 > 0.1);
+}
+
+#[test]
+fn shadow_ma_with_stragglers_and_leavers() {
+    let p = 32;
+    let n = 3;
+    let group = Arc::new(AllReduceGroup::new(n, p));
+    let mut net = Network::new(None);
+    let nodes: Vec<_> = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
+    let net = Arc::new(net);
+    let metrics = Arc::new(Metrics::new());
+    let stops: Vec<_> = (0..n).map(|_| Arc::new(AtomicBool::new(false))).collect();
+    let mut shadows = Vec::new();
+    let replicas: Vec<_> = (0..n)
+        .map(|i| Arc::new(HogwildBuffer::from_slice(&vec![(i * 10) as f32; p])))
+        .collect();
+    for i in 0..n {
+        shadows.push(spawn_shadow(
+            Box::new(MaSync::new(group.clone(), 0.5, p)),
+            replicas[i].clone(),
+            nodes[i],
+            net.clone(),
+            metrics.clone(),
+            stops[i].clone(),
+            Duration::from_micros(300),
+            i,
+        ));
+    }
+    // trainer 0 "finishes its shard" early and leaves; the others continue
+    std::thread::sleep(Duration::from_millis(50));
+    stops[0].store(true, Relaxed);
+    std::thread::sleep(Duration::from_millis(100));
+    for s in &stops {
+        s.store(true, Relaxed);
+    }
+    for h in shadows {
+        h.join().unwrap().unwrap(); // no deadlock, no error
+    }
+    // remaining members kept converging toward each other
+    let a = replicas[1].to_vec();
+    let b = replicas[2].to_vec();
+    let gap = shadowsync::tensor::ops::mean_abs_diff(&a, &b);
+    assert!(gap < 2.0, "replicas 1,2 still {gap} apart");
+    assert_eq!(group.active(), 0);
+}
+
+#[test]
+fn shadow_bmuf_moves_global_toward_average() {
+    let p = 16;
+    let group = Arc::new(AllReduceGroup::new(2, p));
+    let mut net = Network::new(None);
+    let n0 = net.add_node(Role::Trainer);
+    let n1 = net.add_node(Role::Trainer);
+    let net = Arc::new(net);
+    let metrics = Arc::new(Metrics::new());
+    let r0 = Arc::new(HogwildBuffer::from_slice(&vec![2.0; p]));
+    let r1 = Arc::new(HogwildBuffer::from_slice(&vec![6.0; p]));
+    let stop = Arc::new(AtomicBool::new(false));
+    let h0 = spawn_shadow(
+        Box::new(BmufSync::new(group.clone(), 0.5, 1.0, 0.0, &vec![0.0; p])),
+        r0.clone(),
+        n0,
+        net.clone(),
+        metrics.clone(),
+        stop.clone(),
+        Duration::from_micros(300),
+        0,
+    );
+    let h1 = spawn_shadow(
+        Box::new(BmufSync::new(group.clone(), 0.5, 1.0, 0.0, &vec![0.0; p])),
+        r1.clone(),
+        n1,
+        net.clone(),
+        metrics.clone(),
+        stop.clone(),
+        Duration::from_micros(300),
+        1,
+    );
+    std::thread::sleep(Duration::from_millis(200));
+    stop.store(true, Relaxed);
+    h0.join().unwrap().unwrap();
+    h1.join().unwrap().unwrap();
+    // both replicas converge toward the average (4.0)
+    for r in [&r0, &r1] {
+        let v = r.to_vec();
+        let mean = v.iter().sum::<f32>() / p as f32;
+        assert!((mean - 4.0).abs() < 1.0, "replica mean {mean} far from 4.0");
+    }
+    assert!(metrics.snapshot().syncs >= 4);
+}

@@ -1,0 +1,175 @@
+//! End-to-end integration: the full coordinator → trainers → embedding PS →
+//! sync pipeline on the tiny preset, for every algorithm × mode.
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use shadowsync::config::{RunConfig, SyncAlgo, SyncMode};
+use shadowsync::coordinator;
+use shadowsync::runtime::Runtime;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("tiny.meta.json").exists()
+}
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        preset: "tiny".into(),
+        artifacts_dir: artifacts_dir(),
+        num_trainers: 2,
+        worker_threads: 2,
+        num_embedding_ps: 2,
+        num_sync_ps: 1,
+        train_examples: 16_384,
+        eval_examples: 2_048,
+        shadow_interval_ms: 2,
+        embedding: shadowsync::config::EmbeddingConfig {
+            rows_per_table: 500,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn run(cfg: RunConfig) -> coordinator::TrainOutcome {
+    let rt = Runtime::cpu().unwrap();
+    coordinator::run_timed(&cfg, &rt).unwrap()
+}
+
+#[test]
+fn shadow_easgd_learns_and_syncs() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let out = run(base_cfg());
+    assert_eq!(out.label, "S-EASGD");
+    // every training example consumed exactly once (full batches)
+    assert_eq!(out.metrics.examples, 16_384);
+    // loss is meaningful and the model beats the base-rate predictor
+    assert!(out.train_loss.is_finite() && out.train_loss > 0.0);
+    assert!(out.eval.ne() < 1.0, "NE {} should beat base rate", out.eval.ne());
+    // the shadow thread actually synced, in the background
+    assert!(out.metrics.syncs > 0);
+    assert!(out.sync_ps_bytes > 0);
+    assert!(out.avg_sync_gap.is_finite());
+    assert!(out.eps > 0.0);
+}
+
+#[test]
+fn all_algorithms_and_modes_complete() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let combos: Vec<(SyncAlgo, SyncMode)> = vec![
+        (SyncAlgo::Easgd, SyncMode::FixedRate { gap: 5 }),
+        (SyncAlgo::Ma, SyncMode::Shadow),
+        (SyncAlgo::Ma, SyncMode::FixedRate { gap: 8 }),
+        (SyncAlgo::Bmuf, SyncMode::Shadow),
+        (SyncAlgo::Bmuf, SyncMode::FixedRate { gap: 8 }),
+        (SyncAlgo::None, SyncMode::Shadow),
+    ];
+    for (algo, mode) in combos {
+        let mut cfg = base_cfg();
+        cfg.algo = algo;
+        cfg.mode = mode;
+        cfg.num_sync_ps = usize::from(algo == SyncAlgo::Easgd);
+        cfg.train_examples = 2_048;
+        cfg.eval_examples = 512;
+        let out = coordinator::run_timed(&cfg, &rt)
+            .unwrap_or_else(|e| panic!("{algo:?}/{mode:?} failed: {e}"));
+        assert_eq!(out.metrics.examples, 2_048, "{algo:?}/{mode:?}");
+        assert!(out.train_loss.is_finite(), "{algo:?}/{mode:?}");
+        if algo != SyncAlgo::None {
+            assert!(out.metrics.syncs > 0, "{algo:?}/{mode:?} never synced");
+        }
+    }
+}
+
+#[test]
+fn shadow_sync_replicas_converge() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // After a pass with S-EASGD, replicas should sit near the central copy
+    let rt = Runtime::cpu().unwrap();
+    let cfg = base_cfg();
+    let cluster = coordinator::build(&cfg, &rt).unwrap();
+    coordinator::train(&cluster).unwrap();
+    let central = cluster.sync_ps.as_ref().unwrap().central.to_vec();
+    for t in &cluster.trainers {
+        let replica = t.replica.to_vec();
+        let gap = shadowsync::tensor::ops::mean_abs_diff(&replica, &central);
+        let scale =
+            shadowsync::tensor::ops::l2_norm(&central) / (central.len() as f32).sqrt();
+        assert!(
+            gap < 0.8 * scale.max(0.05),
+            "trainer {} drifted: gap={gap} scale={scale}",
+            t.id
+        );
+    }
+}
+
+#[test]
+fn fixed_rate_gap_is_respected() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.mode = SyncMode::FixedRate { gap: 4 };
+    cfg.train_examples = 2_048;
+    let out = run(cfg);
+    // FR-EASGD-4: every worker syncs every 4 of its own iterations, so the
+    // Eq.2 average gap must be ~4 (tail iterations may not hit a boundary)
+    assert!(
+        (out.avg_sync_gap - 4.0).abs() < 1.0,
+        "avg sync gap {} should be ≈4",
+        out.avg_sync_gap
+    );
+    assert_eq!(out.label, "FR-EASGD-4");
+}
+
+#[test]
+fn checkpoint_writes_model() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = base_cfg();
+    cfg.train_examples = 512;
+    cfg.eval_examples = 128;
+    let cluster = coordinator::build(&cfg, &rt).unwrap();
+    coordinator::train(&cluster).unwrap();
+    let dir = std::env::temp_dir().join(format!("shadowsync-ckpt-{}", std::process::id()));
+    coordinator::checkpoint(&cluster, &dir).unwrap();
+    let w = std::fs::read(dir.join("w.bin")).unwrap();
+    assert_eq!(w.len(), cluster.meta.num_params * 4);
+    assert!(dir.join("MANIFEST.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn decaying_gap_mode_completes_and_syncs() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.mode = SyncMode::Decaying { start: 40, end: 2 };
+    cfg.train_examples = 4_096;
+    let out = run(cfg);
+    assert_eq!(out.label, "FR-EASGD-40→2");
+    assert_eq!(out.metrics.examples, 4_096);
+    assert!(out.metrics.syncs > 0, "decaying mode never synced");
+    // the annealed schedule averages strictly inside (end, start)
+    assert!(out.avg_sync_gap > 2.0 && out.avg_sync_gap < 40.0, "gap {}", out.avg_sync_gap);
+}
