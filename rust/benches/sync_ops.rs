@@ -6,7 +6,6 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use shadowsync::metrics::Metrics;
 use shadowsync::net::{Network, Role};
 use shadowsync::sync::{AllReduceGroup, SyncPsGroup};
 use shadowsync::tensor::{ops, HogwildBuffer};
@@ -49,38 +48,62 @@ fn main() {
         });
     }
 
-    // AllReduce across real threads (the MA/BMUF shadow collective)
-    for members in [2usize, 4] {
-        let p = 42_585;
-        let group = Arc::new(AllReduceGroup::new(members, p));
-        let metrics = Arc::new(Metrics::new());
-        let _ = &metrics;
-        // peers loop until told to stop
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let mut peers = Vec::new();
-        for _ in 1..members {
-            let g = group.clone();
-            let stop = stop.clone();
-            peers.push(std::thread::spawn(move || {
-                let mut v = vec![1.0f32; p];
-                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                    if g.allreduce_mean(&mut v).is_err() {
-                        break;
-                    }
-                }
-                g.leave();
-            }));
-        }
-        let mut mine = vec![2.0f32; p];
-        bench(&format!("allreduce_mean/n={members}/P={p}"), budget, || {
-            group.allreduce_mean(&mut mine).unwrap();
-            std::hint::black_box(&mine);
-        });
-        stop.store(true, std::sync::atomic::Ordering::Relaxed);
-        group.leave(); // unblock any pending round, then collect peers
-        for h in peers {
-            h.join().unwrap();
-        }
+    // AllReduce across real threads (the MA/BMUF shadow collective):
+    // membership scaling at a mid-size vector, then flat (C=1) vs chunked
+    // rings at 1M+ params — the schedule whose per-hop transfers flow
+    // through the Network fabric.
+    for (members, p, chunks) in [
+        (2usize, 42_585usize, 1usize),
+        (4, 42_585, 1),
+        (4, 1_048_576, 1),  // flat ring, paper-ish dense size
+        (4, 1_048_576, 8),  // chunked ring, same size
+        (4, 1_048_576, 64), // fine-grained chunking
+    ] {
+        bench_allreduce(members, p, chunks, budget);
     }
     println!("\nsync_ops done");
+}
+
+/// One AllReduce configuration: `members` looping threads on a shared
+/// chunked ring group, real per-hop traffic accounted on per-member NICs.
+fn bench_allreduce(members: usize, p: usize, chunks: usize, budget: Duration) {
+    let group = Arc::new(AllReduceGroup::new(members, p).with_chunks(chunks));
+    let mut net = Network::new(None);
+    let nodes: Vec<_> = (0..members).map(|_| net.add_node(Role::Trainer)).collect();
+    let net = Arc::new(net);
+    // peers loop until told to stop
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut peers = Vec::new();
+    for node in nodes.iter().skip(1).copied() {
+        let g = group.clone();
+        let net = net.clone();
+        let stop = stop.clone();
+        peers.push(std::thread::spawn(move || {
+            let mut v = vec![1.0f32; p];
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                if g.allreduce_mean(&mut v, node, &net).is_err() {
+                    break;
+                }
+            }
+            g.leave();
+        }));
+    }
+    let mut mine = vec![2.0f32; p];
+    let (tx0, rounds0) = (net.tx(nodes[0]), group.completed_rounds());
+    let r = bench(&format!("allreduce_mean/n={members}/P={p}/C={chunks}"), budget, || {
+        group.allreduce_mean(&mut mine, nodes[0], &net).unwrap();
+        std::hint::black_box(&mine);
+    });
+    let rounds = (group.completed_rounds() - rounds0).max(1);
+    println!(
+        "  -> {:.1} M params/s, measured ring tx {} B/member/round (formula {})\n",
+        p as f64 / (r.mean_ns / 1e3),
+        (net.tx(nodes[0]) - tx0) / rounds,
+        group.ring_bytes_per_member(members),
+    );
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    group.leave(); // unblock any pending round, then collect peers
+    for h in peers {
+        h.join().unwrap();
+    }
 }

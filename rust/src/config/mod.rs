@@ -261,6 +261,10 @@ pub struct RunConfig {
     pub reader_rate_limit: Option<f64>,
     /// throttle between shadow sync rounds (0 = free-running)
     pub shadow_interval_ms: u64,
+    /// chunk count `C` of the MA/BMUF ring-AllReduce schedule: the
+    /// parameter vector is reduced as `C` pipelined reduce-scatter +
+    /// all-gather rings (1 = flat single-chunk collective)
+    pub allreduce_chunks: usize,
     /// simulated wall time of one MA/BMUF collective (models paper-scale
     /// AllReduce wire time; 0 = in-process instantaneous)
     pub collective_wire_ms: u64,
@@ -292,6 +296,7 @@ impl Default for RunConfig {
             reader_queue_depth: 4,
             reader_rate_limit: None,
             shadow_interval_ms: 0,
+            allreduce_chunks: 8,
             collective_wire_ms: 0,
             simulate_network: false,
         }
@@ -311,6 +316,9 @@ impl RunConfig {
         }
         if !(0.0..=1.0).contains(&self.alpha) {
             bail!("alpha must be in [0, 1]");
+        }
+        if self.allreduce_chunks == 0 {
+            bail!("allreduce_chunks must be >= 1 (1 = flat collective)");
         }
         Ok(())
     }
@@ -371,6 +379,16 @@ mod tests {
         c.validate().unwrap();
         c.alpha = 1.5;
         assert!(c.validate().is_err());
+        c.alpha = 0.5;
+        c.allreduce_chunks = 0;
+        assert!(c.validate().is_err()); // ring schedule needs >= 1 chunk
+    }
+
+    #[test]
+    fn default_chunk_count_is_valid() {
+        let c = RunConfig::default();
+        assert!(c.allreduce_chunks >= 1);
+        c.validate().unwrap();
     }
 
     #[test]

@@ -92,10 +92,10 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         SyncAlgo::Easgd => Some(Arc::new(SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net))),
         _ => None,
     };
+    // the decentralized algorithms share one chunked ring-AllReduce fabric;
+    // each trainer's hops are driven through (and attributed to) its own NIC
     let group = match cfg.algo {
-        SyncAlgo::Ma | SyncAlgo::Bmuf => {
-            Some(Arc::new(AllReduceGroup::new(cfg.num_trainers, meta.num_params)))
-        }
+        SyncAlgo::Ma | SyncAlgo::Bmuf => Some(crate::sync::build_group(cfg, meta.num_params)),
         _ => None,
     };
     let trainers = trainer_nodes

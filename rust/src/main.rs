@@ -74,6 +74,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         eval_examples: args.parse_or("eval-examples", 20_000u64)?,
         data_seed: args.parse_or("seed", 1u64)?,
         shadow_interval_ms: args.parse_or("shadow-interval-ms", 0u64)?,
+        allreduce_chunks: args.parse_or("chunks", 8usize)?,
         ..Default::default()
     };
     cfg.embedding.rows_per_table = args.parse_or("rows", cfg.embedding.rows_per_table)?;

@@ -8,6 +8,19 @@
 //! PS NIC saturation — and (b) optionally injecting transfer delay so small
 //! real-mode runs can exhibit bandwidth effects. Throughput *modelling* at
 //! paper scale happens in `sim/` instead.
+//!
+//! Every byte that crosses a tier boundary flows through
+//! [`Network::transfer`]: embedding lookups/updates between trainers and
+//! embedding PSs, EASGD elastic pushes against the sync-PS shards, and —
+//! since the collective became a chunked ring fabric
+//! ([`crate::sync::allreduce`]) — each MA/BMUF member's individual
+//! reduce-scatter and all-gather hops toward its ring successor. The
+//! fig5/fig6 traffic columns therefore report *measured* NIC counters for
+//! every role, not closed-form estimates; the textbook ring formula
+//! survives only as the cross-check reference
+//! (`AllReduceGroup::ring_bytes_per_member`) and as the `sim/` cost model's
+//! input. Transfers are full-duplex: `tx` accrues to the source NIC and
+//! `rx` to the destination NIC of the same call.
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::time::Duration;

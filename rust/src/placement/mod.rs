@@ -47,12 +47,14 @@ pub fn lpt(items: &[Item], bins: usize) -> Placement {
     let mut assignment = vec![usize::MAX; max_id];
     let mut bin_load = vec![0f64; bins];
     let mut order: Vec<&Item> = items.iter().collect();
-    order.sort_by(|a, b| b.cost.partial_cmp(&a.cost).unwrap().then(a.id.cmp(&b.id)));
+    // total_cmp: a NaN cost (e.g. a degenerate 0/0 profile ratio) must
+    // never panic the planner — NaNs sort deterministically instead
+    order.sort_by(|a, b| b.cost.total_cmp(&a.cost).then(a.id.cmp(&b.id)));
     for it in order {
         let (best, _) = bin_load
             .iter()
             .enumerate()
-            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .min_by(|(_, a), (_, b)| a.total_cmp(b))
             .unwrap();
         assignment[it.id] = best;
         bin_load[best] += it.cost;
@@ -114,6 +116,30 @@ mod tests {
                 assert!(p.max_load() <= (4.0 / 3.0) * (total / bins as f64) + largest + 1e-9);
             }
         });
+    }
+
+    #[test]
+    fn degenerate_costs_never_panic() {
+        // all-zero cost table (an unprofiled cluster) plus a NaN cost (a
+        // 0/0 profile ratio): the planner must still assign every item
+        let items = vec![
+            Item { id: 0, cost: 0.0 },
+            Item { id: 1, cost: f64::NAN },
+            Item { id: 2, cost: 0.0 },
+            Item { id: 3, cost: 5.0 },
+        ];
+        let p = lpt(&items, 3);
+        for it in &items {
+            assert!(p.assignment[it.id] < 3, "item {} unassigned", it.id);
+        }
+        // the finite work still lands somewhere with finite load
+        assert!(p.bin_load.iter().any(|l| *l == 5.0));
+
+        let zeros: Vec<Item> = (0..6).map(|id| Item { id, cost: 0.0 }).collect();
+        let pz = lpt(&zeros, 2);
+        assert!(pz.assignment.iter().all(|&b| b < 2));
+        assert_eq!(pz.max_load(), 0.0);
+        assert_eq!(pz.imbalance(), 1.0);
     }
 
     #[test]

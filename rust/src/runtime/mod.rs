@@ -1,116 +1,33 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the hot
-//! path, with zero Python anywhere near the request path.
+//! Model runtime: load AOT artifacts and execute them on the hot path.
 //!
-//! Wraps the `xla` crate: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, following
-//! /opt/xla-example/load_hlo. HLO *text* is the interchange format (the
-//! bundled xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos).
+//! Two interchangeable backends behind one API (`Runtime`, `Model`,
+//! `StepIo`, `EvalOut`):
 //!
-//! Worker threads keep a [`StepIo`] each: input literals are allocated once
-//! and refilled with `copy_raw_from` every step, so the steady-state step
-//! does no literal allocation.
+//! - **`pjrt` feature on** ([`pjrt`]): the real thing — HLO text is parsed
+//!   and compiled through the vendored `xla` crate and every train/eval
+//!   step runs on PJRT CPU. Zero Python anywhere near the request path.
+//! - **`pjrt` feature off** ([`stub`], the default): a dependency-free
+//!   stand-in with the identical surface. `load_model` still reads and
+//!   validates `w0`, so every coordinator/sync/placement/net code path —
+//!   and all tests that don't execute compiled steps — builds and runs
+//!   without the XLA toolchain; `train_step`/`eval_step` return a clear
+//!   error instead.
 
 use std::path::Path;
-use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+use anyhow::{bail, Context, Result};
 
 use crate::config::ModelMeta;
 
-/// `PjRtLoadedExecutable` wrapper that is shareable across worker threads.
-///
-/// SAFETY: the xla crate omits Send/Sync because the struct holds raw
-/// pointers, but PJRT executables are immutable after compilation and
-/// `PjRtLoadedExecutable::Execute` is thread-safe (the CPU client runs a
-/// thread pool underneath). The integration test
-/// `concurrent_execution_is_correct` exercises this from many threads.
-pub struct Executable(PjRtLoadedExecutable);
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, Model, Runtime, StepIo};
 
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-impl Executable {
-    pub fn execute(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
-        let bufs = self.0.execute::<&Literal>(args).map_err(|e| anyhow!("execute: {e}"))?;
-        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
-        // aot.py lowers with return_tuple=True: always a tuple literal.
-        lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
-    }
-}
-
-/// The PJRT client (one per process).
-pub struct Runtime {
-    client: PjRtClient,
-}
-
-// SAFETY: same argument as Executable; the client is only used to compile
-// and to host buffers, both thread-safe in the CPU plugin.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
-        Ok(Self { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compile_file(&self, path: &Path) -> Result<Executable> {
-        let proto =
-            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
-                .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e}"))?;
-        Ok(Executable(exe))
-    }
-
-    /// Load one model preset: train + eval executables + initial params.
-    pub fn load_model(&self, meta: &ModelMeta, artifacts_dir: &Path) -> Result<Arc<Model>> {
-        let train = self.compile_file(&meta.train_hlo(artifacts_dir))?;
-        let eval = self.compile_file(&meta.eval_hlo(artifacts_dir))?;
-        let w0_path = meta.w0_bin(artifacts_dir);
-        let bytes = std::fs::read(&w0_path).with_context(|| format!("reading {w0_path:?}"))?;
-        if bytes.len() != meta.num_params * 4 {
-            bail!("w0 size mismatch: {} bytes for P={} params", bytes.len(), meta.num_params);
-        }
-        let w0 = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        Ok(Arc::new(Model { meta: meta.clone(), train, eval, w0 }))
-    }
-}
-
-/// One compiled model preset.
-pub struct Model {
-    pub meta: ModelMeta,
-    pub train: Executable,
-    pub eval: Executable,
-    pub w0: Vec<f32>,
-}
-
-/// Per-thread reusable input literals + host-side output buffers.
-pub struct StepIo {
-    w_lit: Literal,
-    dense_lit: Literal,
-    pooled_lit: Literal,
-    labels_lit: Literal,
-    /// parameter snapshot the caller fills before `train_step`
-    pub w_host: Vec<f32>,
-    /// pooled embeddings [B, T, D] the caller fills before stepping
-    pub pooled_host: Vec<f32>,
-    /// outputs of the last `train_step`
-    pub grad_w: Vec<f32>,
-    pub grad_emb: Vec<f32>,
-}
-
-// SAFETY: Literal is a raw-pointer wrapper; a StepIo is owned by exactly one
-// worker thread at a time (moved into the thread at spawn).
-unsafe impl Send for StepIo {}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, Model, Runtime, StepIo};
 
 /// Aggregates returned by one eval batch.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -120,67 +37,17 @@ pub struct EvalOut {
     pub label_sum: f32,
 }
 
-impl Model {
-    pub fn new_io(&self) -> StepIo {
-        let m = &self.meta;
-        let f32s = |n: usize| vec![0f32; n];
-        let mk = |dims: &[usize]| {
-            Literal::create_from_shape(ElementType::F32.primitive_type(), dims)
-        };
-        StepIo {
-            w_lit: mk(&[m.num_params]),
-            dense_lit: mk(&[m.batch, m.num_dense]),
-            pooled_lit: mk(&[m.batch, m.num_tables, m.emb_dim]),
-            labels_lit: mk(&[m.batch]),
-            w_host: self.w0.clone(),
-            pooled_host: f32s(m.batch * m.num_tables * m.emb_dim),
-            grad_w: f32s(m.num_params),
-            grad_emb: f32s(m.batch * m.num_tables * m.emb_dim),
-        }
+/// Read and size-check the initial dense parameters `w0` for a preset.
+pub(crate) fn read_w0(meta: &ModelMeta, artifacts_dir: &Path) -> Result<Vec<f32>> {
+    let w0_path = meta.w0_bin(artifacts_dir);
+    let bytes = std::fs::read(&w0_path).with_context(|| format!("reading {w0_path:?}"))?;
+    if bytes.len() != meta.num_params * 4 {
+        bail!("w0 size mismatch: {} bytes for P={} params", bytes.len(), meta.num_params);
     }
-
-    fn fill_inputs(&self, io: &mut StepIo, dense: &[f32], labels: &[f32]) -> Result<()> {
-        let m = &self.meta;
-        debug_assert_eq!(dense.len(), m.batch * m.num_dense);
-        debug_assert_eq!(labels.len(), m.batch);
-        debug_assert_eq!(io.w_host.len(), m.num_params);
-        io.w_lit.copy_raw_from(&io.w_host).map_err(|e| anyhow!("w: {e}"))?;
-        io.dense_lit.copy_raw_from(dense).map_err(|e| anyhow!("dense: {e}"))?;
-        io.pooled_lit.copy_raw_from(&io.pooled_host).map_err(|e| anyhow!("pooled: {e}"))?;
-        io.labels_lit.copy_raw_from(labels).map_err(|e| anyhow!("labels: {e}"))?;
-        Ok(())
-    }
-
-    /// Forward+backward on one batch. Caller fills `io.w_host` (parameter
-    /// snapshot) and `io.pooled_host`; returns loss_sum and leaves gradients
-    /// in `io.grad_w` / `io.grad_emb`.
-    pub fn train_step(&self, io: &mut StepIo, dense: &[f32], labels: &[f32]) -> Result<f32> {
-        self.fill_inputs(io, dense, labels)?;
-        let args = [&io.w_lit, &io.dense_lit, &io.pooled_lit, &io.labels_lit];
-        let parts = self.train.execute(&args)?;
-        if parts.len() != 3 {
-            bail!("train artifact returned {} outputs, want 3", parts.len());
-        }
-        let loss: f32 = parts[0].get_first_element().map_err(|e| anyhow!("loss: {e}"))?;
-        parts[1].copy_raw_to(&mut io.grad_w).map_err(|e| anyhow!("grad_w: {e}"))?;
-        parts[2].copy_raw_to(&mut io.grad_emb).map_err(|e| anyhow!("grad_emb: {e}"))?;
-        Ok(loss)
-    }
-
-    /// Eval pass on one batch (no gradients).
-    pub fn eval_step(&self, io: &mut StepIo, dense: &[f32], labels: &[f32]) -> Result<EvalOut> {
-        self.fill_inputs(io, dense, labels)?;
-        let args = [&io.w_lit, &io.dense_lit, &io.pooled_lit, &io.labels_lit];
-        let parts = self.eval.execute(&args)?;
-        if parts.len() != 3 {
-            bail!("eval artifact returned {} outputs, want 3", parts.len());
-        }
-        Ok(EvalOut {
-            loss_sum: parts[0].get_first_element().map_err(|e| anyhow!("{e}"))?,
-            pred_sum: parts[1].get_first_element().map_err(|e| anyhow!("{e}"))?,
-            label_sum: parts[2].get_first_element().map_err(|e| anyhow!("{e}"))?,
-        })
-    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 #[cfg(test)]

@@ -1,0 +1,80 @@
+//! Dependency-free runtime stand-in (built when the `pjrt` feature is off).
+//!
+//! Mirrors the PJRT backend's public surface exactly. `load_model` still
+//! reads and validates the preset's `w0`, so cluster construction, sync,
+//! placement, and network accounting all work without the XLA toolchain;
+//! only actually *executing* a compiled step is refused, with an error that
+//! says how to get the real backend.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelMeta;
+
+use super::EvalOut;
+
+const NO_PJRT: &str = "shadowsync was built without the `pjrt` feature; \
+rebuild with `cargo build --features pjrt` (requires the vendored `xla` \
+crate) to execute compiled artifacts";
+
+/// Placeholder for the compiled-executable handle of the PJRT backend.
+pub struct Executable;
+
+/// The (stub) runtime — constructing it always succeeds.
+pub struct Runtime;
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without pjrt)".to_string()
+    }
+
+    /// Load one model preset's metadata + initial params (no compilation).
+    pub fn load_model(&self, meta: &ModelMeta, artifacts_dir: &Path) -> Result<Arc<Model>> {
+        let w0 = super::read_w0(meta, artifacts_dir)?;
+        Ok(Arc::new(Model { meta: meta.clone(), w0 }))
+    }
+}
+
+/// One loaded model preset (parameters only — no executables).
+pub struct Model {
+    pub meta: ModelMeta,
+    pub w0: Vec<f32>,
+}
+
+/// Host-side step buffers, identical to the PJRT backend's public fields.
+pub struct StepIo {
+    /// parameter snapshot the caller fills before `train_step`
+    pub w_host: Vec<f32>,
+    /// pooled embeddings [B, T, D] the caller fills before stepping
+    pub pooled_host: Vec<f32>,
+    /// outputs of the last `train_step`
+    pub grad_w: Vec<f32>,
+    pub grad_emb: Vec<f32>,
+}
+
+impl Model {
+    pub fn new_io(&self) -> StepIo {
+        let m = &self.meta;
+        let f32s = |n: usize| vec![0f32; n];
+        StepIo {
+            w_host: self.w0.clone(),
+            pooled_host: f32s(m.batch * m.num_tables * m.emb_dim),
+            grad_w: f32s(m.num_params),
+            grad_emb: f32s(m.batch * m.num_tables * m.emb_dim),
+        }
+    }
+
+    pub fn train_step(&self, _io: &mut StepIo, _dense: &[f32], _labels: &[f32]) -> Result<f32> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn eval_step(&self, _io: &mut StepIo, _dense: &[f32], _labels: &[f32]) -> Result<EvalOut> {
+        bail!(NO_PJRT)
+    }
+}

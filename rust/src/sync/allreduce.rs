@@ -1,4 +1,4 @@
-//! In-process AllReduce for the decentralized algorithms (MA, BMUF).
+//! Chunked ring-AllReduce fabric for the decentralized algorithms (MA, BMUF).
 //!
 //! Semantics match a ring all-reduce over the trainers: every active member
 //! contributes a vector, everyone receives the element-wise mean. Because
@@ -7,80 +7,282 @@
 //! rounds complete over the *remaining* membership (a real collective over
 //! dynamic process groups behaves the same way after a resize).
 //!
-//! Wire-cost accounting uses the ring formula: each member moves
-//! `2·(n-1)/n · bytes` in each direction per round.
+//! ## The chunked schedule
+//!
+//! The parameter vector is split into `C` chunks
+//! ([`AllReduceGroup::with_chunks`], `RunConfig::allreduce_chunks`). Each
+//! chunk is reduced through an explicit reduce-scatter + all-gather ring
+//! schedule over the round's `n` contributors: a chunk of length `L` is cut
+//! into `n` near-equal segments, and every member sends one segment per hop
+//! to its ring successor for `n-1` reduce-scatter hops followed by `n-1`
+//! all-gather hops. All chunks move together on each hop (the pipelined
+//! order a multi-threaded chunk-parallel reduction would use), so a member
+//! performs `2·(n-1)` wire transfers per round regardless of `C`.
+//!
+//! ## Measured-traffic accounting
+//!
+//! Every per-hop transfer is driven through [`Network::transfer`], so NIC
+//! counters (and the optional bandwidth-delay model) see the *actual* ring
+//! traffic of every round instead of a closed-form estimate: per member and
+//! round the measured bytes land within one chunk-segment of rounding of
+//! the textbook `2·(n-1)/n · bytes` ring formula
+//! ([`AllReduceGroup::ring_bytes_per_member`], kept as the reference used
+//! by the paper-scale throughput model in `sim/`). Because each member
+//! drives its own hops, traffic is attributed to that member's own NIC.
+//!
+//! ## Correct overlap with dynamic membership
+//!
+//! Results are *version-stamped per generation*: a completed round is
+//! parked (mean, ring membership, exact contributor count) until every one
+//! of its waiters has copied it out, so a fast round `N+1` — or `N+2`, after
+//! mid-round [`AllReduceGroup::leave`]s — can never clobber round `N`'s mean
+//! before slow round-`N` waiters observe it, and every joiner is told the
+//! exact contributor count of *its own* round. Retired round buffers are
+//! recycled through a pool, so the steady state allocates nothing.
 
+use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{ensure, Result};
+
+use crate::net::{Network, NodeId};
+
+/// What one completed collective round reports to each contributor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundOutcome {
+    /// Monotonic round index within the group.
+    pub generation: u64,
+    /// Exact number of vectors that entered this round's mean.
+    pub contributors: usize,
+    /// Bytes this member pushed onto the wire for this round (its
+    /// reduce-scatter + all-gather hops, as accounted through `Network`).
+    pub bytes_tx: u64,
+}
+
+/// A finalized round, parked until all its waiters have copied the mean.
+struct Round {
+    generation: u64,
+    mean: Vec<f32>,
+    /// Contributor NICs in join order — the ring of this round.
+    ring: Vec<NodeId>,
+    /// Waiters that still have to copy `mean` out.
+    readers_left: usize,
+}
 
 struct State {
     active: usize,
     joined: usize,
+    /// NICs of the current round's contributors, in join order.
+    contributors: Vec<NodeId>,
     sum: Vec<f32>,
-    result: Vec<f32>,
     generation: u64,
+    /// Completed rounds not yet copied out by all their waiters.
+    done: VecDeque<Round>,
+    /// Recycled `mean`/`ring` buffers (steady state allocates nothing).
+    mean_pool: Vec<Vec<f32>>,
+    ring_pool: Vec<Vec<NodeId>>,
 }
 
-/// A dynamic-membership mean-AllReduce group.
+/// A dynamic-membership mean-AllReduce group over a chunked ring schedule.
 pub struct AllReduceGroup {
     state: Mutex<State>,
     cv: Condvar,
+    /// Vector length every contribution must match.
     pub len: usize,
+    /// Chunk count `C` of the ring schedule (1 = flat single-chunk rings).
+    pub chunks: usize,
 }
 
 impl AllReduceGroup {
-    /// `members` trainers, vectors of length `len`.
+    /// `members` trainers, vectors of length `len`, flat (single-chunk).
     pub fn new(members: usize, len: usize) -> Self {
         Self {
             state: Mutex::new(State {
                 active: members,
                 joined: 0,
+                contributors: Vec::with_capacity(members),
                 sum: vec![0.0; len],
-                result: vec![0.0; len],
                 generation: 0,
+                done: VecDeque::new(),
+                mean_pool: Vec::new(),
+                ring_pool: Vec::new(),
             }),
             cv: Condvar::new(),
             len,
+            chunks: 1,
         }
     }
 
-    fn finalize(st: &mut State) {
-        let n = st.joined as f32;
-        for (r, s) in st.result.iter_mut().zip(&st.sum) {
-            *r = s / n;
+    /// Split the vector into `chunks` chunks for the ring schedule.
+    pub fn with_chunks(mut self, chunks: usize) -> Self {
+        self.chunks = chunks.max(1);
+        self
+    }
+
+    /// `len / parts` with the remainder spread over the leading parts —
+    /// the same split rule as `placement::equal_ranges`.
+    fn part_len(len: usize, parts: usize, idx: usize) -> usize {
+        len / parts + usize::from(idx < len % parts)
+    }
+
+    /// Close the pending round: stamp the mean + ring + exact contributor
+    /// count with the current generation and park it for its waiters.
+    /// `finalizer_copies` is true when the caller is the final joiner (it
+    /// copies the mean inline and never waits).
+    fn finalize(st: &mut State, finalizer_copies: bool) {
+        let n = st.joined;
+        debug_assert!(n > 0, "finalize of an empty round");
+        let len = st.sum.len();
+        let fresh = match st.mean_pool.pop() {
+            Some(mut v) => {
+                v.fill(0.0);
+                v
+            }
+            None => vec![0.0; len],
+        };
+        let mut mean = std::mem::replace(&mut st.sum, fresh);
+        let inv = 1.0 / n as f32;
+        for m in &mut mean {
+            *m *= inv;
         }
-        st.sum.fill(0.0);
+        let empty_ring = st.ring_pool.pop().unwrap_or_default();
+        let ring = std::mem::replace(&mut st.contributors, empty_ring);
+        st.done.push_back(Round {
+            generation: st.generation,
+            mean,
+            ring,
+            readers_left: if finalizer_copies { n - 1 } else { n },
+        });
         st.joined = 0;
         st.generation += 1;
     }
 
-    /// Contribute `data`, block until the round completes, and replace
-    /// `data` with the mean over this round's contributors. Returns the
-    /// number of contributors (for wire-cost accounting).
-    pub fn allreduce_mean(&self, data: &mut [f32]) -> Result<usize> {
+    /// Retire fully-read rounds and recycle their buffers.
+    fn gc(st: &mut State) {
+        let mut i = 0;
+        while i < st.done.len() {
+            if st.done[i].readers_left == 0 {
+                let r = st.done.remove(i).expect("index in bounds");
+                st.mean_pool.push(r.mean);
+                let mut ring = r.ring;
+                ring.clear();
+                st.ring_pool.push(ring);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Contribute `data` as the member whose NIC is `me`, block until the
+    /// round completes, and replace `data` with the mean over this round's
+    /// contributors. Drives this member's ring hops through `net` and
+    /// returns the round's generation, exact contributor count, and the
+    /// bytes this member moved.
+    pub fn allreduce_mean(
+        &self,
+        data: &mut [f32],
+        me: NodeId,
+        net: &Network,
+    ) -> Result<RoundOutcome> {
+        self.allreduce_mean_inner(data, me, net, None)
+    }
+
+    /// `allreduce_mean` with an optional artificial delay between being
+    /// woken and copying the result out — test-only hook that forces the
+    /// "slow waiter vs. fast next round" interleaving deterministically.
+    fn allreduce_mean_inner(
+        &self,
+        data: &mut [f32],
+        me: NodeId,
+        net: &Network,
+        wake_delay: Option<Duration>,
+    ) -> Result<RoundOutcome> {
         ensure!(data.len() == self.len, "allreduce length mismatch");
         let mut st = self.state.lock().unwrap();
         ensure!(st.active > 0, "allreduce on an empty group");
         for (s, &d) in st.sum.iter_mut().zip(data.iter()) {
             *s += d;
         }
+        let my_pos = st.contributors.len();
+        st.contributors.push(me);
         st.joined += 1;
         let my_gen = st.generation;
         if st.joined == st.active {
-            let n = st.joined;
-            Self::finalize(&mut st);
-            data.copy_from_slice(&st.result);
+            Self::finalize(&mut st, true);
+            let round = st.done.back().expect("round just finalized");
+            data.copy_from_slice(&round.mean);
+            let n = round.ring.len();
+            let succ = round.ring[(my_pos + 1) % n];
+            Self::gc(&mut st);
+            drop(st);
             self.cv.notify_all();
-            return Ok(n);
+            let bytes_tx = self.account_ring(me, succ, my_pos, n, net);
+            return Ok(RoundOutcome { generation: my_gen, contributors: n, bytes_tx });
         }
         while st.generation == my_gen {
             st = self.cv.wait(st).unwrap();
         }
-        data.copy_from_slice(&st.result);
-        // contributors of the completed round = active at completion + any
-        // leavers mid-round; report current active + 0 conservatively:
-        Ok(st.active.max(1))
+        if let Some(d) = wake_delay {
+            drop(st);
+            std::thread::sleep(d);
+            st = self.state.lock().unwrap();
+        }
+        // The version stamp makes this lookup safe under overlap: our round
+        // is parked until every waiter (us included) has copied it out.
+        let idx = st
+            .done
+            .iter()
+            .position(|r| r.generation == my_gen)
+            .expect("round result retired before all waiters copied it");
+        let round = &mut st.done[idx];
+        data.copy_from_slice(&round.mean);
+        round.readers_left -= 1;
+        let n = round.ring.len();
+        let succ = round.ring[(my_pos + 1) % n];
+        Self::gc(&mut st);
+        drop(st);
+        let bytes_tx = self.account_ring(me, succ, my_pos, n, net);
+        Ok(RoundOutcome { generation: my_gen, contributors: n, bytes_tx })
+    }
+
+    /// Drive this member's hops of the chunked ring schedule through the
+    /// network: `n-1` reduce-scatter hops then `n-1` all-gather hops, each
+    /// moving one segment of every chunk to the ring successor. Returns the
+    /// bytes sent.
+    fn account_ring(
+        &self,
+        me: NodeId,
+        succ: NodeId,
+        my_pos: usize,
+        n: usize,
+        net: &Network,
+    ) -> u64 {
+        if n < 2 {
+            return 0;
+        }
+        let seg_bytes = |seg: usize| -> u64 {
+            let mut elems = 0u64;
+            for c in 0..self.chunks {
+                let chunk_len = Self::part_len(self.len, self.chunks, c);
+                elems += Self::part_len(chunk_len, n, seg) as u64;
+            }
+            4 * elems
+        };
+        let mut tx = 0u64;
+        // reduce-scatter hop s: position p sends segment (p - s) mod n
+        for s in 0..n - 1 {
+            let bytes = seg_bytes((my_pos + n - s) % n);
+            net.transfer(me, succ, bytes);
+            tx += bytes;
+        }
+        // all-gather hop s: position p sends segment (p + 1 - s) mod n
+        for s in 0..n - 1 {
+            let bytes = seg_bytes((my_pos + 1 + n - s) % n);
+            net.transfer(me, succ, bytes);
+            tx += bytes;
+        }
+        tx
     }
 
     /// Permanently remove one member. If everyone else is already waiting,
@@ -90,7 +292,8 @@ impl AllReduceGroup {
         debug_assert!(st.active > 0);
         st.active -= 1;
         if st.active > 0 && st.joined == st.active {
-            Self::finalize(&mut st);
+            Self::finalize(&mut st, false);
+            drop(st);
             self.cv.notify_all();
         }
     }
@@ -99,7 +302,19 @@ impl AllReduceGroup {
         self.state.lock().unwrap().active
     }
 
-    /// Ring all-reduce bytes each member moves per direction per round.
+    /// Members currently blocked in (or summed into) the pending round.
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().joined
+    }
+
+    /// Rounds completed so far (the next round's generation stamp).
+    pub fn completed_rounds(&self) -> u64 {
+        self.state.lock().unwrap().generation
+    }
+
+    /// Closed-form ring bytes each member moves per direction per round —
+    /// the reference the measured per-hop traffic is checked against, and
+    /// what the paper-scale throughput model in `sim/` uses.
     pub fn ring_bytes_per_member(&self, participants: usize) -> u64 {
         if participants <= 1 {
             return 0;
@@ -112,40 +327,57 @@ impl AllReduceGroup {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::Role;
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
     use std::sync::Arc;
+
+    fn net_with(n: usize) -> (Arc<Network>, Vec<NodeId>) {
+        let mut net = Network::new(None);
+        let nodes = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
+        (Arc::new(net), nodes)
+    }
 
     #[test]
     fn mean_matches_sequential_sum() {
         let n = 4;
         let g = Arc::new(AllReduceGroup::new(n, 8));
+        let (net, nodes) = net_with(n);
         let mut hs = Vec::new();
         for r in 0..n {
             let g = g.clone();
+            let net = net.clone();
+            let node = nodes[r];
             hs.push(std::thread::spawn(move || {
                 let mut v = vec![(r + 1) as f32; 8];
-                let parts = g.allreduce_mean(&mut v).unwrap();
-                (v, parts)
+                let out = g.allreduce_mean(&mut v, node, &net).unwrap();
+                (v, out)
             }));
         }
         for h in hs {
-            let (v, _) = h.join().unwrap();
+            let (v, out) = h.join().unwrap();
             // mean of 1,2,3,4 = 2.5
             assert!(v.iter().all(|&x| (x - 2.5).abs() < 1e-6), "{v:?}");
+            assert_eq!(out.contributors, 4);
+            assert_eq!(out.generation, 0);
         }
     }
 
     #[test]
     fn repeated_rounds_stay_consistent() {
         let n = 3;
-        let g = Arc::new(AllReduceGroup::new(n, 4));
+        let g = Arc::new(AllReduceGroup::new(n, 4).with_chunks(2));
+        let (net, nodes) = net_with(n);
         let mut hs = Vec::new();
         for r in 0..n {
             let g = g.clone();
+            let net = net.clone();
+            let node = nodes[r];
             hs.push(std::thread::spawn(move || {
                 let mut acc = Vec::new();
                 for round in 0..50 {
                     let mut v = vec![(r * 50 + round) as f32; 4];
-                    g.allreduce_mean(&mut v).unwrap();
+                    g.allreduce_mean(&mut v, node, &net).unwrap();
                     acc.push(v[0]);
                 }
                 acc
@@ -158,42 +390,52 @@ mod tests {
                 assert!((res[round] - want).abs() < 1e-4);
             }
         }
+        assert_eq!(g.completed_rounds(), 50);
     }
 
     #[test]
     fn leaver_unblocks_pending_round() {
         let g = Arc::new(AllReduceGroup::new(3, 2));
+        let (net, nodes) = net_with(3);
         let g2 = g.clone();
+        let (net2, node0) = (net.clone(), nodes[0]);
         let waiter = std::thread::spawn(move || {
             let mut v = vec![6.0, 6.0];
-            g2.allreduce_mean(&mut v).unwrap();
-            v
+            let out = g2.allreduce_mean(&mut v, node0, &net2).unwrap();
+            (v, out)
         });
         let g3 = g.clone();
+        let (net3, node1) = (net.clone(), nodes[1]);
         let waiter2 = std::thread::spawn(move || {
             let mut v = vec![2.0, 2.0];
-            g3.allreduce_mean(&mut v).unwrap();
-            v
+            let out = g3.allreduce_mean(&mut v, node1, &net3).unwrap();
+            (v, out)
         });
         // give the waiters time to block, then the third member leaves
         std::thread::sleep(std::time::Duration::from_millis(50));
         g.leave();
-        let v = waiter.join().unwrap();
-        let v2 = waiter2.join().unwrap();
+        let (v, out) = waiter.join().unwrap();
+        let (v2, out2) = waiter2.join().unwrap();
         // round completed over the two contributors: mean = 4
         assert_eq!(v, vec![4.0, 4.0]);
         assert_eq!(v2, vec![4.0, 4.0]);
+        // both waiters learn the exact contributor count of their round
+        assert_eq!(out.contributors, 2);
+        assert_eq!(out2.contributors, 2);
         assert_eq!(g.active(), 2);
     }
 
     #[test]
     fn singleton_group_is_identity() {
         let g = AllReduceGroup::new(1, 3);
+        let (net, nodes) = net_with(1);
         let mut v = vec![1.0, 2.0, 3.0];
-        let parts = g.allreduce_mean(&mut v).unwrap();
-        assert_eq!(parts, 1);
+        let out = g.allreduce_mean(&mut v, nodes[0], &net).unwrap();
+        assert_eq!(out.contributors, 1);
+        assert_eq!(out.bytes_tx, 0);
         assert_eq!(v, vec![1.0, 2.0, 3.0]);
         assert_eq!(g.ring_bytes_per_member(1), 0);
+        assert_eq!(net.tx(nodes[0]), 0);
     }
 
     #[test]
@@ -206,7 +448,223 @@ mod tests {
     #[test]
     fn length_mismatch_rejected() {
         let g = AllReduceGroup::new(1, 3);
+        let (net, nodes) = net_with(1);
         let mut v = vec![0.0; 2];
-        assert!(g.allreduce_mean(&mut v).is_err());
+        assert!(g.allreduce_mean(&mut v, nodes[0], &net).is_err());
+    }
+
+    #[test]
+    fn measured_traffic_matches_ring_formula() {
+        // n | len: the per-member measured bytes equal the formula exactly
+        let n = 4;
+        let g = Arc::new(AllReduceGroup::new(n, 100));
+        let (net, nodes) = net_with(n);
+        let mut hs = Vec::new();
+        for &node in &nodes {
+            let g = g.clone();
+            let net = net.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut v = vec![1.0f32; 100];
+                g.allreduce_mean(&mut v, node, &net).unwrap()
+            }));
+        }
+        for h in hs {
+            let out = h.join().unwrap();
+            assert_eq!(out.bytes_tx, 600); // == ring_bytes_per_member(4)
+        }
+        for &node in &nodes {
+            assert_eq!(net.tx(node), 600);
+            assert_eq!(net.rx(node), 600);
+        }
+    }
+
+    #[test]
+    fn chunked_traffic_sums_to_exact_aggregate() {
+        // Whatever the chunking, total ring traffic over all members is
+        // exactly 2(n-1) * vec_bytes, and each member is within one
+        // chunk-segment of the per-member formula.
+        for &(n, len, chunks) in &[(3usize, 101usize, 1usize), (4, 1_037, 8), (5, 997, 64)] {
+            let g = Arc::new(AllReduceGroup::new(n, len).with_chunks(chunks));
+            let (net, nodes) = net_with(n);
+            let mut hs = Vec::new();
+            for &node in &nodes {
+                let g = g.clone();
+                let net = net.clone();
+                hs.push(std::thread::spawn(move || {
+                    let mut v = vec![1.0f32; len];
+                    g.allreduce_mean(&mut v, node, &net).unwrap()
+                }));
+            }
+            let mut total = 0u64;
+            for h in hs {
+                let out = h.join().unwrap();
+                total += out.bytes_tx;
+                let formula = g.ring_bytes_per_member(n);
+                let slack = 4 * 2 * chunks as u64; // one element per chunk, both phases
+                assert!(
+                    out.bytes_tx.abs_diff(formula) <= slack,
+                    "n={n} len={len} C={chunks}: measured {} vs formula {formula}",
+                    out.bytes_tx
+                );
+            }
+            assert_eq!(total, 2 * (n as u64 - 1) * len as u64 * 4);
+            let nic_total: u64 = nodes.iter().map(|&nd| net.tx(nd)).sum();
+            assert_eq!(nic_total, total);
+        }
+    }
+
+    #[test]
+    fn contributor_count_is_exact_after_membership_shrinks() {
+        // Regression: the old code reported `active.max(1)` at wake time,
+        // which is wrong once membership changed after the round closed.
+        let g = Arc::new(AllReduceGroup::new(2, 2));
+        let (net, nodes) = net_with(2);
+        let g2 = g.clone();
+        let net2 = net.clone();
+        let node0 = nodes[0];
+        let slow = std::thread::spawn(move || {
+            let mut v = vec![1.0, 1.0];
+            g2.allreduce_mean_inner(
+                &mut v,
+                node0,
+                &net2,
+                Some(Duration::from_millis(200)),
+            )
+            .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let mut v = vec![3.0, 3.0];
+        let out = g.allreduce_mean(&mut v, nodes[1], &net).unwrap();
+        assert_eq!(out.contributors, 2);
+        g.leave(); // membership shrinks to 1 before the slow waiter wakes up
+        let slow_out = slow.join().unwrap();
+        assert_eq!(slow_out.contributors, 2, "waiter must see its round's count");
+        assert_eq!(slow_out.generation, out.generation);
+    }
+
+    #[test]
+    fn overlapping_round_cannot_clobber_unread_result() {
+        // Regression for the generation race: force round N+1 to finalize
+        // (via mid-round leaves) while a round-N waiter has not yet copied
+        // its mean out. With the version-stamped result store the slow
+        // waiter still reads round N's mean and contributor count.
+        //
+        // Membership 5 = threads A (slow-wake), B, C + two phantom members
+        // held by the test thread, which only ever `leave`s.
+        let g = Arc::new(AllReduceGroup::new(5, 2));
+        let (net, nodes) = net_with(5);
+        let ga = g.clone();
+        let neta = net.clone();
+        let node_a = nodes[0];
+        let a = std::thread::spawn(move || {
+            let mut v = vec![3.0, 3.0];
+            let out = ga
+                .allreduce_mean_inner(&mut v, node_a, &neta, Some(Duration::from_millis(400)))
+                .unwrap();
+            (v, out)
+        });
+        let mut fast = Vec::new();
+        for (i, val) in [(1usize, 6.0f32), (2, 9.0)] {
+            let g = g.clone();
+            let net = net.clone();
+            let node = nodes[i];
+            let second = if i == 1 { 10.0 } else { 20.0 };
+            fast.push(std::thread::spawn(move || {
+                let mut v = vec![val; 2];
+                let r0 = g.allreduce_mean(&mut v, node, &net).unwrap();
+                let first_mean = v[0];
+                let mut w = vec![second; 2];
+                let r1 = g.allreduce_mean(&mut w, node, &net).unwrap();
+                (first_mean, r0, w[0], r1)
+            }));
+        }
+        // wait for A, B, C to be summed into round 0, then shrink 5 -> 3 so
+        // round 0 completes while A dawdles before copying
+        while g.pending() < 3 {
+            std::thread::yield_now();
+        }
+        g.leave();
+        g.leave();
+        // B and C wake, copy round 0, and start round 1; shrink 3 -> 2 so
+        // round 1 completes too — before A has read round 0
+        while g.pending() < 2 {
+            std::thread::yield_now();
+        }
+        // retire one more membership (A never rejoins after round 0) so the
+        // {B, C} round can close while A still hasn't copied round 0 out
+        g.leave();
+        let (a_mean, a_out) = {
+            let (v, out) = a.join().unwrap();
+            (v[0], out)
+        };
+        // round 0 = mean(3, 6, 9) over {A, B, C}
+        assert_eq!(a_mean, 6.0);
+        assert_eq!(a_out.contributors, 3);
+        assert_eq!(a_out.generation, 0);
+        for h in fast {
+            let (m0, r0, m1, r1) = h.join().unwrap();
+            assert_eq!(m0, 6.0);
+            assert_eq!(r0.contributors, 3);
+            assert_eq!(r0.generation, 0);
+            // round 1 = mean(10, 20) over {B, C} — finalized while A slept
+            assert_eq!(m1, 15.0);
+            assert_eq!(r1.contributors, 2);
+            assert_eq!(r1.generation, 1);
+        }
+    }
+
+    #[test]
+    fn dynamic_membership_stress_every_mean_is_exact() {
+        // N threads run 100s of rounds while members leave at random
+        // points; every returned mean must equal the sequential reference
+        // over that round's surviving contributor set, and every returned
+        // contributor count must be exact.
+        let n = 8;
+        let p = 4;
+        let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(3));
+        let (net, nodes) = net_with(n);
+        let mut hs = Vec::new();
+        for t in 0..n {
+            let g = g.clone();
+            let net = net.clone();
+            let node = nodes[t];
+            hs.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xA11E ^ t as u64);
+                // members leave at staggered, pseudo-random round counts
+                let my_rounds = 100 + (rng.next_u64() % 150) as usize;
+                let mut log = Vec::with_capacity(my_rounds);
+                for r in 0..my_rounds {
+                    let contrib = (t * 1_000 + r) as f32;
+                    let mut v = vec![contrib; p];
+                    let out = g.allreduce_mean(&mut v, node, &net).unwrap();
+                    assert!(v.iter().all(|&x| x == v[0]), "mean not uniform");
+                    log.push((out.generation, contrib, v[0], out.contributors));
+                }
+                g.leave();
+                log
+            }));
+        }
+        let mut by_gen: HashMap<u64, Vec<(f32, f32, usize)>> = HashMap::new();
+        for h in hs {
+            for (gen, contrib, mean, parts) in h.join().unwrap() {
+                by_gen.entry(gen).or_default().push((contrib, mean, parts));
+            }
+        }
+        assert!(by_gen.len() >= 100, "expected 100s of rounds, got {}", by_gen.len());
+        for (gen, entries) in &by_gen {
+            let count = entries.len();
+            let want = entries.iter().map(|e| e.0).sum::<f32>() / count as f32;
+            for &(_, mean, parts) in entries {
+                assert_eq!(
+                    parts, count,
+                    "gen {gen}: reported {parts} contributors, actual {count}"
+                );
+                assert!(
+                    (mean - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "gen {gen}: mean {mean} != reference {want}"
+                );
+            }
+        }
+        assert_eq!(g.active(), 0);
     }
 }

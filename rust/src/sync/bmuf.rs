@@ -46,7 +46,7 @@ impl SyncStrategy for BmufSync {
     fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
         // w_copy <- local; w_copy <- AllReduce(w_copy)/n
         ctx.local.read_into(&mut self.copy);
-        let participants = self.group.allreduce_mean(&mut self.copy)?;
+        let round = self.group.allreduce_mean(&mut self.copy, ctx.trainer_node, ctx.net)?;
         // w_desc <- w_copy - w_global
         ops::sub(&mut self.desc, &self.copy, &self.global);
         let gap = ops::l2_norm(&self.desc) / (self.desc.len() as f32).sqrt();
@@ -54,9 +54,9 @@ impl SyncStrategy for BmufSync {
         self.momentum.step(&mut self.global, &self.desc);
         // w_i <- (1-alpha) w_i + alpha w_global
         ctx.local.lerp_toward_slice(&self.global, self.alpha);
-        let bytes = self.group.ring_bytes_per_member(participants);
-        ctx.metrics.record_sync(bytes);
-        ctx.net.transfer(ctx.trainer_node, ctx.trainer_node, bytes);
+        // ring traffic was driven hop-by-hop through ctx.net by the
+        // collective itself; record the measured bytes this member moved
+        ctx.metrics.record_sync(round.bytes_tx);
         Ok(gap)
     }
 

@@ -57,14 +57,13 @@ impl SyncStrategy for MaSync {
         if !self.round_delay.is_zero() {
             std::thread::sleep(self.round_delay);
         }
-        let participants = self.group.allreduce_mean(&mut self.global)?;
+        let round = self.group.allreduce_mean(&mut self.global, ctx.trainer_node, ctx.net)?;
         let gap = ops::mean_abs_diff(&self.global, &ctx.local.to_vec());
         // w_i <- (1-alpha) w_i + alpha w_global  (elastic, not copy-back)
         ctx.local.lerp_toward_slice(&self.global, self.alpha);
-        let bytes = self.group.ring_bytes_per_member(participants);
-        ctx.metrics.record_sync(bytes);
-        // ring traffic: account tx toward the (virtual) successor NIC
-        ctx.net.transfer(ctx.trainer_node, ctx.trainer_node, bytes);
+        // ring traffic was driven hop-by-hop through ctx.net by the
+        // collective itself; record the measured bytes this member moved
+        ctx.metrics.record_sync(round.bytes_tx);
         Ok(gap)
     }
 

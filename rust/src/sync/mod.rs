@@ -14,7 +14,10 @@
 //!   trainer for the AllReduce-based MA/BMUF.
 //!
 //! Three algorithms are provided (paper Algorithms 2–4): EASGD (centralized,
-//! against sync PSs), MA and BMUF (decentralized, over AllReduce). All three
+//! against sync PSs), MA and BMUF (decentralized, over the chunked
+//! ring-AllReduce fabric in [`allreduce`], whose per-hop transfers flow
+//! through [`Network`] so ring traffic is measured per trainer NIC rather
+//! than asserted from a formula). All three
 //! use the *asymmetric elastic interpolation* the paper highlights as its
 //! key modification: after a round, the local replica moves α of the way
 //! toward the global/central model instead of being overwritten, so Hogwild
@@ -56,11 +59,25 @@ pub trait SyncStrategy: Send {
     fn name(&self) -> &'static str;
 }
 
-pub use allreduce::AllReduceGroup;
+pub use allreduce::{AllReduceGroup, RoundOutcome};
 pub use bmuf::BmufSync;
 pub use easgd::EasgdSync;
 pub use ma::MaSync;
 pub use ps::SyncPsGroup;
+
+/// Build the shared chunked ring-AllReduce fabric for the decentralized
+/// algorithms (MA, BMUF): one group over all trainers, split into
+/// `cfg.allreduce_chunks` chunks so wire traffic is driven — and accounted
+/// per trainer NIC — through the explicit reduce-scatter + all-gather
+/// schedule (see [`allreduce`]).
+pub fn build_group(
+    cfg: &crate::config::RunConfig,
+    num_params: usize,
+) -> std::sync::Arc<AllReduceGroup> {
+    std::sync::Arc::new(
+        AllReduceGroup::new(cfg.num_trainers, num_params).with_chunks(cfg.allreduce_chunks),
+    )
+}
 
 /// Build the strategy instance for trainer `rank` from a run config.
 pub fn build_strategy(

@@ -71,6 +71,9 @@ pub enum ForegroundPlan {
     DecayingEasgd { strategy: EasgdSync, start: u32, end: u32, total: u64 },
     /// FR-MA / FR-BMUF: this worker (the trainer's designated syncer) runs
     /// the collective every `gap` trainer-level iterations under the gate.
+    /// The ring hops of each round are driven through `SyncCtx::net` as this
+    /// trainer's node (`SyncCtx::trainer_node`), so collective traffic lands
+    /// on the right NIC counters.
     TrainerCollective { strategy: Box<dyn SyncStrategy>, gap: u32 },
 }
 

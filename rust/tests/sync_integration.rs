@@ -9,7 +9,9 @@ use std::time::Duration;
 use shadowsync::metrics::Metrics;
 use shadowsync::net::{Network, Role};
 use shadowsync::sync::driver::spawn_shadow;
-use shadowsync::sync::{AllReduceGroup, BmufSync, EasgdSync, MaSync, SyncPsGroup, SyncStrategy};
+use shadowsync::sync::{
+    AllReduceGroup, BmufSync, EasgdSync, MaSync, SyncCtx, SyncPsGroup, SyncStrategy,
+};
 use shadowsync::tensor::HogwildBuffer;
 
 /// Simulated "workers": threads that keep pulling a replica toward a
@@ -164,4 +166,94 @@ fn shadow_bmuf_moves_global_toward_average() {
         assert!((mean - 4.0).abs() < 1.0, "replica mean {mean} far from 4.0");
     }
     assert!(metrics.snapshot().syncs >= 4);
+}
+
+/// Drive `rounds` synchronized collective rounds of `strategy_for` across
+/// `n` trainers and return (network, nodes, metrics) for traffic checks.
+fn drive_collective_rounds<F>(
+    n: usize,
+    p: usize,
+    rounds: u64,
+    strategy_for: F,
+) -> (Arc<Network>, Vec<shadowsync::net::NodeId>, Arc<Metrics>)
+where
+    F: Fn(usize) -> Box<dyn SyncStrategy> + Sync,
+{
+    let mut net = Network::new(None);
+    let nodes: Vec<_> = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
+    let net = Arc::new(net);
+    let metrics = Arc::new(Metrics::new());
+    std::thread::scope(|s| {
+        for (i, &node) in nodes.iter().enumerate() {
+            let net = net.clone();
+            let metrics = metrics.clone();
+            let mut strategy = strategy_for(i);
+            s.spawn(move || {
+                let replica = HogwildBuffer::from_slice(&vec![i as f32; p]);
+                let ctx = SyncCtx { local: &replica, trainer_node: node, net: &net, metrics: &metrics };
+                for _ in 0..rounds {
+                    strategy.sync_round(&ctx).unwrap();
+                }
+                strategy.leave();
+            });
+        }
+    });
+    (net, nodes, metrics)
+}
+
+/// Acceptance: after an MA run, trainer NIC counters carry the *measured*
+/// chunked-ring traffic, matching `2·(n-1)/n · bytes` per round within one
+/// chunk-segment of rounding per hop.
+#[test]
+fn ma_ring_traffic_lands_on_trainer_nics() {
+    let (n, p, chunks, rounds) = (4usize, 10_000usize, 8usize, 25u64);
+    let group = Arc::new(AllReduceGroup::new(n, p).with_chunks(chunks));
+    let g = group.clone();
+    let (net, nodes, metrics) =
+        drive_collective_rounds(n, p, rounds, move |_| -> Box<dyn SyncStrategy> {
+            Box::new(MaSync::new(g.clone(), 0.5, p))
+        });
+    let formula = group.ring_bytes_per_member(n) * rounds;
+    assert!(formula > 0);
+    // one element of rounding per chunk, per hop, per round
+    let slack = rounds * 2 * (n as u64 - 1) * chunks as u64 * 4;
+    let mut measured_total = 0u64;
+    for &node in &nodes {
+        let (tx, rx) = (net.tx(node), net.rx(node));
+        assert!(
+            tx.abs_diff(formula) <= slack,
+            "tx {tx} vs ring formula {formula} (slack {slack})"
+        );
+        assert!(
+            rx.abs_diff(formula) <= slack,
+            "rx {rx} vs ring formula {formula} (slack {slack})"
+        );
+        measured_total += tx;
+    }
+    // the recorded sync-byte metric is exactly the measured wire traffic
+    let snap = metrics.snapshot();
+    assert_eq!(snap.sync_bytes, measured_total);
+    assert_eq!(snap.syncs, n as u64 * rounds);
+    // aggregate ring traffic is exact regardless of chunking
+    assert_eq!(measured_total, 2 * (n as u64 - 1) * p as u64 * 4 * rounds);
+}
+
+/// Same acceptance check for BMUF, on a flat (single-chunk) ring.
+#[test]
+fn bmuf_ring_traffic_lands_on_trainer_nics() {
+    let (n, p, rounds) = (3usize, 9_999usize, 10u64);
+    let group = Arc::new(AllReduceGroup::new(n, p));
+    let g = group.clone();
+    let (net, nodes, _metrics) = drive_collective_rounds(n, p, rounds, move |_| -> Box<dyn SyncStrategy> {
+        Box::new(BmufSync::new(g.clone(), 0.5, 1.0, 0.0, &vec![0.0; p]))
+    });
+    let formula = group.ring_bytes_per_member(n) * rounds;
+    let slack = rounds * 2 * (n as u64 - 1) * 4; // flat: one segment's rounding
+    for &node in &nodes {
+        assert!(
+            net.tx(node).abs_diff(formula) <= slack,
+            "tx {} vs ring formula {formula}",
+            net.tx(node)
+        );
+    }
 }
