@@ -1,13 +1,14 @@
 //! Synchronization-primitive benchmarks: what a shadow round costs at
-//! various parameter sizes, and how the AllReduce scales with membership.
-//! These correspond to the sync columns of the paper's Fig. 5/6 and feed
-//! the §Perf iteration log.
+//! various parameter sizes, how the AllReduce scales with membership, and
+//! what the lock-striped chunk-parallel reduction engine buys over the
+//! single-mutex serial baseline. These correspond to the sync columns of
+//! the paper's Fig. 5/6 and feed the §Perf iteration log.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use shadowsync::net::{Network, Role};
-use shadowsync::sync::{AllReduceGroup, SyncPsGroup};
+use shadowsync::sync::{AllReduceGroup, ReduceEngine, SyncPsGroup};
 use shadowsync::tensor::{ops, HogwildBuffer};
 use shadowsync::util::bench::bench;
 
@@ -25,7 +26,27 @@ fn main() {
         let r = bench(&format!("easgd_round/P={p}"), budget, || {
             std::hint::black_box(group.elastic_sync(&local, 0.5, tnode, &net));
         });
-        println!("  -> {:.1} M params/s\n", p as f64 / (r.mean_ns / 1e3) );
+        println!("  -> {:.1} M params/s\n", p as f64 / (r.mean_ns / 1e3));
+    }
+
+    // chunked pushes with a delta gate: converged replicas skip chunks, so
+    // the scan is the whole cost and the wire moves (nearly) nothing
+    for (delta, tag) in [(0.0f32, "off"), (1e-3, "on")] {
+        let p = 1_000_000usize;
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let group =
+            SyncPsGroup::build(&vec![0.1; p], 2, &mut net).with_push_chunking(4096, delta);
+        let local = HogwildBuffer::from_slice(&vec![0.1; p]); // already in sync
+        let r = bench(&format!("easgd_round_delta_{tag}/P={p}"), budget, || {
+            std::hint::black_box(group.elastic_sync_stats(&local, 0.5, tnode, &net));
+        });
+        let t = group.traffic();
+        println!(
+            "  -> {:.1} M params/s, push fraction {:.3}\n",
+            p as f64 / (r.mean_ns / 1e3),
+            t.push_fraction(),
+        );
     }
 
     // Hogwild snapshot + interpolation primitives
@@ -59,15 +80,33 @@ fn main() {
         (4, 1_048_576, 8),  // chunked ring, same size
         (4, 1_048_576, 64), // fine-grained chunking
     ] {
-        bench_allreduce(members, p, chunks, budget);
+        bench_allreduce(members, p, chunks, ReduceEngine::Striped, budget);
+    }
+
+    // The headline A/B: serial-mutex contribute (every member's full-vector
+    // add serialized under one lock) vs the lock-striped chunk-parallel
+    // engine, 1M params x {2, 4, 8} members. The striped engine's round
+    // time should shrink as members grow; the serial engine's grows
+    // linearly with members.
+    println!("\n== serial-mutex vs striped contribute (1M params, 16 chunks) ==");
+    for members in [2usize, 4, 8] {
+        for engine in [ReduceEngine::SerialMutex, ReduceEngine::Striped] {
+            bench_allreduce(members, 1_048_576, 16, engine, budget);
+        }
     }
     println!("\nsync_ops done");
 }
 
 /// One AllReduce configuration: `members` looping threads on a shared
 /// chunked ring group, real per-hop traffic accounted on per-member NICs.
-fn bench_allreduce(members: usize, p: usize, chunks: usize, budget: Duration) {
-    let group = Arc::new(AllReduceGroup::new(members, p).with_chunks(chunks));
+fn bench_allreduce(
+    members: usize,
+    p: usize,
+    chunks: usize,
+    engine: ReduceEngine,
+    budget: Duration,
+) {
+    let group = Arc::new(AllReduceGroup::new(members, p).with_chunks(chunks).with_engine(engine));
     let mut net = Network::new(None);
     let nodes: Vec<_> = (0..members).map(|_| net.add_node(Role::Trainer)).collect();
     let net = Arc::new(net);
@@ -90,10 +129,14 @@ fn bench_allreduce(members: usize, p: usize, chunks: usize, budget: Duration) {
     }
     let mut mine = vec![2.0f32; p];
     let (tx0, rounds0) = (net.tx(nodes[0]), group.completed_rounds());
-    let r = bench(&format!("allreduce_mean/n={members}/P={p}/C={chunks}"), budget, || {
-        group.allreduce_mean(&mut mine, nodes[0], &net).unwrap();
-        std::hint::black_box(&mine);
-    });
+    let r = bench(
+        &format!("allreduce_mean/{engine}/n={members}/P={p}/C={chunks}"),
+        budget,
+        || {
+            group.allreduce_mean(&mut mine, nodes[0], &net).unwrap();
+            std::hint::black_box(&mine);
+        },
+    );
     let rounds = (group.completed_rounds() - rounds0).max(1);
     println!(
         "  -> {:.1} M params/s, measured ring tx {} B/member/round (formula {})\n",

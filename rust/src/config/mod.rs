@@ -265,6 +265,16 @@ pub struct RunConfig {
     /// parameter vector is reduced as `C` pipelined reduce-scatter +
     /// all-gather rings (1 = flat single-chunk collective)
     pub allreduce_chunks: usize,
+    /// in-process reduction engine of the AllReduce fabric: lock-striped
+    /// chunk-parallel (default) or the single-mutex serial baseline
+    pub reduce_engine: crate::sync::ReduceEngine,
+    /// elements per EASGD push chunk against the sync PSs (0 = whole-shard
+    /// pushes, the pre-chunking behaviour)
+    pub easgd_chunk_elems: usize,
+    /// skip EASGD push chunks whose max |local − central| is at or below
+    /// this (0 = push everything); skipped chunks move zero bytes on both
+    /// the push and the reply leg
+    pub delta_threshold: f32,
     /// simulated wall time of one MA/BMUF collective (models paper-scale
     /// AllReduce wire time; 0 = in-process instantaneous)
     pub collective_wire_ms: u64,
@@ -297,6 +307,9 @@ impl Default for RunConfig {
             reader_rate_limit: None,
             shadow_interval_ms: 0,
             allreduce_chunks: 8,
+            reduce_engine: crate::sync::ReduceEngine::Striped,
+            easgd_chunk_elems: 4096,
+            delta_threshold: 0.0,
             collective_wire_ms: 0,
             simulate_network: false,
         }
@@ -319,6 +332,9 @@ impl RunConfig {
         }
         if self.allreduce_chunks == 0 {
             bail!("allreduce_chunks must be >= 1 (1 = flat collective)");
+        }
+        if !self.delta_threshold.is_finite() || self.delta_threshold < 0.0 {
+            bail!("delta_threshold must be finite and >= 0 (0 = push everything)");
         }
         Ok(())
     }
@@ -388,7 +404,19 @@ mod tests {
     fn default_chunk_count_is_valid() {
         let c = RunConfig::default();
         assert!(c.allreduce_chunks >= 1);
+        assert_eq!(c.reduce_engine, crate::sync::ReduceEngine::Striped);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn delta_threshold_must_be_finite_nonnegative() {
+        let mut c = RunConfig::default();
+        c.delta_threshold = 1e-4;
+        c.validate().unwrap();
+        c.delta_threshold = -0.5;
+        assert!(c.validate().is_err());
+        c.delta_threshold = f32::NAN;
+        assert!(c.validate().is_err());
     }
 
     #[test]

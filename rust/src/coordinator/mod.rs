@@ -89,7 +89,12 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         cfg.data_seed ^ 0xE0B5,
     )?);
     let sync_ps = match cfg.algo {
-        SyncAlgo::Easgd => Some(Arc::new(SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net))),
+        // chunked, delta-gated pushes: skipped chunks move zero bytes on
+        // either leg, and recorded sync bytes are the measured traffic
+        SyncAlgo::Easgd => Some(Arc::new(
+            SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net)
+                .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold),
+        )),
         _ => None,
     };
     // the decentralized algorithms share one chunked ring-AllReduce fabric;

@@ -9,7 +9,9 @@
 //!
 //! Examples:
 //!   shadowsync train --preset model_a --trainers 4 --threads 3 \
-//!       --algo easgd --mode shadow --examples 200000
+//!       --algo easgd --mode shadow --examples 200000 \
+//!       --sync-chunk 4096 --delta-threshold 1e-4
+//!   shadowsync train --algo ma --chunks 16 --reduce-engine striped
 //!   shadowsync exp --id table2a
 //!   shadowsync sim --trainers 5,10,20 --algo easgd --mode fixed --gap 5 --sync-ps 2
 
@@ -22,6 +24,7 @@ use shadowsync::coordinator;
 use shadowsync::exp::{self, ExpOpts};
 use shadowsync::runtime::Runtime;
 use shadowsync::sim::CostModel;
+use shadowsync::sync::ReduceEngine;
 use shadowsync::util::cli::Args;
 
 fn main() {
@@ -75,6 +78,9 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         data_seed: args.parse_or("seed", 1u64)?,
         shadow_interval_ms: args.parse_or("shadow-interval-ms", 0u64)?,
         allreduce_chunks: args.parse_or("chunks", 8usize)?,
+        reduce_engine: args.parse_or("reduce-engine", ReduceEngine::Striped)?,
+        easgd_chunk_elems: args.parse_or("sync-chunk", 4096usize)?,
+        delta_threshold: args.parse_or("delta-threshold", 0.0f32)?,
         ..Default::default()
     };
     cfg.embedding.rows_per_table = args.parse_or("rows", cfg.embedding.rows_per_table)?;

@@ -14,13 +14,16 @@
 //! embedding PSs, EASGD elastic pushes against the sync-PS shards, and —
 //! since the collective became a chunked ring fabric
 //! ([`crate::sync::allreduce`]) — each MA/BMUF member's individual
-//! reduce-scatter and all-gather hops toward its ring successor. The
-//! fig5/fig6 traffic columns therefore report *measured* NIC counters for
-//! every role, not closed-form estimates; the textbook ring formula
-//! survives only as the cross-check reference
-//! (`AllReduceGroup::ring_bytes_per_member`) and as the `sim/` cost model's
-//! input. Transfers are full-duplex: `tx` accrues to the source NIC and
-//! `rx` to the destination NIC of the same call.
+//! reduce-scatter and all-gather hops toward its ring successor, and each
+//! EASGD push chunk that survives the delta gate (skipped chunks suppress
+//! both legs). The fig5/fig6 traffic columns therefore report *measured*
+//! NIC counters for every role, not closed-form estimates; the `sim/` cost
+//! model likewise prices collectives from the measured schedule
+//! ([`crate::sync::traffic`]), with the textbook ring formula surviving
+//! only as the cross-check reference
+//! (`AllReduceGroup::ring_bytes_per_member`). Transfers are full-duplex:
+//! `tx` accrues to the source NIC and `rx` to the destination NIC of the
+//! same call.
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::time::Duration;

@@ -19,6 +19,12 @@
 //! testbed (20-core Xeon, 25 Gbit NICs, batch 200, 24 threads); the
 //! small-scale constants (per-batch compute) are measured from this repo's
 //! real runs by `exp::calibrate`.
+//!
+//! Collective pricing is *measured*, not closed-form: ring rounds cost the
+//! slowest member's wire bytes under the exact chunked schedule the fabric
+//! runs ([`crate::sync::traffic::RingTraffic`], chunk rounding included),
+//! and EASGD rounds scale with the measured push fraction of the
+//! delta-gated chunked sync-PS pushes (`SyncPsGroup::traffic`).
 
 pub mod model;
 

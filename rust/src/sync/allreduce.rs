@@ -1,4 +1,5 @@
-//! Chunked ring-AllReduce fabric for the decentralized algorithms (MA, BMUF).
+//! Lock-striped, chunk-parallel ring-AllReduce fabric for the decentralized
+//! algorithms (MA, BMUF).
 //!
 //! Semantics match a ring all-reduce over the trainers: every active member
 //! contributes a vector, everyone receives the element-wise mean. Because
@@ -7,28 +8,47 @@
 //! rounds complete over the *remaining* membership (a real collective over
 //! dynamic process groups behaves the same way after a resize).
 //!
-//! ## The chunked schedule
+//! ## The striped reduction engine
+//!
+//! The old engine funneled every member's element-wise sum through one
+//! `Mutex<State>`: `n` concurrent contributors serialized on a single lock
+//! for `n` full-vector adds per round. The default engine
+//! ([`ReduceEngine::Striped`]) keeps only O(1) round/membership bookkeeping
+//! under the small control lock and splits the arithmetic two ways:
+//!
+//! 1. **Deposit** — each contributor copies its vector into a private,
+//!    per-ring-position *slot* buffer (its own lock, never contended), so
+//!    all `n` deposits run fully in parallel.
+//! 2. **Chunk-parallel reduce** — once the round closes, the vector's `C`
+//!    chunks become a work list: every thread parked in the round claims
+//!    chunks off an epoch-tagged atomic cursor and reduces *disjoint*
+//!    chunks into per-chunk mean stripes (one lock per stripe, exclusive by
+//!    construction). `n` members reduce `C` chunks cooperatively instead of
+//!    queueing on one mutex, so the contribute path scales with cores.
+//!
+//! The per-chunk sum always folds slots in **ring-position order**, so the
+//! reduction has a fixed chunk-wise summation order: concurrent rounds
+//! produce bit-identical means to a single-threaded position-order
+//! reference, regardless of thread interleaving (verified by the
+//! concurrency regression tests). [`ReduceEngine::SerialMutex`] keeps the
+//! old single-lock arrival-order engine as the benchmark baseline
+//! (`benches/sync_ops.rs` compares the two at 1M params).
+//!
+//! ## The chunked wire schedule
 //!
 //! The parameter vector is split into `C` chunks
 //! ([`AllReduceGroup::with_chunks`], `RunConfig::allreduce_chunks`). Each
 //! chunk is reduced through an explicit reduce-scatter + all-gather ring
-//! schedule over the round's `n` contributors: a chunk of length `L` is cut
-//! into `n` near-equal segments, and every member sends one segment per hop
-//! to its ring successor for `n-1` reduce-scatter hops followed by `n-1`
-//! all-gather hops. All chunks move together on each hop (the pipelined
-//! order a multi-threaded chunk-parallel reduction would use), so a member
-//! performs `2·(n-1)` wire transfers per round regardless of `C`.
-//!
-//! ## Measured-traffic accounting
-//!
-//! Every per-hop transfer is driven through [`Network::transfer`], so NIC
-//! counters (and the optional bandwidth-delay model) see the *actual* ring
-//! traffic of every round instead of a closed-form estimate: per member and
-//! round the measured bytes land within one chunk-segment of rounding of
-//! the textbook `2·(n-1)/n · bytes` ring formula
-//! ([`AllReduceGroup::ring_bytes_per_member`], kept as the reference used
-//! by the paper-scale throughput model in `sim/`). Because each member
-//! drives its own hops, traffic is attributed to that member's own NIC.
+//! schedule over the round's `n` contributors (schedule math shared with
+//! [`super::traffic`]): a chunk of length `L` is cut into `n` near-equal
+//! segments, and every member sends one segment per hop to its ring
+//! successor for `n-1` reduce-scatter hops followed by `n-1` all-gather
+//! hops. Every per-hop transfer is driven through [`Network::transfer`], so
+//! NIC counters see the *actual* ring traffic of every round; the textbook
+//! `2·(n-1)/n · bytes` formula survives only as the cross-check reference
+//! ([`AllReduceGroup::ring_bytes_per_member`]) — the paper-scale throughput
+//! model in `sim/` now prices collectives from the measured schedule
+//! ([`super::traffic::RingTraffic`]), not the closed form.
 //!
 //! ## Correct overlap with dynamic membership
 //!
@@ -37,16 +57,53 @@
 //! of its waiters has copied it out, so a fast round `N+1` — or `N+2`, after
 //! mid-round [`AllReduceGroup::leave`]s — can never clobber round `N`'s mean
 //! before slow round-`N` waiters observe it, and every joiner is told the
-//! exact contributor count of *its own* round. Retired round buffers are
-//! recycled through a pool, so the steady state allocates nothing.
+//! exact contributor count of *its own* round. Deposits for round `N+1`
+//! wait (and help) until round `N`'s reduce has drained out of the slot
+//! buffers. Retired round buffers are recycled through a pool, so the
+//! steady state allocates nothing.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::net::{Network, NodeId};
+
+use super::traffic;
+
+/// Which in-process reduction engine a group runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceEngine {
+    /// Legacy baseline: every contributor adds its full vector into one
+    /// shared sum under the control lock (arrival-order association).
+    SerialMutex,
+    /// Default: parallel per-position deposits + cooperative chunk-parallel
+    /// reduction over per-chunk stripes (position-order association,
+    /// deterministic bits).
+    Striped,
+}
+
+impl std::str::FromStr for ReduceEngine {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "striped" => Self::Striped,
+            "serial" | "serial-mutex" => Self::SerialMutex,
+            _ => bail!("unknown reduce engine {s:?} (striped|serial)"),
+        })
+    }
+}
+
+impl std::fmt::Display for ReduceEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::SerialMutex => write!(f, "serial"),
+            Self::Striped => write!(f, "striped"),
+        }
+    }
+}
 
 /// What one completed collective round reports to each contributor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,6 +112,9 @@ pub struct RoundOutcome {
     pub generation: u64,
     /// Exact number of vectors that entered this round's mean.
     pub contributors: usize,
+    /// This member's ring position within its round (also its fixed place
+    /// in the deterministic summation order).
+    pub position: usize,
     /// Bytes this member pushed onto the wire for this round (its
     /// reduce-scatter + all-gather hops, as accounted through `Network`).
     pub bytes_tx: u64,
@@ -70,13 +130,30 @@ struct Round {
     readers_left: usize,
 }
 
-struct State {
+/// A closed round whose chunk-parallel reduction is still in flight
+/// (striped engine only). The chunk cursor and completion count live in
+/// [`StripedState`] so helpers can claim work without the control lock.
+struct ReducePlan {
+    generation: u64,
+    /// Contributors of the closing round (== slots to fold per chunk).
+    n: usize,
+    /// Contributor NICs in join order, carried into the parked `Round`.
+    ring: Vec<NodeId>,
+}
+
+/// Round/membership bookkeeping — the *small* control lock. All O(len)
+/// arithmetic happens outside it in the striped engine.
+struct Control {
     active: usize,
-    joined: usize,
+    /// Contributors that have fully deposited their vector this round.
+    deposited: usize,
     /// NICs of the current round's contributors, in join order.
     contributors: Vec<NodeId>,
+    /// Serial engine only: the single shared sum (empty when striped).
     sum: Vec<f32>,
     generation: u64,
+    /// The closed round currently being reduced (striped engine only).
+    plan: Option<ReducePlan>,
     /// Completed rounds not yet copied out by all their waiters.
     done: VecDeque<Round>,
     /// Recycled `mean`/`ring` buffers (steady state allocates nothing).
@@ -84,10 +161,49 @@ struct State {
     ring_pool: Vec<Vec<NodeId>>,
 }
 
+/// The striped engine's lock-striped buffers, outside the control lock.
+struct StripedState {
+    /// One deposit buffer per ring position; each is written by exactly one
+    /// contributor per round, so its lock is never contended.
+    slots: Vec<Mutex<Vec<f32>>>,
+    /// One mean stripe per chunk; the cursor hands each chunk to exactly
+    /// one reducer, so each stripe lock is exclusive by construction.
+    stripes: Vec<Mutex<Vec<f32>>>,
+    /// Epoch-tagged claim cursor: `(generation & 0xFFFF_FFFF) << 32 | next
+    /// chunk index`. The tag stops a stale helper from claiming chunks of a
+    /// later round's reduce.
+    cursor: AtomicU64,
+    /// Chunks fully reduced in the active plan; the thread that finishes
+    /// the last chunk parks the round.
+    chunks_done: AtomicUsize,
+}
+
+impl StripedState {
+    fn new(len: usize, chunks: usize, capacity: usize) -> Self {
+        Self {
+            slots: (0..capacity).map(|_| Mutex::new(vec![0.0; len])).collect(),
+            stripes: (0..chunks)
+                .map(|c| Mutex::new(vec![0.0; traffic::part_len(len, chunks, c)]))
+                .collect(),
+            cursor: AtomicU64::new(u64::MAX),
+            chunks_done: AtomicUsize::new(0),
+        }
+    }
+}
+
+fn pack_cursor(generation: u64, idx: usize) -> u64 {
+    ((generation & 0xFFFF_FFFF) << 32) | idx as u64
+}
+
 /// A dynamic-membership mean-AllReduce group over a chunked ring schedule.
 pub struct AllReduceGroup {
-    state: Mutex<State>,
+    state: Mutex<Control>,
     cv: Condvar,
+    /// Striped engine buffers (None for the serial baseline).
+    striped: Option<StripedState>,
+    engine: ReduceEngine,
+    /// Initial membership — the slot capacity of the striped engine.
+    capacity: usize,
     /// Vector length every contribution must match.
     pub len: usize,
     /// Chunk count `C` of the ring schedule (1 = flat single-chunk rings).
@@ -95,71 +211,217 @@ pub struct AllReduceGroup {
 }
 
 impl AllReduceGroup {
-    /// `members` trainers, vectors of length `len`, flat (single-chunk).
+    /// `members` trainers, vectors of length `len`, flat (single-chunk),
+    /// striped reduction engine.
     pub fn new(members: usize, len: usize) -> Self {
-        Self {
-            state: Mutex::new(State {
+        let mut g = Self {
+            state: Mutex::new(Control {
                 active: members,
-                joined: 0,
+                deposited: 0,
                 contributors: Vec::with_capacity(members),
-                sum: vec![0.0; len],
+                sum: Vec::new(),
                 generation: 0,
+                plan: None,
                 done: VecDeque::new(),
                 mean_pool: Vec::new(),
                 ring_pool: Vec::new(),
             }),
             cv: Condvar::new(),
+            striped: None,
+            engine: ReduceEngine::Striped,
+            capacity: members,
             len,
             chunks: 1,
-        }
+        };
+        g.rebuild_engine();
+        g
     }
 
-    /// Split the vector into `chunks` chunks for the ring schedule.
+    /// Split the vector into `chunks` chunks for the ring schedule (and the
+    /// striped engine's reduction work list).
     pub fn with_chunks(mut self, chunks: usize) -> Self {
         self.chunks = chunks.max(1);
+        debug_assert!(self.chunks as u64 <= u32::MAX as u64);
+        self.rebuild_engine();
         self
     }
 
-    /// `len / parts` with the remainder spread over the leading parts —
-    /// the same split rule as `placement::equal_ranges`.
-    fn part_len(len: usize, parts: usize, idx: usize) -> usize {
-        len / parts + usize::from(idx < len % parts)
+    /// Select the in-process reduction engine.
+    pub fn with_engine(mut self, engine: ReduceEngine) -> Self {
+        self.engine = engine;
+        self.rebuild_engine();
+        self
     }
 
-    /// Close the pending round: stamp the mean + ring + exact contributor
-    /// count with the current generation and park it for its waiters.
-    /// `finalizer_copies` is true when the caller is the final joiner (it
-    /// copies the mean inline and never waits).
-    fn finalize(st: &mut State, finalizer_copies: bool) {
-        let n = st.joined;
-        debug_assert!(n > 0, "finalize of an empty round");
-        let len = st.sum.len();
-        let fresh = match st.mean_pool.pop() {
-            Some(mut v) => {
-                v.fill(0.0);
-                v
+    pub fn engine(&self) -> ReduceEngine {
+        self.engine
+    }
+
+    /// (Re)build the engine-specific buffers. Builder-phase only. The slot
+    /// buffers (`capacity × len`, the expensive part) are reused across
+    /// builder calls; only the per-chunk stripes are rebuilt when the chunk
+    /// count changes.
+    fn rebuild_engine(&mut self) {
+        let st = self.state.get_mut().unwrap();
+        match self.engine {
+            ReduceEngine::SerialMutex => {
+                if st.sum.len() != self.len {
+                    st.sum = vec![0.0; self.len];
+                }
+                self.striped = None;
             }
-            None => vec![0.0; len],
-        };
-        let mut mean = std::mem::replace(&mut st.sum, fresh);
-        let inv = 1.0 / n as f32;
-        for m in &mut mean {
-            *m *= inv;
+            ReduceEngine::Striped => {
+                st.sum = Vec::new();
+                match self.striped.take() {
+                    Some(mut ss) if ss.slots.len() == self.capacity => {
+                        if ss.stripes.len() != self.chunks {
+                            ss.stripes = (0..self.chunks)
+                                .map(|c| {
+                                    Mutex::new(vec![
+                                        0.0;
+                                        traffic::part_len(self.len, self.chunks, c)
+                                    ])
+                                })
+                                .collect();
+                        }
+                        self.striped = Some(ss);
+                    }
+                    _ => {
+                        self.striped =
+                            Some(StripedState::new(self.len, self.chunks, self.capacity));
+                    }
+                }
+            }
         }
-        let empty_ring = st.ring_pool.pop().unwrap_or_default();
-        let ring = std::mem::replace(&mut st.contributors, empty_ring);
-        st.done.push_back(Round {
-            generation: st.generation,
-            mean,
-            ring,
-            readers_left: if finalizer_copies { n - 1 } else { n },
-        });
-        st.joined = 0;
+    }
+
+    /// Is the pending round ready to close? Every registered contributor
+    /// has fully deposited, the remaining membership is covered, and no
+    /// earlier round is still reducing out of the slot buffers.
+    fn round_complete(st: &Control) -> bool {
+        st.plan.is_none()
+            && st.deposited > 0
+            && st.deposited == st.contributors.len()
+            && st.deposited >= st.active
+    }
+
+    /// Close the pending round. Serial engine: scale the shared sum and
+    /// park the result immediately. Striped engine: open a reduce plan —
+    /// the waiters themselves fold the slots chunk-by-chunk and the last
+    /// chunk's reducer parks the result.
+    fn close_round(&self, st: &mut Control) {
+        let n = st.contributors.len();
+        debug_assert!(n > 0, "closing an empty round");
+        let empty = st.ring_pool.pop().unwrap_or_default();
+        let ring = std::mem::replace(&mut st.contributors, empty);
+        let generation = st.generation;
         st.generation += 1;
+        st.deposited = 0;
+        match self.engine {
+            ReduceEngine::SerialMutex => {
+                let fresh = match st.mean_pool.pop() {
+                    Some(mut v) => {
+                        v.fill(0.0);
+                        v
+                    }
+                    None => vec![0.0; self.len],
+                };
+                let mut mean = std::mem::replace(&mut st.sum, fresh);
+                let inv = 1.0 / n as f32;
+                for m in &mut mean {
+                    *m *= inv;
+                }
+                st.done.push_back(Round { generation, mean, ring, readers_left: n });
+            }
+            ReduceEngine::Striped => {
+                let ss = self.striped.as_ref().expect("striped engine state");
+                ss.chunks_done.store(0, SeqCst);
+                ss.cursor.store(pack_cursor(generation, 0), SeqCst);
+                st.plan = Some(ReducePlan { generation, n, ring });
+            }
+        }
+    }
+
+    /// Claim and reduce chunks of the active plan for round `generation`
+    /// over `n` slots. Returns whether any chunk was claimed; the reducer
+    /// of the final chunk parks the round.
+    fn help_reduce(&self, generation: u64, n: usize) -> bool {
+        let ss = self.striped.as_ref().expect("reduce plan requires the striped engine");
+        let epoch = pack_cursor(generation, 0);
+        let mut claimed = false;
+        loop {
+            let cur = ss.cursor.load(SeqCst);
+            if cur & !0xFFFF_FFFFu64 != epoch {
+                break; // a different round owns the cursor now; stand down
+            }
+            let idx = (cur & 0xFFFF_FFFF) as usize;
+            if idx >= self.chunks {
+                break; // every chunk already claimed
+            }
+            if ss.cursor.compare_exchange(cur, cur + 1, SeqCst, SeqCst).is_err() {
+                continue; // raced another claimer; reload
+            }
+            self.reduce_chunk(ss, idx, n);
+            claimed = true;
+            if ss.chunks_done.fetch_add(1, SeqCst) + 1 == self.chunks {
+                self.park_reduced(generation);
+            }
+        }
+        claimed
+    }
+
+    /// Fold slots `0..n` of chunk `c` into its mean stripe, always in ring-
+    /// position order — the fixed chunk-wise summation order that makes the
+    /// concurrent reduction bit-deterministic.
+    fn reduce_chunk(&self, ss: &StripedState, c: usize, n: usize) {
+        let lo = traffic::part_offset(self.len, self.chunks, c);
+        let clen = traffic::part_len(self.len, self.chunks, c);
+        let mut stripe = ss.stripes[c].lock().unwrap();
+        debug_assert_eq!(stripe.len(), clen);
+        for (pos, slot_mx) in ss.slots.iter().take(n).enumerate() {
+            let slot = slot_mx.lock().unwrap();
+            let src = &slot[lo..lo + clen];
+            if pos == 0 {
+                stripe.copy_from_slice(src);
+            } else {
+                for (acc, &x) in stripe.iter_mut().zip(src) {
+                    *acc += x;
+                }
+            }
+        }
+        let inv = 1.0 / n as f32;
+        for acc in stripe.iter_mut() {
+            *acc *= inv;
+        }
+    }
+
+    /// All chunks of the plan for `generation` are reduced: assemble the
+    /// stripes into a parked `Round` and wake every waiter.
+    fn park_reduced(&self, generation: u64) {
+        let ss = self.striped.as_ref().expect("striped engine state");
+        let mut st = self.state.lock().unwrap();
+        let plan = st.plan.take().expect("park without an active reduce plan");
+        debug_assert_eq!(plan.generation, generation);
+        let mut mean = st.mean_pool.pop().unwrap_or_else(|| vec![0.0; self.len]);
+        let mut off = 0;
+        for stripe_mx in &ss.stripes {
+            let stripe = stripe_mx.lock().unwrap();
+            mean[off..off + stripe.len()].copy_from_slice(&stripe[..]);
+            off += stripe.len();
+        }
+        debug_assert_eq!(off, self.len);
+        st.done.push_back(Round {
+            generation: plan.generation,
+            mean,
+            ring: plan.ring,
+            readers_left: plan.n,
+        });
+        drop(st);
+        self.cv.notify_all();
     }
 
     /// Retire fully-read rounds and recycle their buffers.
-    fn gc(st: &mut State) {
+    fn gc(st: &mut Control) {
         let mut i = 0;
         while i < st.done.len() {
             if st.done[i].readers_left == 0 {
@@ -177,8 +439,8 @@ impl AllReduceGroup {
     /// Contribute `data` as the member whose NIC is `me`, block until the
     /// round completes, and replace `data` with the mean over this round's
     /// contributors. Drives this member's ring hops through `net` and
-    /// returns the round's generation, exact contributor count, and the
-    /// bytes this member moved.
+    /// returns the round's generation, exact contributor count, ring
+    /// position, and the bytes this member moved.
     pub fn allreduce_mean(
         &self,
         data: &mut [f32],
@@ -201,55 +463,98 @@ impl AllReduceGroup {
         ensure!(data.len() == self.len, "allreduce length mismatch");
         let mut st = self.state.lock().unwrap();
         ensure!(st.active > 0, "allreduce on an empty group");
-        for (s, &d) in st.sum.iter_mut().zip(data.iter()) {
-            *s += d;
+        if let Some(ss) = &self.striped {
+            ensure!(
+                st.contributors.len() < ss.slots.len(),
+                "more concurrent contributors than group members"
+            );
         }
+        let my_gen = st.generation;
         let my_pos = st.contributors.len();
         st.contributors.push(me);
-        st.joined += 1;
-        let my_gen = st.generation;
-        if st.joined == st.active {
-            Self::finalize(&mut st, true);
-            let round = st.done.back().expect("round just finalized");
-            data.copy_from_slice(&round.mean);
-            let n = round.ring.len();
-            let succ = round.ring[(my_pos + 1) % n];
-            Self::gc(&mut st);
-            drop(st);
+        match self.engine {
+            ReduceEngine::SerialMutex => {
+                // the legacy hot path: O(len) arithmetic under the lock
+                for (s, &d) in st.sum.iter_mut().zip(data.iter()) {
+                    *s += d;
+                }
+            }
+            ReduceEngine::Striped => {
+                // the previous round may still be reducing out of the slot
+                // buffers; help it drain before overwriting our slot
+                loop {
+                    let plan = st.plan.as_ref().map(|p| (p.generation, p.n));
+                    match plan {
+                        None => break,
+                        Some((pg, pn)) => {
+                            drop(st);
+                            let claimed = self.help_reduce(pg, pn);
+                            st = self.state.lock().unwrap();
+                            if !claimed && st.plan.is_some() {
+                                st = self.cv.wait(st).unwrap();
+                            }
+                        }
+                    }
+                }
+                drop(st);
+                let ss = self.striped.as_ref().expect("striped engine state");
+                ss.slots[my_pos].lock().unwrap().copy_from_slice(data);
+                st = self.state.lock().unwrap();
+            }
+        }
+        st.deposited += 1;
+        let mut closed = false;
+        if Self::round_complete(&st) {
+            self.close_round(&mut st);
+            closed = true;
+        }
+        drop(st);
+        if closed {
             self.cv.notify_all();
-            let bytes_tx = self.account_ring(me, succ, my_pos, n, net);
-            return Ok(RoundOutcome { generation: my_gen, contributors: n, bytes_tx });
         }
-        while st.generation == my_gen {
+
+        // wait for our round's result, cooperatively reducing whatever
+        // round is currently closing while we do
+        let mut delay = wake_delay;
+        let mut st = self.state.lock().unwrap();
+        let (n, succ) = loop {
+            let plan = st.plan.as_ref().map(|p| (p.generation, p.n));
+            if let Some((pg, pn)) = plan {
+                drop(st);
+                let claimed = self.help_reduce(pg, pn);
+                st = self.state.lock().unwrap();
+                if claimed {
+                    continue;
+                }
+            }
+            // The version stamp makes this lookup safe under overlap: our
+            // round is parked until every waiter (us included) copies it.
+            if let Some(idx) = st.done.iter().position(|r| r.generation == my_gen) {
+                if let Some(d) = delay.take() {
+                    drop(st);
+                    std::thread::sleep(d);
+                    st = self.state.lock().unwrap();
+                    continue;
+                }
+                let round = &mut st.done[idx];
+                data.copy_from_slice(&round.mean);
+                round.readers_left -= 1;
+                let n = round.ring.len();
+                let succ = round.ring[(my_pos + 1) % n];
+                Self::gc(&mut st);
+                break (n, succ);
+            }
             st = self.cv.wait(st).unwrap();
-        }
-        if let Some(d) = wake_delay {
-            drop(st);
-            std::thread::sleep(d);
-            st = self.state.lock().unwrap();
-        }
-        // The version stamp makes this lookup safe under overlap: our round
-        // is parked until every waiter (us included) has copied it out.
-        let idx = st
-            .done
-            .iter()
-            .position(|r| r.generation == my_gen)
-            .expect("round result retired before all waiters copied it");
-        let round = &mut st.done[idx];
-        data.copy_from_slice(&round.mean);
-        round.readers_left -= 1;
-        let n = round.ring.len();
-        let succ = round.ring[(my_pos + 1) % n];
-        Self::gc(&mut st);
+        };
         drop(st);
         let bytes_tx = self.account_ring(me, succ, my_pos, n, net);
-        Ok(RoundOutcome { generation: my_gen, contributors: n, bytes_tx })
+        Ok(RoundOutcome { generation: my_gen, contributors: n, position: my_pos, bytes_tx })
     }
 
     /// Drive this member's hops of the chunked ring schedule through the
     /// network: `n-1` reduce-scatter hops then `n-1` all-gather hops, each
-    /// moving one segment of every chunk to the ring successor. Returns the
-    /// bytes sent.
+    /// moving one segment of every chunk to the ring successor (schedule
+    /// math shared with [`super::traffic`]). Returns the bytes sent.
     fn account_ring(
         &self,
         me: NodeId,
@@ -261,39 +566,35 @@ impl AllReduceGroup {
         if n < 2 {
             return 0;
         }
-        let seg_bytes = |seg: usize| -> u64 {
-            let mut elems = 0u64;
-            for c in 0..self.chunks {
-                let chunk_len = Self::part_len(self.len, self.chunks, c);
-                elems += Self::part_len(chunk_len, n, seg) as u64;
-            }
-            4 * elems
-        };
         let mut tx = 0u64;
-        // reduce-scatter hop s: position p sends segment (p - s) mod n
-        for s in 0..n - 1 {
-            let bytes = seg_bytes((my_pos + n - s) % n);
+        for hop in 0..n - 1 {
+            let seg = traffic::reduce_scatter_segment(my_pos, n, hop);
+            let bytes = traffic::segment_bytes(self.len, self.chunks, n, seg);
             net.transfer(me, succ, bytes);
             tx += bytes;
         }
-        // all-gather hop s: position p sends segment (p + 1 - s) mod n
-        for s in 0..n - 1 {
-            let bytes = seg_bytes((my_pos + 1 + n - s) % n);
+        for hop in 0..n - 1 {
+            let seg = traffic::all_gather_segment(my_pos, n, hop);
+            let bytes = traffic::segment_bytes(self.len, self.chunks, n, seg);
             net.transfer(me, succ, bytes);
             tx += bytes;
         }
         tx
     }
 
-    /// Permanently remove one member. If everyone else is already waiting,
-    /// the pending round completes without the leaver.
+    /// Permanently remove one member. If everyone else has already
+    /// deposited, the pending round completes without the leaver.
     pub fn leave(&self) {
         let mut st = self.state.lock().unwrap();
         debug_assert!(st.active > 0);
-        st.active -= 1;
-        if st.active > 0 && st.joined == st.active {
-            Self::finalize(&mut st, false);
-            drop(st);
+        st.active = st.active.saturating_sub(1);
+        let mut closed = false;
+        if Self::round_complete(&st) {
+            self.close_round(&mut st);
+            closed = true;
+        }
+        drop(st);
+        if closed {
             self.cv.notify_all();
         }
     }
@@ -302,19 +603,20 @@ impl AllReduceGroup {
         self.state.lock().unwrap().active
     }
 
-    /// Members currently blocked in (or summed into) the pending round.
+    /// Members fully deposited into the pending round.
     pub fn pending(&self) -> usize {
-        self.state.lock().unwrap().joined
+        self.state.lock().unwrap().deposited
     }
 
-    /// Rounds completed so far (the next round's generation stamp).
+    /// Rounds closed so far (the next round's generation stamp).
     pub fn completed_rounds(&self) -> u64 {
         self.state.lock().unwrap().generation
     }
 
     /// Closed-form ring bytes each member moves per direction per round —
-    /// the reference the measured per-hop traffic is checked against, and
-    /// what the paper-scale throughput model in `sim/` uses.
+    /// the cross-check reference for the measured per-hop traffic (the
+    /// `sim/` cost model consumes the measured schedule via
+    /// [`super::traffic::RingTraffic`] instead).
     pub fn ring_bytes_per_member(&self, participants: usize) -> u64 {
         if participants <= 1 {
             return 0;
@@ -338,104 +640,118 @@ mod tests {
         (Arc::new(net), nodes)
     }
 
+    const BOTH_ENGINES: [ReduceEngine; 2] = [ReduceEngine::Striped, ReduceEngine::SerialMutex];
+
     #[test]
     fn mean_matches_sequential_sum() {
-        let n = 4;
-        let g = Arc::new(AllReduceGroup::new(n, 8));
-        let (net, nodes) = net_with(n);
-        let mut hs = Vec::new();
-        for r in 0..n {
-            let g = g.clone();
-            let net = net.clone();
-            let node = nodes[r];
-            hs.push(std::thread::spawn(move || {
-                let mut v = vec![(r + 1) as f32; 8];
-                let out = g.allreduce_mean(&mut v, node, &net).unwrap();
-                (v, out)
-            }));
-        }
-        for h in hs {
-            let (v, out) = h.join().unwrap();
-            // mean of 1,2,3,4 = 2.5
-            assert!(v.iter().all(|&x| (x - 2.5).abs() < 1e-6), "{v:?}");
-            assert_eq!(out.contributors, 4);
-            assert_eq!(out.generation, 0);
+        for engine in BOTH_ENGINES {
+            let n = 4;
+            let g = Arc::new(AllReduceGroup::new(n, 8).with_engine(engine));
+            let (net, nodes) = net_with(n);
+            let mut hs = Vec::new();
+            for r in 0..n {
+                let g = g.clone();
+                let net = net.clone();
+                let node = nodes[r];
+                hs.push(std::thread::spawn(move || {
+                    let mut v = vec![(r + 1) as f32; 8];
+                    let out = g.allreduce_mean(&mut v, node, &net).unwrap();
+                    (v, out)
+                }));
+            }
+            for h in hs {
+                let (v, out) = h.join().unwrap();
+                // mean of 1,2,3,4 = 2.5
+                assert!(v.iter().all(|&x| (x - 2.5).abs() < 1e-6), "{engine}: {v:?}");
+                assert_eq!(out.contributors, 4);
+                assert_eq!(out.generation, 0);
+                assert!(out.position < 4);
+            }
         }
     }
 
     #[test]
     fn repeated_rounds_stay_consistent() {
-        let n = 3;
-        let g = Arc::new(AllReduceGroup::new(n, 4).with_chunks(2));
-        let (net, nodes) = net_with(n);
-        let mut hs = Vec::new();
-        for r in 0..n {
-            let g = g.clone();
-            let net = net.clone();
-            let node = nodes[r];
-            hs.push(std::thread::spawn(move || {
-                let mut acc = Vec::new();
-                for round in 0..50 {
-                    let mut v = vec![(r * 50 + round) as f32; 4];
-                    g.allreduce_mean(&mut v, node, &net).unwrap();
-                    acc.push(v[0]);
-                }
-                acc
-            }));
-        }
-        let results: Vec<Vec<f32>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
-        for round in 0..50 {
-            let want = (0..n).map(|r| (r * 50 + round) as f32).sum::<f32>() / n as f32;
-            for res in &results {
-                assert!((res[round] - want).abs() < 1e-4);
+        for engine in BOTH_ENGINES {
+            let n = 3;
+            let g = Arc::new(AllReduceGroup::new(n, 4).with_chunks(2).with_engine(engine));
+            let (net, nodes) = net_with(n);
+            let mut hs = Vec::new();
+            for r in 0..n {
+                let g = g.clone();
+                let net = net.clone();
+                let node = nodes[r];
+                hs.push(std::thread::spawn(move || {
+                    let mut acc = Vec::new();
+                    for round in 0..50 {
+                        let mut v = vec![(r * 50 + round) as f32; 4];
+                        g.allreduce_mean(&mut v, node, &net).unwrap();
+                        acc.push(v[0]);
+                    }
+                    acc
+                }));
             }
+            let results: Vec<Vec<f32>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+            for round in 0..50 {
+                let want = (0..n).map(|r| (r * 50 + round) as f32).sum::<f32>() / n as f32;
+                for res in &results {
+                    assert!((res[round] - want).abs() < 1e-4, "{engine}");
+                }
+            }
+            assert_eq!(g.completed_rounds(), 50);
         }
-        assert_eq!(g.completed_rounds(), 50);
     }
 
     #[test]
     fn leaver_unblocks_pending_round() {
-        let g = Arc::new(AllReduceGroup::new(3, 2));
-        let (net, nodes) = net_with(3);
-        let g2 = g.clone();
-        let (net2, node0) = (net.clone(), nodes[0]);
-        let waiter = std::thread::spawn(move || {
-            let mut v = vec![6.0, 6.0];
-            let out = g2.allreduce_mean(&mut v, node0, &net2).unwrap();
-            (v, out)
-        });
-        let g3 = g.clone();
-        let (net3, node1) = (net.clone(), nodes[1]);
-        let waiter2 = std::thread::spawn(move || {
-            let mut v = vec![2.0, 2.0];
-            let out = g3.allreduce_mean(&mut v, node1, &net3).unwrap();
-            (v, out)
-        });
-        // give the waiters time to block, then the third member leaves
-        std::thread::sleep(std::time::Duration::from_millis(50));
-        g.leave();
-        let (v, out) = waiter.join().unwrap();
-        let (v2, out2) = waiter2.join().unwrap();
-        // round completed over the two contributors: mean = 4
-        assert_eq!(v, vec![4.0, 4.0]);
-        assert_eq!(v2, vec![4.0, 4.0]);
-        // both waiters learn the exact contributor count of their round
-        assert_eq!(out.contributors, 2);
-        assert_eq!(out2.contributors, 2);
-        assert_eq!(g.active(), 2);
+        for engine in BOTH_ENGINES {
+            let g = Arc::new(AllReduceGroup::new(3, 2).with_engine(engine));
+            let (net, nodes) = net_with(3);
+            let g2 = g.clone();
+            let (net2, node0) = (net.clone(), nodes[0]);
+            let waiter = std::thread::spawn(move || {
+                let mut v = vec![6.0, 6.0];
+                let out = g2.allreduce_mean(&mut v, node0, &net2).unwrap();
+                (v, out)
+            });
+            let g3 = g.clone();
+            let (net3, node1) = (net.clone(), nodes[1]);
+            let waiter2 = std::thread::spawn(move || {
+                let mut v = vec![2.0, 2.0];
+                let out = g3.allreduce_mean(&mut v, node1, &net3).unwrap();
+                (v, out)
+            });
+            // give the waiters time to block, then the third member leaves
+            while g.pending() < 2 {
+                std::thread::yield_now();
+            }
+            g.leave();
+            let (v, out) = waiter.join().unwrap();
+            let (v2, out2) = waiter2.join().unwrap();
+            // round completed over the two contributors: mean = 4
+            assert_eq!(v, vec![4.0, 4.0]);
+            assert_eq!(v2, vec![4.0, 4.0]);
+            // both waiters learn the exact contributor count of their round
+            assert_eq!(out.contributors, 2);
+            assert_eq!(out2.contributors, 2);
+            assert_eq!(g.active(), 2);
+        }
     }
 
     #[test]
     fn singleton_group_is_identity() {
-        let g = AllReduceGroup::new(1, 3);
-        let (net, nodes) = net_with(1);
-        let mut v = vec![1.0, 2.0, 3.0];
-        let out = g.allreduce_mean(&mut v, nodes[0], &net).unwrap();
-        assert_eq!(out.contributors, 1);
-        assert_eq!(out.bytes_tx, 0);
-        assert_eq!(v, vec![1.0, 2.0, 3.0]);
-        assert_eq!(g.ring_bytes_per_member(1), 0);
-        assert_eq!(net.tx(nodes[0]), 0);
+        for engine in BOTH_ENGINES {
+            let g = AllReduceGroup::new(1, 3).with_engine(engine);
+            let (net, nodes) = net_with(1);
+            let mut v = vec![1.0, 2.0, 3.0];
+            let out = g.allreduce_mean(&mut v, nodes[0], &net).unwrap();
+            assert_eq!(out.contributors, 1);
+            assert_eq!(out.position, 0);
+            assert_eq!(out.bytes_tx, 0);
+            assert_eq!(v, vec![1.0, 2.0, 3.0]);
+            assert_eq!(g.ring_bytes_per_member(1), 0);
+            assert_eq!(net.tx(nodes[0]), 0);
+        }
     }
 
     #[test]
@@ -578,8 +894,8 @@ mod tests {
                 (first_mean, r0, w[0], r1)
             }));
         }
-        // wait for A, B, C to be summed into round 0, then shrink 5 -> 3 so
-        // round 0 completes while A dawdles before copying
+        // wait for A, B, C to be deposited into round 0, then shrink 5 -> 3
+        // so round 0 completes while A dawdles before copying
         while g.pending() < 3 {
             std::thread::yield_now();
         }
@@ -614,14 +930,78 @@ mod tests {
     }
 
     #[test]
+    fn striped_means_bit_identical_to_position_order_reference() {
+        // Satellite regression: n threads contributing *simultaneously*
+        // through the chunk-parallel engine must produce bit-identical
+        // means to a single-threaded reference that sums in the engine's
+        // fixed (position-major) chunk-wise order — for every round, under
+        // real thread interleaving.
+        let (n, p, chunks, rounds) = (4usize, 257usize, 5usize, 25usize);
+        let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(chunks));
+        let (net, nodes) = net_with(n);
+        let mut hs = Vec::new();
+        for t in 0..n {
+            let g = g.clone();
+            let net = net.clone();
+            let node = nodes[t];
+            hs.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xD37E ^ t as u64);
+                let mut log = Vec::with_capacity(rounds);
+                for _ in 0..rounds {
+                    // fractional values whose f32 sum is association-order
+                    // sensitive — any reordering would change the bits
+                    let v: Vec<f32> = (0..p)
+                        .map(|_| (rng.next_u64() % 1_000_003) as f32 * 1e-3 - 500.0)
+                        .collect();
+                    let mut buf = v.clone();
+                    let out = g.allreduce_mean(&mut buf, node, &net).unwrap();
+                    log.push((out.generation, out.position, v, buf));
+                }
+                log
+            }));
+        }
+        let mut by_gen: HashMap<u64, Vec<(usize, Vec<f32>, Vec<f32>)>> = HashMap::new();
+        for h in hs {
+            for (gen, pos, v, mean) in h.join().unwrap() {
+                by_gen.entry(gen).or_default().push((pos, v, mean));
+            }
+        }
+        assert_eq!(by_gen.len(), rounds);
+        for (gen, mut entries) in by_gen {
+            entries.sort_by_key(|e| e.0);
+            assert_eq!(entries.len(), n, "gen {gen}");
+            let mut reference = entries[0].1.clone();
+            for e in &entries[1..] {
+                for (r, &x) in reference.iter_mut().zip(&e.1) {
+                    *r += x;
+                }
+            }
+            let inv = 1.0 / n as f32;
+            for r in reference.iter_mut() {
+                *r *= inv;
+            }
+            for (pos, _, mean) in &entries {
+                for (a, b) in mean.iter().zip(&reference) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "gen {gen} pos {pos}: {a} != reference {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn dynamic_membership_stress_every_mean_is_exact() {
-        // N threads run 100s of rounds while members leave at random
-        // points; every returned mean must equal the sequential reference
-        // over that round's surviving contributor set, and every returned
-        // contributor count must be exact.
+        // N threads run 100s of rounds through the striped engine while
+        // members leave at random points; every returned mean must equal
+        // the sequential reference over that round's surviving contributor
+        // set, and every returned contributor count must be exact.
         let n = 8;
         let p = 4;
         let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(3));
+        assert_eq!(g.engine(), ReduceEngine::Striped);
         let (net, nodes) = net_with(n);
         let mut hs = Vec::new();
         for t in 0..n {
@@ -666,5 +1046,15 @@ mod tests {
             }
         }
         assert_eq!(g.active(), 0);
+    }
+
+    #[test]
+    fn engine_parses_and_displays() {
+        assert_eq!("striped".parse::<ReduceEngine>().unwrap(), ReduceEngine::Striped);
+        assert_eq!("serial".parse::<ReduceEngine>().unwrap(), ReduceEngine::SerialMutex);
+        assert_eq!("SERIAL-MUTEX".parse::<ReduceEngine>().unwrap(), ReduceEngine::SerialMutex);
+        assert!("quantum".parse::<ReduceEngine>().is_err());
+        assert_eq!(ReduceEngine::Striped.to_string(), "striped");
+        assert_eq!(ReduceEngine::SerialMutex.to_string(), "serial");
     }
 }

@@ -4,7 +4,10 @@
 //! tier move toward each other by the elastic parameter α. The update is
 //! deliberately *asymmetric* — neither side is overwritten — because both
 //! the PS (in sync with other trainers) and the Hogwild workers (which kept
-//! training during the round) have information worth keeping.
+//! training during the round) have information worth keeping. Pushes are
+//! chunked and optionally delta-gated by the [`SyncPsGroup`] (skipped
+//! chunks move zero bytes on either leg); the recorded sync bytes are the
+//! measured traffic of each round, not the full-vector formula.
 
 use std::sync::Arc;
 
@@ -25,9 +28,13 @@ impl EasgdSync {
 
 impl SyncStrategy for EasgdSync {
     fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
-        let gap = self.group.elastic_sync(ctx.local, self.alpha, ctx.trainer_node, ctx.net);
-        ctx.metrics.record_sync(self.group.round_bytes());
-        Ok(gap)
+        let stats =
+            self.group
+                .elastic_sync_stats(ctx.local, self.alpha, ctx.trainer_node, ctx.net);
+        // record the bytes this round *actually* moved (delta-gated chunks
+        // may skip), so metrics.sync_bytes always agrees with NIC counters
+        ctx.metrics.record_sync(stats.bytes);
+        Ok(stats.gap)
     }
 
     fn name(&self) -> &'static str {
@@ -57,5 +64,32 @@ mod tests {
         assert_eq!(metrics.snapshot().sync_bytes, 80);
         assert!(local.to_vec().iter().all(|&x| (x - 1.0).abs() < 1e-6));
         assert!(group.central.to_vec().iter().all(|&x| (x - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn delta_gated_rounds_record_measured_bytes() {
+        // with a delta gate, metrics.sync_bytes must equal the bytes that
+        // actually crossed the sync-PS NICs — not the full-round formula
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let group = Arc::new(
+            SyncPsGroup::build(&vec![0.0; 16], 2, &mut net).with_push_chunking(4, 1e-6),
+        );
+        let metrics = Metrics::new();
+        // only [0, 4) diverges: one chunk pushed, three skipped
+        let mut lv = vec![0.0f32; 16];
+        for x in lv.iter_mut().take(4) {
+            *x = 2.0;
+        }
+        let local = HogwildBuffer::from_slice(&lv);
+        let mut s = EasgdSync::new(group.clone(), 0.5);
+        let ctx = SyncCtx { local: &local, trainer_node: tnode, net: &net, metrics: &metrics };
+        s.sync_round(&ctx).unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.syncs, 1);
+        assert_eq!(snap.sync_bytes, 2 * 4 * 4); // one 4-elem chunk, both legs
+        assert!(snap.sync_bytes < group.round_bytes());
+        assert_eq!(net.role_bytes(Role::SyncPs), snap.sync_bytes);
+        assert_eq!(group.traffic().chunks_skipped, 3);
     }
 }

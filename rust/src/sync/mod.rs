@@ -14,10 +14,13 @@
 //!   trainer for the AllReduce-based MA/BMUF.
 //!
 //! Three algorithms are provided (paper Algorithms 2–4): EASGD (centralized,
-//! against sync PSs), MA and BMUF (decentralized, over the chunked
-//! ring-AllReduce fabric in [`allreduce`], whose per-hop transfers flow
-//! through [`Network`] so ring traffic is measured per trainer NIC rather
-//! than asserted from a formula). All three
+//! against sync PSs via chunked pushes with an optional delta gate —
+//! [`ps::SyncPsGroup`] skips chunks that barely moved, and both wire legs
+//! of a skipped chunk are suppressed), MA and BMUF (decentralized, over the
+//! lock-striped chunk-parallel ring-AllReduce fabric in [`allreduce`],
+//! whose per-hop transfers flow through [`Network`] so ring traffic is
+//! measured per trainer NIC rather than asserted from a formula; the
+//! [`traffic`] module exports that measured schedule to `sim/`). All three
 //! use the *asymmetric elastic interpolation* the paper highlights as its
 //! key modification: after a round, the local replica moves α of the way
 //! toward the global/central model instead of being overwritten, so Hogwild
@@ -29,6 +32,7 @@ pub mod driver;
 pub mod easgd;
 pub mod ma;
 pub mod ps;
+pub mod traffic;
 
 use anyhow::Result;
 
@@ -59,23 +63,26 @@ pub trait SyncStrategy: Send {
     fn name(&self) -> &'static str;
 }
 
-pub use allreduce::{AllReduceGroup, RoundOutcome};
+pub use allreduce::{AllReduceGroup, ReduceEngine, RoundOutcome};
 pub use bmuf::BmufSync;
 pub use easgd::EasgdSync;
 pub use ma::MaSync;
-pub use ps::SyncPsGroup;
+pub use ps::{PushStats, SyncPsGroup};
 
 /// Build the shared chunked ring-AllReduce fabric for the decentralized
 /// algorithms (MA, BMUF): one group over all trainers, split into
 /// `cfg.allreduce_chunks` chunks so wire traffic is driven — and accounted
 /// per trainer NIC — through the explicit reduce-scatter + all-gather
-/// schedule (see [`allreduce`]).
+/// schedule, with the in-process reduction engine selected by
+/// `cfg.reduce_engine` (see [`allreduce`]).
 pub fn build_group(
     cfg: &crate::config::RunConfig,
     num_params: usize,
 ) -> std::sync::Arc<AllReduceGroup> {
     std::sync::Arc::new(
-        AllReduceGroup::new(cfg.num_trainers, num_params).with_chunks(cfg.allreduce_chunks),
+        AllReduceGroup::new(cfg.num_trainers, num_params)
+            .with_chunks(cfg.allreduce_chunks)
+            .with_engine(cfg.reduce_engine),
     )
 }
 

@@ -7,6 +7,21 @@
 //! produce). Trainers sync shard-by-shard so traffic is attributed to the
 //! right PS NIC — the saturation of exactly these NICs is what causes the
 //! paper's FR-EASGD-5 EPS plateau (Fig. 5).
+//!
+//! ## Chunked, delta-gated pushes
+//!
+//! Each shard is pushed in chunks of [`SyncPsGroup`]'s `chunk_elems`
+//! elements (0 = whole-shard pushes). With a positive `delta_threshold`, a
+//! chunk whose max |local − central| is at or below the threshold is
+//! *skipped entirely*: neither the trainer→PS push leg nor the PS→trainer
+//! reply leg touches [`Network::transfer`], so NIC counters and
+//! `metrics.sync_bytes` both see only the bytes actually moved. The
+//! returned [`PushStats`] carry the measured bytes of the round, and the
+//! group keeps cumulative counters ([`SyncPsGroup::traffic`]) that the
+//! experiment harness feeds into the `sim/` cost model as its measured
+//! EASGD push fraction.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 use crate::net::{Network, NodeId, Role};
 use crate::placement::equal_ranges;
@@ -20,27 +35,112 @@ pub struct SyncShard {
     pub node: NodeId,
 }
 
+/// What one elastic round measured and moved.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PushStats {
+    /// Mean |local − central| over the *whole* vector before the move
+    /// (skipped chunks contribute their scanned gap).
+    pub gap: f32,
+    /// Bytes actually moved through the network, both legs summed — what
+    /// `metrics.sync_bytes` should record.
+    pub bytes: u64,
+    pub chunks_pushed: u64,
+    pub chunks_skipped: u64,
+}
+
+/// Cumulative measured push traffic of a sync-PS group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PsTrafficSnapshot {
+    pub rounds: u64,
+    pub bytes_moved: u64,
+    pub chunks_pushed: u64,
+    pub chunks_skipped: u64,
+    /// Bytes a full no-skip round would move (`SyncPsGroup::round_bytes`) —
+    /// the denominator that turns `bytes_moved` into a scale-free fraction.
+    pub full_round_bytes: u64,
+}
+
+impl PsTrafficSnapshot {
+    /// Measured bytes of an average round (both legs).
+    pub fn avg_round_bytes(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.bytes_moved as f64 / self.rounds as f64
+        }
+    }
+
+    /// Measured *byte* fraction of the full round an average round moved —
+    /// the scale-free input the `sim/` cost model uses to price delta-gated
+    /// EASGD rounds (robust to uneven chunk sizes, unlike a chunk count).
+    pub fn byte_fraction(&self) -> f64 {
+        if self.rounds == 0 || self.full_round_bytes == 0 {
+            1.0
+        } else {
+            (self.avg_round_bytes() / self.full_round_bytes as f64).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Fraction of chunks that actually moved (a skip-rate diagnostic; use
+    /// [`PsTrafficSnapshot::byte_fraction`] for traffic pricing).
+    pub fn push_fraction(&self) -> f64 {
+        let total = self.chunks_pushed + self.chunks_skipped;
+        if total == 0 {
+            1.0
+        } else {
+            self.chunks_pushed as f64 / total as f64
+        }
+    }
+}
+
 /// The sync-PS tier: the central `w^PS` plus its sharding.
 pub struct SyncPsGroup {
     /// central parameters, Hogwild-shared across all trainers' syncs
     pub central: HogwildBuffer,
     pub shards: Vec<SyncShard>,
+    /// elements per push chunk (0 = whole-shard pushes)
+    chunk_elems: usize,
+    /// skip chunks whose max |local − central| is at or below this
+    delta_threshold: f32,
+    rounds: AtomicU64,
+    bytes_moved: AtomicU64,
+    chunks_pushed: AtomicU64,
+    chunks_skipped: AtomicU64,
 }
 
 impl SyncPsGroup {
-    /// Initialize `w^PS ← w0` across `num_ps` servers (Algorithm 1 line 3).
+    /// Initialize `w^PS ← w0` across `num_ps` servers (Algorithm 1 line 3),
+    /// whole-shard pushes, no delta gate.
     pub fn build(w0: &[f32], num_ps: usize, net: &mut Network) -> Self {
         let shards = equal_ranges(w0.len(), num_ps.max(1))
             .into_iter()
             .map(|(lo, hi)| SyncShard { lo, hi, node: net.add_node(Role::SyncPs) })
             .collect();
-        Self { central: HogwildBuffer::from_slice(w0), shards }
+        Self {
+            central: HogwildBuffer::from_slice(w0),
+            shards,
+            chunk_elems: 0,
+            delta_threshold: 0.0,
+            rounds: AtomicU64::new(0),
+            bytes_moved: AtomicU64::new(0),
+            chunks_pushed: AtomicU64::new(0),
+            chunks_skipped: AtomicU64::new(0),
+        }
+    }
+
+    /// Configure chunked pushes (`chunk_elems` elements per chunk, 0 =
+    /// whole shard) with a delta gate (`delta_threshold` max-|Δ| skip
+    /// level, 0 = push everything).
+    pub fn with_push_chunking(mut self, chunk_elems: usize, delta_threshold: f32) -> Self {
+        self.chunk_elems = chunk_elems;
+        self.delta_threshold = delta_threshold.max(0.0);
+        self
     }
 
     /// One EASGD elastic round for `local` against every shard:
     /// `w^PS ← (1-α) w^PS + α w^(i)`; `w^(i) ← (1-α) w^(i) + α w^PS`
-    /// (Algorithm 2), executed per shard with traffic accounting.
-    /// Returns mean |local - central| before the move.
+    /// (Algorithm 2), executed chunk-by-chunk with measured traffic
+    /// accounting. Returns mean |local - central| before the move.
     pub fn elastic_sync(
         &self,
         local: &HogwildBuffer,
@@ -48,20 +148,95 @@ impl SyncPsGroup {
         trainer: NodeId,
         net: &Network,
     ) -> f32 {
-        debug_assert_eq!(local.len(), self.central.len());
-        let mut gap_weighted = 0f64;
-        for s in &self.shards {
-            let bytes = ((s.hi - s.lo) * 4) as u64;
-            // trainer pushes its range, PS answers with the moved range
-            net.transfer(trainer, s.node, bytes);
-            let gap = HogwildBuffer::elastic_pair(local, &self.central, s.lo, s.hi, alpha);
-            net.transfer(s.node, trainer, bytes);
-            gap_weighted += gap as f64 * (s.hi - s.lo) as f64;
-        }
-        (gap_weighted / self.central.len().max(1) as f64) as f32
+        self.elastic_sync_stats(local, alpha, trainer, net).gap
     }
 
-    /// Bytes a full round moves through the sync-PS tier (both directions).
+    /// `elastic_sync` returning the round's full measured [`PushStats`].
+    pub fn elastic_sync_stats(
+        &self,
+        local: &HogwildBuffer,
+        alpha: f32,
+        trainer: NodeId,
+        net: &Network,
+    ) -> PushStats {
+        debug_assert_eq!(local.len(), self.central.len());
+        let mut gap_weighted = 0f64;
+        let mut bytes = 0u64;
+        let mut pushed = 0u64;
+        let mut skipped = 0u64;
+        for s in &self.shards {
+            let step = if self.chunk_elems == 0 { (s.hi - s.lo).max(1) } else { self.chunk_elems };
+            let mut lo = s.lo;
+            while lo < s.hi {
+                let hi = (lo + step).min(s.hi);
+                if self.delta_threshold > 0.0 {
+                    // delta gate: one racy scan (Hogwild semantics); a
+                    // chunk that barely moved is skipped entirely — the
+                    // reply leg is suppressed along with the push leg
+                    let (max_abs, sum_abs) = Self::chunk_gap(local, &self.central, lo, hi);
+                    if max_abs <= self.delta_threshold {
+                        skipped += 1;
+                        gap_weighted += sum_abs;
+                        lo = hi;
+                        continue;
+                    }
+                }
+                let chunk_bytes = ((hi - lo) * 4) as u64;
+                // trainer pushes the chunk, PS answers with the moved chunk
+                net.transfer(trainer, s.node, chunk_bytes);
+                let gap = HogwildBuffer::elastic_pair(local, &self.central, lo, hi, alpha);
+                net.transfer(s.node, trainer, chunk_bytes);
+                gap_weighted += gap as f64 * (hi - lo) as f64;
+                bytes += 2 * chunk_bytes;
+                pushed += 1;
+                lo = hi;
+            }
+        }
+        self.rounds.fetch_add(1, Relaxed);
+        self.bytes_moved.fetch_add(bytes, Relaxed);
+        self.chunks_pushed.fetch_add(pushed, Relaxed);
+        self.chunks_skipped.fetch_add(skipped, Relaxed);
+        PushStats {
+            gap: (gap_weighted / self.central.len().max(1) as f64) as f32,
+            bytes,
+            chunks_pushed: pushed,
+            chunks_skipped: skipped,
+        }
+    }
+
+    /// Max and summed |local − central| over `[lo, hi)` (racy snapshot).
+    fn chunk_gap(
+        local: &HogwildBuffer,
+        central: &HogwildBuffer,
+        lo: usize,
+        hi: usize,
+    ) -> (f32, f64) {
+        let mut max_abs = 0f32;
+        let mut sum_abs = 0f64;
+        for i in lo..hi {
+            let d = (local.get(i) - central.get(i)).abs();
+            if d > max_abs {
+                max_abs = d;
+            }
+            sum_abs += d as f64;
+        }
+        (max_abs, sum_abs)
+    }
+
+    /// Cumulative measured push traffic since construction.
+    pub fn traffic(&self) -> PsTrafficSnapshot {
+        PsTrafficSnapshot {
+            rounds: self.rounds.load(Relaxed),
+            bytes_moved: self.bytes_moved.load(Relaxed),
+            chunks_pushed: self.chunks_pushed.load(Relaxed),
+            chunks_skipped: self.chunks_skipped.load(Relaxed),
+            full_round_bytes: self.round_bytes(),
+        }
+    }
+
+    /// Bytes a *full* round moves through the sync-PS tier (both
+    /// directions) — the no-skip reference; measured rounds report their
+    /// actual bytes via [`PushStats`] / [`SyncPsGroup::traffic`].
     pub fn round_bytes(&self) -> u64 {
         2 * 4 * self.central.len() as u64
     }
@@ -121,8 +296,103 @@ mod tests {
         let trainer = net.add_node(Role::Trainer);
         let g = SyncPsGroup::build(&vec![0.0; 100], 4, &mut net);
         let local = HogwildBuffer::from_slice(&vec![1.0; 100]);
-        g.elastic_sync(&local, 0.5, trainer, &net);
+        let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
         assert_eq!(net.role_bytes(Role::SyncPs), g.round_bytes());
         assert_eq!(g.round_bytes(), 800);
+        assert_eq!(st.bytes, 800);
+        assert_eq!(st.chunks_skipped, 0);
+    }
+
+    #[test]
+    fn chunked_pushes_move_the_same_total_bytes() {
+        // chunk tiling preserves byte totals exactly (no delta gate)
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let g = SyncPsGroup::build(&vec![0.0; 103], 3, &mut net).with_push_chunking(7, 0.0);
+        let local = HogwildBuffer::from_slice(&vec![1.0; 103]);
+        let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
+        assert_eq!(st.bytes, g.round_bytes());
+        assert_eq!(net.role_bytes(Role::SyncPs), g.round_bytes());
+        // ceil(35/7) + ceil(34/7) * 2 chunks
+        assert_eq!(st.chunks_pushed, 5 + 5 + 5);
+        assert_eq!(st.chunks_skipped, 0);
+        let t = g.traffic();
+        assert_eq!(t.rounds, 1);
+        assert_eq!(t.bytes_moved, st.bytes);
+        assert!((t.push_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_gate_skips_unchanged_chunks_both_legs() {
+        // local == central over the second shard: every chunk there is
+        // skipped, and its PS NIC moves zero bytes in BOTH directions (the
+        // reply leg is suppressed along with the push)
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let w0 = vec![0.0f32; 64];
+        let g = SyncPsGroup::build(&w0, 2, &mut net).with_push_chunking(8, 1e-6);
+        // shard 0 = [0, 32), shard 1 = [32, 64)
+        let mut local_v = vec![0.0f32; 64];
+        for x in local_v.iter_mut().take(32) {
+            *x = 2.0; // only shard 0 diverges
+        }
+        let local = HogwildBuffer::from_slice(&local_v);
+        let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
+        // shard 0: 4 chunks of 8 elems pushed, both legs = 2 * 32 * 4 bytes
+        assert_eq!(st.chunks_pushed, 4);
+        assert_eq!(st.chunks_skipped, 4);
+        assert_eq!(st.bytes, 2 * 32 * 4);
+        let quiet = g.shards[1].node;
+        assert_eq!(net.tx(quiet), 0, "skipped chunks must suppress the reply leg");
+        assert_eq!(net.rx(quiet), 0, "skipped chunks must suppress the push leg");
+        let busy = g.shards[0].node;
+        assert_eq!(net.rx(busy), 32 * 4);
+        assert_eq!(net.tx(busy), 32 * 4);
+        // skipped ranges were not elastically moved
+        assert!(local.to_vec()[32..].iter().all(|&x| x == 0.0));
+        assert!(g.central.to_vec()[..32].iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        // the reported gap still covers the whole vector (here: 2.0 over
+        // half the elements -> 1.0 mean)
+        assert!((st.gap - 1.0).abs() < 1e-5);
+        let t = g.traffic();
+        assert!((t.push_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(t.avg_round_bytes(), (2 * 32 * 4) as f64);
+    }
+
+    #[test]
+    fn pushed_chunks_move_exactly_chunk_sized_bytes() {
+        // non-skipped chunks must account chunk size exactly, per leg
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let g = SyncPsGroup::build(&vec![0.0; 10], 1, &mut net).with_push_chunking(4, 1e-3);
+        // diverge only [4, 8): exactly the second chunk of the one shard
+        let mut lv = vec![0.0f32; 10];
+        for x in lv.iter_mut().skip(4).take(4) {
+            *x = 1.0;
+        }
+        let local = HogwildBuffer::from_slice(&lv);
+        let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
+        assert_eq!(st.chunks_pushed, 1);
+        assert_eq!(st.chunks_skipped, 2);
+        assert_eq!(st.bytes, 2 * 4 * 4); // one 4-elem chunk, both legs
+        assert_eq!(net.tx(trainer), 4 * 4);
+        assert_eq!(net.rx(trainer), 4 * 4);
+        // chunks tile 10 as [4, 4, 2], so the chunk-count and byte
+        // fractions differ — pricing must use bytes (32 of the 80-byte
+        // full round), not the 1-in-3 chunk count
+        let t = g.traffic();
+        assert!((t.push_fraction() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((t.byte_fraction() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_threshold_never_skips() {
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let g = SyncPsGroup::build(&vec![0.0; 32], 2, &mut net).with_push_chunking(8, 0.0);
+        let local = HogwildBuffer::from_slice(&vec![0.0; 32]); // identical!
+        let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
+        assert_eq!(st.chunks_skipped, 0);
+        assert_eq!(st.bytes, g.round_bytes());
     }
 }

@@ -1,0 +1,159 @@
+//! Measured sync-traffic export: the wire bytes the fabric *actually* moves.
+//!
+//! The chunked ring schedule in [`crate::sync::allreduce`] cuts the
+//! parameter vector into `C` chunks and every chunk into `n` near-equal
+//! segments; a member at ring position `p` sends one segment of every chunk
+//! per hop, for `n-1` reduce-scatter hops followed by `n-1` all-gather hops.
+//! This module holds the *single source of truth* for that schedule's
+//! per-hop byte math: the live collective drives each hop through
+//! [`crate::net::Network::transfer`] using [`segment_bytes`], and the
+//! paper-scale throughput model in [`crate::sim`] prices collectives from
+//! [`RingTraffic::measure`] — the same numbers, chunk rounding included —
+//! instead of the closed-form `2·(n-1)/n · bytes` textbook estimate (which
+//! survives only as a cross-check reference,
+//! `AllReduceGroup::ring_bytes_per_member`).
+
+/// `len / parts` with the remainder spread over the leading parts — the
+/// same split rule as `placement::equal_ranges`.
+#[inline]
+pub fn part_len(len: usize, parts: usize, idx: usize) -> usize {
+    len / parts + usize::from(idx < len % parts)
+}
+
+/// Offset of part `idx` under the [`part_len`] split rule.
+#[inline]
+pub fn part_offset(len: usize, parts: usize, idx: usize) -> usize {
+    idx * (len / parts) + idx.min(len % parts)
+}
+
+/// Bytes of ring segment `seg` summed over all `chunks` chunks of a
+/// `len`-element f32 vector split across `n` ring members: each chunk of
+/// length `L` contributes `part_len(L, n, seg)` elements.
+pub fn segment_bytes(len: usize, chunks: usize, n: usize, seg: usize) -> u64 {
+    let mut elems = 0u64;
+    for c in 0..chunks {
+        let chunk_len = part_len(len, chunks, c);
+        elems += part_len(chunk_len, n, seg) as u64;
+    }
+    4 * elems
+}
+
+/// The segment a member at ring position `pos` sends on reduce-scatter hop
+/// `hop` (`0..n-1`).
+#[inline]
+pub fn reduce_scatter_segment(pos: usize, n: usize, hop: usize) -> usize {
+    (pos + n - hop) % n
+}
+
+/// The segment a member at ring position `pos` sends on all-gather hop
+/// `hop` (`0..n-1`).
+#[inline]
+pub fn all_gather_segment(pos: usize, n: usize, hop: usize) -> usize {
+    (pos + 1 + n - hop) % n
+}
+
+/// Total bytes the member at ring position `pos` transmits over one full
+/// round (both phases) of the chunked schedule.
+pub fn member_round_tx_bytes(len: usize, chunks: usize, n: usize, pos: usize) -> u64 {
+    if n < 2 {
+        return 0;
+    }
+    let mut tx = 0u64;
+    for hop in 0..n - 1 {
+        tx += segment_bytes(len, chunks, n, reduce_scatter_segment(pos, n, hop));
+        tx += segment_bytes(len, chunks, n, all_gather_segment(pos, n, hop));
+    }
+    tx
+}
+
+/// Measured per-member traffic of one ring round — what each NIC would
+/// transmit, computed from the exact schedule rather than the closed form.
+#[derive(Debug, Clone)]
+pub struct RingTraffic {
+    /// tx bytes per ring position, one entry per member
+    pub per_member_tx: Vec<u64>,
+}
+
+impl RingTraffic {
+    /// Walk the schedule for a `len`-element vector in `chunks` chunks over
+    /// `n` members and collect every member's per-round tx bytes.
+    pub fn measure(len: usize, chunks: usize, n: usize) -> Self {
+        let chunks = chunks.max(1);
+        let per_member_tx = (0..n)
+            .map(|pos| member_round_tx_bytes(len, chunks, n, pos))
+            .collect();
+        Self { per_member_tx }
+    }
+
+    /// The slowest member's bytes — what gates the round's wall time on a
+    /// full-duplex fabric where every member drives its own hops.
+    pub fn max_member_bytes(&self) -> u64 {
+        self.per_member_tx.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Aggregate bytes over all members and both phases.
+    pub fn total_bytes(&self) -> u64 {
+        self.per_member_tx.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn part_len_and_offset_tile_exactly() {
+        for &(len, parts) in &[(10usize, 3usize), (7, 7), (5, 8), (1_037, 8), (0, 4)] {
+            let mut off = 0;
+            for i in 0..parts {
+                assert_eq!(part_offset(len, parts, i), off, "len={len} parts={parts} i={i}");
+                off += part_len(len, parts, i);
+            }
+            assert_eq!(off, len);
+        }
+    }
+
+    #[test]
+    fn aggregate_ring_traffic_is_exact() {
+        // summed over members, every hop moves the whole vector once per
+        // phase: total == 2·(n-1)·len·4 regardless of chunking
+        for &(len, chunks, n) in &[(101usize, 1usize, 3usize), (1_037, 8, 4), (997, 64, 5)] {
+            let t = RingTraffic::measure(len, chunks, n);
+            assert_eq!(t.total_bytes(), 2 * (n as u64 - 1) * len as u64 * 4);
+            assert_eq!(t.per_member_tx.len(), n);
+        }
+    }
+
+    #[test]
+    fn per_member_traffic_stays_within_chunk_rounding_of_closed_form() {
+        for &(len, chunks, n) in &[(1_000_000usize, 8usize, 20usize), (997, 64, 5)] {
+            let closed = 2 * (len as u64 * 4) * (n as u64 - 1) / n as u64;
+            let t = RingTraffic::measure(len, chunks, n);
+            // one element per chunk per hop of slack, both phases
+            let slack = 4 * 2 * (n as u64 - 1) * chunks as u64;
+            for (pos, &tx) in t.per_member_tx.iter().enumerate() {
+                assert!(
+                    tx.abs_diff(closed) <= slack,
+                    "pos {pos}: measured {tx} vs closed form {closed} (slack {slack})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn divisible_case_matches_closed_form_exactly() {
+        // n | len and chunks | len: no rounding anywhere
+        let t = RingTraffic::measure(100, 1, 4);
+        assert_eq!(t.max_member_bytes(), 600); // 2 * 400 * 3/4
+        for &tx in &t.per_member_tx {
+            assert_eq!(tx, 600);
+        }
+    }
+
+    #[test]
+    fn singleton_ring_moves_nothing() {
+        let t = RingTraffic::measure(1_000, 8, 1);
+        assert_eq!(t.total_bytes(), 0);
+        assert_eq!(t.max_member_bytes(), 0);
+    }
+}

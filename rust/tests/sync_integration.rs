@@ -238,6 +238,44 @@ fn ma_ring_traffic_lands_on_trainer_nics() {
     assert_eq!(measured_total, 2 * (n as u64 - 1) * p as u64 * 4 * rounds);
 }
 
+/// Acceptance: delta-gated chunked EASGD pushes — recorded sync bytes
+/// always equal the sync-PS NIC counters, and once the replicas converge
+/// below the gate, rounds stop moving bytes entirely (both legs).
+#[test]
+fn delta_gated_easgd_metrics_agree_with_nic_counters() {
+    let p = 96;
+    let mut net = Network::new(None);
+    let t = net.add_node(Role::Trainer);
+    let group = Arc::new(
+        SyncPsGroup::build(&vec![0.0; p], 3, &mut net).with_push_chunking(8, 1e-3),
+    );
+    let metrics = Metrics::new();
+    let local = HogwildBuffer::from_slice(&vec![1.0; p]);
+    let mut s = EasgdSync::new(group.clone(), 0.5);
+    let ctx = SyncCtx { local: &local, trainer_node: t, net: &net, metrics: &metrics };
+    for _ in 0..30 {
+        s.sync_round(&ctx).unwrap();
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.syncs, 30);
+    assert_eq!(
+        net.role_bytes(Role::SyncPs),
+        snap.sync_bytes,
+        "metrics.sync_bytes must track the sync-PS NICs exactly"
+    );
+    // alpha = 0.5 with a single trainer meets central at the midpoint in
+    // one round (gap -> 0), so every later round skips every chunk
+    let st = group.elastic_sync_stats(&local, 0.5, t, &net);
+    assert_eq!(st.bytes, 0);
+    assert_eq!(st.chunks_pushed, 0);
+    assert_eq!(st.chunks_skipped, (p / 8) as u64);
+    let traffic = group.traffic();
+    assert!(traffic.chunks_skipped > 0, "converged rounds must skip");
+    assert!(traffic.push_fraction() < 1.0);
+    // total bytes stayed strictly below 30 full rounds
+    assert!(snap.sync_bytes < 30 * group.round_bytes());
+}
+
 /// Same acceptance check for BMUF, on a flat (single-chunk) ring.
 #[test]
 fn bmuf_ring_traffic_lands_on_trainer_nics() {
