@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use shadowsync::net::{Network, Role};
-use shadowsync::sync::{AllReduceGroup, ReduceEngine, SyncPsGroup};
+use shadowsync::sync::{AllReduceGroup, DeltaScanCache, ReduceEngine, SyncPsGroup};
 use shadowsync::tensor::{ops, HogwildBuffer};
 use shadowsync::util::bench::bench;
 
@@ -49,6 +49,54 @@ fn main() {
         );
     }
 
+    // The adaptive quantile gate pays one sketch insert per scanned chunk
+    // plus one sorted-window quantile query per round on top of the scan.
+    {
+        let p = 1_000_000usize;
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let group = SyncPsGroup::build(&vec![0.1; p], 2, &mut net)
+            .with_push_chunking(4096, 0.0)
+            .with_adaptive_gate(0.5);
+        let local = HogwildBuffer::from_slice(&vec![0.1; p]);
+        let r = bench(&format!("easgd_round_adaptive_gate/P={p}"), budget, || {
+            std::hint::black_box(group.elastic_sync_stats(&local, 0.5, tnode, &net));
+        });
+        println!(
+            "  -> {:.1} M params/s, skip fraction {:.3}\n",
+            p as f64 / (r.mean_ns / 1e3),
+            group.traffic().skip_fraction(),
+        );
+    }
+
+    // Scan-vs-dirty-skip A/B: a converged, *idle* replica (the shadow
+    // thread outpacing the workers). Without dirty epochs every round
+    // re-reads all 1M elements just to decide "skip"; with them, the gate
+    // decision reuses the cached scan and the round cost collapses to the
+    // per-chunk bookkeeping.
+    for (dirty, tag) in [(false, "full_scan"), (true, "dirty_skip")] {
+        let p = 1_000_000usize;
+        let chunk = 4096usize;
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let group =
+            SyncPsGroup::build(&vec![0.1; p], 2, &mut net).with_push_chunking(chunk, 1e-3);
+        let mut local = HogwildBuffer::from_slice(&vec![0.1; p]);
+        if dirty {
+            local = local.with_dirty_epochs(chunk);
+        }
+        let mut cache = DeltaScanCache::new();
+        let r = bench(&format!("easgd_gate_{tag}/P={p}"), budget, || {
+            std::hint::black_box(group.elastic_sync_cached(&local, 0.5, tnode, &net, &mut cache));
+        });
+        let t = group.traffic();
+        println!(
+            "  -> {:.1} M params/s, scan-skip fraction {:.3}\n",
+            p as f64 / (r.mean_ns / 1e3),
+            t.scan_skip_fraction(),
+        );
+    }
+
     // Hogwild snapshot + interpolation primitives
     for p in [9_009usize, 1_000_000] {
         let buf = HogwildBuffer::from_slice(&vec![1.0; p]);
@@ -84,13 +132,17 @@ fn main() {
     }
 
     // The headline A/B: serial-mutex contribute (every member's full-vector
-    // add serialized under one lock) vs the lock-striped chunk-parallel
-    // engine, 1M params x {2, 4, 8} members. The striped engine's round
-    // time should shrink as members grow; the serial engine's grows
-    // linearly with members.
-    println!("\n== serial-mutex vs striped contribute (1M params, 16 chunks) ==");
+    // add serialized under one lock) vs the single-bank lock-striped engine
+    // (deposits for round N+1 help round N drain first) vs the overlapped
+    // double-buffered engine (off-parity deposits land immediately), 1M
+    // params x {2, 4, 8} members. Serial round time grows ~linearly with
+    // members; striped stays ~flat; overlapped shaves the drain-wait off
+    // striped when rounds pipeline back-to-back.
+    println!("\n== serial vs striped vs overlapped contribute (1M params, 16 chunks) ==");
     for members in [2usize, 4, 8] {
-        for engine in [ReduceEngine::SerialMutex, ReduceEngine::Striped] {
+        for engine in
+            [ReduceEngine::SerialMutex, ReduceEngine::Striped, ReduceEngine::Overlapped]
+        {
             bench_allreduce(members, 1_048_576, 16, engine, budget);
         }
     }

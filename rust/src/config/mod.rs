@@ -265,8 +265,9 @@ pub struct RunConfig {
     /// parameter vector is reduced as `C` pipelined reduce-scatter +
     /// all-gather rings (1 = flat single-chunk collective)
     pub allreduce_chunks: usize,
-    /// in-process reduction engine of the AllReduce fabric: lock-striped
-    /// chunk-parallel (default) or the single-mutex serial baseline
+    /// in-process reduction engine of the AllReduce fabric: overlapped
+    /// (double-buffered deposit banks, the default), single-bank striped,
+    /// or the single-mutex serial baseline
     pub reduce_engine: crate::sync::ReduceEngine,
     /// elements per EASGD push chunk against the sync PSs (0 = whole-shard
     /// pushes, the pre-chunking behaviour)
@@ -275,6 +276,15 @@ pub struct RunConfig {
     /// this (0 = push everything); skipped chunks move zero bytes on both
     /// the push and the reply leg
     pub delta_threshold: f32,
+    /// adaptive delta gate: target fraction of push chunks to skip per
+    /// round; the gate tracks the observed per-chunk gap distribution's
+    /// quantile instead of one global constant (0 = fixed-threshold mode,
+    /// i.e. `delta_threshold` alone)
+    pub delta_skip_target: f32,
+    /// per-chunk dirty epochs on trainer replicas: a delta-gated chunk
+    /// untouched since its last scan reuses that scan instead of re-reading
+    /// every element (only takes effect when a delta gate is on)
+    pub dirty_epoch_scan: bool,
     /// simulated wall time of one MA/BMUF collective (models paper-scale
     /// AllReduce wire time; 0 = in-process instantaneous)
     pub collective_wire_ms: u64,
@@ -307,9 +317,11 @@ impl Default for RunConfig {
             reader_rate_limit: None,
             shadow_interval_ms: 0,
             allreduce_chunks: 8,
-            reduce_engine: crate::sync::ReduceEngine::Striped,
+            reduce_engine: crate::sync::ReduceEngine::Overlapped,
             easgd_chunk_elems: 4096,
             delta_threshold: 0.0,
+            delta_skip_target: 0.0,
+            dirty_epoch_scan: true,
             collective_wire_ms: 0,
             simulate_network: false,
         }
@@ -336,7 +348,20 @@ impl RunConfig {
         if !self.delta_threshold.is_finite() || self.delta_threshold < 0.0 {
             bail!("delta_threshold must be finite and >= 0 (0 = push everything)");
         }
+        if !self.delta_skip_target.is_finite() || !(0.0..1.0).contains(&self.delta_skip_target) {
+            bail!("delta_skip_target must be in [0, 1) (0 = fixed-threshold mode)");
+        }
         Ok(())
+    }
+
+    /// Is any EASGD delta gate (fixed threshold or adaptive skip target)
+    /// configured? The trainer's dirty-epoch wiring keys off this; it must
+    /// stay in sync with `SyncPsGroup`'s own gating predicate (which reads
+    /// the group fields the coordinator builds *from* this config) — when
+    /// adding a gating mode, update both or trainer replicas lose their
+    /// scan-skip fast path silently.
+    pub fn delta_gated(&self) -> bool {
+        self.delta_threshold > 0.0 || self.delta_skip_target > 0.0
     }
 
     /// Example Level Parallelism (paper Definition 2):
@@ -404,7 +429,8 @@ mod tests {
     fn default_chunk_count_is_valid() {
         let c = RunConfig::default();
         assert!(c.allreduce_chunks >= 1);
-        assert_eq!(c.reduce_engine, crate::sync::ReduceEngine::Striped);
+        assert_eq!(c.reduce_engine, crate::sync::ReduceEngine::Overlapped);
+        assert!(c.dirty_epoch_scan);
         c.validate().unwrap();
     }
 
@@ -416,6 +442,19 @@ mod tests {
         c.delta_threshold = -0.5;
         assert!(c.validate().is_err());
         c.delta_threshold = f32::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn delta_skip_target_must_be_a_fraction() {
+        let mut c = RunConfig::default();
+        c.delta_skip_target = 0.5;
+        c.validate().unwrap();
+        c.delta_skip_target = 1.0; // skipping every chunk = never syncing
+        assert!(c.validate().is_err());
+        c.delta_skip_target = -0.1;
+        assert!(c.validate().is_err());
+        c.delta_skip_target = f32::NAN;
         assert!(c.validate().is_err());
     }
 

@@ -21,6 +21,7 @@ use crate::metrics::{EpsMeter, EvalAccum, Metrics, MetricsSnapshot};
 use crate::net::{Network, Role};
 use crate::runtime::{Model, Runtime};
 use crate::sync::driver::spawn_shadow;
+use crate::sync::ps::PsTrafficSnapshot;
 use crate::sync::{AllReduceGroup, EasgdSync, SyncPsGroup};
 use crate::trainer::{spawn_worker, ForegroundPlan, Trainer, WorkerEnv};
 
@@ -42,6 +43,11 @@ pub struct TrainOutcome {
     pub metrics: MetricsSnapshot,
     /// bytes through the sync-PS tier (EASGD) or ring (MA/BMUF)
     pub sync_ps_bytes: u64,
+    /// the sync-PS group's cumulative measured push traffic (EASGD runs
+    /// only) — the outcome-level source the experiment harness feeds into
+    /// the `sim/` cost model's measured push fraction and the skip-rate
+    /// columns, instead of re-deriving it from summed metrics
+    pub sync_traffic: Option<PsTrafficSnapshot>,
     pub elp: u64,
 }
 
@@ -90,10 +96,13 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
     )?);
     let sync_ps = match cfg.algo {
         // chunked, delta-gated pushes: skipped chunks move zero bytes on
-        // either leg, and recorded sync bytes are the measured traffic
+        // either leg, and recorded sync bytes are the measured traffic;
+        // a positive skip target swaps the fixed threshold for the
+        // adaptive quantile gate
         SyncAlgo::Easgd => Some(Arc::new(
             SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net)
-                .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold),
+                .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold)
+                .with_adaptive_gate(cfg.delta_skip_target),
         )),
         _ => None,
     };
@@ -277,6 +286,7 @@ pub fn finish(cluster: Cluster) -> Result<TrainOutcome> {
         wall_secs: 0.0,
         avg_sync_gap: cluster.metrics.avg_sync_gap(),
         sync_ps_bytes: cluster.net.role_bytes(Role::SyncPs),
+        sync_traffic: cluster.sync_ps.as_ref().map(|g| g.traffic()),
         metrics: m,
         elp: cfg.elp(cluster.meta.batch),
     })

@@ -8,10 +8,11 @@
 
 use anyhow::Result;
 
-use crate::config::{ModelMeta, SyncAlgo, SyncMode};
+use crate::config::{SyncAlgo, SyncMode};
 use crate::coordinator::TrainOutcome;
 use crate::runtime::Runtime;
 use crate::sim::CostModel;
+use crate::sync::ps::PsTrafficSnapshot;
 
 use super::{fmt_loss, fmt_pct, quality_cfg, run_quality, ExpOpts, Report};
 
@@ -48,30 +49,20 @@ fn measure(opts: &ExpOpts) -> Result<Vec<(String, usize, TrainOutcome)>> {
     Ok(out)
 }
 
-/// Build the paper-scale model priced from the measured runs: the observed
-/// sync-PS traffic (chunked, possibly delta-gated pushes) sets the EASGD
-/// push fraction, so the EPS panels cost what the sync fabric actually
-/// moved rather than the full-vector formula.
-fn paper_model_from_measured(
-    opts: &ExpOpts,
-    measured: &[(String, usize, TrainOutcome)],
-) -> Result<CostModel> {
-    // the same preset measure() trains, so the full-round denominator is
-    // always the measured runs' own parameter count
-    let cfg = quality_cfg(opts, REAL_SCALES[0], 3, SyncAlgo::Easgd, SyncMode::Shadow, 1);
-    let meta = ModelMeta::load(&opts.artifacts_dir, &cfg.preset)?;
-    let full_round = 2.0 * 4.0 * meta.num_params as f64;
-    let (mut bytes, mut rounds) = (0f64, 0u64);
+/// Build the paper-scale model priced from the measured runs: each run's
+/// [`TrainOutcome::sync_traffic`] snapshot (the sync-PS group's own
+/// cumulative push counters, full-round denominator included) is folded
+/// into one aggregate, so the EPS panels cost what the sync fabric actually
+/// moved — no re-derivation from summed metrics.
+fn paper_model_from_measured(measured: &[(String, usize, TrainOutcome)]) -> CostModel {
+    let mut agg = PsTrafficSnapshot::default();
     for (_, _, o) in measured {
-        bytes += o.metrics.sync_bytes as f64;
-        rounds += o.metrics.syncs;
+        if let Some(t) = &o.sync_traffic {
+            agg.absorb(t);
+        }
     }
-    let fraction = if rounds > 0 {
-        (bytes / rounds as f64 / full_round).clamp(0.01, 1.0)
-    } else {
-        1.0
-    };
-    Ok(CostModel::paper_scale().with_easgd_push_fraction(fraction))
+    // no-rounds aggregates leave the model at its full-push default
+    CostModel::paper_scale().with_measured_easgd(&agg)
 }
 
 pub fn run(opts: &ExpOpts) -> Result<String> {
@@ -83,7 +74,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     // the real runs come first: their measured sync traffic prices the
     // paper-scale model used by the EPS panels
     let measured = measure(opts)?;
-    let cm = paper_model_from_measured(opts, &measured)?;
+    let cm = paper_model_from_measured(&measured);
 
     // ---- panel 1: EPS vs trainers (paper-scale model) ----
     let mut rows = Vec::new();
@@ -133,21 +124,33 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     // ---- panels 2-3: measured loss vs scale ----
     let mut rows_loss = Vec::new();
     for (label, n, o) in &measured {
+        // live delta-gate skip rate straight from the outcome's sync-PS
+        // traffic snapshot (no gate configured -> nothing ever skips)
+        let skip = match &o.sync_traffic {
+            Some(t) => format!("{:.0}%", 100.0 * t.skip_fraction()),
+            None => "-".to_string(),
+        };
         rows_loss.push(vec![
             label.clone(),
             n.to_string(),
             fmt_loss(o.train_loss),
             fmt_loss(o.eval.avg_loss()),
             format!("{:.2}", o.avg_sync_gap),
+            skip,
         ]);
     }
     r.para(&format!(
         "**Panels 2–3 — measured losses** (real runs, fixed total dataset of \
-         {} examples split across trainers; scaled stand-in: {:?} trainers):",
+         {} examples split across trainers; scaled stand-in: {:?} trainers; \
+         \"skip rate\" is the live delta-gate column from each run's \
+         sync-PS traffic snapshot):",
         ((TRAIN_EXAMPLES as f64) * opts.scale) as u64,
         REAL_SCALES,
     ));
-    r.table(&["algorithm", "trainers", "train loss", "eval loss", "avg sync gap"], &rows_loss);
+    r.table(
+        &["algorithm", "trainers", "train loss", "eval loss", "avg sync gap", "skip rate"],
+        &rows_loss,
+    );
     r.para(
         "Shape check: losses gently increase with scale for S-EASGD and \
          FR-EASGD-30; S-EASGD's eval loss stays lowest-or-tied across scales.",

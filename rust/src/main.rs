@@ -7,11 +7,27 @@
 //!   sim          query the paper-scale throughput model directly
 //!   list         list presets and experiments
 //!
+//! Delta gating (EASGD pushes against the sync PSs):
+//!   --sync-chunk <elems>         elements per push chunk (0 = whole shard)
+//!   --delta-threshold <abs>      fixed gate: skip chunks whose max
+//!                                |local − central| is at or below this
+//!   --delta-skip-target <frac>   adaptive gate: target the given skip
+//!                                *rate* instead — the gate tracks the
+//!                                observed per-chunk gap distribution's
+//!                                quantile (overrides the fixed threshold
+//!                                once its sketch warms up)
+//!   --no-dirty-scan              disable dirty-epoch scan reuse (by
+//!                                default, trainer replicas track per-chunk
+//!                                write epochs whenever a gate is on, and a
+//!                                chunk untouched since its last scan
+//!                                reuses that scan instead of re-reading
+//!                                every element)
+//!
 //! Examples:
 //!   shadowsync train --preset model_a --trainers 4 --threads 3 \
 //!       --algo easgd --mode shadow --examples 200000 \
-//!       --sync-chunk 4096 --delta-threshold 1e-4
-//!   shadowsync train --algo ma --chunks 16 --reduce-engine striped
+//!       --sync-chunk 4096 --delta-skip-target 0.5
+//!   shadowsync train --algo ma --chunks 16 --reduce-engine overlapped
 //!   shadowsync exp --id table2a
 //!   shadowsync sim --trainers 5,10,20 --algo easgd --mode fixed --gap 5 --sync-ps 2
 
@@ -78,9 +94,11 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         data_seed: args.parse_or("seed", 1u64)?,
         shadow_interval_ms: args.parse_or("shadow-interval-ms", 0u64)?,
         allreduce_chunks: args.parse_or("chunks", 8usize)?,
-        reduce_engine: args.parse_or("reduce-engine", ReduceEngine::Striped)?,
+        reduce_engine: args.parse_or("reduce-engine", ReduceEngine::Overlapped)?,
         easgd_chunk_elems: args.parse_or("sync-chunk", 4096usize)?,
         delta_threshold: args.parse_or("delta-threshold", 0.0f32)?,
+        delta_skip_target: args.parse_or("delta-skip-target", 0.0f32)?,
+        dirty_epoch_scan: !args.has("no-dirty-scan"),
         ..Default::default()
     };
     cfg.embedding.rows_per_table = args.parse_or("rows", cfg.embedding.rows_per_table)?;
@@ -137,6 +155,10 @@ fn print_outcome(out: &coordinator::TrainOutcome) {
     println!("avg sync gap  {:.3}", out.avg_sync_gap);
     println!("sync rounds   {}", out.metrics.syncs);
     println!("sync bytes    {}", out.metrics.sync_bytes);
+    if let Some(t) = &out.sync_traffic {
+        println!("skip rate     {:.1}%", 100.0 * t.skip_fraction());
+        println!("scan skips    {:.1}%", 100.0 * t.scan_skip_fraction());
+    }
     println!("ELP           {}", out.elp);
 }
 
@@ -200,5 +222,11 @@ fn cmd_list() -> Result<()> {
     println!("presets: tiny, model_a, model_b, model_c (see python/compile/presets.py)");
     println!("experiments: {}", exp::ALL_IDS.join(", "));
     println!("subcommands: train, exp, elp, sim, list  (see --help text in main.rs)");
+    println!(
+        "delta gating: --delta-threshold <abs> (fixed gate), \
+         --delta-skip-target <frac> (adaptive quantile gate), \
+         --no-dirty-scan (disable dirty-epoch scan reuse)"
+    );
+    println!("reduce engines: --reduce-engine overlapped|striped|serial");
     Ok(())
 }

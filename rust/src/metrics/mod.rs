@@ -44,6 +44,12 @@ pub struct Metrics {
     pub syncs: AtomicU64,
     /// bytes moved for synchronization (sync PS or AllReduce traffic)
     pub sync_bytes: AtomicU64,
+    /// delta-gated push chunks that moved over the wire
+    pub sync_chunks_pushed: AtomicU64,
+    /// delta-gated push chunks skipped (zero bytes, both legs)
+    pub sync_chunks_skipped: AtomicU64,
+    /// push chunks whose gap scan was skipped via dirty epochs
+    pub sync_scan_skipped: AtomicU64,
     /// bytes moved for embedding lookups+updates
     pub embedding_bytes: AtomicU64,
 }
@@ -63,6 +69,14 @@ impl Metrics {
     pub fn record_sync(&self, bytes: u64) {
         self.syncs.fetch_add(1, Relaxed);
         self.sync_bytes.fetch_add(bytes, Relaxed);
+    }
+
+    /// Record one round's delta-gate chunk outcomes (the live skip-rate
+    /// columns of the experiment reports).
+    pub fn record_sync_chunks(&self, pushed: u64, skipped: u64, scan_skipped: u64) {
+        self.sync_chunks_pushed.fetch_add(pushed, Relaxed);
+        self.sync_chunks_skipped.fetch_add(skipped, Relaxed);
+        self.sync_scan_skipped.fetch_add(scan_skipped, Relaxed);
     }
 
     /// Average training loss per example so far.
@@ -93,6 +107,9 @@ impl Metrics {
             avg_loss: self.avg_loss(),
             syncs: self.syncs.load(Relaxed),
             sync_bytes: self.sync_bytes.load(Relaxed),
+            sync_chunks_pushed: self.sync_chunks_pushed.load(Relaxed),
+            sync_chunks_skipped: self.sync_chunks_skipped.load(Relaxed),
+            sync_scan_skipped: self.sync_scan_skipped.load(Relaxed),
             embedding_bytes: self.embedding_bytes.load(Relaxed),
         }
     }
@@ -105,7 +122,23 @@ pub struct MetricsSnapshot {
     pub avg_loss: f64,
     pub syncs: u64,
     pub sync_bytes: u64,
+    pub sync_chunks_pushed: u64,
+    pub sync_chunks_skipped: u64,
+    pub sync_scan_skipped: u64,
     pub embedding_bytes: u64,
+}
+
+impl MetricsSnapshot {
+    /// Live delta-gate skip rate: skipped / (pushed + skipped) chunks
+    /// (0 when no chunked gated pushes ran).
+    pub fn sync_skip_rate(&self) -> f64 {
+        let total = self.sync_chunks_pushed + self.sync_chunks_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.sync_chunks_skipped as f64 / total as f64
+        }
+    }
 }
 
 /// EPS meter: examples/sec over the whole run (paper Definition 1).
@@ -223,6 +256,19 @@ mod tests {
         assert_eq!(m.snapshot().sync_bytes, 20 * 64);
         let empty = Metrics::new();
         assert!(empty.avg_sync_gap().is_infinite());
+    }
+
+    #[test]
+    fn sync_chunk_counters_and_skip_rate() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().sync_skip_rate(), 0.0, "no gated pushes yet");
+        m.record_sync_chunks(3, 1, 1);
+        m.record_sync_chunks(0, 4, 4);
+        let s = m.snapshot();
+        assert_eq!(s.sync_chunks_pushed, 3);
+        assert_eq!(s.sync_chunks_skipped, 5);
+        assert_eq!(s.sync_scan_skipped, 5);
+        assert!((s.sync_skip_rate() - 5.0 / 8.0).abs() < 1e-12);
     }
 
     #[test]

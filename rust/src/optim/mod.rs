@@ -43,6 +43,9 @@ impl HogwildAdagrad {
             let v = f32::from_bits(p.load(Relaxed)) - step;
             p.store(v.to_bits(), Relaxed);
         }
+        // writes went through the raw range view, so record them in the
+        // replica's dirty epochs (no-op on untracked buffers)
+        params.mark_dirty_range(0, n);
     }
 
     pub fn accum(&self) -> &HogwildBuffer {

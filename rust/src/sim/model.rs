@@ -75,10 +75,13 @@ impl CostModel {
 
     /// Price EASGD rounds from measured sync-PS traffic (delta-gated
     /// chunked pushes move fewer bytes than the full-vector round). Uses
-    /// the scale-free *byte* fraction, so uneven chunk sizes can't skew it.
+    /// the scale-free *byte* fraction, so uneven chunk sizes can't skew it,
+    /// floored at 1% of a full round: a fully-converged delta-gated run can
+    /// measure ~0 bytes/round, and pricing sync as literally free would
+    /// erase the FR-EASGD saturation shape the figures exist to show.
     pub fn with_measured_easgd(mut self, t: &PsTrafficSnapshot) -> Self {
         if t.rounds > 0 {
-            self.easgd_push_fraction = t.byte_fraction();
+            self.easgd_push_fraction = t.byte_fraction().max(0.01);
         }
         self
     }
@@ -320,6 +323,7 @@ mod tests {
             bytes_moved: 40_000,
             chunks_pushed: 10,
             chunks_skipped: 30,
+            chunks_scan_skipped: 0,
             full_round_bytes: 16_000,
         };
         let m2 = CostModel::paper_scale().with_measured_easgd(&snap);
@@ -330,6 +334,7 @@ mod tests {
             bytes_moved: 0,
             chunks_pushed: 0,
             chunks_skipped: 0,
+            chunks_scan_skipped: 0,
             full_round_bytes: 16_000,
         };
         let m3 = CostModel::paper_scale().with_measured_easgd(&empty);

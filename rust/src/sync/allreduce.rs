@@ -32,7 +32,25 @@
 //! reference, regardless of thread interleaving (verified by the
 //! concurrency regression tests). [`ReduceEngine::SerialMutex`] keeps the
 //! old single-lock arrival-order engine as the benchmark baseline
-//! (`benches/sync_ops.rs` compares the two at 1M params).
+//! (`benches/sync_ops.rs` compares the engines at 1M params).
+//!
+//! ## Double-buffered deposit banks (overlapped engine)
+//!
+//! With a single slot bank, a round-`N+1` deposit must wait (and help)
+//! until round `N`'s reduce has drained out of the slot buffers — the
+//! deposit would otherwise overwrite a slot the reducers are still folding.
+//! The default engine ([`ReduceEngine::Overlapped`]) double-buffers the
+//! deposit slots with **per-generation parity**: round `g` deposits land in
+//! bank `g & 1` while the in-flight reduce plan (always generation `g - 1`,
+//! the round just closed) folds the opposite-parity bank, so deposits never
+//! block on a draining reduction. The epoch-tagged chunk-claim cursor's
+//! generation tag carries the deposit bank's parity as its lowest bit
+//! (bit 32 of the packed word), so a stale helper can never fold the wrong
+//! bank. Round *closes* still serialize on
+//! the previous reduce (the mean stripes are shared, depth-1 overlap): when
+//! a round finishes deposits while the previous plan is draining, the
+//! reducer that parks the previous round closes it immediately.
+//! [`ReduceEngine::Striped`] keeps the single-bank engine for A/B benches.
 //!
 //! ## The chunked wire schedule
 //!
@@ -79,19 +97,26 @@ pub enum ReduceEngine {
     /// Legacy baseline: every contributor adds its full vector into one
     /// shared sum under the control lock (arrival-order association).
     SerialMutex,
-    /// Default: parallel per-position deposits + cooperative chunk-parallel
+    /// Parallel per-position deposits + cooperative chunk-parallel
     /// reduction over per-chunk stripes (position-order association,
-    /// deterministic bits).
+    /// deterministic bits), single deposit bank: round `N+1` deposits help
+    /// round `N`'s reduce drain before landing.
     Striped,
+    /// Default: the striped engine with double-buffered, parity-indexed
+    /// deposit banks — round `N+1` deposits land in the off-parity bank
+    /// while round `N` is still being folded, so deposits never block on a
+    /// draining reduction.
+    Overlapped,
 }
 
 impl std::str::FromStr for ReduceEngine {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
+            "overlapped" | "double" | "double-buffered" => Self::Overlapped,
             "striped" => Self::Striped,
             "serial" | "serial-mutex" => Self::SerialMutex,
-            _ => bail!("unknown reduce engine {s:?} (striped|serial)"),
+            _ => bail!("unknown reduce engine {s:?} (overlapped|striped|serial)"),
         })
     }
 }
@@ -101,6 +126,17 @@ impl std::fmt::Display for ReduceEngine {
         match self {
             Self::SerialMutex => write!(f, "serial"),
             Self::Striped => write!(f, "striped"),
+            Self::Overlapped => write!(f, "overlapped"),
+        }
+    }
+}
+
+impl ReduceEngine {
+    /// Number of deposit slot banks the engine keeps (parity-indexed).
+    fn banks(self) -> usize {
+        match self {
+            Self::Overlapped => 2,
+            _ => 1,
         }
     }
 }
@@ -163,15 +199,21 @@ struct Control {
 
 /// The striped engine's lock-striped buffers, outside the control lock.
 struct StripedState {
-    /// One deposit buffer per ring position; each is written by exactly one
-    /// contributor per round, so its lock is never contended.
-    slots: Vec<Mutex<Vec<f32>>>,
+    /// Deposit slot banks, indexed by round parity (`generation % banks`):
+    /// one bank for the plain striped engine, two for the overlapped
+    /// engine. Each bank holds one buffer per ring position, written by
+    /// exactly one contributor per round, so slot locks are never
+    /// contended.
+    banks: Vec<Vec<Mutex<Vec<f32>>>>,
     /// One mean stripe per chunk; the cursor hands each chunk to exactly
     /// one reducer, so each stripe lock is exclusive by construction.
+    /// Stripes are shared across parities, which is why round *closes*
+    /// (plan openings) still serialize even when deposits overlap.
     stripes: Vec<Mutex<Vec<f32>>>,
     /// Epoch-tagged claim cursor: `(generation & 0xFFFF_FFFF) << 32 | next
-    /// chunk index`. The tag stops a stale helper from claiming chunks of a
-    /// later round's reduce.
+    /// chunk index`. The tag's low bit is the deposit-bank parity, so a
+    /// tag mismatch stops a stale helper from claiming chunks — or folding
+    /// the wrong slot bank — of a different round's reduce.
     cursor: AtomicU64,
     /// Chunks fully reduced in the active plan; the thread that finishes
     /// the last chunk parks the round.
@@ -179,9 +221,11 @@ struct StripedState {
 }
 
 impl StripedState {
-    fn new(len: usize, chunks: usize, capacity: usize) -> Self {
+    fn new(len: usize, chunks: usize, capacity: usize, banks: usize) -> Self {
         Self {
-            slots: (0..capacity).map(|_| Mutex::new(vec![0.0; len])).collect(),
+            banks: (0..banks)
+                .map(|_| (0..capacity).map(|_| Mutex::new(vec![0.0; len])).collect())
+                .collect(),
             stripes: (0..chunks)
                 .map(|c| Mutex::new(vec![0.0; traffic::part_len(len, chunks, c)]))
                 .collect(),
@@ -189,8 +233,22 @@ impl StripedState {
             chunks_done: AtomicUsize::new(0),
         }
     }
+
+    /// The slot bank round `generation` deposits into (and reduces from).
+    fn bank_of(&self, generation: u64) -> usize {
+        (generation % self.banks.len() as u64) as usize
+    }
+
+    /// Slot capacity per bank (== initial group membership).
+    fn capacity(&self) -> usize {
+        self.banks[0].len()
+    }
 }
 
+/// Pack the claim cursor: 32 bits of generation tag over 32 bits of
+/// next-chunk index. The tag's lowest bit (bit 32 of the packed word) *is*
+/// the deposit-bank parity — `generation % 2` selects the bank — so an
+/// epoch mismatch also fences a stale helper from folding the wrong bank.
 fn pack_cursor(generation: u64, idx: usize) -> u64 {
     ((generation & 0xFFFF_FFFF) << 32) | idx as u64
 }
@@ -204,6 +262,10 @@ pub struct AllReduceGroup {
     engine: ReduceEngine,
     /// Initial membership — the slot capacity of the striped engine.
     capacity: usize,
+    /// Test-only: artificial stall injected into every chunk reduction so
+    /// tests can deterministically observe deposits overlapping a draining
+    /// reduce. `None` (the default) costs one branch per chunk.
+    reduce_stall: Option<Duration>,
     /// Vector length every contribution must match.
     pub len: usize,
     /// Chunk count `C` of the ring schedule (1 = flat single-chunk rings).
@@ -212,7 +274,7 @@ pub struct AllReduceGroup {
 
 impl AllReduceGroup {
     /// `members` trainers, vectors of length `len`, flat (single-chunk),
-    /// striped reduction engine.
+    /// overlapped (double-buffered striped) reduction engine.
     pub fn new(members: usize, len: usize) -> Self {
         let mut g = Self {
             state: Mutex::new(Control {
@@ -228,8 +290,9 @@ impl AllReduceGroup {
             }),
             cv: Condvar::new(),
             striped: None,
-            engine: ReduceEngine::Striped,
+            engine: ReduceEngine::Overlapped,
             capacity: members,
+            reduce_stall: None,
             len,
             chunks: 1,
         };
@@ -257,10 +320,18 @@ impl AllReduceGroup {
         self.engine
     }
 
+    /// Test-only hook: sleep `stall` inside every chunk reduction, so tests
+    /// can prove a round-`N+1` deposit completes while round `N`'s reduce
+    /// is still draining.
+    pub fn with_reduce_stall(mut self, stall: Duration) -> Self {
+        self.reduce_stall = Some(stall);
+        self
+    }
+
     /// (Re)build the engine-specific buffers. Builder-phase only. The slot
-    /// buffers (`capacity × len`, the expensive part) are reused across
-    /// builder calls; only the per-chunk stripes are rebuilt when the chunk
-    /// count changes.
+    /// banks (`banks × capacity × len`, the expensive part) are reused
+    /// across builder calls; only the per-chunk stripes are rebuilt when
+    /// the chunk count changes.
     fn rebuild_engine(&mut self) {
         let st = self.state.get_mut().unwrap();
         match self.engine {
@@ -270,10 +341,13 @@ impl AllReduceGroup {
                 }
                 self.striped = None;
             }
-            ReduceEngine::Striped => {
+            ReduceEngine::Striped | ReduceEngine::Overlapped => {
                 st.sum = Vec::new();
+                let nbanks = self.engine.banks();
                 match self.striped.take() {
-                    Some(mut ss) if ss.slots.len() == self.capacity => {
+                    Some(mut ss)
+                        if ss.banks.len() == nbanks && ss.capacity() == self.capacity =>
+                    {
                         if ss.stripes.len() != self.chunks {
                             ss.stripes = (0..self.chunks)
                                 .map(|c| {
@@ -287,8 +361,12 @@ impl AllReduceGroup {
                         self.striped = Some(ss);
                     }
                     _ => {
-                        self.striped =
-                            Some(StripedState::new(self.len, self.chunks, self.capacity));
+                        self.striped = Some(StripedState::new(
+                            self.len,
+                            self.chunks,
+                            self.capacity,
+                            nbanks,
+                        ));
                     }
                 }
             }
@@ -333,7 +411,7 @@ impl AllReduceGroup {
                 }
                 st.done.push_back(Round { generation, mean, ring, readers_left: n });
             }
-            ReduceEngine::Striped => {
+            ReduceEngine::Striped | ReduceEngine::Overlapped => {
                 let ss = self.striped.as_ref().expect("striped engine state");
                 ss.chunks_done.store(0, SeqCst);
                 ss.cursor.store(pack_cursor(generation, 0), SeqCst);
@@ -361,7 +439,7 @@ impl AllReduceGroup {
             if ss.cursor.compare_exchange(cur, cur + 1, SeqCst, SeqCst).is_err() {
                 continue; // raced another claimer; reload
             }
-            self.reduce_chunk(ss, idx, n);
+            self.reduce_chunk(ss, idx, n, generation);
             claimed = true;
             if ss.chunks_done.fetch_add(1, SeqCst) + 1 == self.chunks {
                 self.park_reduced(generation);
@@ -370,15 +448,20 @@ impl AllReduceGroup {
         claimed
     }
 
-    /// Fold slots `0..n` of chunk `c` into its mean stripe, always in ring-
+    /// Fold slots `0..n` of chunk `c` — read from the slot bank of round
+    /// `generation`'s parity — into its mean stripe, always in ring-
     /// position order — the fixed chunk-wise summation order that makes the
     /// concurrent reduction bit-deterministic.
-    fn reduce_chunk(&self, ss: &StripedState, c: usize, n: usize) {
+    fn reduce_chunk(&self, ss: &StripedState, c: usize, n: usize, generation: u64) {
+        if let Some(stall) = self.reduce_stall {
+            std::thread::sleep(stall);
+        }
         let lo = traffic::part_offset(self.len, self.chunks, c);
         let clen = traffic::part_len(self.len, self.chunks, c);
+        let bank = &ss.banks[ss.bank_of(generation)];
         let mut stripe = ss.stripes[c].lock().unwrap();
         debug_assert_eq!(stripe.len(), clen);
-        for (pos, slot_mx) in ss.slots.iter().take(n).enumerate() {
+        for (pos, slot_mx) in bank.iter().take(n).enumerate() {
             let slot = slot_mx.lock().unwrap();
             let src = &slot[lo..lo + clen];
             if pos == 0 {
@@ -416,6 +499,12 @@ impl AllReduceGroup {
             ring: plan.ring,
             readers_left: plan.n,
         });
+        // overlapped engine: a round that finished its deposits while this
+        // reduce was draining could not close then (the stripes were busy);
+        // close it now that the plan slot is free
+        if Self::round_complete(&st) {
+            self.close_round(&mut st);
+        }
         drop(st);
         self.cv.notify_all();
     }
@@ -463,12 +552,10 @@ impl AllReduceGroup {
         ensure!(data.len() == self.len, "allreduce length mismatch");
         let mut st = self.state.lock().unwrap();
         ensure!(st.active > 0, "allreduce on an empty group");
-        if let Some(ss) = &self.striped {
-            ensure!(
-                st.contributors.len() < ss.slots.len(),
-                "more concurrent contributors than group members"
-            );
-        }
+        ensure!(
+            st.contributors.len() < self.capacity,
+            "more concurrent contributors than group members"
+        );
         let my_gen = st.generation;
         let my_pos = st.contributors.len();
         st.contributors.push(me);
@@ -479,12 +566,23 @@ impl AllReduceGroup {
                     *s += d;
                 }
             }
-            ReduceEngine::Striped => {
-                // the previous round may still be reducing out of the slot
-                // buffers; help it drain before overwriting our slot
+            ReduceEngine::Striped | ReduceEngine::Overlapped => {
+                let ss = self.striped.as_ref().expect("striped engine state");
+                // Single-bank striped engine: the previous round may still
+                // be reducing out of the (only) slot bank, so help it drain
+                // before overwriting our slot. Overlapped engine: the open
+                // round's parity bank is never the bank the in-flight plan
+                // folds (the plan is always the previous generation, the
+                // opposite parity), so the conflict check fails and the
+                // deposit proceeds immediately — deposits never block on a
+                // draining reduction.
                 loop {
-                    let plan = st.plan.as_ref().map(|p| (p.generation, p.n));
-                    match plan {
+                    let conflicting = st
+                        .plan
+                        .as_ref()
+                        .filter(|p| ss.bank_of(p.generation) == ss.bank_of(my_gen))
+                        .map(|p| (p.generation, p.n));
+                    match conflicting {
                         None => break,
                         Some((pg, pn)) => {
                             drop(st);
@@ -497,8 +595,8 @@ impl AllReduceGroup {
                     }
                 }
                 drop(st);
-                let ss = self.striped.as_ref().expect("striped engine state");
-                ss.slots[my_pos].lock().unwrap().copy_from_slice(data);
+                let bank = &ss.banks[ss.bank_of(my_gen)];
+                bank[my_pos].lock().unwrap().copy_from_slice(data);
                 st = self.state.lock().unwrap();
             }
         }
@@ -599,8 +697,26 @@ impl AllReduceGroup {
         }
     }
 
+    /// (Re)admit one member — e.g. a trainer rejoining after churn. The
+    /// joiner is expected to contribute to the next round (the pending
+    /// round now waits for one more deposit). Errors when the group is
+    /// already at its slot capacity.
+    pub fn join(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        ensure!(st.active < self.capacity, "group is at capacity ({})", self.capacity);
+        st.active += 1;
+        Ok(())
+    }
+
     pub fn active(&self) -> usize {
         self.state.lock().unwrap().active
+    }
+
+    /// Generation of the round whose chunk-parallel reduction is currently
+    /// in flight (None when no reduce plan is active). Test observability
+    /// for deposit/reduce overlap.
+    pub fn reducing(&self) -> Option<u64> {
+        self.state.lock().unwrap().plan.as_ref().map(|p| p.generation)
     }
 
     /// Members fully deposited into the pending round.
@@ -640,11 +756,12 @@ mod tests {
         (Arc::new(net), nodes)
     }
 
-    const BOTH_ENGINES: [ReduceEngine; 2] = [ReduceEngine::Striped, ReduceEngine::SerialMutex];
+    const ALL_ENGINES: [ReduceEngine; 3] =
+        [ReduceEngine::Overlapped, ReduceEngine::Striped, ReduceEngine::SerialMutex];
 
     #[test]
     fn mean_matches_sequential_sum() {
-        for engine in BOTH_ENGINES {
+        for engine in ALL_ENGINES {
             let n = 4;
             let g = Arc::new(AllReduceGroup::new(n, 8).with_engine(engine));
             let (net, nodes) = net_with(n);
@@ -672,7 +789,7 @@ mod tests {
 
     #[test]
     fn repeated_rounds_stay_consistent() {
-        for engine in BOTH_ENGINES {
+        for engine in ALL_ENGINES {
             let n = 3;
             let g = Arc::new(AllReduceGroup::new(n, 4).with_chunks(2).with_engine(engine));
             let (net, nodes) = net_with(n);
@@ -704,7 +821,7 @@ mod tests {
 
     #[test]
     fn leaver_unblocks_pending_round() {
-        for engine in BOTH_ENGINES {
+        for engine in ALL_ENGINES {
             let g = Arc::new(AllReduceGroup::new(3, 2).with_engine(engine));
             let (net, nodes) = net_with(3);
             let g2 = g.clone();
@@ -740,7 +857,7 @@ mod tests {
 
     #[test]
     fn singleton_group_is_identity() {
-        for engine in BOTH_ENGINES {
+        for engine in ALL_ENGINES {
             let g = AllReduceGroup::new(1, 3).with_engine(engine);
             let (net, nodes) = net_with(1);
             let mut v = vec![1.0, 2.0, 3.0];
@@ -994,14 +1111,14 @@ mod tests {
 
     #[test]
     fn dynamic_membership_stress_every_mean_is_exact() {
-        // N threads run 100s of rounds through the striped engine while
+        // N threads run 100s of rounds through the overlapped engine while
         // members leave at random points; every returned mean must equal
         // the sequential reference over that round's surviving contributor
         // set, and every returned contributor count must be exact.
         let n = 8;
         let p = 4;
         let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(3));
-        assert_eq!(g.engine(), ReduceEngine::Striped);
+        assert_eq!(g.engine(), ReduceEngine::Overlapped);
         let (net, nodes) = net_with(n);
         let mut hs = Vec::new();
         for t in 0..n {
@@ -1053,8 +1170,122 @@ mod tests {
         assert_eq!("striped".parse::<ReduceEngine>().unwrap(), ReduceEngine::Striped);
         assert_eq!("serial".parse::<ReduceEngine>().unwrap(), ReduceEngine::SerialMutex);
         assert_eq!("SERIAL-MUTEX".parse::<ReduceEngine>().unwrap(), ReduceEngine::SerialMutex);
+        assert_eq!("overlapped".parse::<ReduceEngine>().unwrap(), ReduceEngine::Overlapped);
+        assert_eq!("double-buffered".parse::<ReduceEngine>().unwrap(), ReduceEngine::Overlapped);
         assert!("quantum".parse::<ReduceEngine>().is_err());
         assert_eq!(ReduceEngine::Striped.to_string(), "striped");
         assert_eq!(ReduceEngine::SerialMutex.to_string(), "serial");
+        assert_eq!(ReduceEngine::Overlapped.to_string(), "overlapped");
+    }
+
+    #[test]
+    fn cursor_tag_carries_bank_parity() {
+        // the generation tag's low bit (bit 32 of the packed word) is the
+        // deposit-bank parity, so consecutive generations always differ in
+        // tag and a stale helper can never fold the wrong deposit bank
+        let a = pack_cursor(6, 0);
+        let b = pack_cursor(7, 0);
+        assert_ne!(a & !0xFFFF_FFFFu64, b & !0xFFFF_FFFFu64);
+        assert_eq!((a >> 32) & 1, 0);
+        assert_eq!((b >> 32) & 1, 1);
+        // the chunk index occupies the low 32 bits untouched
+        assert_eq!(pack_cursor(7, 42) & 0xFFFF_FFFF, 42);
+        assert_eq!(pack_cursor(7, 42) & !0xFFFF_FFFFu64, b & !0xFFFF_FFFFu64);
+    }
+
+    #[test]
+    fn deposit_completes_while_previous_reduce_is_stalled() {
+        // Acceptance: with the overlapped engine, a round-1 deposit lands in
+        // the off-parity bank while round 0's chunk reduction is artificially
+        // stalled. (The single-bank striped engine would block the deposit
+        // until the drain finished, so `reducing()` would be None by the
+        // time `pending()` reaches 1 and this test would fail.)
+        let g = Arc::new(
+            AllReduceGroup::new(3, 64)
+                .with_chunks(4)
+                .with_reduce_stall(Duration::from_millis(150)),
+        );
+        let (net, nodes) = net_with(3);
+        let mut waiters = Vec::new();
+        for (i, val) in [(0usize, 1.0f32), (1, 5.0)] {
+            let g = g.clone();
+            let net = net.clone();
+            let node = nodes[i];
+            waiters.push(std::thread::spawn(move || {
+                let mut v = vec![val; 64];
+                let out = g.allreduce_mean(&mut v, node, &net).unwrap();
+                (v, out)
+            }));
+        }
+        while g.pending() < 2 {
+            std::thread::yield_now();
+        }
+        // the third member leaves: round 0 closes over {A, B} and its
+        // (stalled) reduce plan opens
+        g.leave();
+        // a fresh contributor deposits into round 1 while round 0 drains
+        let gd = g.clone();
+        let netd = net.clone();
+        let node_d = nodes[2];
+        let depositor = std::thread::spawn(move || {
+            let mut v = vec![9.0f32; 64];
+            let out = gd.allreduce_mean(&mut v, node_d, &netd).unwrap();
+            (v, out)
+        });
+        while g.pending() < 1 {
+            std::thread::yield_now();
+        }
+        // the round-1 deposit completed while round 0 is still reducing —
+        // the stall (4 chunks x 150ms over 2 helpers >= 300ms) makes this
+        // deterministic
+        assert_eq!(
+            g.reducing(),
+            Some(0),
+            "round-1 deposit must land while round 0's reduce is in flight"
+        );
+        // shrink so round 1 can close over the lone depositor; the close is
+        // deferred until round 0's reducer parks and hands off
+        g.leave();
+        for h in waiters {
+            let (v, out) = h.join().unwrap();
+            assert_eq!(v, vec![3.0; 64]); // mean(1, 5)
+            assert_eq!(out.generation, 0);
+            assert_eq!(out.contributors, 2);
+        }
+        let (vd, outd) = depositor.join().unwrap();
+        assert_eq!(vd, vec![9.0; 64]); // singleton round: identity
+        assert_eq!(outd.generation, 1);
+        assert_eq!(outd.contributors, 1);
+        assert_eq!(g.active(), 1);
+        assert_eq!(g.reducing(), None);
+    }
+
+    #[test]
+    fn leave_then_join_restores_membership() {
+        let g = Arc::new(AllReduceGroup::new(2, 4));
+        let (net, nodes) = net_with(2);
+        g.leave();
+        assert_eq!(g.active(), 1);
+        // a singleton round completes alone
+        let mut v = vec![2.0; 4];
+        let out = g.allreduce_mean(&mut v, nodes[0], &net).unwrap();
+        assert_eq!(out.contributors, 1);
+        // rejoin: rounds wait for both members again
+        g.join().unwrap();
+        assert_eq!(g.active(), 2);
+        assert!(g.join().is_err(), "join past capacity must be rejected");
+        let g2 = g.clone();
+        let net2 = net.clone();
+        let node1 = nodes[1];
+        let peer = std::thread::spawn(move || {
+            let mut w = vec![4.0; 4];
+            g2.allreduce_mean(&mut w, node1, &net2).unwrap();
+            w
+        });
+        let mut v = vec![2.0; 4];
+        let out = g.allreduce_mean(&mut v, nodes[0], &net).unwrap();
+        assert_eq!(out.contributors, 2);
+        assert_eq!(v, vec![3.0; 4]);
+        assert_eq!(peer.join().unwrap(), vec![3.0; 4]);
     }
 }

@@ -13,27 +13,43 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{ps::SyncPsGroup, SyncCtx, SyncStrategy};
+use super::{
+    ps::{DeltaScanCache, SyncPsGroup},
+    SyncCtx, SyncStrategy,
+};
 
 pub struct EasgdSync {
     group: Arc<SyncPsGroup>,
     pub alpha: f32,
+    /// per-trainer dirty-epoch scan cache (no-op when the replica doesn't
+    /// track dirty epochs)
+    cache: DeltaScanCache,
 }
 
 impl EasgdSync {
     pub fn new(group: Arc<SyncPsGroup>, alpha: f32) -> Self {
-        Self { group, alpha }
+        Self { group, alpha, cache: DeltaScanCache::new() }
     }
 }
 
 impl SyncStrategy for EasgdSync {
     fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
-        let stats =
-            self.group
-                .elastic_sync_stats(ctx.local, self.alpha, ctx.trainer_node, ctx.net);
+        let stats = self.group.elastic_sync_cached(
+            ctx.local,
+            self.alpha,
+            ctx.trainer_node,
+            ctx.net,
+            &mut self.cache,
+        );
         // record the bytes this round *actually* moved (delta-gated chunks
-        // may skip), so metrics.sync_bytes always agrees with NIC counters
+        // may skip), so metrics.sync_bytes always agrees with NIC counters;
+        // chunk counters feed the live skip-rate column of the exp reports
         ctx.metrics.record_sync(stats.bytes);
+        ctx.metrics.record_sync_chunks(
+            stats.chunks_pushed,
+            stats.chunks_skipped,
+            stats.chunks_scan_skipped,
+        );
         Ok(stats.gap)
     }
 
@@ -91,5 +107,33 @@ mod tests {
         assert!(snap.sync_bytes < group.round_bytes());
         assert_eq!(net.role_bytes(Role::SyncPs), snap.sync_bytes);
         assert_eq!(group.traffic().chunks_skipped, 3);
+        // the chunk counters surface as live metrics for the skip-rate column
+        assert_eq!(snap.sync_chunks_pushed, 1);
+        assert_eq!(snap.sync_chunks_skipped, 3);
+        assert!((snap.sync_skip_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dirty_tracked_replica_skips_scans_across_rounds() {
+        // a shadow loop over an idle (untouched) replica stops scanning
+        // entirely after the first converged round
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let group = Arc::new(
+            SyncPsGroup::build(&vec![1.0; 32], 1, &mut net).with_push_chunking(8, 1e-6),
+        );
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&vec![1.0; 32]).with_dirty_epochs(8);
+        let mut s = EasgdSync::new(group.clone(), 0.5);
+        let ctx = SyncCtx { local: &local, trainer_node: tnode, net: &net, metrics: &metrics };
+        for _ in 0..5 {
+            s.sync_round(&ctx).unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.sync_bytes, 0, "identical replicas move nothing");
+        // round 1 scanned all 4 chunks cold; rounds 2-5 reused every scan
+        assert_eq!(snap.sync_chunks_skipped, 5 * 4);
+        assert_eq!(snap.sync_scan_skipped, 4 * 4);
+        assert_eq!(net.role_bytes(Role::SyncPs), 0);
     }
 }

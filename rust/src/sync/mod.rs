@@ -15,10 +15,14 @@
 //!
 //! Three algorithms are provided (paper Algorithms 2–4): EASGD (centralized,
 //! against sync PSs via chunked pushes with an optional delta gate —
-//! [`ps::SyncPsGroup`] skips chunks that barely moved, and both wire legs
-//! of a skipped chunk are suppressed), MA and BMUF (decentralized, over the
-//! lock-striped chunk-parallel ring-AllReduce fabric in [`allreduce`],
-//! whose per-hop transfers flow through [`Network`] so ring traffic is
+//! [`ps::SyncPsGroup`] skips chunks that barely moved, both wire legs of a
+//! skipped chunk are suppressed, the gate can adapt itself to a target skip
+//! rate via a streaming quantile sketch, and dirty-epoch-tracked replicas
+//! skip even the gap *scan* for untouched chunks), MA and BMUF
+//! (decentralized, over the lock-striped, double-buffered chunk-parallel
+//! ring-AllReduce fabric in [`allreduce`], whose parity-banked deposit
+//! slots let round `N+1` contributions land while round `N` still reduces,
+//! and whose per-hop transfers flow through [`Network`] so ring traffic is
 //! measured per trainer NIC rather than asserted from a formula; the
 //! [`traffic`] module exports that measured schedule to `sim/`). All three
 //! use the *asymmetric elastic interpolation* the paper highlights as its
@@ -67,7 +71,7 @@ pub use allreduce::{AllReduceGroup, ReduceEngine, RoundOutcome};
 pub use bmuf::BmufSync;
 pub use easgd::EasgdSync;
 pub use ma::MaSync;
-pub use ps::{PushStats, SyncPsGroup};
+pub use ps::{DeltaScanCache, PushStats, QuantileSketch, SyncPsGroup};
 
 /// Build the shared chunked ring-AllReduce fabric for the decentralized
 /// algorithms (MA, BMUF): one group over all trainers, split into

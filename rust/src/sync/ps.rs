@@ -20,8 +20,36 @@
 //! group keeps cumulative counters ([`SyncPsGroup::traffic`]) that the
 //! experiment harness feeds into the `sim/` cost model as its measured
 //! EASGD push fraction.
+//!
+//! ## The adaptive quantile gate
+//!
+//! A single global threshold has to be tuned per model and per phase of
+//! training — too low and nothing skips, too high and the replicas decouple.
+//! [`SyncPsGroup::with_adaptive_gate`] instead targets a *skip rate*: every
+//! scanned chunk's max-gap feeds a lock-free sliding-window
+//! [`QuantileSketch`], and each round gates at the window's
+//! `delta_skip_target`-quantile, so the observed skip rate tracks the
+//! target as the gap distribution drifts across training (until the sketch
+//! warms up, the fixed `delta_threshold` — possibly 0, i.e. push everything
+//! — applies).
+//!
+//! ## Dirty-epoch scan skips
+//!
+//! The gate's scan reads every element even when nothing moved. When the
+//! trainer's replica tracks per-chunk write epochs
+//! ([`HogwildBuffer::with_dirty_epochs`]), a per-trainer [`DeltaScanCache`]
+//! remembers each chunk's scan result keyed by its dirty signature: a chunk
+//! untouched since its last scan reuses the cached gap without reading a
+//! single element ([`SyncPsGroup::elastic_sync_cached`]). A pushed chunk is
+//! rewritten by the elastic move, so its cache entry is invalidated and the
+//! next round re-scans it — a scan-skipped chunk is therefore never one
+//! whose (quiescent) elements changed since the last push; the property
+//! suite proves this on randomized write patterns, and a write still
+//! racing the signature read can defer its re-scan by at most one round
+//! (see the [`crate::tensor::DirtyEpochs`] precision caveat — the same
+//! transient-staleness class as the racy scan itself).
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering::Relaxed};
 
 use crate::net::{Network, NodeId, Role};
 use crate::placement::equal_ranges;
@@ -39,28 +67,146 @@ pub struct SyncShard {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PushStats {
     /// Mean |local − central| over the *whole* vector before the move
-    /// (skipped chunks contribute their scanned gap).
+    /// (skipped chunks contribute their scanned gap; scan-skipped chunks
+    /// contribute their cached gap from the last real scan).
     pub gap: f32,
     /// Bytes actually moved through the network, both legs summed — what
     /// `metrics.sync_bytes` should record.
     pub bytes: u64,
     pub chunks_pushed: u64,
     pub chunks_skipped: u64,
+    /// Chunks whose gate decision reused a cached scan because the
+    /// trainer's dirty epochs showed no write since (a subset of
+    /// `chunks_pushed + chunks_skipped`).
+    pub chunks_scan_skipped: u64,
+}
+
+/// Lock-free sliding-window sketch of a scalar stream, queried for
+/// quantiles. `record` is one atomic store + one counter bump; `quantile`
+/// snapshots and sorts the window (a few hundred floats — called once per
+/// sync round, off the training hot path). Old samples are overwritten ring-
+/// buffer style, so the estimate follows a drifting distribution.
+#[derive(Debug)]
+pub struct QuantileSketch {
+    window: Vec<AtomicU32>,
+    cursor: AtomicUsize,
+    filled: AtomicUsize,
+}
+
+/// Samples required before the sketch answers quantile queries.
+const SKETCH_WARMUP: usize = 16;
+
+impl QuantileSketch {
+    pub fn new(window: usize) -> Self {
+        let window = window.max(SKETCH_WARMUP);
+        let mut w = Vec::with_capacity(window);
+        w.resize_with(window, || AtomicU32::new(0));
+        Self { window: w, cursor: AtomicUsize::new(0), filled: AtomicUsize::new(0) }
+    }
+
+    pub fn record(&self, x: f32) {
+        if !x.is_finite() {
+            return;
+        }
+        let i = self.cursor.fetch_add(1, Relaxed) % self.window.len();
+        self.window[i].store(x.to_bits(), Relaxed);
+        if self.filled.load(Relaxed) < self.window.len() {
+            // may overshoot under races; clamped in `samples`
+            self.filled.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// Valid samples currently in the window.
+    pub fn samples(&self) -> usize {
+        self.filled.load(Relaxed).min(self.window.len())
+    }
+
+    /// The `q`-quantile of the current window, chosen so that (for a
+    /// continuous distribution) about a `q` fraction of fresh samples fall
+    /// at or below it. `None` until the warmup fill is reached.
+    pub fn quantile(&self, q: f32) -> Option<f32> {
+        let n = self.samples();
+        if n < SKETCH_WARMUP {
+            return None;
+        }
+        let mut v: Vec<f32> = self.window[..n]
+            .iter()
+            .map(|a| f32::from_bits(a.load(Relaxed)))
+            .collect();
+        v.sort_by(f32::total_cmp);
+        let idx = ((n as f64 * q as f64).ceil() as usize).clamp(1, n) - 1;
+        Some(v[idx])
+    }
+}
+
+/// Per-trainer cache for the dirty-epoch scan fast path: one entry per push
+/// chunk (in shard/chunk iteration order), holding the last scanned gap and
+/// the replica's dirty signature at scan time. Owned by the sync strategy
+/// (one per trainer/worker), never shared — the [`SyncPsGroup`] itself is
+/// shared across trainers.
+#[derive(Debug, Default)]
+pub struct DeltaScanCache {
+    entries: Vec<CacheEntry>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct CacheEntry {
+    sig: u64,
+    max_abs: f32,
+    sum_abs: f64,
+    valid: bool,
+    /// did the most recent round reuse this entry instead of scanning?
+    reused: bool,
+}
+
+impl DeltaScanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn entry(&mut self, k: usize) -> &mut CacheEntry {
+        if k >= self.entries.len() {
+            self.entries.resize(k + 1, CacheEntry::default());
+        }
+        &mut self.entries[k]
+    }
+
+    /// Did the most recent round skip the scan of push chunk `k` (test
+    /// observability for the dirty-epoch safety property)?
+    pub fn scan_skipped(&self, k: usize) -> bool {
+        self.entries.get(k).map(|e| e.reused).unwrap_or(false)
+    }
 }
 
 /// Cumulative measured push traffic of a sync-PS group.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct PsTrafficSnapshot {
     pub rounds: u64,
     pub bytes_moved: u64,
     pub chunks_pushed: u64,
     pub chunks_skipped: u64,
+    /// Chunks whose scan was skipped via dirty epochs (cached gap reused).
+    pub chunks_scan_skipped: u64,
     /// Bytes a full no-skip round would move (`SyncPsGroup::round_bytes`) —
     /// the denominator that turns `bytes_moved` into a scale-free fraction.
     pub full_round_bytes: u64,
 }
 
 impl PsTrafficSnapshot {
+    /// Fold another group's (or run's) counters into this snapshot —
+    /// used by the experiment harness to aggregate the measured traffic of
+    /// several runs before pricing the cost model.
+    pub fn absorb(&mut self, other: &PsTrafficSnapshot) {
+        self.rounds += other.rounds;
+        self.bytes_moved += other.bytes_moved;
+        self.chunks_pushed += other.chunks_pushed;
+        self.chunks_skipped += other.chunks_skipped;
+        self.chunks_scan_skipped += other.chunks_scan_skipped;
+        if self.full_round_bytes == 0 {
+            self.full_round_bytes = other.full_round_bytes;
+        }
+    }
+
     /// Measured bytes of an average round (both legs).
     pub fn avg_round_bytes(&self) -> f64 {
         if self.rounds == 0 {
@@ -91,7 +237,26 @@ impl PsTrafficSnapshot {
             self.chunks_pushed as f64 / total as f64
         }
     }
+
+    /// The live delta-gate skip rate: fraction of gated chunks that moved
+    /// zero bytes — what the adaptive gate steers toward its target.
+    pub fn skip_fraction(&self) -> f64 {
+        1.0 - self.push_fraction()
+    }
+
+    /// Fraction of gated chunks whose *scan* was skipped via dirty epochs.
+    pub fn scan_skip_fraction(&self) -> f64 {
+        let total = self.chunks_pushed + self.chunks_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.chunks_scan_skipped as f64 / total as f64
+        }
+    }
 }
+
+/// Sliding-window size of the adaptive gate's gap sketch.
+const GATE_SKETCH_WINDOW: usize = 512;
 
 /// The sync-PS tier: the central `w^PS` plus its sharding.
 pub struct SyncPsGroup {
@@ -102,10 +267,16 @@ pub struct SyncPsGroup {
     chunk_elems: usize,
     /// skip chunks whose max |local − central| is at or below this
     delta_threshold: f32,
+    /// adaptive gate: target fraction of gated chunks to skip (0 = fixed
+    /// threshold mode)
+    skip_target: f32,
+    /// per-chunk max-gap distribution feeding the adaptive gate
+    gap_sketch: Option<QuantileSketch>,
     rounds: AtomicU64,
     bytes_moved: AtomicU64,
     chunks_pushed: AtomicU64,
     chunks_skipped: AtomicU64,
+    chunks_scan_skipped: AtomicU64,
 }
 
 impl SyncPsGroup {
@@ -121,10 +292,13 @@ impl SyncPsGroup {
             shards,
             chunk_elems: 0,
             delta_threshold: 0.0,
+            skip_target: 0.0,
+            gap_sketch: None,
             rounds: AtomicU64::new(0),
             bytes_moved: AtomicU64::new(0),
             chunks_pushed: AtomicU64::new(0),
             chunks_skipped: AtomicU64::new(0),
+            chunks_scan_skipped: AtomicU64::new(0),
         }
     }
 
@@ -134,6 +308,20 @@ impl SyncPsGroup {
     pub fn with_push_chunking(mut self, chunk_elems: usize, delta_threshold: f32) -> Self {
         self.chunk_elems = chunk_elems;
         self.delta_threshold = delta_threshold.max(0.0);
+        self
+    }
+
+    /// Enable the adaptive quantile gate: per round, skip the chunks whose
+    /// max-gap falls in the lowest `skip_target` fraction of the recently
+    /// observed gap distribution. 0 disables (fixed-threshold mode); while
+    /// the sketch warms up, the fixed `delta_threshold` applies.
+    pub fn with_adaptive_gate(mut self, skip_target: f32) -> Self {
+        self.skip_target = skip_target.clamp(0.0, 1.0);
+        self.gap_sketch = if self.skip_target > 0.0 {
+            Some(QuantileSketch::new(GATE_SKETCH_WINDOW))
+        } else {
+            None
+        };
         self
     }
 
@@ -159,48 +347,147 @@ impl SyncPsGroup {
         trainer: NodeId,
         net: &Network,
     ) -> PushStats {
+        self.elastic_sync_impl(local, alpha, trainer, net, None)
+    }
+
+    /// `elastic_sync_stats` with a per-trainer [`DeltaScanCache`]: when the
+    /// local replica tracks dirty epochs, chunks untouched since their last
+    /// scan reuse the cached gap without reading a single element.
+    pub fn elastic_sync_cached(
+        &self,
+        local: &HogwildBuffer,
+        alpha: f32,
+        trainer: NodeId,
+        net: &Network,
+        cache: &mut DeltaScanCache,
+    ) -> PushStats {
+        self.elastic_sync_impl(local, alpha, trainer, net, Some(cache))
+    }
+
+    /// Is any delta gate (fixed or adaptive) configured? Mirrors
+    /// `RunConfig::delta_gated` (the coordinator builds these fields from
+    /// that config); keep the two predicates in lockstep when adding a
+    /// gating mode, or trainer replicas stop tracking dirty epochs while
+    /// the gate still scans.
+    fn gating_enabled(&self) -> bool {
+        self.delta_threshold > 0.0 || self.skip_target > 0.0
+    }
+
+    /// The max-|Δ| threshold this round gates at. Adaptive mode reads the
+    /// sketch's target quantile (falling back to the fixed threshold — or
+    /// "never skip" — until warmup); fixed mode uses `delta_threshold`.
+    /// Negative means no chunk can skip (gaps are always >= 0).
+    fn round_gate(&self) -> f32 {
+        let fixed = if self.delta_threshold > 0.0 { self.delta_threshold } else { -1.0 };
+        match &self.gap_sketch {
+            Some(sk) => sk.quantile(self.skip_target).unwrap_or(fixed),
+            None => fixed,
+        }
+    }
+
+    fn elastic_sync_impl(
+        &self,
+        local: &HogwildBuffer,
+        alpha: f32,
+        trainer: NodeId,
+        net: &Network,
+        mut cache: Option<&mut DeltaScanCache>,
+    ) -> PushStats {
         debug_assert_eq!(local.len(), self.central.len());
+        let gate_on = self.gating_enabled();
+        let gate = if gate_on { self.round_gate() } else { -1.0 };
         let mut gap_weighted = 0f64;
         let mut bytes = 0u64;
         let mut pushed = 0u64;
         let mut skipped = 0u64;
-        for s in &self.shards {
-            let step = if self.chunk_elems == 0 { (s.hi - s.lo).max(1) } else { self.chunk_elems };
-            let mut lo = s.lo;
-            while lo < s.hi {
-                let hi = (lo + step).min(s.hi);
-                if self.delta_threshold > 0.0 {
-                    // delta gate: one racy scan (Hogwild semantics); a
-                    // chunk that barely moved is skipped entirely — the
-                    // reply leg is suppressed along with the push leg
-                    let (max_abs, sum_abs) = Self::chunk_gap(local, &self.central, lo, hi);
-                    if max_abs <= self.delta_threshold {
-                        skipped += 1;
-                        gap_weighted += sum_abs;
-                        lo = hi;
-                        continue;
+        let mut scan_skipped = 0u64;
+        // the shared walk keeps [`DeltaScanCache`] ordinals `k` in lockstep
+        // with `push_chunk_ranges` by construction
+        for (k, (lo, hi, node)) in self.push_chunks().enumerate() {
+            if gate_on {
+                // dirty-epoch fast path: if the replica records no write
+                // to [lo, hi) since this chunk's last scan, reuse that
+                // scan; otherwise do the racy scan (Hogwild semantics)
+                // and feed the fresh max-gap to the adaptive sketch
+                let sig = cache.as_ref().and_then(|_| local.dirty_signature(lo, hi));
+                let (max_abs, sum_abs) = match (&mut cache, sig) {
+                    (Some(c), Some(sig)) => {
+                        let e = c.entry(k);
+                        if e.valid && e.sig == sig {
+                            e.reused = true;
+                            scan_skipped += 1;
+                            // the cached gap is still this round's gap
+                            // observation — feed it to the sketch, or the
+                            // adaptive gate would see only the rescanned
+                            // (dirtier, higher-gap) subpopulation and the
+                            // skip rate would drift above its target
+                            if let Some(sk) = &self.gap_sketch {
+                                sk.record(e.max_abs);
+                            }
+                            (e.max_abs, e.sum_abs)
+                        } else {
+                            let (m, sum) = Self::chunk_gap(local, &self.central, lo, hi);
+                            *e = CacheEntry {
+                                sig,
+                                max_abs: m,
+                                sum_abs: sum,
+                                valid: true,
+                                reused: false,
+                            };
+                            if let Some(sk) = &self.gap_sketch {
+                                sk.record(m);
+                            }
+                            (m, sum)
+                        }
                     }
+                    (c, _) => {
+                        if let Some(c) = c {
+                            // replica untracked: keep the per-round
+                            // reuse flags truthful for observers
+                            let e = c.entry(k);
+                            e.valid = false;
+                            e.reused = false;
+                        }
+                        let (m, sum) = Self::chunk_gap(local, &self.central, lo, hi);
+                        if let Some(sk) = &self.gap_sketch {
+                            sk.record(m);
+                        }
+                        (m, sum)
+                    }
+                };
+                if max_abs <= gate {
+                    // a chunk that barely moved is skipped entirely —
+                    // the reply leg is suppressed along with the push
+                    skipped += 1;
+                    gap_weighted += sum_abs;
+                    continue;
                 }
-                let chunk_bytes = ((hi - lo) * 4) as u64;
-                // trainer pushes the chunk, PS answers with the moved chunk
-                net.transfer(trainer, s.node, chunk_bytes);
-                let gap = HogwildBuffer::elastic_pair(local, &self.central, lo, hi, alpha);
-                net.transfer(s.node, trainer, chunk_bytes);
-                gap_weighted += gap as f64 * (hi - lo) as f64;
-                bytes += 2 * chunk_bytes;
-                pushed += 1;
-                lo = hi;
+                // the elastic move below rewrites the chunk, so the
+                // cached scan is stale the moment we push
+                if let Some(c) = &mut cache {
+                    c.entry(k).valid = false;
+                }
             }
+            let chunk_bytes = ((hi - lo) * 4) as u64;
+            // trainer pushes the chunk, PS answers with the moved chunk
+            net.transfer(trainer, node, chunk_bytes);
+            let gap = HogwildBuffer::elastic_pair(local, &self.central, lo, hi, alpha);
+            net.transfer(node, trainer, chunk_bytes);
+            gap_weighted += gap as f64 * (hi - lo) as f64;
+            bytes += 2 * chunk_bytes;
+            pushed += 1;
         }
         self.rounds.fetch_add(1, Relaxed);
         self.bytes_moved.fetch_add(bytes, Relaxed);
         self.chunks_pushed.fetch_add(pushed, Relaxed);
         self.chunks_skipped.fetch_add(skipped, Relaxed);
+        self.chunks_scan_skipped.fetch_add(scan_skipped, Relaxed);
         PushStats {
             gap: (gap_weighted / self.central.len().max(1) as f64) as f32,
             bytes,
             chunks_pushed: pushed,
             chunks_skipped: skipped,
+            chunks_scan_skipped: scan_skipped,
         }
     }
 
@@ -230,7 +517,38 @@ impl SyncPsGroup {
             bytes_moved: self.bytes_moved.load(Relaxed),
             chunks_pushed: self.chunks_pushed.load(Relaxed),
             chunks_skipped: self.chunks_skipped.load(Relaxed),
+            chunks_scan_skipped: self.chunks_scan_skipped.load(Relaxed),
             full_round_bytes: self.round_bytes(),
+        }
+    }
+
+    /// The single source of truth for the push-chunk walk: `(lo, hi, shard
+    /// node)` of every chunk, in round order, allocation-free (the sync
+    /// loop runs it every shadow round). Both the sync loop and the public
+    /// [`SyncPsGroup::push_chunk_ranges`] derive from this, so
+    /// [`DeltaScanCache`] ordinals can never drift between them.
+    fn push_chunks(&self) -> impl Iterator<Item = (usize, usize, NodeId)> + '_ {
+        self.shards.iter().flat_map(move |s| {
+            let step = if self.chunk_elems == 0 { (s.hi - s.lo).max(1) } else { self.chunk_elems };
+            (s.lo..s.hi)
+                .step_by(step)
+                .map(move |lo| (lo, (lo + step).min(s.hi), s.node))
+        })
+    }
+
+    /// The `[lo, hi)` ranges of every push chunk, in the order one elastic
+    /// round visits them (== [`DeltaScanCache`] ordinals).
+    pub fn push_chunk_ranges(&self) -> Vec<(usize, usize)> {
+        self.push_chunks().map(|(lo, hi, _)| (lo, hi)).collect()
+    }
+
+    /// The max-|Δ| threshold the *next* round would gate at (diagnostic;
+    /// adaptive mode tracks the sketch, so this moves between rounds).
+    pub fn current_gate(&self) -> f32 {
+        if self.gating_enabled() {
+            self.round_gate()
+        } else {
+            -1.0
         }
     }
 
@@ -394,5 +712,165 @@ mod tests {
         let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
         assert_eq!(st.chunks_skipped, 0);
         assert_eq!(st.bytes, g.round_bytes());
+    }
+
+    #[test]
+    fn quantile_sketch_tracks_known_distribution() {
+        let sk = QuantileSketch::new(64);
+        assert_eq!(sk.quantile(0.5), None, "no answers before warmup");
+        for i in 0..64 {
+            sk.record(i as f32); // 0..63 uniform
+        }
+        assert_eq!(sk.samples(), 64);
+        // ceil(0.5*64)-1 = 31; exactly 32/64 samples are <= 31
+        assert_eq!(sk.quantile(0.5), Some(31.0));
+        assert_eq!(sk.quantile(0.25), Some(15.0));
+        // the window slides: overwrite with a shifted distribution
+        for i in 0..64 {
+            sk.record(1000.0 + i as f32);
+        }
+        assert_eq!(sk.quantile(0.5), Some(1031.0));
+        // non-finite samples are dropped, not poisoning total_cmp order
+        sk.record(f32::NAN);
+        assert_eq!(sk.quantile(1.0), Some(1063.0));
+    }
+
+    #[test]
+    fn adaptive_gate_skips_lowest_gap_chunks_after_warmup() {
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        // 64 chunks of 4 elems on one shard, target: skip half
+        let p = 256;
+        let g = SyncPsGroup::build(&vec![0.0; p], 1, &mut net)
+            .with_push_chunking(4, 0.0)
+            .with_adaptive_gate(0.5);
+        // chunk c has constant gap c+1 (no zero gap, strictly increasing)
+        let mk_local = |central: &HogwildBuffer| {
+            let mut lv = central.to_vec();
+            for (c, w) in lv.chunks_mut(4).enumerate() {
+                for x in w.iter_mut() {
+                    *x += (c + 1) as f32;
+                }
+            }
+            HogwildBuffer::from_slice(&lv)
+        };
+        // round 1: sketch empty + no fixed threshold -> nothing skips
+        let st = g.elastic_sync_stats(&mk_local(&g.central), 0.5, trainer, &net);
+        assert_eq!(st.chunks_skipped, 0);
+        assert_eq!(st.chunks_pushed, 64);
+        // round 2: the sketch saw gaps 1..=64, median 32 -> chunks 1..=32 skip
+        let st = g.elastic_sync_stats(&mk_local(&g.central), 0.5, trainer, &net);
+        assert_eq!(st.chunks_skipped, 32);
+        assert_eq!(st.chunks_pushed, 32);
+        // skipped chunks moved zero bytes on both legs
+        assert_eq!(st.bytes, 2 * 32 * 4 * 4);
+        assert!((g.traffic().skip_fraction() - 0.25).abs() < 1e-12); // 32 of 128
+        assert!(g.current_gate() > 0.0);
+    }
+
+    #[test]
+    fn scan_cache_reuses_untouched_chunks_and_rescans_pushed_ones() {
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let p = 64;
+        let g = SyncPsGroup::build(&vec![0.0; p], 2, &mut net).with_push_chunking(8, 1e-3);
+        // dirty tracking at push-chunk granularity on the trainer replica
+        let mut lv = vec![0.0f32; p];
+        for x in lv.iter_mut().take(8) {
+            *x = 4.0; // only chunk 0 diverges
+        }
+        let local = HogwildBuffer::from_slice(&lv).with_dirty_epochs(8);
+        let mut cache = DeltaScanCache::new();
+        // round 1: everything scanned (cold cache)
+        let st = g.elastic_sync_cached(&local, 0.5, trainer, &net, &mut cache);
+        assert_eq!(st.chunks_scan_skipped, 0);
+        assert_eq!(st.chunks_pushed, 1);
+        assert_eq!(st.chunks_skipped, 7);
+        // round 2: the 7 clean chunks were untouched -> scans reused; the
+        // pushed chunk was rewritten by the elastic move -> re-scanned
+        let st = g.elastic_sync_cached(&local, 0.5, trainer, &net, &mut cache);
+        assert_eq!(st.chunks_scan_skipped, 7);
+        assert!(!cache.scan_skipped(0), "pushed chunk must be re-scanned");
+        for k in 1..8 {
+            assert!(cache.scan_skipped(k), "untouched chunk {k} must reuse its scan");
+        }
+        // touching one clean chunk forces exactly its re-scan
+        local.set(17, 0.5); // chunk 2
+        let st = g.elastic_sync_cached(&local, 0.5, trainer, &net, &mut cache);
+        assert!(!cache.scan_skipped(2));
+        assert!(st.chunks_scan_skipped < 8);
+        // byte accounting still matches NIC counters exactly
+        let nic: u64 = g.shards.iter().map(|s| net.rx(s.node) + net.tx(s.node)).sum();
+        assert_eq!(nic, g.traffic().bytes_moved);
+    }
+
+    #[test]
+    fn scan_reuse_still_feeds_the_adaptive_sketch() {
+        // A reused (scan-skipped) chunk's cached gap still counts as this
+        // round's gap observation. If reuse bypassed the sketch, the gate
+        // would only ever see the rescanned (dirtier) subpopulation and the
+        // skip rate would drift above the target under the default
+        // dirty-epoch + adaptive-gate combination.
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let p = 64;
+        let g = SyncPsGroup::build(&vec![0.0; p], 1, &mut net)
+            .with_push_chunking(8, 0.0)
+            .with_adaptive_gate(0.5);
+        let local = HogwildBuffer::from_slice(&vec![0.0; p]).with_dirty_epochs(8);
+        let mut cache = DeltaScanCache::new();
+        // r1, r2: warmup gate pushes everything (entries invalidated each
+        // round); r3: gate reaches 0.0, all 8 chunks re-scan then skip
+        for _ in 0..3 {
+            g.elastic_sync_cached(&local, 0.5, trainer, &net, &mut cache);
+        }
+        let before = g.gap_sketch.as_ref().unwrap().samples();
+        // r4: every chunk untouched since its r3 scan -> all reused, and
+        // every reuse still lands one observation in the sketch
+        let st = g.elastic_sync_cached(&local, 0.5, trainer, &net, &mut cache);
+        assert_eq!(st.chunks_scan_skipped, 8);
+        assert_eq!(st.chunks_skipped, 8);
+        assert_eq!(g.gap_sketch.as_ref().unwrap().samples(), before + 8);
+    }
+
+    #[test]
+    fn cached_sync_without_dirty_tracking_always_scans() {
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let g = SyncPsGroup::build(&vec![0.0; 32], 1, &mut net).with_push_chunking(8, 1e-3);
+        let local = HogwildBuffer::from_slice(&vec![0.0; 32]); // untracked
+        let mut cache = DeltaScanCache::new();
+        for _ in 0..3 {
+            let st = g.elastic_sync_cached(&local, 0.5, trainer, &net, &mut cache);
+            assert_eq!(st.chunks_scan_skipped, 0);
+            assert_eq!(st.chunks_skipped, 4);
+        }
+    }
+
+    #[test]
+    fn snapshot_absorb_merges_counters() {
+        let a = PsTrafficSnapshot {
+            rounds: 2,
+            bytes_moved: 100,
+            chunks_pushed: 3,
+            chunks_skipped: 1,
+            chunks_scan_skipped: 1,
+            full_round_bytes: 80,
+        };
+        let mut m = PsTrafficSnapshot {
+            rounds: 0,
+            bytes_moved: 0,
+            chunks_pushed: 0,
+            chunks_skipped: 0,
+            chunks_scan_skipped: 0,
+            full_round_bytes: 0,
+        };
+        m.absorb(&a);
+        m.absorb(&a);
+        assert_eq!(m.rounds, 4);
+        assert_eq!(m.bytes_moved, 200);
+        assert_eq!(m.full_round_bytes, 80);
+        assert!((m.skip_fraction() - 0.25).abs() < 1e-12);
+        assert!((m.scan_skip_fraction() - 0.25).abs() < 1e-12);
     }
 }

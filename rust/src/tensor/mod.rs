@@ -13,22 +13,111 @@
 
 pub mod ops;
 
-use std::sync::atomic::{AtomicU32, Ordering::Relaxed};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Acquire, Ordering::Relaxed, Ordering::Release};
+
+/// Per-chunk write counters ("dirty epochs") for a [`HogwildBuffer`].
+///
+/// Every mutation of the buffer bumps the counter of each chunk it touches
+/// (*after* the element stores, with `Release` ordering), so a reader that
+/// `Acquire`-loads an unchanged [`HogwildBuffer::dirty_signature`] across two
+/// points in time knows no tracked write landed in between — the delta-gate
+/// scan in [`crate::sync::ps`] uses this to skip re-scanning chunks a
+/// trainer's workers never touched since the last push.
+///
+/// Precision caveat (deliberate, Hogwild-class): the guarantee is exact for
+/// writes that are quiescent by signature-read time. A write racing the
+/// signature read can have its element stores become visible while its
+/// epoch bump is still in flight, so one round may reuse a scan that
+/// misses that in-flight write — the same transient staleness a fresh racy
+/// scan concurrent with the write could exhibit. The bump lands strictly
+/// after its stores, so the *next* signature read observes it and forces a
+/// re-scan; staleness is bounded to one round per racing write.
+/// Tracking is opt-in ([`HogwildBuffer::with_dirty_epochs`]); untracked
+/// buffers pay one branch per bulk write, nothing per element.
+#[derive(Debug)]
+pub struct DirtyEpochs {
+    chunk_elems: usize,
+    epochs: Vec<AtomicU64>,
+}
+
+impl DirtyEpochs {
+    fn new(len: usize, chunk_elems: usize) -> Self {
+        let chunk_elems = chunk_elems.max(1);
+        let chunks = len.div_ceil(chunk_elems).max(1);
+        let mut epochs = Vec::with_capacity(chunks);
+        epochs.resize_with(chunks, || AtomicU64::new(0));
+        Self { chunk_elems, epochs }
+    }
+
+    fn mark(&self, lo: usize, hi: usize) {
+        if hi <= lo {
+            return;
+        }
+        for c in lo / self.chunk_elems..=(hi - 1) / self.chunk_elems {
+            self.epochs[c].fetch_add(1, Release);
+        }
+    }
+
+    fn signature(&self, lo: usize, hi: usize) -> u64 {
+        if hi <= lo {
+            return 0;
+        }
+        let mut sig = 0u64;
+        for c in lo / self.chunk_elems..=(hi - 1) / self.chunk_elems {
+            sig = sig.wrapping_add(self.epochs[c].load(Acquire));
+        }
+        sig
+    }
+}
 
 /// Lock-free shared f32 buffer for Hogwild parameter access.
 pub struct HogwildBuffer {
     data: Vec<AtomicU32>,
+    /// optional per-chunk write tracking (delta-gate scan skip)
+    dirty: Option<DirtyEpochs>,
 }
 
 impl HogwildBuffer {
     pub fn zeros(len: usize) -> Self {
         let mut data = Vec::with_capacity(len);
         data.resize_with(len, || AtomicU32::new(0));
-        Self { data }
+        Self { data, dirty: None }
     }
 
     pub fn from_slice(src: &[f32]) -> Self {
-        Self { data: src.iter().map(|&x| AtomicU32::new(x.to_bits())).collect() }
+        Self { data: src.iter().map(|&x| AtomicU32::new(x.to_bits())).collect(), dirty: None }
+    }
+
+    /// Enable per-chunk dirty-epoch tracking at `chunk_elems` granularity
+    /// (see [`DirtyEpochs`]). Builder-phase only.
+    pub fn with_dirty_epochs(mut self, chunk_elems: usize) -> Self {
+        self.dirty = Some(DirtyEpochs::new(self.len(), chunk_elems));
+        self
+    }
+
+    /// Does this buffer track per-chunk write epochs?
+    pub fn tracks_dirty_epochs(&self) -> bool {
+        self.dirty.is_some()
+    }
+
+    /// Record a write to `[lo, hi)` in the dirty-epoch table. The bulk write
+    /// APIs below call this themselves; callers mutating through the raw
+    /// [`HogwildBuffer::range`] view must call it explicitly after their
+    /// stores (bump-after-write is what makes an unchanged signature mean
+    /// "no write completed in between").
+    #[inline]
+    pub fn mark_dirty_range(&self, lo: usize, hi: usize) {
+        if let Some(d) = &self.dirty {
+            d.mark(lo, hi);
+        }
+    }
+
+    /// Summed write epochs of the chunks overlapping `[lo, hi)`, or `None`
+    /// when this buffer doesn't track dirty epochs. Two equal signatures
+    /// bracket a write-free window over the range.
+    #[inline]
+    pub fn dirty_signature(&self, lo: usize, hi: usize) -> Option<u64> {
+        self.dirty.as_ref().map(|d| d.signature(lo, hi))
     }
 
     #[inline]
@@ -46,8 +135,14 @@ impl HogwildBuffer {
     }
 
     #[inline]
-    pub fn set(&self, i: usize, v: f32) {
+    fn store_unmarked(&self, i: usize, v: f32) {
         self.data[i].store(v.to_bits(), Relaxed);
+    }
+
+    #[inline]
+    pub fn set(&self, i: usize, v: f32) {
+        self.store_unmarked(i, v);
+        self.mark_dirty_range(i, i + 1);
     }
 
     /// Racy elementwise `self[i] += delta[i]` (Hogwild add — lost updates
@@ -58,6 +153,7 @@ impl HogwildBuffer {
             let v = f32::from_bits(a.load(Relaxed)) + d;
             a.store(v.to_bits(), Relaxed);
         }
+        self.mark_dirty_range(0, delta.len());
     }
 
     /// Racy `self[i] += scale * delta[i]`.
@@ -67,6 +163,7 @@ impl HogwildBuffer {
             let v = f32::from_bits(a.load(Relaxed)) + scale * d;
             a.store(v.to_bits(), Relaxed);
         }
+        self.mark_dirty_range(0, delta.len());
     }
 
     /// Loss-free atomic add on one element (CAS loop). Used where the *sum*
@@ -77,14 +174,17 @@ impl HogwildBuffer {
         loop {
             let new = (f32::from_bits(cur) + d).to_bits();
             match a.compare_exchange_weak(cur, new, Relaxed, Relaxed) {
-                Ok(_) => return,
+                Ok(_) => break,
                 Err(c) => cur = c,
             }
         }
+        self.mark_dirty_range(i, i + 1);
     }
 
     /// Raw atomic view of a range — the bounds check happens once here
     /// instead of per element (§Perf: embedding pooling/update hot path).
+    /// Writers through this view must [`HogwildBuffer::mark_dirty_range`]
+    /// themselves if the buffer tracks dirty epochs.
     #[inline]
     pub fn range(&self, lo: usize, hi: usize) -> &[AtomicU32] {
         &self.data[lo..hi]
@@ -106,6 +206,7 @@ impl HogwildBuffer {
             let v = f32::from_bits(a.load(Relaxed)) - scale * g;
             a.store(v.to_bits(), Relaxed);
         }
+        self.mark_dirty_range(lo, lo + grad.len());
     }
 
     /// Snapshot into a caller-provided buffer (no allocation on hot path).
@@ -127,6 +228,7 @@ impl HogwildBuffer {
         for (a, &s) in self.data.iter().zip(src) {
             a.store(s.to_bits(), Relaxed);
         }
+        self.mark_dirty_range(0, src.len());
     }
 
     /// Racy elastic interpolation toward a plain slice:
@@ -138,6 +240,7 @@ impl HogwildBuffer {
             let v = f32::from_bits(a.load(Relaxed));
             a.store((v + alpha * (t - v)).to_bits(), Relaxed);
         }
+        self.mark_dirty_range(0, target.len());
     }
 
     /// Symmetric-pair elastic move between two shared buffers over a range:
@@ -151,9 +254,12 @@ impl HogwildBuffer {
             let c = central.get(i);
             let d = l - c;
             gap += d.abs() as f64;
-            central.set(i, c + alpha * d);
-            local.set(i, l - alpha * d);
+            central.store_unmarked(i, c + alpha * d);
+            local.store_unmarked(i, l - alpha * d);
         }
+        // one dirty bump per buffer per chunk, not one per element
+        central.mark_dirty_range(lo, hi);
+        local.mark_dirty_range(lo, hi);
         if hi > lo { (gap / (hi - lo) as f64) as f32 } else { 0.0 }
     }
 }
@@ -240,6 +346,50 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(b.get(0), 40_000.0);
+    }
+
+    #[test]
+    fn dirty_signature_tracks_every_write_api() {
+        let b = HogwildBuffer::from_slice(&[0.0; 16]).with_dirty_epochs(4);
+        assert!(b.tracks_dirty_epochs());
+        let sig0 = b.dirty_signature(0, 16).unwrap();
+        b.set(5, 1.0); // chunk 1
+        assert_ne!(b.dirty_signature(4, 8), Some(0));
+        assert_eq!(b.dirty_signature(0, 4), Some(0), "untouched chunk stays clean");
+        let sig1 = b.dirty_signature(0, 16).unwrap();
+        assert_ne!(sig0, sig1);
+        b.axpy_range(9, 0.5, &[1.0, 1.0]); // chunk 2 only
+        assert_ne!(b.dirty_signature(8, 12), Some(0));
+        assert_eq!(b.dirty_signature(12, 16), Some(0));
+        b.fetch_add_exact(14, 1.0); // chunk 3
+        assert_ne!(b.dirty_signature(12, 16), Some(0));
+        // whole-vector writes bump every chunk
+        let before: Vec<u64> =
+            (0..4).map(|c| b.dirty_signature(c * 4, c * 4 + 4).unwrap()).collect();
+        b.axpy(0.1, &[1.0; 16]);
+        b.add_assign(&[0.0; 16]);
+        b.write_from(&[2.0; 16]);
+        b.lerp_toward_slice(&[0.0; 16], 0.5);
+        for (c, &prev) in before.iter().enumerate() {
+            assert_eq!(b.dirty_signature(c * 4, c * 4 + 4), Some(prev + 4));
+        }
+        // untracked buffers report None and pay nothing
+        let plain = HogwildBuffer::zeros(8);
+        assert!(!plain.tracks_dirty_epochs());
+        assert_eq!(plain.dirty_signature(0, 8), None);
+    }
+
+    #[test]
+    fn elastic_pair_marks_both_sides_once_per_range() {
+        let l = HogwildBuffer::from_slice(&[1.0; 8]).with_dirty_epochs(4);
+        let c = HogwildBuffer::from_slice(&[0.0; 8]).with_dirty_epochs(4);
+        let (l0, c0) = (l.dirty_signature(0, 4).unwrap(), c.dirty_signature(0, 4).unwrap());
+        HogwildBuffer::elastic_pair(&l, &c, 0, 4, 0.5);
+        assert_eq!(l.dirty_signature(0, 4), Some(l0 + 1));
+        assert_eq!(c.dirty_signature(0, 4), Some(c0 + 1));
+        // the untouched chunk stays clean on both buffers
+        assert_eq!(l.dirty_signature(4, 8), Some(0));
+        assert_eq!(c.dirty_signature(4, 8), Some(0));
     }
 
     #[test]

@@ -46,10 +46,21 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(id: usize, node: NodeId, w0: &[f32], cfg: &RunConfig) -> Self {
+        // per-chunk dirty epochs on the replica let the EASGD delta gate
+        // skip the gap scan for chunks no worker wrote since the last push;
+        // only worth the (tiny) write-path bookkeeping when a gate is on
+        let mut replica = HogwildBuffer::from_slice(w0);
+        if cfg.algo == crate::config::SyncAlgo::Easgd
+            && cfg.dirty_epoch_scan
+            && cfg.delta_gated()
+            && cfg.easgd_chunk_elems > 0
+        {
+            replica = replica.with_dirty_epochs(cfg.easgd_chunk_elems);
+        }
         Self {
             id,
             node,
-            replica: Arc::new(HogwildBuffer::from_slice(w0)),
+            replica: Arc::new(replica),
             optimizer: Arc::new(HogwildAdagrad::new(w0.len(), cfg.learning_rate, cfg.adagrad_eps)),
             gate: Arc::new(Gate::new()),
             iters: Arc::new(IterCounter::default()),
@@ -220,5 +231,25 @@ mod tests {
         assert!(!t.stop_shadow.load(Relaxed));
         stop_shadow(&t);
         assert!(t.stop_shadow.load(Relaxed));
+    }
+
+    #[test]
+    fn replica_tracks_dirty_epochs_only_under_a_delta_gate() {
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        // no gate -> no tracking overhead
+        let cfg = RunConfig::default();
+        let t = Trainer::new(0, node, &[0.0; 8], &cfg);
+        assert!(!t.replica.tracks_dirty_epochs());
+        // adaptive gate -> tracked
+        let cfg = RunConfig { delta_skip_target: 0.5, ..RunConfig::default() };
+        let t = Trainer::new(0, node, &[0.0; 8], &cfg);
+        assert!(t.replica.tracks_dirty_epochs());
+        // fixed gate -> tracked, unless the user disabled dirty scans
+        let cfg = RunConfig { delta_threshold: 1e-4, ..RunConfig::default() };
+        assert!(Trainer::new(0, node, &[0.0; 8], &cfg).replica.tracks_dirty_epochs());
+        let cfg =
+            RunConfig { delta_threshold: 1e-4, dirty_epoch_scan: false, ..RunConfig::default() };
+        assert!(!Trainer::new(0, node, &[0.0; 8], &cfg).replica.tracks_dirty_epochs());
     }
 }

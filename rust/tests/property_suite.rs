@@ -3,7 +3,9 @@
 
 use shadowsync::config::{EmbOptimizer, RunConfig, SyncAlgo, SyncMode};
 use shadowsync::metrics::{normalized_entropy, Metrics};
+use shadowsync::net::{Network, Role};
 use shadowsync::sim::CostModel;
+use shadowsync::sync::{DeltaScanCache, SyncPsGroup};
 use shadowsync::tensor::HogwildBuffer;
 use shadowsync::util::proptest::check;
 
@@ -110,6 +112,103 @@ fn ne_is_scale_free_and_one_at_base_rate() {
         let better = normalized_entropy(h * 0.7, p);
         let worse = normalized_entropy(h * 1.3, p);
         assert!(better < 1.0 && worse > 1.0);
+    });
+}
+
+#[test]
+fn adaptive_gate_skip_rate_converges_to_target() {
+    // On synthetic gap distributions the adaptive quantile gate's observed
+    // skip rate converges to --delta-skip-target: per round, each chunk's
+    // max-gap is a fresh draw from a stationary continuous distribution, so
+    // gating at the sketch's target quantile skips ~target of the chunks.
+    check("adaptive-gate-convergence", 6, |g| {
+        let target = g.f32_in(0.2, 0.8);
+        let (chunk, chunks) = (16usize, 64usize);
+        let p = chunk * chunks;
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let group = SyncPsGroup::build(&vec![0.0; p], 1, &mut net)
+            .with_push_chunking(chunk, 0.0)
+            .with_adaptive_gate(target);
+        let (mut decisions, mut skips) = (0u64, 0u64);
+        for round in 0..50 {
+            // resample the local replica around the *current* central so
+            // the per-chunk max-gap distribution stays stationary even as
+            // pushes move w^PS: chunk gaps are iid uniform amplitudes
+            let mut lv = group.central.to_vec();
+            for c in 0..chunks {
+                let amp = g.f32_in(1e-4, 1.0);
+                for x in lv[c * chunk..(c + 1) * chunk].iter_mut() {
+                    *x += amp;
+                }
+            }
+            let local = HogwildBuffer::from_slice(&lv);
+            let st = group.elastic_sync_stats(&local, 0.5, trainer, &net);
+            if round >= 10 {
+                // past warmup: the sliding window is fully populated
+                decisions += st.chunks_pushed + st.chunks_skipped;
+                skips += st.chunks_skipped;
+            }
+        }
+        let rate = skips as f64 / decisions as f64;
+        assert!(
+            (rate - target as f64).abs() < 0.12,
+            "case {}: observed skip rate {rate:.3} vs target {target:.3}",
+            g.case
+        );
+    });
+}
+
+#[test]
+fn dirty_epoch_scan_skip_never_hides_changed_elements() {
+    // The dirty-epoch fast path may only reuse a chunk's cached scan when
+    // *no element of that chunk changed since the scan was taken*: under
+    // randomized writes, every scan-skipped chunk's contents must be
+    // bit-identical to what they were at its last real scan. (Shard
+    // boundaries at p=200 with 2 PSs misalign the push chunks against the
+    // dirty-epoch grid, so the overlap mapping is exercised too.)
+    check("dirty-epoch-scan-safety", 10, |g| {
+        let p = 200usize;
+        let chunk = 8usize;
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let group = SyncPsGroup::build(&g.vec_normal(p, 1.0), 2, &mut net)
+            .with_push_chunking(chunk, 1e-3);
+        let local = HogwildBuffer::from_slice(&g.vec_normal(p, 1.0)).with_dirty_epochs(chunk);
+        let mut cache = DeltaScanCache::new();
+        let ranges = group.push_chunk_ranges();
+        // contents of each push chunk as of its last real scan
+        let mut at_last_scan: Vec<Vec<f32>> = vec![Vec::new(); ranges.len()];
+        let mut total_scan_skips = 0u64;
+        for _ in 0..40 {
+            // workers: a few random subrange writes between rounds
+            for _ in 0..g.usize_in(0, 3) {
+                let lo = g.usize_in(0, p - 4);
+                let len = g.usize_in(1, 4);
+                let noise = g.vec_normal(len, 0.01);
+                local.axpy_range(lo, 1.0, &noise);
+            }
+            let before = local.to_vec();
+            let st = group.elastic_sync_cached(&local, 0.4, trainer, &net, &mut cache);
+            total_scan_skips += st.chunks_scan_skipped;
+            for (k, &(lo, hi)) in ranges.iter().enumerate() {
+                if cache.scan_skipped(k) {
+                    assert_eq!(
+                        &before[lo..hi],
+                        &at_last_scan[k][..],
+                        "chunk {k} [{lo},{hi}) scan-skipped despite changed elements"
+                    );
+                } else {
+                    // a real scan happened this round: record the contents
+                    // it observed (pre-push, == the pre-round snapshot,
+                    // since the elastic move runs after the scan)
+                    at_last_scan[k] = before[lo..hi].to_vec();
+                }
+            }
+        }
+        // replicas converge under the gate, so the fast path must have
+        // fired for untouched chunks
+        assert!(total_scan_skips > 0, "dirty-epoch fast path never engaged");
     });
 }
 

@@ -2,6 +2,7 @@
 //! needed): shadow threads + Hogwild workers + sync PSs / AllReduce groups
 //! interacting on shared replicas.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::Arc;
 use std::time::Duration;
@@ -10,9 +11,11 @@ use shadowsync::metrics::Metrics;
 use shadowsync::net::{Network, Role};
 use shadowsync::sync::driver::spawn_shadow;
 use shadowsync::sync::{
-    AllReduceGroup, BmufSync, EasgdSync, MaSync, SyncCtx, SyncPsGroup, SyncStrategy,
+    AllReduceGroup, BmufSync, EasgdSync, MaSync, ReduceEngine, SyncCtx, SyncPsGroup,
+    SyncStrategy,
 };
 use shadowsync::tensor::HogwildBuffer;
+use shadowsync::util::rng::Rng;
 
 /// Simulated "workers": threads that keep pulling a replica toward a
 /// trainer-specific target while shadow threads sync replicas to consensus.
@@ -274,6 +277,148 @@ fn delta_gated_easgd_metrics_agree_with_nic_counters() {
     assert!(traffic.push_fraction() < 1.0);
     // total bytes stayed strictly below 30 full rounds
     assert!(snap.sync_bytes < 30 * group.round_bytes());
+}
+
+/// Churn stress for the overlapped (double-buffered) engine: members leave
+/// and rejoin at staggered points while rounds pipeline across the two
+/// parity banks, and *every* generation's mean must stay bit-identical to a
+/// single-threaded fold of its contributions in ring-position order — the
+/// engine's fixed summation order survives deposit/reduce overlap and
+/// membership churn.
+#[test]
+fn churn_with_overlapped_rounds_stays_bit_identical_to_position_order_reference() {
+    let (n, p, chunks) = (6usize, 193usize, 5usize);
+    let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(chunks));
+    assert_eq!(g.engine(), ReduceEngine::Overlapped);
+    let mut net = Network::new(None);
+    let nodes: Vec<_> = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
+    let net = Arc::new(net);
+    let mut hs = Vec::new();
+    for t in 0..n {
+        let g = g.clone();
+        let net = net.clone();
+        let node = nodes[t];
+        hs.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xC4A2 ^ t as u64);
+            let my_rounds = 60 + (rng.next_u64() % 60) as usize;
+            // each thread churns (leaves, then rejoins) once, at its own
+            // staggered point, between two of its own rounds
+            let churn_at = 5 + t * 9;
+            let mut log = Vec::with_capacity(my_rounds);
+            for r in 0..my_rounds {
+                if r == churn_at {
+                    // churn window: sit out until (bounded-wait) at least
+                    // one round closed without us, then rejoin
+                    let gen0 = g.completed_rounds();
+                    g.leave();
+                    for _ in 0..1_000_000 {
+                        if g.completed_rounds() > gen0 {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                    g.join().expect("rejoin after leave");
+                }
+                // fractional values whose f32 sum is association-order
+                // sensitive — any reordering would change the bits
+                let v: Vec<f32> = (0..p)
+                    .map(|_| (rng.next_u64() % 1_000_003) as f32 * 1e-3 - 500.0)
+                    .collect();
+                let mut buf = v.clone();
+                let out = g.allreduce_mean(&mut buf, node, &net).unwrap();
+                log.push((out.generation, out.position, out.contributors, v, buf));
+            }
+            g.leave();
+            log
+        }));
+    }
+    let mut by_gen: HashMap<u64, Vec<(usize, usize, Vec<f32>, Vec<f32>)>> = HashMap::new();
+    for h in hs {
+        for (gen, pos, parts, v, mean) in h.join().unwrap() {
+            by_gen.entry(gen).or_default().push((pos, parts, v, mean));
+        }
+    }
+    assert!(by_gen.len() >= 60, "expected 60+ generations, got {}", by_gen.len());
+    let mut shrunk_rounds = 0;
+    for (gen, mut entries) in by_gen {
+        entries.sort_by_key(|e| e.0);
+        if entries.len() < n {
+            shrunk_rounds += 1; // closed while someone was churned out
+        }
+        // the reported contributor count is exact for every member
+        for (pos, parts, _, _) in &entries {
+            assert_eq!(*parts, entries.len(), "gen {gen} pos {pos}");
+        }
+        // bit-identical to the position-order fold
+        let mut reference = entries[0].2.clone();
+        for e in &entries[1..] {
+            for (acc, &x) in reference.iter_mut().zip(&e.2) {
+                *acc += x;
+            }
+        }
+        let inv = 1.0 / entries.len() as f32;
+        for acc in reference.iter_mut() {
+            *acc *= inv;
+        }
+        for (pos, _, _, mean) in &entries {
+            for (a, b) in mean.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "gen {gen} pos {pos}: {a} != {b}");
+            }
+        }
+    }
+    assert_eq!(g.active(), 0);
+    // churn must actually have produced shrunken rounds for this test to
+    // mean anything (6 staggered leave/rejoin windows over ~60 rounds)
+    assert!(shrunk_rounds > 0, "no round ever closed during a churn window");
+}
+
+/// Acceptance: the adaptive quantile gate + dirty-epoch scan skips keep
+/// `metrics.sync_bytes` exactly equal to the sync-PS NIC counters, and the
+/// live skip-rate metric reflects the gate's decisions.
+#[test]
+fn adaptive_gate_with_dirty_epochs_tracks_nic_counters_exactly() {
+    let p = 256;
+    let chunk = 16;
+    let mut net = Network::new(None);
+    let t = net.add_node(Role::Trainer);
+    let group = Arc::new(
+        SyncPsGroup::build(&vec![0.0; p], 2, &mut net)
+            .with_push_chunking(chunk, 0.0)
+            .with_adaptive_gate(0.5),
+    );
+    let metrics = Metrics::new();
+    let local = HogwildBuffer::from_slice(&vec![0.0; p]).with_dirty_epochs(chunk);
+    let mut s = EasgdSync::new(group.clone(), 0.4);
+    let ctx = SyncCtx { local: &local, trainer_node: t, net: &net, metrics: &metrics };
+    let mut rng = Rng::new(0xD1A7);
+    for round in 0..50 {
+        // perturb a few random subranges between rounds (workers writing)
+        for _ in 0..(round % 4) {
+            let lo = (rng.next_u64() as usize) % (p - 8);
+            let noise: Vec<f32> = (0..8).map(|_| rng.u01() - 0.5).collect();
+            local.axpy_range(lo, 0.3, &noise);
+        }
+        s.sync_round(&ctx).unwrap();
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.syncs, 50);
+    assert_eq!(
+        net.role_bytes(Role::SyncPs),
+        snap.sync_bytes,
+        "metrics.sync_bytes must track the sync-PS NICs exactly under \
+         adaptive gating + dirty-epoch skips"
+    );
+    let traffic = group.traffic();
+    assert_eq!(traffic.bytes_moved, snap.sync_bytes);
+    // the chunk counters flow identically through metrics and the snapshot
+    assert_eq!(snap.sync_chunks_pushed, traffic.chunks_pushed);
+    assert_eq!(snap.sync_chunks_skipped, traffic.chunks_skipped);
+    assert_eq!(snap.sync_scan_skipped, traffic.chunks_scan_skipped);
+    // the adaptive gate engaged (post-warmup rounds skip), and idle chunks
+    // exercised the dirty-epoch scan fast path
+    assert!(traffic.chunks_skipped > 0, "adaptive gate never skipped");
+    assert!(traffic.chunks_scan_skipped > 0, "dirty epochs never skipped a scan");
+    assert!(snap.sync_skip_rate() > 0.0);
 }
 
 /// Same acceptance check for BMUF, on a flat (single-chunk) ring.
