@@ -64,7 +64,7 @@ fn main() -> Result<()> {
     let local = HogwildBuffer::from_slice(&vec![1.0; 8]);
     let metrics = Metrics::new();
     let mut s = SignEasgd { group: group.clone(), step: 0.05 };
-    let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+    let ctx = SyncCtx::full(&local, node, &net, &metrics);
     for _ in 0..40 {
         s.sync_round(&ctx)?;
     }

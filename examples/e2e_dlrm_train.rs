@@ -68,7 +68,10 @@ fn main() -> Result<()> {
         let t0 = Instant::now();
         let mut last_examples = 0u64;
         let mut last_loss_sum = 0f64;
-        println!("\n{:>8} {:>10} {:>12} {:>12} {:>10}", "sec", "examples", "window loss", "cum loss", "EPS");
+        println!(
+            "\n{:>8} {:>10} {:>12} {:>12} {:>10}",
+            "sec", "examples", "window loss", "cum loss", "EPS"
+        );
         let mut curve = Vec::new();
         while !stop2.load(Relaxed) {
             std::thread::sleep(Duration::from_millis(1000));

@@ -8,7 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
@@ -150,6 +150,77 @@ impl std::fmt::Display for SyncAlgo {
     }
 }
 
+/// Per-partition sync-algorithm map for the partitioned shadow fabric,
+/// parsed from `--algo-map easgd:0-3,ma:4-7` (inclusive partition-index
+/// ranges; a single index like `bmuf:2` is also accepted). Partitions not
+/// named fall back to the run's base `algo` — the paper's §3.2 hybrid
+/// scenario of different algorithms per partition.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct AlgoMap {
+    /// `(algo, lo, hi)` with `lo..=hi` partition indices, non-overlapping
+    entries: Vec<(SyncAlgo, usize, usize)>,
+}
+
+impl AlgoMap {
+    /// The algorithm mapped to `partition`, if any entry covers it.
+    pub fn algo_for(&self, partition: usize) -> Option<SyncAlgo> {
+        self.entries
+            .iter()
+            .find(|(_, lo, hi)| (*lo..=*hi).contains(&partition))
+            .map(|(a, _, _)| *a)
+    }
+
+    /// Highest partition index any entry names (validation: must stay
+    /// below `sync_partitions`).
+    pub fn max_partition(&self) -> Option<usize> {
+        self.entries.iter().map(|(_, _, hi)| *hi).max()
+    }
+
+    fn overlaps(&self) -> bool {
+        for (i, (_, lo_a, hi_a)) in self.entries.iter().enumerate() {
+            for (_, lo_b, hi_b) in &self.entries[i + 1..] {
+                if lo_a <= hi_b && lo_b <= hi_a {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+impl std::str::FromStr for AlgoMap {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (algo, range) = part
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| anyhow!("algo-map entry {part:?} is not algo:lo-hi"))?;
+            let algo: SyncAlgo = algo.trim().parse()?;
+            let (lo, hi) = match range.trim().split_once('-') {
+                Some((a, b)) => (a.trim().parse::<usize>()?, b.trim().parse::<usize>()?),
+                None => {
+                    let i = range.trim().parse::<usize>()?;
+                    (i, i)
+                }
+            };
+            if lo > hi {
+                bail!("algo-map range {range:?} is reversed");
+            }
+            entries.push((algo, lo, hi));
+        }
+        if entries.is_empty() {
+            bail!("empty --algo-map");
+        }
+        let map = Self { entries };
+        if map.overlaps() {
+            bail!("algo-map partition ranges overlap");
+        }
+        Ok(map)
+    }
+}
+
 /// Shadow (background thread, free-running) vs fixed-rate (foreground,
 /// every-k-iterations) synchronization — the paper's central comparison.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -261,6 +332,17 @@ pub struct RunConfig {
     pub reader_rate_limit: Option<f64>,
     /// throttle between shadow sync rounds (0 = free-running)
     pub shadow_interval_ms: u64,
+    /// number of contiguous sync partitions `P` of the dense vector (the
+    /// partitioned shadow fabric; 1 = one strategy over the whole replica,
+    /// the pre-partitioning behaviour — bit for bit except for adaptive
+    /// gating, which now runs per-trainer sketches by design)
+    pub sync_partitions: usize,
+    /// shadow threads `S` per trainer servicing the partitions (`S ≤ P`);
+    /// sync frequency per partition scales with `S`
+    pub shadow_threads: usize,
+    /// optional per-partition algorithm map (`--algo-map easgd:0-1,ma:2-3`);
+    /// unmapped partitions run `algo`
+    pub algo_map: Option<AlgoMap>,
     /// chunk count `C` of the MA/BMUF ring-AllReduce schedule: the
     /// parameter vector is reduced as `C` pipelined reduce-scatter +
     /// all-gather rings (1 = flat single-chunk collective)
@@ -316,6 +398,9 @@ impl Default for RunConfig {
             reader_queue_depth: 4,
             reader_rate_limit: None,
             shadow_interval_ms: 0,
+            sync_partitions: 1,
+            shadow_threads: 1,
+            algo_map: None,
             allreduce_chunks: 8,
             reduce_engine: crate::sync::ReduceEngine::Overlapped,
             easgd_chunk_elems: 4096,
@@ -336,8 +421,32 @@ impl RunConfig {
         if self.num_embedding_ps == 0 {
             bail!("need at least one embedding PS");
         }
-        if self.algo == SyncAlgo::Easgd && self.num_sync_ps == 0 {
-            bail!("EASGD is centralized: need at least one sync PS");
+        if self.sync_partitions == 0 {
+            bail!("sync_partitions must be >= 1");
+        }
+        if self.shadow_threads == 0 || self.shadow_threads > self.sync_partitions {
+            bail!(
+                "shadow_threads must be in [1, sync_partitions = {}]",
+                self.sync_partitions
+            );
+        }
+        if (self.sync_partitions > 1 || self.algo_map.is_some())
+            && !matches!(self.mode, SyncMode::Shadow)
+        {
+            bail!("the partitioned fabric (--sync-partitions / --algo-map) is shadow-mode only");
+        }
+        if let Some(m) = &self.algo_map {
+            if let Some(max) = m.max_partition() {
+                if max >= self.sync_partitions {
+                    bail!(
+                        "--algo-map names partition {max} but only {} partitions exist",
+                        self.sync_partitions
+                    );
+                }
+            }
+        }
+        if self.any_easgd() && self.num_sync_ps == 0 {
+            bail!("EASGD partitions are centralized: need at least one sync PS");
         }
         if !(0.0..=1.0).contains(&self.alpha) {
             bail!("alpha must be in [0, 1]");
@@ -356,12 +465,23 @@ impl RunConfig {
 
     /// Is any EASGD delta gate (fixed threshold or adaptive skip target)
     /// configured? The trainer's dirty-epoch wiring keys off this; it must
-    /// stay in sync with `SyncPsGroup`'s own gating predicate (which reads
-    /// the group fields the coordinator builds *from* this config) — when
-    /// adding a gating mode, update both or trainer replicas lose their
-    /// scan-skip fast path silently.
+    /// stay in sync with `DeltaGate::enabled` (strategies build their gates
+    /// *from* this config) — when adding a gating mode, update both or
+    /// trainer replicas lose their scan-skip fast path silently.
     pub fn delta_gated(&self) -> bool {
         self.delta_threshold > 0.0 || self.delta_skip_target > 0.0
+    }
+
+    /// The sync algorithm partition `idx` runs: the `--algo-map` entry
+    /// covering it, or the run-level `algo` otherwise.
+    pub fn partition_algo(&self, idx: usize) -> SyncAlgo {
+        self.algo_map.as_ref().and_then(|m| m.algo_for(idx)).unwrap_or(self.algo)
+    }
+
+    /// Does any partition run EASGD (and therefore need the sync-PS tier
+    /// and, when gated, dirty-epoch-tracked replicas)?
+    pub fn any_easgd(&self) -> bool {
+        (0..self.sync_partitions.max(1)).any(|i| self.partition_algo(i) == SyncAlgo::Easgd)
     }
 
     /// Example Level Parallelism (paper Definition 2):
@@ -456,6 +576,53 @@ mod tests {
         assert!(c.validate().is_err());
         c.delta_skip_target = f32::NAN;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn algo_map_parses_ranges_and_single_indices() {
+        let m: AlgoMap = "easgd:0-3,ma:4-7,bmuf:8".parse().unwrap();
+        assert_eq!(m.algo_for(0), Some(SyncAlgo::Easgd));
+        assert_eq!(m.algo_for(3), Some(SyncAlgo::Easgd));
+        assert_eq!(m.algo_for(5), Some(SyncAlgo::Ma));
+        assert_eq!(m.algo_for(8), Some(SyncAlgo::Bmuf));
+        assert_eq!(m.algo_for(9), None, "unmapped partitions fall back to --algo");
+        assert_eq!(m.max_partition(), Some(8));
+        // malformed inputs are rejected
+        assert!("".parse::<AlgoMap>().is_err());
+        assert!("easgd".parse::<AlgoMap>().is_err());
+        assert!("nope:0-1".parse::<AlgoMap>().is_err());
+        assert!("easgd:3-1".parse::<AlgoMap>().is_err());
+        assert!("easgd:0-3,ma:2-5".parse::<AlgoMap>().is_err(), "overlap must fail");
+    }
+
+    #[test]
+    fn partitioned_fabric_validation() {
+        let mut c = RunConfig { sync_partitions: 4, shadow_threads: 2, ..RunConfig::default() };
+        c.validate().unwrap();
+        // S > P is rejected
+        c.shadow_threads = 5;
+        assert!(c.validate().is_err());
+        c.shadow_threads = 2;
+        // partitioning is a shadow-mode feature
+        c.mode = SyncMode::FixedRate { gap: 5 };
+        assert!(c.validate().is_err());
+        c.mode = SyncMode::Shadow;
+        // the algo map must stay inside the partition count
+        c.algo_map = Some("ma:0-7".parse().unwrap());
+        assert!(c.validate().is_err());
+        c.algo_map = Some("ma:0-3".parse().unwrap());
+        // no partition runs EASGD now, so no sync PS is needed
+        c.num_sync_ps = 0;
+        c.validate().unwrap();
+        assert!(!c.any_easgd());
+        // a hybrid map with an EASGD partition needs the sync-PS tier back
+        c.algo_map = Some("easgd:0-1,ma:2-3".parse().unwrap());
+        assert!(c.validate().is_err());
+        c.num_sync_ps = 1;
+        c.validate().unwrap();
+        assert!(c.any_easgd());
+        assert_eq!(c.partition_algo(0), SyncAlgo::Easgd);
+        assert_eq!(c.partition_algo(2), SyncAlgo::Ma);
     }
 
     #[test]

@@ -20,9 +20,9 @@ use crate::embedding::EmbeddingSystem;
 use crate::metrics::{EpsMeter, EvalAccum, Metrics, MetricsSnapshot};
 use crate::net::{Network, Role};
 use crate::runtime::{Model, Runtime};
-use crate::sync::driver::spawn_shadow;
+use crate::sync::driver::{spawn_shadow_pool, ShadowTask};
 use crate::sync::ps::PsTrafficSnapshot;
-use crate::sync::{AllReduceGroup, EasgdSync, SyncPsGroup};
+use crate::sync::{AllReduceGroup, EasgdSync, PartitionPlan, SyncPsGroup};
 use crate::trainer::{spawn_worker, ForegroundPlan, Trainer, WorkerEnv};
 
 /// Everything a finished run reports (feeds the experiment tables).
@@ -40,6 +40,9 @@ pub struct TrainOutcome {
     pub wall_secs: f64,
     /// paper Eq. 2
     pub avg_sync_gap: f64,
+    /// Eq. 2 per partition of the shadow fabric (empty when no shadow
+    /// pool ran, e.g. fixed-rate modes)
+    pub partition_gaps: Vec<f64>,
     pub metrics: MetricsSnapshot,
     /// bytes through the sync-PS tier (EASGD) or ring (MA/BMUF)
     pub sync_ps_bytes: u64,
@@ -67,8 +70,12 @@ pub struct Cluster {
     pub net: Arc<Network>,
     pub metrics: Arc<Metrics>,
     pub embeddings: Arc<EmbeddingSystem>,
+    /// the partitioned fabric's layout (one full-range partition for P=1)
+    pub plan: PartitionPlan,
     pub sync_ps: Option<Arc<SyncPsGroup>>,
-    pub group: Option<Arc<AllReduceGroup>>,
+    /// one ring fabric per decentralized partition, sized to its range
+    /// (None for EASGD/none partitions); indexed by partition
+    pub groups: Vec<Option<Arc<AllReduceGroup>>>,
     pub trainers: Vec<Trainer>,
     pub teacher: Arc<TeacherModel>,
 }
@@ -86,7 +93,8 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
     } else {
         None
     });
-    let trainer_nodes: Vec<_> = (0..cfg.num_trainers).map(|_| net.add_node(Role::Trainer)).collect();
+    let trainer_nodes: Vec<_> =
+        (0..cfg.num_trainers).map(|_| net.add_node(Role::Trainer)).collect();
     let embeddings = Arc::new(EmbeddingSystem::build(
         &meta,
         &cfg.embedding,
@@ -94,24 +102,33 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         &mut net,
         cfg.data_seed ^ 0xE0B5,
     )?);
-    let sync_ps = match cfg.algo {
+    // the partitioned fabric's layout: P contiguous LPT-balanced ranges,
+    // each mapped to its algorithm (P = 1: one full-range partition)
+    let plan = PartitionPlan::build(meta.num_params, cfg)?;
+    let sync_ps = if plan.uses(SyncAlgo::Easgd) {
         // chunked, delta-gated pushes: skipped chunks move zero bytes on
-        // either leg, and recorded sync bytes are the measured traffic;
-        // a positive skip target swaps the fixed threshold for the
-        // adaptive quantile gate
-        SyncAlgo::Easgd => Some(Arc::new(
+        // either leg, and recorded sync bytes are the measured traffic.
+        // The group-level gate serves the legacy whole-vector API; the
+        // strategies the fabric builds carry their own per-partition gates
+        Some(Arc::new(
             SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net)
                 .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold)
                 .with_adaptive_gate(cfg.delta_skip_target),
-        )),
-        _ => None,
+        ))
+    } else {
+        None
     };
-    // the decentralized algorithms share one chunked ring-AllReduce fabric;
-    // each trainer's hops are driven through (and attributed to) its own NIC
-    let group = match cfg.algo {
-        SyncAlgo::Ma | SyncAlgo::Bmuf => Some(crate::sync::build_group(cfg, meta.num_params)),
-        _ => None,
-    };
+    // each decentralized partition gets its own chunked ring-AllReduce
+    // fabric, sized to its range; every trainer's hops are driven through
+    // (and attributed to) its own NIC
+    let groups = plan
+        .partitions
+        .iter()
+        .map(|p| match p.algo {
+            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(crate::sync::build_group(cfg, p.range.len)),
+            _ => None,
+        })
+        .collect();
     let trainers = trainer_nodes
         .iter()
         .enumerate()
@@ -125,8 +142,9 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         net: Arc::new(net),
         metrics: Arc::new(Metrics::new()),
         embeddings,
+        plan,
         sync_ps,
-        group,
+        groups,
         trainers,
         teacher,
     })
@@ -166,17 +184,31 @@ pub fn train(cluster: &Cluster) -> Result<()> {
         // sync wiring per mode
         match cfg.mode {
             SyncMode::Shadow => {
-                if cfg.algo != SyncAlgo::None {
-                    let strategy = crate::sync::build_strategy(
-                        cfg,
-                        cluster.meta.num_params,
-                        trainer.id,
-                        &cluster.model.w0,
-                        cluster.sync_ps.clone(),
-                        cluster.group.clone(),
-                    )?;
-                    shadow_handles.push(spawn_shadow(
-                        strategy,
+                // one shadow task per non-trivial partition, serviced by
+                // the trainer's shadow pool (`--shadow-threads`)
+                let tasks = cluster
+                    .plan
+                    .partitions
+                    .iter()
+                    .filter(|p| p.algo != SyncAlgo::None)
+                    .map(|p| {
+                        Ok(ShadowTask {
+                            partition: p.index,
+                            range: p.range,
+                            strategy: crate::sync::build_strategy(
+                                cfg,
+                                p,
+                                trainer.id,
+                                &cluster.model.w0,
+                                cluster.sync_ps.clone(),
+                                cluster.groups[p.index].clone(),
+                            )?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                if !tasks.is_empty() {
+                    shadow_handles.push(spawn_shadow_pool(
+                        tasks,
                         trainer.replica.clone(),
                         trainer.node,
                         cluster.net.clone(),
@@ -184,6 +216,7 @@ pub fn train(cluster: &Cluster) -> Result<()> {
                         trainer.stop_shadow.clone(),
                         Duration::from_millis(cfg.shadow_interval_ms),
                         trainer.id,
+                        cfg.shadow_threads,
                     ));
                 }
                 for w in 0..cfg.worker_threads {
@@ -203,45 +236,43 @@ pub fn train(cluster: &Cluster) -> Result<()> {
                 for w in 0..cfg.worker_threads {
                     let plan = match cfg.algo {
                         SyncAlgo::Easgd => ForegroundPlan::DecayingEasgd {
-                            strategy: EasgdSync::new(
-                                cluster.sync_ps.clone().expect("easgd sync ps"),
-                                cfg.alpha,
-                            ),
+                            strategy: foreground_easgd(cfg, cluster),
                             start,
                             end,
                             total: per_worker_total,
                         },
                         _ => ForegroundPlan::None,
                     };
-                    worker_handles.push(spawn_worker(trainer, w, env(cluster), queue.clone(), plan));
+                    worker_handles
+                        .push(spawn_worker(trainer, w, env(cluster), queue.clone(), plan));
                 }
             }
             SyncMode::FixedRate { gap } => {
                 for w in 0..cfg.worker_threads {
                     let plan = match cfg.algo {
                         SyncAlgo::Easgd => ForegroundPlan::PerWorkerEasgd {
-                            strategy: EasgdSync::new(
-                                cluster.sync_ps.clone().expect("easgd sync ps"),
-                                cfg.alpha,
-                            ),
+                            strategy: foreground_easgd(cfg, cluster),
                             gap,
                         },
                         SyncAlgo::Ma | SyncAlgo::Bmuf if w == 0 => {
+                            // fixed-rate is whole-vector only (validated),
+                            // so partition 0 spans the full replica
                             ForegroundPlan::TrainerCollective {
                                 strategy: crate::sync::build_strategy(
                                     cfg,
-                                    cluster.meta.num_params,
+                                    &cluster.plan.partitions[0],
                                     trainer.id,
                                     &cluster.model.w0,
                                     cluster.sync_ps.clone(),
-                                    cluster.group.clone(),
+                                    cluster.groups[0].clone(),
                                 )?,
                                 gap,
                             }
                         }
                         _ => ForegroundPlan::None,
                     };
-                    worker_handles.push(spawn_worker(trainer, w, env(cluster), queue.clone(), plan));
+                    worker_handles
+                        .push(spawn_worker(trainer, w, env(cluster), queue.clone(), plan));
                 }
             }
         }
@@ -269,13 +300,29 @@ fn env(cluster: &Cluster) -> WorkerEnv {
     }
 }
 
+/// An `EasgdSync` for the foreground (fixed-rate / decaying) plans — the
+/// same per-instance gate wiring as the shadow fabric's partition
+/// strategies, via the one shared constructor.
+fn foreground_easgd(cfg: &RunConfig, cluster: &Cluster) -> EasgdSync {
+    crate::sync::easgd_from_cfg(cfg, cluster.sync_ps.clone().expect("easgd sync ps"))
+}
+
 /// Evaluate `w^(1)` + `h` on the held-out range and assemble the outcome.
 pub fn finish(cluster: Cluster) -> Result<TrainOutcome> {
     let cfg = &cluster.cfg;
-    let eps_meter = EpsMeter::start(); // wall time of eval excluded below
-    let _ = &eps_meter;
     let eval = evaluate(&cluster, cfg.eval_examples)?;
     let m = cluster.metrics.snapshot();
+    let partition_gaps = cluster.metrics.partition_sync_gaps();
+    // Eq. 2 under the partitioned fabric: `metrics.syncs` counts partition
+    // rounds, so the totals ratio would deflate the gap by ~P. When a
+    // shadow pool ran, report the mean *per-partition* gap instead (P = 1
+    // reduces to the classic totals ratio, same arithmetic); a starved
+    // partition's infinite gap deliberately poisons the mean.
+    let avg_sync_gap = if partition_gaps.is_empty() {
+        cluster.metrics.avg_sync_gap()
+    } else {
+        partition_gaps.iter().sum::<f64>() / partition_gaps.len() as f64
+    };
     Ok(TrainOutcome {
         label: cfg.label(),
         num_trainers: cfg.num_trainers,
@@ -284,7 +331,8 @@ pub fn finish(cluster: Cluster) -> Result<TrainOutcome> {
         eval,
         eps: 0.0,     // filled by run_timed
         wall_secs: 0.0,
-        avg_sync_gap: cluster.metrics.avg_sync_gap(),
+        avg_sync_gap,
+        partition_gaps,
         sync_ps_bytes: cluster.net.role_bytes(Role::SyncPs),
         sync_traffic: cluster.sync_ps.as_ref().map(|g| g.traffic()),
         metrics: m,
@@ -331,7 +379,12 @@ pub fn evaluate(cluster: &Cluster, n: u64) -> Result<EvalAccum> {
             &cluster.net,
         );
         let out = cluster.model.eval_step(&mut io, &batch.dense, &batch.labels)?;
-        accum.add(out.loss_sum as f64, out.pred_sum as f64, out.label_sum as f64, meta.batch as u64);
+        accum.add(
+            out.loss_sum as f64,
+            out.pred_sum as f64,
+            out.label_sum as f64,
+            meta.batch as u64,
+        );
     }
     Ok(accum)
 }

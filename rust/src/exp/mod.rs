@@ -67,6 +67,7 @@ pub const ALL_IDS: &[&str] = &[
     "ablate-elastic",
     "ablate-shadow-rate",
     "ablate-decay-gap",
+    "ablate-partitions",
     "calibrate",
 ];
 
@@ -85,6 +86,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "ablate-elastic" => ablate::run_elastic(opts)?,
         "ablate-shadow-rate" => ablate::run_shadow_rate(opts)?,
         "ablate-decay-gap" => ablate::run_decay_gap(opts)?,
+        "ablate-partitions" => ablate::run_partitions(opts)?,
         "calibrate" => calibrate::run(opts)?,
         _ => bail!("unknown experiment {id:?}; known: {}", ALL_IDS.join(", ")),
     };

@@ -7,6 +7,16 @@
 //!   sim          query the paper-scale throughput model directly
 //!   list         list presets and experiments
 //!
+//! Partitioned shadow fabric (shadow mode only):
+//!   --sync-partitions <P>        cut the dense vector into P contiguous
+//!                                LPT-balanced partitions, each synced by
+//!                                its own background strategy (default 1)
+//!   --shadow-threads <S>         shadow threads per trainer servicing the
+//!                                partitions (S ≤ P; default 1)
+//!   --algo-map <map>             per-partition algorithms, e.g.
+//!                                easgd:0-1,ma:2-3 (unmapped partitions
+//!                                run --algo)
+//!
 //! Delta gating (EASGD pushes against the sync PSs):
 //!   --sync-chunk <elems>         elements per push chunk (0 = whole shard)
 //!   --delta-threshold <abs>      fixed gate: skip chunks whose max
@@ -93,6 +103,8 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         eval_examples: args.parse_or("eval-examples", 20_000u64)?,
         data_seed: args.parse_or("seed", 1u64)?,
         shadow_interval_ms: args.parse_or("shadow-interval-ms", 0u64)?,
+        sync_partitions: args.parse_or("sync-partitions", 1usize)?,
+        shadow_threads: args.parse_or("shadow-threads", 1usize)?,
         allreduce_chunks: args.parse_or("chunks", 8usize)?,
         reduce_engine: args.parse_or("reduce-engine", ReduceEngine::Overlapped)?,
         easgd_chunk_elems: args.parse_or("sync-chunk", 4096usize)?,
@@ -106,7 +118,12 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     if let Some(r) = args.get("reader-rate") {
         cfg.reader_rate_limit = Some(r.parse()?);
     }
-    if cfg.algo != SyncAlgo::Easgd {
+    if let Some(m) = args.get("algo-map") {
+        cfg.algo_map = Some(m.parse()?);
+    }
+    // the sync-PS tier exists iff some (possibly algo-mapped) partition
+    // runs the centralized algorithm
+    if !cfg.any_easgd() {
         cfg.num_sync_ps = 0;
     }
     Ok(cfg)
@@ -153,6 +170,11 @@ fn print_outcome(out: &coordinator::TrainOutcome) {
     println!("EPS           {:.0}", out.eps);
     println!("wall secs     {:.2}", out.wall_secs);
     println!("avg sync gap  {:.3}", out.avg_sync_gap);
+    if out.partition_gaps.len() > 1 {
+        let gaps: Vec<String> =
+            out.partition_gaps.iter().map(|g| format!("{g:.2}")).collect();
+        println!("part gaps     [{}]", gaps.join(", "));
+    }
     println!("sync rounds   {}", out.metrics.syncs);
     println!("sync bytes    {}", out.metrics.sync_bytes);
     if let Some(t) = &out.sync_traffic {
@@ -226,6 +248,10 @@ fn cmd_list() -> Result<()> {
         "delta gating: --delta-threshold <abs> (fixed gate), \
          --delta-skip-target <frac> (adaptive quantile gate), \
          --no-dirty-scan (disable dirty-epoch scan reuse)"
+    );
+    println!(
+        "partitioned fabric: --sync-partitions <P>, --shadow-threads <S>, \
+         --algo-map easgd:0-1,ma:2-3 (shadow mode only)"
     );
     println!("reduce engines: --reduce-engine overlapped|striped|serial");
     Ok(())

@@ -5,6 +5,7 @@
 //! one `fetch_add` per batch; aggregation happens off-path.
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// f64 accumulator over an AtomicU64 (CAS add on bits) — exact, unlike the
@@ -52,6 +53,11 @@ pub struct Metrics {
     pub sync_scan_skipped: AtomicU64,
     /// bytes moved for embedding lookups+updates
     pub embedding_bytes: AtomicU64,
+    /// per-partition sync round counts of the partitioned shadow fabric
+    /// (index = partition; empty until a shadow pool records a round).
+    /// A mutex, not atomics: rounds are off the training hot path and the
+    /// partition count is a run-time knob
+    partition_syncs: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
@@ -77,6 +83,29 @@ impl Metrics {
         self.sync_chunks_pushed.fetch_add(pushed, Relaxed);
         self.sync_chunks_skipped.fetch_add(skipped, Relaxed);
         self.sync_scan_skipped.fetch_add(scan_skipped, Relaxed);
+    }
+
+    /// Record one completed shadow round of `partition` (driven by the
+    /// shadow pool; grows the table on first sight of a partition).
+    pub fn record_partition_sync(&self, partition: usize) {
+        let mut v = self.partition_syncs.lock().unwrap();
+        if partition >= v.len() {
+            v.resize(partition + 1, 0);
+        }
+        v[partition] += 1;
+    }
+
+    /// Per-partition average sync gap (paper Eq. 2, per partition):
+    /// trainer-level iterations per completed round of each partition.
+    /// Empty when no shadow pool ran (foreground modes).
+    pub fn partition_sync_gaps(&self) -> Vec<f64> {
+        let iters = self.iterations.load(Relaxed) as f64;
+        self.partition_syncs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|&s| if s == 0 { f64::INFINITY } else { iters / s as f64 })
+            .collect()
     }
 
     /// Average training loss per example so far.
@@ -111,6 +140,7 @@ impl Metrics {
             sync_chunks_skipped: self.sync_chunks_skipped.load(Relaxed),
             sync_scan_skipped: self.sync_scan_skipped.load(Relaxed),
             embedding_bytes: self.embedding_bytes.load(Relaxed),
+            partition_syncs: self.partition_syncs.lock().unwrap().clone(),
         }
     }
 }
@@ -126,6 +156,8 @@ pub struct MetricsSnapshot {
     pub sync_chunks_skipped: u64,
     pub sync_scan_skipped: u64,
     pub embedding_bytes: u64,
+    /// per-partition sync round counts (empty when no shadow pool ran)
+    pub partition_syncs: Vec<u64>,
 }
 
 impl MetricsSnapshot {
@@ -269,6 +301,26 @@ mod tests {
         assert_eq!(s.sync_chunks_skipped, 5);
         assert_eq!(s.sync_scan_skipped, 5);
         assert!((s.sync_skip_rate() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_sync_counters_and_gaps() {
+        let m = Metrics::new();
+        assert!(m.partition_sync_gaps().is_empty(), "no partitions yet");
+        for _ in 0..10 {
+            m.record_batch(8, 1.0);
+        }
+        // partition 2 recorded first: the table grows to cover it
+        m.record_partition_sync(2);
+        m.record_partition_sync(0);
+        m.record_partition_sync(0);
+        let snap = m.snapshot();
+        assert_eq!(snap.partition_syncs, vec![2, 0, 1]);
+        let gaps = m.partition_sync_gaps();
+        assert_eq!(gaps.len(), 3);
+        assert_eq!(gaps[0], 5.0); // 10 iterations / 2 rounds
+        assert!(gaps[1].is_infinite(), "partition with no rounds has no gap");
+        assert_eq!(gaps[2], 10.0);
     }
 
     #[test]

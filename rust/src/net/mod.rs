@@ -96,6 +96,24 @@ impl Network {
             .sum()
     }
 
+    /// Transmitted bytes summed over every NIC of a role.
+    pub fn role_tx(&self, role: Role) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|(r, _)| *r == role)
+            .map(|(_, nic)| nic.tx_bytes.load(Relaxed))
+            .sum()
+    }
+
+    /// Received bytes summed over every NIC of a role.
+    pub fn role_rx(&self, role: Role) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|(r, _)| *r == role)
+            .map(|(_, nic)| nic.rx_bytes.load(Relaxed))
+            .sum()
+    }
+
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
     }
@@ -122,6 +140,10 @@ mod tests {
         assert_eq!(net.tx(b), 40);
         assert_eq!(net.role_bytes(Role::SyncPs), 140);
         assert_eq!(net.role_bytes(Role::Trainer), 140);
+        assert_eq!(net.role_tx(Role::Trainer), 100);
+        assert_eq!(net.role_rx(Role::Trainer), 40);
+        assert_eq!(net.role_rx(Role::SyncPs), 100);
+        assert_eq!(net.role_tx(Role::SyncPs), 40);
     }
 
     #[test]

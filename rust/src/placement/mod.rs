@@ -85,8 +85,11 @@ mod tests {
 
     #[test]
     fn lpt_balances_simple() {
-        let items: Vec<Item> =
-            [7.0, 5.0, 4.0, 3.0, 1.0].iter().enumerate().map(|(id, &c)| Item { id, cost: c }).collect();
+        let items: Vec<Item> = [7.0, 5.0, 4.0, 3.0, 1.0]
+            .iter()
+            .enumerate()
+            .map(|(id, &c)| Item { id, cost: c })
+            .collect();
         let p = lpt(&items, 2);
         // LPT: 7 | 5,4 -> 7+3 | 9+1 -> loads {10, 10}
         assert_eq!(p.max_load(), 10.0);

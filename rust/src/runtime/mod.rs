@@ -3,10 +3,11 @@
 //! Two interchangeable backends behind one API (`Runtime`, `Model`,
 //! `StepIo`, `EvalOut`):
 //!
-//! - **`pjrt` feature on** ([`pjrt`]): the real thing — HLO text is parsed
-//!   and compiled through the vendored `xla` crate and every train/eval
-//!   step runs on PJRT CPU. Zero Python anywhere near the request path.
-//! - **`pjrt` feature off** ([`stub`], the default): a dependency-free
+//! - **`pjrt` feature on** (`pjrt.rs`): the real thing — HLO text is
+//!   parsed and compiled through the vendored `xla` crate and every
+//!   train/eval step runs on PJRT CPU. Zero Python anywhere near the
+//!   request path.
+//! - **`pjrt` feature off** (`stub.rs`, the default): a dependency-free
 //!   stand-in with the identical surface. `load_model` still reads and
 //!   validates `w0`, so every coordinator/sync/placement/net code path —
 //!   and all tests that don't execute compiled steps — builds and runs

@@ -53,7 +53,8 @@ mod tests {
 
     #[test]
     fn fr_easgd_5_plateaus_but_fr_30_does_not() {
-        let eps = |n, k| m().simulate(n, 24, SyncAlgo::Easgd, SyncMode::FixedRate { gap: k }, 2).eps;
+        let eps =
+            |n, k| m().simulate(n, 24, SyncAlgo::Easgd, SyncMode::FixedRate { gap: k }, 2).eps;
         // FR-5 saturates the 2 sync PSs somewhere in the mid-teens
         let e14 = eps(14, 5);
         let e20 = eps(20, 5);

@@ -38,6 +38,12 @@ pub struct CostModel {
     /// chunked pushes actually move (1.0 = no skips; feed from
     /// `SyncPsGroup::traffic` / `metrics.sync_bytes`)
     pub easgd_push_fraction: f64,
+    /// contiguous sync partitions `P` of the partitioned shadow fabric
+    /// (1 = the monolithic whole-vector fabric; shadow modes only)
+    pub sync_partitions: usize,
+    /// shadow threads `S` per trainer servicing the partitions (`S ≤ P`);
+    /// concurrent partition rounds share the trainer NIC
+    pub shadow_threads: usize,
 }
 
 /// One simulated operating point.
@@ -70,7 +76,18 @@ impl CostModel {
             reader_eps_cap: None,
             ring_chunks: 8,
             easgd_push_fraction: 1.0,
+            sync_partitions: 1,
+            shadow_threads: 1,
         }
+    }
+
+    /// Price the partitioned shadow fabric: `p` contiguous partitions
+    /// synced by `s` shadow threads per trainer (`s` is clamped to
+    /// `[1, p]`). `p = s = 1` reproduces the monolithic pricing exactly.
+    pub fn with_partitioned_shadow(mut self, p: usize, s: usize) -> Self {
+        self.sync_partitions = p.max(1);
+        self.shadow_threads = s.clamp(1, self.sync_partitions);
+        self
     }
 
     /// Price EASGD rounds from measured sync-PS traffic (delta-gated
@@ -175,15 +192,23 @@ impl CostModel {
             (SyncAlgo::Easgd, SyncMode::Shadow) => {
                 // background sync never throttles training
                 iter_rate_total = n * r_trainer;
-                // shadow round: trainer NIC serial + its share of the tier
-                let t_round = (round_bytes / self.nic_bytes_per_sec)
-                    .max(n * round_bytes / sync_cap)
+                let p_parts = self.sync_partitions.max(1) as f64;
+                let s = self.shadow_threads.clamp(1, self.sync_partitions.max(1)) as f64;
+                // one partition round moves 1/P of the full round's bytes;
+                // the S concurrent shadow threads share the trainer NIC,
+                // and the sync tier serves every trainer's partition rounds
+                let part_bytes = round_bytes / p_parts;
+                let t_part = (part_bytes / (self.nic_bytes_per_sec / s))
+                    .max(n * part_bytes / sync_cap)
                     + self.round_latency;
-                let sync_rate_per_trainer = 1.0 / t_round;
+                // each thread sweeps its P/S partitions sequentially, so
+                // every partition completes one round per sweep
+                let sync_rate_per_partition = 1.0 / ((p_parts / s) * t_part);
                 // reader cap may slow iterations (affects the measured gap)
                 let capped_iter_total = self.apply_reader_cap(iter_rate_total);
-                gap = (capped_iter_total / n) / sync_rate_per_trainer;
-                util = (n * sync_rate_per_trainer * round_bytes / sync_cap).min(1.0);
+                gap = (capped_iter_total / n) / sync_rate_per_partition;
+                util =
+                    (n * sync_rate_per_partition * p_parts * part_bytes / sync_cap).min(1.0);
                 train_frac = 1.0;
             }
             (SyncAlgo::Ma | SyncAlgo::Bmuf, SyncMode::FixedRate { gap: k }) => {
@@ -198,9 +223,14 @@ impl CostModel {
             }
             (SyncAlgo::Ma | SyncAlgo::Bmuf, SyncMode::Shadow) => {
                 iter_rate_total = n * r_trainer;
-                let t_round = self.ring_secs(trainers) + self.round_latency;
+                let p_parts = self.sync_partitions.max(1) as f64;
+                let s = self.shadow_threads.clamp(1, self.sync_partitions.max(1)) as f64;
+                // per-partition ring over ~1/P of the vector; S concurrent
+                // rings share the trainer NIC (each hop slows by S)
+                let t_part = self.ring_secs_scoped(trainers) * s + self.round_latency;
                 let capped_iter_total = self.apply_reader_cap(iter_rate_total);
-                gap = (capped_iter_total / n) * t_round;
+                // per-partition gap: P/S partition rounds per sweep
+                gap = (capped_iter_total / n) * (p_parts / s) * t_part;
                 util = 0.0;
                 train_frac = 1.0;
             }
@@ -228,6 +258,21 @@ impl CostModel {
         }
         let elems = (self.w_bytes / 4.0).round() as usize;
         let measured = RingTraffic::measure(elems, self.ring_chunks, trainers);
+        measured.max_member_bytes() as f64 / self.nic_bytes_per_sec
+    }
+
+    /// [`CostModel::ring_secs`] over the *largest partition's* slice of
+    /// the vector (the schedule's leading part under the `equal_ranges`
+    /// split rule), at full NIC rate — the partitioned shadow arm scales
+    /// it by the NIC share when `S` rings run concurrently. `P = 1`
+    /// reduces to `ring_secs` exactly.
+    fn ring_secs_scoped(&self, trainers: usize) -> f64 {
+        if trainers <= 1 {
+            return 0.0;
+        }
+        let elems = (self.w_bytes / 4.0).round() as usize;
+        let part_elems = crate::sync::traffic::part_len(elems, self.sync_partitions.max(1), 0);
+        let measured = RingTraffic::measure(part_elems, self.ring_chunks, trainers);
         measured.max_member_bytes() as f64 / self.nic_bytes_per_sec
     }
 
@@ -302,6 +347,40 @@ mod tests {
                 "n={n}: measured {measured} vs closed form {closed}"
             );
         }
+    }
+
+    #[test]
+    fn partitioned_shadow_pricing_is_monolithic_at_p1_and_scales_with_threads() {
+        for algo in [SyncAlgo::Easgd, SyncAlgo::Ma] {
+            // P = S = 1 is exactly the monolithic pricing (same code path,
+            // same arithmetic)
+            let base = CostModel::paper_scale().simulate(10, 24, algo, SyncMode::Shadow, 2);
+            let p1 = CostModel::paper_scale()
+                .with_partitioned_shadow(1, 1)
+                .simulate(10, 24, algo, SyncMode::Shadow, 2);
+            assert_eq!(p1.eps, base.eps, "{algo:?}");
+            assert_eq!(p1.avg_sync_gap, base.avg_sync_gap, "{algo:?}");
+            // more shadow threads sweep the partitions faster: the
+            // per-partition gap shrinks (by the saved round latencies at
+            // least), and training throughput is never touched
+            let p4s1 = CostModel::paper_scale()
+                .with_partitioned_shadow(4, 1)
+                .simulate(10, 24, algo, SyncMode::Shadow, 2);
+            let p4s4 = CostModel::paper_scale()
+                .with_partitioned_shadow(4, 4)
+                .simulate(10, 24, algo, SyncMode::Shadow, 2);
+            assert!(
+                p4s4.avg_sync_gap < p4s1.avg_sync_gap,
+                "{algo:?}: S=4 gap {} !< S=1 gap {}",
+                p4s4.avg_sync_gap,
+                p4s1.avg_sync_gap
+            );
+            assert_eq!(p4s4.train_fraction, 1.0, "shadow never throttles training");
+            assert_eq!(p4s4.eps, base.eps, "partitioning must not change shadow EPS");
+        }
+        // s is clamped into [1, p]
+        let m = CostModel::paper_scale().with_partitioned_shadow(2, 9);
+        assert_eq!(m.shadow_threads, 2);
     }
 
     #[test]

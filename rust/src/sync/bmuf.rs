@@ -5,7 +5,10 @@
 //! directly, each trainer maintains a private `w^global` and treats
 //! `average - w^global` as a surrogate gradient ("descent direction"),
 //! applies it with step size η and optional block momentum, then pulls the
-//! local replica elastically toward the updated `w^global`.
+//! local replica elastically toward the updated `w^global`. Under the
+//! partitioned fabric every scratch vector (and the momentum state) is
+//! sized to this strategy's partition — construct it with the partition's
+//! slice of `w0` — and rounds touch only `SyncCtx::range`.
 
 use std::sync::Arc;
 
@@ -44,8 +47,13 @@ impl BmufSync {
 
 impl SyncStrategy for BmufSync {
     fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
-        // w_copy <- local; w_copy <- AllReduce(w_copy)/n
-        ctx.local.read_into(&mut self.copy);
+        debug_assert_eq!(
+            self.copy.len(),
+            ctx.range.len,
+            "BMUF scratch must be sized to its partition"
+        );
+        // w_copy <- local partition; w_copy <- AllReduce(w_copy)/n
+        ctx.local.read_range_into(ctx.range.lo(), &mut self.copy);
         let round = self.group.allreduce_mean(&mut self.copy, ctx.trainer_node, ctx.net)?;
         // w_desc <- w_copy - w_global
         ops::sub(&mut self.desc, &self.copy, &self.global);
@@ -53,7 +61,7 @@ impl SyncStrategy for BmufSync {
         // w_global <- w_global + momentum(eta * w_desc)
         self.momentum.step(&mut self.global, &self.desc);
         // w_i <- (1-alpha) w_i + alpha w_global
-        ctx.local.lerp_toward_slice(&self.global, self.alpha);
+        ctx.local.lerp_range_toward_slice(ctx.range.lo(), &self.global, self.alpha);
         // ring traffic was driven hop-by-hop through ctx.net by the
         // collective itself; record the measured bytes this member moved
         ctx.metrics.record_sync(round.bytes_tx);
@@ -65,6 +73,10 @@ impl SyncStrategy for BmufSync {
             self.group.leave();
             self.left = true;
         }
+    }
+
+    fn rendezvous(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -88,7 +100,7 @@ mod tests {
         let metrics = Metrics::new();
         let local = HogwildBuffer::from_slice(&[4.0, 8.0, -2.0]);
         let mut b = BmufSync::new(group, 1.0, 1.0, 0.0, &[0.0, 0.0, 0.0]);
-        let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+        let ctx = SyncCtx::full(&local, node, &net, &metrics);
         b.sync_round(&ctx).unwrap();
         // singleton: average = local; w_global = 0 + (local - 0) = local;
         // alpha=1 -> local unchanged
@@ -105,7 +117,7 @@ mod tests {
         let local = HogwildBuffer::from_slice(&[10.0, 10.0]);
         // w0=0, so after one round w_global = 10 (eta=1), local pulls 25% in
         let mut b = BmufSync::new(group, 0.25, 1.0, 0.0, &[0.0, 0.0]);
-        let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+        let ctx = SyncCtx::full(&local, node, &net, &metrics);
         b.sync_round(&ctx).unwrap();
         assert_eq!(local.to_vec(), vec![10.0, 10.0]); // global == local already
         // now pretend workers moved local further
@@ -123,7 +135,7 @@ mod tests {
         let metrics = Metrics::new();
         let local = HogwildBuffer::from_slice(&[1.0]);
         let mut b = BmufSync::new(group, 0.0, 1.0, 0.5, &[0.0]);
-        let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+        let ctx = SyncCtx::full(&local, node, &net, &metrics);
         b.sync_round(&ctx).unwrap();
         // v = 1, global = 1
         assert_eq!(b.global, vec![1.0]);

@@ -1,22 +1,46 @@
-//! Sync drivers: the shadow thread (background) and the foreground
-//! fixed-rate hook.
+//! Sync drivers: the per-trainer shadow pool (background) and the
+//! foreground fixed-rate hooks.
 //!
-//! **Shadow** (the paper's framework, Algorithm 1 lines 10–12): one extra
-//! thread per trainer loops sync rounds while worker threads train — the
-//! synchronization is "neither part of the backward pass nor happens every
-//! k iterations". An optional interval throttles the loop (the
-//! `ablate-shadow-rate` experiment sweeps it; 0 = free-running as in the
-//! paper).
+//! **Shadow pool** (the paper's framework, Algorithm 1 lines 10–12 +
+//! §3.2's partitioned threads): `S` background threads per trainer loop
+//! partition sync rounds while worker threads train — the synchronization
+//! is "neither part of the backward pass nor happens every k iterations".
+//! [`spawn_shadow_pool`] services a [`ShadowTask`] per partition:
 //!
-//! **Foreground fixed-rate**: the baselines. For EASGD every worker thread
-//! syncs inline every `gap` of its own iterations (this is what makes
-//! FR-EASGD's sync-PS traffic `m×` larger). For AllReduce algorithms the
-//! trainer's designated syncer (worker 0) runs the collective every `gap`
-//! trainer-level iterations while a write-lock gate stops that trainer's
-//! other workers — synchronization literally interrupts training.
+//! - **Rendezvous strategies** (MA/BMUF — a round blocks until every
+//!   active trainer contributes to the partition's collective) are pinned
+//!   to pool threads statically, in plan order, identically on every
+//!   trainer. Each chain is then an independent cross-trainer sequence
+//!   with a total order, exactly like a single pre-partitioning shadow
+//!   thread: the minimal blocked round of a chain always has every peer
+//!   either deposited or departed-and-left, so rounds keep closing — and
+//!   a chain thread `leave()`s *its* partitions the moment it exits,
+//!   unblocking peers mid-round at shutdown. Work-stealing rendezvous
+//!   rounds across threads would break that total order and can deadlock
+//!   (thread A blocked on partition 0 waiting for B, B blocked on
+//!   partition 1 waiting for A), which is why stealing is reserved for:
+//! - **Centralized strategies** (EASGD/none — rounds never block on other
+//!   trainers): one shared pool serviced by every thread via a
+//!   work-stealing round-robin (a shared ticket cursor; a thread finding
+//!   its ticketed partition busy walks forward to the next free one), so
+//!   sync frequency per partition scales with `S`.
+//!
+//! Every completed round is recorded per partition
+//! ([`crate::metrics::Metrics::record_partition_sync`]), making the
+//! avg-sync-gap metric (paper Eq. 2) per-partition. An optional interval
+//! throttles each pool thread (the `ablate-shadow-rate` experiment sweeps
+//! it; 0 = free-running as in the paper).
+//!
+//! **Foreground fixed-rate**: the baselines, whole-vector only. For EASGD
+//! every worker thread syncs inline every `gap` of its own iterations
+//! (this is what makes FR-EASGD's sync-PS traffic `m×` larger). For
+//! AllReduce algorithms the trainer's designated syncer (worker 0) runs
+//! the collective every `gap` trainer-level iterations while a write-lock
+//! [`Gate`] stops that trainer's other workers — synchronization literally
+//! interrupts training.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -26,19 +50,36 @@ use crate::metrics::Metrics;
 use crate::net::{Network, NodeId};
 use crate::tensor::HogwildBuffer;
 
-use super::SyncStrategy;
+use super::{ParamRange, SyncStrategy};
 
 /// Shared flag a trainer raises when its shard is exhausted.
 pub type StopFlag = Arc<AtomicBool>;
 
-/// Spawn the shadow thread for one trainer.
-///
-/// The thread loops `strategy.sync_round` until `stop` is raised, then calls
-/// `strategy.leave()` so decentralized groups shrink. Returns the join
-/// handle; the thread returns the number of rounds it ran.
+/// One partition's sync work inside a trainer's shadow pool: the strategy
+/// instance plus the replica range it owns.
+pub struct ShadowTask {
+    /// partition index in the trainer's plan (the per-partition metrics key)
+    pub partition: usize,
+    pub range: ParamRange,
+    pub strategy: Box<dyn SyncStrategy>,
+}
+
+/// The work-stealing pool of non-rendezvous tasks shared by a trainer's
+/// shadow threads. Each slot's mutex is held only for the duration of one
+/// sync round; `try_lock` failures mean "someone is already syncing this
+/// partition — steal the next one".
+struct StealPool {
+    tasks: Vec<Mutex<ShadowTask>>,
+    ticket: AtomicUsize,
+}
+
+/// Spawn a single whole-replica shadow thread for one trainer — the
+/// monolithic special case of [`spawn_shadow_pool`] (one task spanning the
+/// full vector, one thread). Kept as the simple entry point for tests,
+/// examples, and custom strategies.
 #[allow(clippy::too_many_arguments)]
 pub fn spawn_shadow(
-    mut strategy: Box<dyn SyncStrategy>,
+    strategy: Box<dyn SyncStrategy>,
     local: Arc<HogwildBuffer>,
     trainer_node: NodeId,
     net: Arc<Network>,
@@ -47,27 +88,198 @@ pub fn spawn_shadow(
     interval: Duration,
     trainer_id: usize,
 ) -> JoinHandle<Result<u64>> {
+    let range = ParamRange::full(local.len());
+    spawn_shadow_pool(
+        vec![ShadowTask { partition: 0, range, strategy }],
+        local,
+        trainer_node,
+        net,
+        metrics,
+        stop,
+        interval,
+        trainer_id,
+        1,
+    )
+}
+
+/// Spawn one trainer's shadow pool: `threads` background threads (clamped
+/// to `[1, tasks.len()]`) servicing one [`ShadowTask`] per partition until
+/// `stop` is raised, then every strategy `leave()`s so decentralized
+/// groups shrink. Returns a single join handle (the pool controller); its
+/// value is the total number of partition rounds the pool ran.
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_shadow_pool(
+    tasks: Vec<ShadowTask>,
+    local: Arc<HogwildBuffer>,
+    trainer_node: NodeId,
+    net: Arc<Network>,
+    metrics: Arc<Metrics>,
+    stop: StopFlag,
+    interval: Duration,
+    trainer_id: usize,
+    threads: usize,
+) -> JoinHandle<Result<u64>> {
+    let threads = threads.clamp(1, tasks.len().max(1));
+    // rendezvous strategies are pinned to chains in plan order — every
+    // trainer builds the exact same chains, which is what keeps the
+    // cross-trainer round order acyclic (see the module doc); everything
+    // else goes into the shared work-stealing pool
+    let mut chains: Vec<Vec<ShadowTask>> = (0..threads).map(|_| Vec::new()).collect();
+    let mut steal_tasks = Vec::new();
+    let mut next_chain = 0usize;
+    for t in tasks {
+        if t.strategy.rendezvous() {
+            chains[next_chain % threads].push(t);
+            next_chain += 1;
+        } else {
+            steal_tasks.push(Mutex::new(t));
+        }
+    }
+    let pool = Arc::new(StealPool { tasks: steal_tasks, ticket: AtomicUsize::new(0) });
     std::thread::Builder::new()
         .name(format!("shadow-{trainer_id}"))
         .spawn(move || {
+            let mut workers = Vec::new();
+            for (k, chain) in chains.into_iter().enumerate() {
+                let local = local.clone();
+                let net = net.clone();
+                let metrics = metrics.clone();
+                let stop = stop.clone();
+                let pool = pool.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("shadow-{trainer_id}.{k}"))
+                        .spawn(move || {
+                            pool_thread(
+                                chain,
+                                &pool,
+                                &local,
+                                trainer_node,
+                                &net,
+                                &metrics,
+                                &stop,
+                                interval,
+                            )
+                        })
+                        .expect("spawn shadow pool thread"),
+                );
+            }
             let mut rounds = 0u64;
-            while !stop.load(Relaxed) {
-                let ctx = super::SyncCtx {
-                    local: &local,
-                    trainer_node,
-                    net: &net,
-                    metrics: &metrics,
-                };
-                strategy.sync_round(&ctx)?;
-                rounds += 1;
-                if !interval.is_zero() {
-                    std::thread::sleep(interval);
+            let mut first_err = None;
+            for w in workers {
+                match w.join().expect("shadow pool thread panicked") {
+                    Ok(r) => rounds += r,
+                    Err(e) => first_err = first_err.or(Some(e)),
                 }
             }
-            strategy.leave();
-            Ok(rounds)
+            // all pool threads are gone: retire the stolen strategies too
+            match Arc::try_unwrap(pool) {
+                Ok(pool) => {
+                    for slot in pool.tasks {
+                        slot.into_inner().unwrap().strategy.leave();
+                    }
+                }
+                Err(pool) => {
+                    for slot in &pool.tasks {
+                        slot.lock().unwrap().strategy.leave();
+                    }
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(rounds),
+            }
         })
         .expect("spawn shadow thread")
+}
+
+/// One pool thread: per lap, run the next round of the owned rendezvous
+/// chain (cyclic order) and steal one non-rendezvous round.
+#[allow(clippy::too_many_arguments)]
+fn pool_thread(
+    mut chain: Vec<ShadowTask>,
+    pool: &StealPool,
+    local: &HogwildBuffer,
+    trainer_node: NodeId,
+    net: &Network,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+    interval: Duration,
+) -> Result<u64> {
+    let mut rounds = 0u64;
+    let mut chain_idx = 0usize;
+    let mut err = None;
+    'run: while !stop.load(Relaxed) {
+        let mut worked = false;
+        if !chain.is_empty() {
+            let t = &mut chain[chain_idx % chain.len()];
+            chain_idx += 1;
+            let ctx = super::SyncCtx {
+                local,
+                range: t.range,
+                partition: t.partition,
+                trainer_node,
+                net,
+                metrics,
+            };
+            match t.strategy.sync_round(&ctx) {
+                Ok(_) => {
+                    metrics.record_partition_sync(t.partition);
+                    rounds += 1;
+                    worked = true;
+                }
+                Err(e) => {
+                    err = Some(e);
+                    break 'run;
+                }
+            }
+        }
+        if !pool.tasks.is_empty() {
+            // work-stealing round-robin: start at the shared ticket and
+            // walk forward past partitions another thread is busy syncing
+            let start = pool.ticket.fetch_add(1, Relaxed);
+            for off in 0..pool.tasks.len() {
+                let slot = &pool.tasks[(start.wrapping_add(off)) % pool.tasks.len()];
+                let Ok(mut t) = slot.try_lock() else { continue };
+                let ctx = super::SyncCtx {
+                    local,
+                    range: t.range,
+                    partition: t.partition,
+                    trainer_node,
+                    net,
+                    metrics,
+                };
+                match t.strategy.sync_round(&ctx) {
+                    Ok(_) => {
+                        metrics.record_partition_sync(t.partition);
+                        rounds += 1;
+                        worked = true;
+                    }
+                    Err(e) => {
+                        err = Some(e);
+                    }
+                }
+                break;
+            }
+            if err.is_some() {
+                break 'run;
+            }
+        }
+        if !worked {
+            std::thread::yield_now();
+        }
+        if !interval.is_zero() {
+            std::thread::sleep(interval);
+        }
+    }
+    // leaving the owned chain is what unblocks peer trainers mid-round
+    for t in &mut chain {
+        t.strategy.leave();
+    }
+    match err {
+        Some(e) => Err(e),
+        None => Ok(rounds),
+    }
 }
 
 /// Foreground gate: workers hold a read lock while training; a fixed-rate
@@ -181,6 +393,86 @@ mod tests {
     }
 
     #[test]
+    fn shadow_pool_services_every_partition_and_records_gaps() {
+        // 4 partitions, 2 threads: every partition keeps getting rounds,
+        // each round lands in its partition's metrics counter, and every
+        // strategy leaves at shutdown
+        let p = 4usize;
+        let counters: Vec<_> = (0..p).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let lefts: Vec<_> = (0..p).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let tasks: Vec<ShadowTask> = (0..p)
+            .map(|i| ShadowTask {
+                partition: i,
+                range: ParamRange { offset: i * 4, len: 4 },
+                strategy: Box::new(CountingSync {
+                    rounds: counters[i].clone(),
+                    left: lefts[i].clone(),
+                }),
+            })
+            .collect();
+        let h = spawn_shadow_pool(
+            tasks,
+            Arc::new(HogwildBuffer::zeros(16)),
+            node,
+            Arc::new(net),
+            metrics.clone(),
+            stop.clone(),
+            Duration::ZERO,
+            0,
+            2,
+        );
+        while counters.iter().any(|c| c.load(Relaxed) < 5) {
+            std::thread::yield_now();
+        }
+        stop.store(true, Relaxed);
+        let total = h.join().unwrap().unwrap();
+        let per_partition: Vec<u64> = counters.iter().map(|c| c.load(Relaxed)).collect();
+        assert!(per_partition.iter().all(|&c| c >= 5), "starved partition: {per_partition:?}");
+        assert_eq!(total, per_partition.iter().sum::<u64>());
+        // the pool's rounds flow into the per-partition metrics counters
+        let snap = metrics.snapshot();
+        assert_eq!(snap.partition_syncs.len(), p);
+        assert_eq!(snap.partition_syncs, per_partition);
+        assert!(lefts.iter().all(|l| l.load(Relaxed)), "a strategy never left");
+    }
+
+    #[test]
+    fn pool_threads_clamp_to_task_count() {
+        // more threads than tasks: the pool clamps instead of spinning
+        // idle threads
+        let rounds = Arc::new(AtomicU64::new(0));
+        let left = Arc::new(AtomicBool::new(false));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_shadow_pool(
+            vec![ShadowTask {
+                partition: 0,
+                range: ParamRange::full(4),
+                strategy: Box::new(CountingSync { rounds: rounds.clone(), left: left.clone() }),
+            }],
+            Arc::new(HogwildBuffer::zeros(4)),
+            node,
+            Arc::new(net),
+            Arc::new(Metrics::new()),
+            stop.clone(),
+            Duration::from_millis(1),
+            7,
+            8,
+        );
+        while rounds.load(Relaxed) < 3 {
+            std::thread::yield_now();
+        }
+        stop.store(true, Relaxed);
+        assert!(h.join().unwrap().unwrap() >= 3);
+        assert!(left.load(Relaxed));
+    }
+
+    #[test]
     fn gate_blocks_workers_during_sync() {
         let gate = Arc::new(Gate::new());
         let in_crit = Arc::new(AtomicU64::new(0));
@@ -212,7 +504,7 @@ mod tests {
         let node = net.add_node(Role::Trainer);
         let metrics = Metrics::new();
         let local = HogwildBuffer::from_slice(&[1.0]);
-        let ctx = SyncCtx { local: &local, trainer_node: node, net: &net, metrics: &metrics };
+        let ctx = SyncCtx::full(&local, node, &net, &metrics);
         assert_eq!(NoSync.sync_round(&ctx).unwrap(), 0.0);
         assert_eq!(metrics.snapshot().syncs, 0);
     }

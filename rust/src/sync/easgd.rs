@@ -5,41 +5,59 @@
 //! deliberately *asymmetric* — neither side is overwritten — because both
 //! the PS (in sync with other trainers) and the Hogwild workers (which kept
 //! training during the round) have information worth keeping. Pushes are
-//! chunked and optionally delta-gated by the [`SyncPsGroup`] (skipped
-//! chunks move zero bytes on either leg); the recorded sync bytes are the
-//! measured traffic of each round, not the full-vector formula.
+//! chunked and optionally delta-gated (skipped chunks move zero bytes on
+//! either leg); the recorded sync bytes are the measured traffic of each
+//! round, not the full-vector formula.
+//!
+//! Under the partitioned fabric each `EasgdSync` instance is bound to one
+//! partition of one trainer's replica ([`SyncCtx::range`]) and owns its own
+//! [`DeltaGate`] (quantile sketch) plus [`DeltaScanCache`] — the
+//! per-trainer/per-shard gating the monolithic group-level gate couldn't
+//! express.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::{
-    ps::{DeltaScanCache, SyncPsGroup},
+    ps::{DeltaGate, DeltaScanCache, SyncPsGroup},
     SyncCtx, SyncStrategy,
 };
 
 pub struct EasgdSync {
     group: Arc<SyncPsGroup>,
     pub alpha: f32,
-    /// per-trainer dirty-epoch scan cache (no-op when the replica doesn't
-    /// track dirty epochs)
+    /// per-strategy dirty-epoch scan cache (no-op when the replica doesn't
+    /// track dirty epochs), keyed by global push-chunk ordinal
     cache: DeltaScanCache,
+    /// this strategy's own delta gate (per trainer × partition); `None`
+    /// falls back to the group-level gate
+    gate: Option<DeltaGate>,
 }
 
 impl EasgdSync {
     pub fn new(group: Arc<SyncPsGroup>, alpha: f32) -> Self {
-        Self { group, alpha, cache: DeltaScanCache::new() }
+        Self { group, alpha, cache: DeltaScanCache::new(), gate: None }
+    }
+
+    /// Give this strategy its own [`DeltaGate`] — its private quantile
+    /// sketch — instead of the group-level one.
+    pub fn with_gate(mut self, gate: DeltaGate) -> Self {
+        self.gate = Some(gate);
+        self
     }
 }
 
 impl SyncStrategy for EasgdSync {
     fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
-        let stats = self.group.elastic_sync_cached(
+        let stats = self.group.elastic_sync_partition(
             ctx.local,
+            ctx.range,
             self.alpha,
             ctx.trainer_node,
             ctx.net,
             &mut self.cache,
+            self.gate.as_ref(),
         );
         // record the bytes this round *actually* moved (delta-gated chunks
         // may skip), so metrics.sync_bytes always agrees with NIC counters;
@@ -63,6 +81,7 @@ mod tests {
     use super::*;
     use crate::metrics::Metrics;
     use crate::net::{Network, Role};
+    use crate::sync::ParamRange;
     use crate::tensor::HogwildBuffer;
 
     #[test]
@@ -73,7 +92,7 @@ mod tests {
         let metrics = Metrics::new();
         let local = HogwildBuffer::from_slice(&vec![2.0; 10]);
         let mut s = EasgdSync::new(group.clone(), 0.5);
-        let ctx = SyncCtx { local: &local, trainer_node: tnode, net: &net, metrics: &metrics };
+        let ctx = SyncCtx::full(&local, tnode, &net, &metrics);
         let gap = s.sync_round(&ctx).unwrap();
         assert!((gap - 2.0).abs() < 1e-6);
         assert_eq!(metrics.snapshot().syncs, 1);
@@ -99,7 +118,7 @@ mod tests {
         }
         let local = HogwildBuffer::from_slice(&lv);
         let mut s = EasgdSync::new(group.clone(), 0.5);
-        let ctx = SyncCtx { local: &local, trainer_node: tnode, net: &net, metrics: &metrics };
+        let ctx = SyncCtx::full(&local, tnode, &net, &metrics);
         s.sync_round(&ctx).unwrap();
         let snap = metrics.snapshot();
         assert_eq!(snap.syncs, 1);
@@ -125,7 +144,7 @@ mod tests {
         let metrics = Metrics::new();
         let local = HogwildBuffer::from_slice(&vec![1.0; 32]).with_dirty_epochs(8);
         let mut s = EasgdSync::new(group.clone(), 0.5);
-        let ctx = SyncCtx { local: &local, trainer_node: tnode, net: &net, metrics: &metrics };
+        let ctx = SyncCtx::full(&local, tnode, &net, &metrics);
         for _ in 0..5 {
             s.sync_round(&ctx).unwrap();
         }
@@ -135,5 +154,43 @@ mod tests {
         assert_eq!(snap.sync_chunks_skipped, 5 * 4);
         assert_eq!(snap.sync_scan_skipped, 4 * 4);
         assert_eq!(net.role_bytes(Role::SyncPs), 0);
+    }
+
+    #[test]
+    fn range_scoped_strategy_with_own_gate_syncs_its_partition_only() {
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let p = 64;
+        let group = Arc::new(
+            SyncPsGroup::build(&vec![0.0; p], 2, &mut net).with_push_chunking(8, 0.0),
+        );
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&vec![4.0; p]).with_dirty_epochs(8);
+        let mut s = EasgdSync::new(group.clone(), 0.5).with_gate(DeltaGate::new(1e-3, 0.0));
+        let range = ParamRange { offset: 32, len: 16 };
+        let ctx = SyncCtx {
+            local: &local,
+            range,
+            partition: 1,
+            trainer_node: tnode,
+            net: &net,
+            metrics: &metrics,
+        };
+        let gap = s.sync_round(&ctx).unwrap();
+        assert!((gap - 4.0).abs() < 1e-6);
+        // only the partition's two chunks moved
+        let snap = metrics.snapshot();
+        assert_eq!(snap.sync_bytes, 2 * 16 * 4);
+        assert_eq!(snap.sync_chunks_pushed, 2);
+        let lv = local.to_vec();
+        assert!(lv[..32].iter().all(|&x| x == 4.0));
+        assert!(lv[32..48].iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        assert!(lv[48..].iter().all(|&x| x == 4.0));
+        // a second round: the partition converged below this strategy's
+        // own fixed gate, so it skips both chunks (and reuses the scans)
+        s.sync_round(&ctx).unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.sync_bytes, 2 * 16 * 4, "converged partition moves nothing more");
+        assert_eq!(snap.sync_chunks_skipped, 2);
     }
 }

@@ -1,10 +1,13 @@
 //! Model averaging synchronization (paper Algorithm 3; Zinkevich et al.).
 //!
-//! Decentralized: snapshot the local replica, AllReduce-mean it with the
-//! other trainers, then elastically pull the replica toward the average.
-//! The elastic pull (rather than the original MA's copy-back) is the
-//! paper's key modification: during a background AllReduce the Hogwild
-//! workers keep training, and a copy-back would discard that progress.
+//! Decentralized: snapshot the local partition, AllReduce-mean it with the
+//! other trainers over this partition's own ring fabric, then elastically
+//! pull the partition toward the average. The elastic pull (rather than
+//! the original MA's copy-back) is the paper's key modification: during a
+//! background AllReduce the Hogwild workers keep training, and a copy-back
+//! would discard that progress. Under the partitioned fabric the group is
+//! sized to the partition (`SyncCtx::range`), so hybrid plans can run MA
+//! on some partitions while EASGD owns others.
 
 use std::sync::Arc;
 
@@ -50,17 +53,25 @@ impl MaSync {
 
 impl SyncStrategy for MaSync {
     fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
-        // w_global <- copy of local
-        ctx.local.read_into(&mut self.global);
+        debug_assert_eq!(
+            self.global.len(),
+            ctx.range.len,
+            "MA group must be sized to its partition"
+        );
+        // w_global <- copy of the local partition
+        ctx.local.read_range_into(ctx.range.lo(), &mut self.global);
         // w_global <- AllReduce(w_global) / n; workers keep training during
         // this window — exactly what copy-back (alpha=1) would throw away
         if !self.round_delay.is_zero() {
             std::thread::sleep(self.round_delay);
         }
         let round = self.group.allreduce_mean(&mut self.global, ctx.trainer_node, ctx.net)?;
-        let gap = ops::mean_abs_diff(&self.global, &ctx.local.to_vec());
+        let gap = ops::mean_abs_diff(
+            &self.global,
+            &ctx.local.to_vec_range(ctx.range.lo(), ctx.range.hi()),
+        );
         // w_i <- (1-alpha) w_i + alpha w_global  (elastic, not copy-back)
-        ctx.local.lerp_toward_slice(&self.global, self.alpha);
+        ctx.local.lerp_range_toward_slice(ctx.range.lo(), &self.global, self.alpha);
         // ring traffic was driven hop-by-hop through ctx.net by the
         // collective itself; record the measured bytes this member moved
         ctx.metrics.record_sync(round.bytes_tx);
@@ -72,6 +83,10 @@ impl SyncStrategy for MaSync {
             self.group.leave();
             self.left = true;
         }
+    }
+
+    fn rendezvous(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -109,7 +124,7 @@ mod tests {
                 let node = nodes[i];
                 s.spawn(move || {
                     let mut ma = MaSync::new(group, 0.5, 4);
-                    let ctx = SyncCtx { local, trainer_node: node, net, metrics };
+                    let ctx = SyncCtx::full(local, node, net, metrics);
                     ma.sync_round(&ctx).unwrap();
                 });
             }
@@ -127,10 +142,35 @@ mod tests {
         let metrics = Metrics::new();
         let mut ma = MaSync::new(group, 0.5, 2);
         ma.set_copy_back();
-        let ctx = SyncCtx { local: &local, trainer_node: nodes[0], net: &net, metrics: &metrics };
+        let ctx = SyncCtx::full(&local, nodes[0], &net, &metrics);
         ma.sync_round(&ctx).unwrap();
         // singleton group: average == self, so copy-back is identity here
         assert_eq!(local.to_vec(), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn range_scoped_round_averages_only_its_partition() {
+        use crate::sync::ParamRange;
+        // partition [2, 6) of an 8-element replica, singleton ring: the
+        // round must read/average/pull exactly that slice
+        let (group, net, nodes) = harness(1, 4);
+        let local = HogwildBuffer::from_slice(&[9.0, 9.0, 1.0, 2.0, 3.0, 4.0, 9.0, 9.0]);
+        let metrics = Metrics::new();
+        let mut ma = MaSync::new(group, 0.5, 4);
+        let range = ParamRange { offset: 2, len: 4 };
+        let ctx = SyncCtx {
+            local: &local,
+            range,
+            partition: 1,
+            trainer_node: nodes[0],
+            net: &net,
+            metrics: &metrics,
+        };
+        let gap = ma.sync_round(&ctx).unwrap();
+        // singleton: average == own slice, so gap is 0 and nothing moves
+        assert_eq!(gap, 0.0);
+        assert_eq!(local.to_vec(), vec![9.0, 9.0, 1.0, 2.0, 3.0, 4.0, 9.0, 9.0]);
+        assert!(ma.rendezvous());
     }
 
     #[test]

@@ -1,40 +1,60 @@
-//! Parameter synchronization — the paper's contribution.
+//! Parameter synchronization — the paper's contribution, as a
+//! **partitioned shadow-sync fabric**.
 //!
-//! A [`SyncStrategy`] performs one synchronization *round* for one trainer's
-//! dense-parameter replica. The same strategies run in two modes
-//! ([`crate::config::SyncMode`]):
+//! The dense replica is cut into `P` contiguous, LPT-balanced partitions
+//! ([`partition::PartitionPlan`], `--sync-partitions`; `P = 1` is the
+//! monolithic whole-vector fabric — bit for bit, except that adaptive
+//! delta gates are now per-strategy by design, see [`partition`]). A
+//! [`SyncStrategy`]
+//! performs one synchronization *round* for **one partition** of one
+//! trainer's replica: [`SyncCtx`] carries a [`ParamRange`] view
+//! (offset/len into the [`HogwildBuffer`]) and the strategy never touches
+//! parameters outside it. Each partition can run a *different* algorithm
+//! (`--algo-map easgd:0-1,ma:2-3`) — the paper's §3.2 hybrid scenario:
+//! EASGD partitions push to [`ps::SyncPsGroup`] sub-ranges while MA/BMUF
+//! partitions reduce over their own per-partition [`AllReduceGroup`]s.
 //!
-//! - **Shadow** (the paper's proposal): a dedicated per-trainer *shadow
-//!   thread* loops rounds continuously in the background, never stalling
-//!   the Hogwild worker threads ([`driver::spawn_shadow`]).
-//! - **Fixed-rate** (the baselines): the sync is executed in the foreground
-//!   of the training loop every `k` iterations ([`driver::Foreground`]) —
-//!   inline in each worker thread for centralized EASGD (which is why its
-//!   sync-PS traffic is `m×` the shadow variant's), or stop-the-world per
-//!   trainer for the AllReduce-based MA/BMUF.
+//! The same strategies run in two modes ([`crate::config::SyncMode`]):
 //!
-//! Three algorithms are provided (paper Algorithms 2–4): EASGD (centralized,
-//! against sync PSs via chunked pushes with an optional delta gate —
-//! [`ps::SyncPsGroup`] skips chunks that barely moved, both wire legs of a
-//! skipped chunk are suppressed, the gate can adapt itself to a target skip
-//! rate via a streaming quantile sketch, and dirty-epoch-tracked replicas
-//! skip even the gap *scan* for untouched chunks), MA and BMUF
-//! (decentralized, over the lock-striped, double-buffered chunk-parallel
-//! ring-AllReduce fabric in [`allreduce`], whose parity-banked deposit
-//! slots let round `N+1` contributions land while round `N` still reduces,
-//! and whose per-hop transfers flow through [`Network`] so ring traffic is
-//! measured per trainer NIC rather than asserted from a formula; the
-//! [`traffic`] module exports that measured schedule to `sim/`). All three
-//! use the *asymmetric elastic interpolation* the paper highlights as its
-//! key modification: after a round, the local replica moves α of the way
-//! toward the global/central model instead of being overwritten, so Hogwild
-//! progress made during the (background) round isn't thrown away.
+//! - **Shadow** (the paper's proposal): a per-trainer *shadow pool*
+//!   ([`driver::spawn_shadow_pool`], `--shadow-threads S`, `S ≤ P`) loops
+//!   partition rounds continuously in the background, never stalling the
+//!   Hogwild worker threads. Rendezvous strategies (MA/BMUF) are pinned to
+//!   pool threads in identical order on every trainer; centralized
+//!   strategies are serviced by a work-stealing round-robin, so sync
+//!   frequency per partition scales with `S`.
+//! - **Fixed-rate** (the baselines): the sync is executed in the
+//!   foreground of the training loop every `k` iterations, over the whole
+//!   vector — inline in each worker thread for centralized EASGD (which is
+//!   why its sync-PS traffic is `m×` the shadow variant's), or
+//!   stop-the-world per trainer for the AllReduce-based MA/BMUF
+//!   ([`driver::Gate`]).
+//!
+//! Three algorithms are provided (paper Algorithms 2–4): EASGD
+//! (centralized, against sync PSs via chunked pushes with an optional
+//! delta gate — [`ps::SyncPsGroup`] skips chunks that barely moved, both
+//! wire legs of a skipped chunk are suppressed, and each strategy instance
+//! owns its *own* [`ps::DeltaGate`] — a per-trainer × per-partition
+//! [`ps::QuantileSketch`] plus [`ps::DeltaScanCache`], so heterogeneous
+//! replicas gate independently; central-side per-chunk version counters
+//! invalidate a trainer's cached scan the moment *another* trainer pushes
+//! that chunk), MA and BMUF (decentralized, over the lock-striped,
+//! double-buffered chunk-parallel ring-AllReduce fabric in [`allreduce`],
+//! whose per-hop transfers flow through [`Network`] so ring traffic is
+//! measured per trainer NIC; the [`traffic`] module exports that measured
+//! schedule to `sim/`, which also prices shadow rounds per partition). All
+//! three use the *asymmetric elastic interpolation* the paper highlights
+//! as its key modification: after a round, the local partition moves α of
+//! the way toward the global/central model instead of being overwritten,
+//! so Hogwild progress made during the (background) round isn't thrown
+//! away.
 
 pub mod allreduce;
 pub mod bmuf;
 pub mod driver;
 pub mod easgd;
 pub mod ma;
+pub mod partition;
 pub mod ps;
 pub mod traffic;
 
@@ -44,25 +64,62 @@ use crate::metrics::Metrics;
 use crate::net::{Network, NodeId};
 use crate::tensor::HogwildBuffer;
 
-/// Everything a sync round needs from its trainer.
+/// Everything a sync round needs from its trainer, scoped to one
+/// partition of the replica.
 pub struct SyncCtx<'a> {
     /// this trainer's dense replica `w^(i)` (Hogwild-shared with workers)
     pub local: &'a HogwildBuffer,
+    /// the partition of the replica this round operates on
+    pub range: ParamRange,
+    /// index of that partition in the trainer's [`PartitionPlan`]
+    /// (the per-partition metrics key)
+    pub partition: usize,
     pub trainer_node: NodeId,
     pub net: &'a Network,
     pub metrics: &'a Metrics,
 }
 
-/// One synchronization algorithm instance, owned by whichever thread drives
-/// it (shadow thread or foreground hook).
+impl<'a> SyncCtx<'a> {
+    /// A whole-replica context: partition 0 spanning everything. The
+    /// foreground drivers and single-partition plans use exactly this.
+    pub fn full(
+        local: &'a HogwildBuffer,
+        trainer_node: NodeId,
+        net: &'a Network,
+        metrics: &'a Metrics,
+    ) -> Self {
+        Self {
+            range: ParamRange::full(local.len()),
+            partition: 0,
+            local,
+            trainer_node,
+            net,
+            metrics,
+        }
+    }
+}
+
+/// One synchronization algorithm instance, owned by whichever thread
+/// drives it (shadow pool thread or foreground hook) and bound to one
+/// partition of one trainer's replica.
 pub trait SyncStrategy: Send {
-    /// Execute one synchronization round. Returns the mean |local-global|
-    /// gap observed (a convergence-health signal), when meaningful.
+    /// Execute one synchronization round over `ctx.range`. Returns the
+    /// mean |local-global| gap observed on the partition (a
+    /// convergence-health signal), when meaningful.
     fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32>;
 
     /// Called when this trainer permanently stops syncing (end of its data
     /// shard) so decentralized groups can shrink their membership.
     fn leave(&mut self) {}
+
+    /// Does a round rendezvous with the other trainers (block until every
+    /// active member of a collective contributes)? The shadow pool pins
+    /// rendezvous strategies to fixed threads — in identical order on
+    /// every trainer — so the cross-trainer round order stays acyclic;
+    /// non-rendezvous strategies are work-stolen freely.
+    fn rendezvous(&self) -> bool {
+        false
+    }
 
     fn name(&self) -> &'static str;
 }
@@ -71,14 +128,15 @@ pub use allreduce::{AllReduceGroup, ReduceEngine, RoundOutcome};
 pub use bmuf::BmufSync;
 pub use easgd::EasgdSync;
 pub use ma::MaSync;
-pub use ps::{DeltaScanCache, PushStats, QuantileSketch, SyncPsGroup};
+pub use partition::{ParamRange, Partition, PartitionPlan};
+pub use ps::{DeltaGate, DeltaScanCache, PushStats, QuantileSketch, SyncPsGroup};
 
-/// Build the shared chunked ring-AllReduce fabric for the decentralized
-/// algorithms (MA, BMUF): one group over all trainers, split into
-/// `cfg.allreduce_chunks` chunks so wire traffic is driven — and accounted
-/// per trainer NIC — through the explicit reduce-scatter + all-gather
-/// schedule, with the in-process reduction engine selected by
-/// `cfg.reduce_engine` (see [`allreduce`]).
+/// Build one chunked ring-AllReduce fabric over all trainers for a
+/// `num_params`-element partition (MA, BMUF): wire traffic is driven — and
+/// accounted per trainer NIC — through the explicit reduce-scatter +
+/// all-gather schedule, with the in-process reduction engine selected by
+/// `cfg.reduce_engine` (see [`allreduce`]). The partitioned fabric builds
+/// one group per decentralized partition, each sized to its range.
 pub fn build_group(
     cfg: &crate::config::RunConfig,
     num_params: usize,
@@ -90,10 +148,31 @@ pub fn build_group(
     )
 }
 
-/// Build the strategy instance for trainer `rank` from a run config.
+/// The single place the config→gate wiring lives: an [`EasgdSync`]
+/// carrying its own per-instance [`DeltaGate`] whenever the run is
+/// delta-gated. Used for every EASGD strategy — shadow partitions and the
+/// foreground per-worker plans alike — so a new gating mode wired here
+/// reaches them all.
+pub fn easgd_from_cfg(
+    cfg: &crate::config::RunConfig,
+    sync_ps: std::sync::Arc<SyncPsGroup>,
+) -> EasgdSync {
+    let mut s = EasgdSync::new(sync_ps, cfg.alpha);
+    if cfg.delta_gated() {
+        s = s.with_gate(DeltaGate::new(cfg.delta_threshold, cfg.delta_skip_target));
+    }
+    s
+}
+
+/// Build the strategy instance for one partition of trainer `rank`'s
+/// replica. `w0` is the *full* initial dense vector (BMUF slices out its
+/// partition); `group` is this partition's ring fabric (decentralized
+/// algorithms only). EASGD strategies get their own per-partition
+/// [`DeltaGate`] whenever the run is delta-gated, so every trainer ×
+/// partition gates on its own sketch.
 pub fn build_strategy(
     cfg: &crate::config::RunConfig,
-    num_params: usize,
+    part: &Partition,
     rank: usize,
     w0: &[f32],
     sync_ps: Option<std::sync::Arc<SyncPsGroup>>,
@@ -101,13 +180,12 @@ pub fn build_strategy(
 ) -> Result<Box<dyn SyncStrategy>> {
     use crate::config::SyncAlgo;
     let _ = rank; // ranks are implicit in-process; kept for API parity
-    Ok(match cfg.algo {
-        SyncAlgo::Easgd => Box::new(EasgdSync::new(
-            sync_ps.expect("EASGD needs sync PSs"),
-            cfg.alpha,
-        )),
+    Ok(match part.algo {
+        SyncAlgo::Easgd => {
+            Box::new(easgd_from_cfg(cfg, sync_ps.expect("EASGD needs sync PSs")))
+        }
         SyncAlgo::Ma => Box::new(
-            MaSync::new(group.expect("MA needs an AllReduce group"), cfg.alpha, num_params)
+            MaSync::new(group.expect("MA needs an AllReduce group"), cfg.alpha, part.range.len)
                 .with_round_delay(std::time::Duration::from_millis(cfg.collective_wire_ms)),
         ),
         SyncAlgo::Bmuf => Box::new(BmufSync::new(
@@ -115,7 +193,7 @@ pub fn build_strategy(
             cfg.alpha,
             cfg.bmuf_eta,
             cfg.bmuf_momentum,
-            w0,
+            &w0[part.range.lo()..part.range.hi()],
         )),
         SyncAlgo::None => Box::new(NoSync),
     })

@@ -1,0 +1,243 @@
+//! Partitioning the dense vector for the partitioned shadow-sync fabric.
+//!
+//! The paper's framework (§3.2) partitions the dense parameters and gives
+//! each partition its own background synchronization thread, "possibly with
+//! a different algorithm per partition". This module is that layout: a
+//! [`PartitionPlan`] cuts the flat parameter vector into `P` contiguous,
+//! LPT-balanced [`ParamRange`]s and resolves which [`SyncAlgo`] owns each
+//! one (`--algo-map`). `P = 1` reproduces the monolithic single-strategy
+//! fabric bit for bit — with one *deliberate* exception: adaptive delta
+//! gating now runs on per-strategy sketches (per trainer × partition)
+//! instead of one sketch shared by every trainer, so multi-trainer
+//! adaptive runs gate independently by design (the ROADMAP
+//! per-trainer/per-shard follow-on). Fixed-threshold and ungated runs are
+//! exactly equivalent, regression-tested in `tests/sync_integration.rs`.
+
+use anyhow::{bail, Result};
+
+use crate::config::{RunConfig, SyncAlgo};
+use crate::placement::{lpt, Item};
+
+/// A contiguous view into the flat dense-parameter vector:
+/// `[offset, offset + len)`. [`crate::sync::SyncCtx`] carries one of these
+/// so a [`crate::sync::SyncStrategy`] operates on its partition only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamRange {
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl ParamRange {
+    /// The whole-vector range — single-partition plans and the foreground
+    /// drivers use exactly this.
+    pub fn full(len: usize) -> Self {
+        Self { offset: 0, len }
+    }
+
+    /// First element of the range.
+    pub fn lo(&self) -> usize {
+        self.offset
+    }
+
+    /// One past the last element of the range.
+    pub fn hi(&self) -> usize {
+        self.offset + self.len
+    }
+}
+
+/// One entry of a [`PartitionPlan`]: a contiguous range plus the
+/// synchronization algorithm that owns it.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Index of this partition in its plan (metrics key, `--algo-map` key).
+    pub index: usize,
+    pub range: ParamRange,
+    pub algo: SyncAlgo,
+}
+
+/// The partitioned fabric's layout: `P` contiguous LPT-balanced ranges
+/// covering the dense vector, each mapped to a sync algorithm.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub partitions: Vec<Partition>,
+}
+
+impl PartitionPlan {
+    /// The trivial plan: one partition spanning everything (the monolithic
+    /// pre-partitioning behaviour — bit for bit for fixed-threshold and
+    /// ungated runs; see the module doc for the adaptive-gate exception).
+    pub fn single(num_params: usize, algo: SyncAlgo) -> Self {
+        Self {
+            partitions: vec![Partition { index: 0, range: ParamRange::full(num_params), algo }],
+        }
+    }
+
+    /// Build the plan for a run: `cfg.sync_partitions` contiguous ranges
+    /// packed by [`lpt_contiguous_ranges`] at the EASGD push-chunk granule
+    /// (so partitions align to push chunks whenever the vector is large
+    /// enough), each resolved through [`RunConfig::partition_algo`].
+    pub fn build(num_params: usize, cfg: &RunConfig) -> Result<Self> {
+        let p = cfg.sync_partitions.max(1);
+        if p > num_params {
+            bail!("--sync-partitions {p} exceeds the {num_params} dense parameters");
+        }
+        if p == 1 && cfg.algo_map.is_none() {
+            return Ok(Self::single(num_params, cfg.algo));
+        }
+        let partitions = lpt_contiguous_ranges(num_params, p, cfg.easgd_chunk_elems.max(1))
+            .into_iter()
+            .enumerate()
+            .map(|(index, range)| Partition { index, range, algo: cfg.partition_algo(index) })
+            .collect();
+        Ok(Self { partitions })
+    }
+
+    pub fn len(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partitions.is_empty()
+    }
+
+    /// Does any partition run `algo`?
+    pub fn uses(&self, algo: SyncAlgo) -> bool {
+        self.partitions.iter().any(|p| p.algo == algo)
+    }
+
+    /// Does any partition run a decentralized AllReduce algorithm?
+    pub fn uses_collective(&self) -> bool {
+        self.uses(SyncAlgo::Ma) || self.uses(SyncAlgo::Bmuf)
+    }
+}
+
+/// Cut `[0, len)` into `p` contiguous ranges balanced by LPT: uniform-cost
+/// blocks of up to `granule` elements are packed into `p` bins by
+/// [`crate::placement::lpt`] — the same bin packing the paper's master uses
+/// for PS shard placement — and partition `i` takes the `i`-th contiguous
+/// run of blocks with the block count LPT gave bin `i`. Contiguity is what
+/// makes a partition a [`ParamRange`] view of the replica; LPT supplies
+/// balanced counts and keeps the cut compatible with non-uniform per-block
+/// costs (e.g. profiled per-range write rates) later.
+///
+/// The granule is clamped so at least `p` blocks exist; every returned
+/// range is non-empty and the ranges tile `[0, len)` exactly.
+pub fn lpt_contiguous_ranges(len: usize, p: usize, granule: usize) -> Vec<ParamRange> {
+    assert!(p >= 1 && len >= p, "need at least one element per partition");
+    let granule = granule.clamp(1, (len / p).max(1));
+    let blocks = len.div_ceil(granule);
+    let items: Vec<Item> = (0..blocks)
+        .map(|id| Item { id, cost: granule.min(len - id * granule) as f64 })
+        .collect();
+    let placement = lpt(&items, p);
+    let mut counts = vec![0usize; p];
+    for &bin in &placement.assignment {
+        counts[bin] += 1;
+    }
+    let mut out = Vec::with_capacity(p);
+    let mut lo = 0usize;
+    for &c in &counts {
+        let hi = (lo + c * granule).min(len);
+        out.push(ParamRange { offset: lo, len: hi - lo });
+        lo = hi;
+    }
+    debug_assert_eq!(out.last().map(|r| r.hi()), Some(len));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn param_range_views() {
+        let r = ParamRange::full(10);
+        assert_eq!((r.lo(), r.hi(), r.len), (0, 10, 10));
+        let r = ParamRange { offset: 4, len: 3 };
+        assert_eq!((r.lo(), r.hi()), (4, 7));
+    }
+
+    #[test]
+    fn single_plan_covers_everything() {
+        let plan = PartitionPlan::single(537, SyncAlgo::Easgd);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.partitions[0].range, ParamRange::full(537));
+        assert!(plan.uses(SyncAlgo::Easgd));
+        assert!(!plan.uses_collective());
+    }
+
+    #[test]
+    fn ranges_tile_exactly_and_balance() {
+        check("lpt-contiguous", 40, |g| {
+            let p = g.usize_in(1, 8);
+            let len = g.usize_in(p, 5_000);
+            let granule = g.usize_in(1, 700);
+            let rs = lpt_contiguous_ranges(len, p, granule);
+            assert_eq!(rs.len(), p);
+            assert_eq!(rs[0].lo(), 0);
+            assert_eq!(rs[p - 1].hi(), len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].hi(), w[1].lo(), "ranges must be contiguous");
+            }
+            for r in &rs {
+                assert!(r.len > 0, "empty partition in {rs:?}");
+            }
+            // LPT balance at block granularity: spread <= one granule
+            let g_eff = granule.clamp(1, (len / p).max(1));
+            let sizes: Vec<usize> = rs.iter().map(|r| r.len).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(
+                mx - mn <= 2 * g_eff,
+                "imbalance {mx}-{mn} over granule {g_eff}: {sizes:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn granule_aligns_partition_boundaries() {
+        let rs = lpt_contiguous_ranges(1024, 4, 64);
+        for r in &rs[..3] {
+            assert_eq!(r.hi() % 64, 0, "boundary {r:?} not chunk-aligned");
+        }
+        assert_eq!(rs[3].hi(), 1024);
+    }
+
+    #[test]
+    fn plan_build_resolves_algo_map() {
+        let cfg = RunConfig {
+            sync_partitions: 4,
+            shadow_threads: 2,
+            algo_map: Some("easgd:0-1,ma:2-3".parse().unwrap()),
+            easgd_chunk_elems: 8,
+            ..RunConfig::default()
+        };
+        let plan = PartitionPlan::build(64, &cfg).unwrap();
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.partitions[0].algo, SyncAlgo::Easgd);
+        assert_eq!(plan.partitions[1].algo, SyncAlgo::Easgd);
+        assert_eq!(plan.partitions[2].algo, SyncAlgo::Ma);
+        assert_eq!(plan.partitions[3].algo, SyncAlgo::Ma);
+        assert!(plan.uses_collective());
+        assert!(plan.uses(SyncAlgo::Easgd));
+    }
+
+    #[test]
+    fn plan_build_rejects_more_partitions_than_params() {
+        let cfg = RunConfig {
+            sync_partitions: 10,
+            shadow_threads: 1,
+            ..RunConfig::default()
+        };
+        assert!(PartitionPlan::build(5, &cfg).is_err());
+    }
+
+    #[test]
+    fn p1_plan_is_the_single_plan() {
+        let cfg = RunConfig::default();
+        let plan = PartitionPlan::build(537, &cfg).unwrap();
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.partitions[0].range, ParamRange::full(537));
+        assert_eq!(plan.partitions[0].algo, cfg.algo);
+    }
+}

@@ -25,13 +25,30 @@
 //!
 //! A single global threshold has to be tuned per model and per phase of
 //! training — too low and nothing skips, too high and the replicas decouple.
-//! [`SyncPsGroup::with_adaptive_gate`] instead targets a *skip rate*: every
-//! scanned chunk's max-gap feeds a lock-free sliding-window
-//! [`QuantileSketch`], and each round gates at the window's
-//! `delta_skip_target`-quantile, so the observed skip rate tracks the
-//! target as the gap distribution drifts across training (until the sketch
-//! warms up, the fixed `delta_threshold` — possibly 0, i.e. push everything
-//! — applies).
+//! A [`DeltaGate`] instead targets a *skip rate*: every scanned chunk's
+//! max-gap feeds a lock-free sliding-window [`QuantileSketch`], and each
+//! round gates at the window's `delta_skip_target`-quantile, so the
+//! observed skip rate tracks the target as the gap distribution drifts
+//! across training (until the sketch warms up, the fixed `delta_threshold`
+//! — possibly 0, i.e. push everything — applies). The group carries one
+//! gate for the legacy whole-vector API
+//! ([`SyncPsGroup::with_adaptive_gate`]); the partitioned fabric gives
+//! every EASGD strategy — per trainer, per partition — its *own* gate, so
+//! heterogeneous replicas and partitions gate independently.
+//!
+//! ## Range-scoped partition rounds and central version counters
+//!
+//! The partitioned fabric syncs each [`super::ParamRange`] partition on its
+//! own ([`SyncPsGroup::elastic_sync_partition`]): only the push chunks
+//! overlapping the range move (chunks are clipped at partition
+//! boundaries), and both the scan cache and the gate belong to the calling
+//! strategy. Cache ordinals stay keyed by *global* chunk ordinal, and the
+//! central vector keeps a per-chunk **version counter** that every elastic
+//! push bumps — so a chunk *another trainer* pushed no longer matches this
+//! trainer's cached `(signature, version)` pair and is re-scanned next
+//! round. That closes the dirty-epoch drift gap (a scan-skipped chunk
+//! silently missing central-side movement) with the same
+//! one-round-bounded staleness class as the racy scan itself.
 //!
 //! ## Dirty-epoch scan skips
 //!
@@ -49,8 +66,12 @@
 //! (see the [`crate::tensor::DirtyEpochs`] precision caveat — the same
 //! transient-staleness class as the racy scan itself).
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::atomic::{
+    AtomicU32, AtomicU64, AtomicUsize,
+    Ordering::{Acquire, Relaxed, Release},
+};
 
+use super::partition::ParamRange;
 use crate::net::{Network, NodeId, Role};
 use crate::placement::equal_ranges;
 use crate::tensor::HogwildBuffer;
@@ -152,6 +173,9 @@ pub struct DeltaScanCache {
 #[derive(Debug, Default, Clone, Copy)]
 struct CacheEntry {
     sig: u64,
+    /// central-side chunk version at scan time; a mismatch means another
+    /// trainer pushed this chunk since, so the cached gap is stale
+    central_ver: u64,
     max_abs: f32,
     sum_abs: f64,
     valid: bool,
@@ -258,6 +282,75 @@ impl PsTrafficSnapshot {
 /// Sliding-window size of the adaptive gate's gap sketch.
 const GATE_SKETCH_WINDOW: usize = 512;
 
+/// One delta-gate instance: a fixed max-|Δ| threshold plus an optional
+/// adaptive quantile sketch targeting a skip *rate*. The [`SyncPsGroup`]
+/// carries a group-level gate for the legacy whole-vector API; the
+/// partitioned fabric hands each EASGD strategy (per trainer × per
+/// partition) its own gate, closing the "per-trainer/per-shard sketch"
+/// follow-on: heterogeneous replicas gate on their own gap distributions.
+#[derive(Debug)]
+pub struct DeltaGate {
+    /// skip chunks whose max |local − central| is at or below this
+    delta_threshold: f32,
+    /// adaptive mode: target fraction of gated chunks to skip (0 = fixed
+    /// threshold mode)
+    skip_target: f32,
+    /// per-chunk max-gap distribution feeding the adaptive gate
+    sketch: Option<QuantileSketch>,
+}
+
+impl DeltaGate {
+    /// A gate with fixed threshold `delta_threshold` (0 = never skip on
+    /// the fixed path) and adaptive skip target `skip_target` (0 = fixed
+    /// mode; positive values allocate the sliding-window sketch).
+    pub fn new(delta_threshold: f32, skip_target: f32) -> Self {
+        let skip_target = skip_target.clamp(0.0, 1.0);
+        Self {
+            delta_threshold: delta_threshold.max(0.0),
+            skip_target,
+            sketch: (skip_target > 0.0).then(|| QuantileSketch::new(GATE_SKETCH_WINDOW)),
+        }
+    }
+
+    /// The no-op gate: nothing ever skips.
+    pub fn disabled() -> Self {
+        Self::new(0.0, 0.0)
+    }
+
+    /// Is any gating (fixed or adaptive) configured? Mirrors
+    /// `RunConfig::delta_gated` (strategies are built from that config);
+    /// keep the two predicates in lockstep when adding a gating mode, or
+    /// trainer replicas stop tracking dirty epochs while the gate still
+    /// scans.
+    pub fn enabled(&self) -> bool {
+        self.delta_threshold > 0.0 || self.skip_target > 0.0
+    }
+
+    /// The max-|Δ| threshold this round gates at. Adaptive mode reads the
+    /// sketch's target quantile (falling back to the fixed threshold — or
+    /// "never skip" — until warmup); fixed mode uses `delta_threshold`.
+    /// Negative means no chunk can skip (gaps are always >= 0).
+    fn round_gate(&self) -> f32 {
+        let fixed = if self.delta_threshold > 0.0 { self.delta_threshold } else { -1.0 };
+        match &self.sketch {
+            Some(sk) => sk.quantile(self.skip_target).unwrap_or(fixed),
+            None => fixed,
+        }
+    }
+
+    /// Feed one per-chunk max-gap observation to the adaptive sketch.
+    fn record(&self, gap: f32) {
+        if let Some(sk) = &self.sketch {
+            sk.record(gap);
+        }
+    }
+
+    /// Test observability: samples currently in the adaptive sketch.
+    pub fn sketch_samples(&self) -> usize {
+        self.sketch.as_ref().map_or(0, |sk| sk.samples())
+    }
+}
+
 /// The sync-PS tier: the central `w^PS` plus its sharding.
 pub struct SyncPsGroup {
     /// central parameters, Hogwild-shared across all trainers' syncs
@@ -265,13 +358,13 @@ pub struct SyncPsGroup {
     pub shards: Vec<SyncShard>,
     /// elements per push chunk (0 = whole-shard pushes)
     chunk_elems: usize,
-    /// skip chunks whose max |local − central| is at or below this
-    delta_threshold: f32,
-    /// adaptive gate: target fraction of gated chunks to skip (0 = fixed
-    /// threshold mode)
-    skip_target: f32,
-    /// per-chunk max-gap distribution feeding the adaptive gate
-    gap_sketch: Option<QuantileSketch>,
+    /// group-level gate for the legacy whole-vector API; strategies built
+    /// by the partitioned fabric pass their own per-partition gate instead
+    gate: DeltaGate,
+    /// central-side per-chunk version counters (global push-chunk
+    /// ordinals): every elastic push bumps its chunk, so one trainer's
+    /// push invalidates every other trainer's cached scan of that chunk
+    chunk_versions: Vec<AtomicU64>,
     rounds: AtomicU64,
     bytes_moved: AtomicU64,
     chunks_pushed: AtomicU64,
@@ -287,42 +380,56 @@ impl SyncPsGroup {
             .into_iter()
             .map(|(lo, hi)| SyncShard { lo, hi, node: net.add_node(Role::SyncPs) })
             .collect();
-        Self {
+        let mut g = Self {
             central: HogwildBuffer::from_slice(w0),
             shards,
             chunk_elems: 0,
-            delta_threshold: 0.0,
-            skip_target: 0.0,
-            gap_sketch: None,
+            gate: DeltaGate::disabled(),
+            chunk_versions: Vec::new(),
             rounds: AtomicU64::new(0),
             bytes_moved: AtomicU64::new(0),
             chunks_pushed: AtomicU64::new(0),
             chunks_skipped: AtomicU64::new(0),
             chunks_scan_skipped: AtomicU64::new(0),
-        }
+        };
+        g.reset_chunk_versions();
+        g
     }
 
     /// Configure chunked pushes (`chunk_elems` elements per chunk, 0 =
     /// whole shard) with a delta gate (`delta_threshold` max-|Δ| skip
-    /// level, 0 = push everything).
+    /// level, 0 = push everything). Builder-phase only: resizes the
+    /// central version table to the new chunk count.
     pub fn with_push_chunking(mut self, chunk_elems: usize, delta_threshold: f32) -> Self {
         self.chunk_elems = chunk_elems;
-        self.delta_threshold = delta_threshold.max(0.0);
+        self.gate = DeltaGate::new(delta_threshold, self.gate.skip_target);
+        self.reset_chunk_versions();
         self
     }
 
-    /// Enable the adaptive quantile gate: per round, skip the chunks whose
-    /// max-gap falls in the lowest `skip_target` fraction of the recently
-    /// observed gap distribution. 0 disables (fixed-threshold mode); while
-    /// the sketch warms up, the fixed `delta_threshold` applies.
+    /// Enable the adaptive quantile gate on the group-level gate: per
+    /// round, skip the chunks whose max-gap falls in the lowest
+    /// `skip_target` fraction of the recently observed gap distribution. 0
+    /// disables (fixed-threshold mode); while the sketch warms up, the
+    /// fixed `delta_threshold` applies. Strategies with their own
+    /// [`DeltaGate`] bypass this gate entirely.
     pub fn with_adaptive_gate(mut self, skip_target: f32) -> Self {
-        self.skip_target = skip_target.clamp(0.0, 1.0);
-        self.gap_sketch = if self.skip_target > 0.0 {
-            Some(QuantileSketch::new(GATE_SKETCH_WINDOW))
-        } else {
-            None
-        };
+        self.gate = DeltaGate::new(self.gate.delta_threshold, skip_target);
         self
+    }
+
+    /// One zeroed version counter per global push chunk (builder phase).
+    fn reset_chunk_versions(&mut self) {
+        let n = self.push_chunks().count();
+        let mut v = Vec::with_capacity(n);
+        v.resize_with(n, || AtomicU64::new(0));
+        self.chunk_versions = v;
+    }
+
+    /// Central-side version of push chunk `k` (bumped on every push of
+    /// that chunk, by any trainer). Test observability.
+    pub fn chunk_version(&self, k: usize) -> u64 {
+        self.chunk_versions[k].load(Acquire)
     }
 
     /// One EASGD elastic round for `local` against every shard:
@@ -347,7 +454,7 @@ impl SyncPsGroup {
         trainer: NodeId,
         net: &Network,
     ) -> PushStats {
-        self.elastic_sync_impl(local, alpha, trainer, net, None)
+        self.elastic_sync_impl(local, alpha, trainer, net, None, None, 0, self.central.len())
     }
 
     /// `elastic_sync_stats` with a per-trainer [`DeltaScanCache`]: when the
@@ -361,30 +468,40 @@ impl SyncPsGroup {
         net: &Network,
         cache: &mut DeltaScanCache,
     ) -> PushStats {
-        self.elastic_sync_impl(local, alpha, trainer, net, Some(cache))
+        self.elastic_sync_impl(local, alpha, trainer, net, Some(cache), None, 0, self.central.len())
     }
 
-    /// Is any delta gate (fixed or adaptive) configured? Mirrors
-    /// `RunConfig::delta_gated` (the coordinator builds these fields from
-    /// that config); keep the two predicates in lockstep when adding a
-    /// gating mode, or trainer replicas stop tracking dirty epochs while
-    /// the gate still scans.
-    fn gating_enabled(&self) -> bool {
-        self.delta_threshold > 0.0 || self.skip_target > 0.0
+    /// Range-scoped elastic round for one partition of the replica: only
+    /// the push chunks overlapping `range` are gated and pushed (clipped
+    /// at partition boundaries), `gate` — when given — replaces the
+    /// group-level gate with the caller's own per-partition instance, and
+    /// `cache` ordinals stay keyed by global chunk ordinal so the cache
+    /// survives any partition geometry. A full-range call with the group
+    /// gate is bit-identical to [`SyncPsGroup::elastic_sync_cached`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn elastic_sync_partition(
+        &self,
+        local: &HogwildBuffer,
+        range: ParamRange,
+        alpha: f32,
+        trainer: NodeId,
+        net: &Network,
+        cache: &mut DeltaScanCache,
+        gate: Option<&DeltaGate>,
+    ) -> PushStats {
+        self.elastic_sync_impl(
+            local,
+            alpha,
+            trainer,
+            net,
+            Some(cache),
+            gate,
+            range.lo(),
+            range.hi().min(self.central.len()),
+        )
     }
 
-    /// The max-|Δ| threshold this round gates at. Adaptive mode reads the
-    /// sketch's target quantile (falling back to the fixed threshold — or
-    /// "never skip" — until warmup); fixed mode uses `delta_threshold`.
-    /// Negative means no chunk can skip (gaps are always >= 0).
-    fn round_gate(&self) -> f32 {
-        let fixed = if self.delta_threshold > 0.0 { self.delta_threshold } else { -1.0 };
-        match &self.gap_sketch {
-            Some(sk) => sk.quantile(self.skip_target).unwrap_or(fixed),
-            None => fixed,
-        }
-    }
-
+    #[allow(clippy::too_many_arguments)]
     fn elastic_sync_impl(
         &self,
         local: &HogwildBuffer,
@@ -392,10 +509,15 @@ impl SyncPsGroup {
         trainer: NodeId,
         net: &Network,
         mut cache: Option<&mut DeltaScanCache>,
+        gate_override: Option<&DeltaGate>,
+        lo: usize,
+        hi: usize,
     ) -> PushStats {
         debug_assert_eq!(local.len(), self.central.len());
-        let gate_on = self.gating_enabled();
-        let gate = if gate_on { self.round_gate() } else { -1.0 };
+        debug_assert!(lo <= hi && hi <= self.central.len());
+        let gate_state = gate_override.unwrap_or(&self.gate);
+        let gate_on = gate_state.enabled();
+        let gate = if gate_on { gate_state.round_gate() } else { -1.0 };
         let mut gap_weighted = 0f64;
         let mut bytes = 0u64;
         let mut pushed = 0u64;
@@ -403,17 +525,22 @@ impl SyncPsGroup {
         let mut scan_skipped = 0u64;
         // the shared walk keeps [`DeltaScanCache`] ordinals `k` in lockstep
         // with `push_chunk_ranges` by construction
-        for (k, (lo, hi, node)) in self.push_chunks().enumerate() {
+        for (k, clo, chi, node) in self.push_chunks_scoped(lo, hi) {
             if gate_on {
+                // version read precedes the scan: if a peer's push lands
+                // during our scan, the next round's version check fails
+                // and forces the conservative re-scan
+                let ver = self.chunk_versions[k].load(Acquire);
                 // dirty-epoch fast path: if the replica records no write
-                // to [lo, hi) since this chunk's last scan, reuse that
+                // to [clo, chi) since this chunk's last scan — and no
+                // peer pushed the chunk centrally since — reuse that
                 // scan; otherwise do the racy scan (Hogwild semantics)
                 // and feed the fresh max-gap to the adaptive sketch
-                let sig = cache.as_ref().and_then(|_| local.dirty_signature(lo, hi));
+                let sig = cache.as_ref().and_then(|_| local.dirty_signature(clo, chi));
                 let (max_abs, sum_abs) = match (&mut cache, sig) {
                     (Some(c), Some(sig)) => {
                         let e = c.entry(k);
-                        if e.valid && e.sig == sig {
+                        if e.valid && e.sig == sig && e.central_ver == ver {
                             e.reused = true;
                             scan_skipped += 1;
                             // the cached gap is still this round's gap
@@ -421,22 +548,19 @@ impl SyncPsGroup {
                             // adaptive gate would see only the rescanned
                             // (dirtier, higher-gap) subpopulation and the
                             // skip rate would drift above its target
-                            if let Some(sk) = &self.gap_sketch {
-                                sk.record(e.max_abs);
-                            }
+                            gate_state.record(e.max_abs);
                             (e.max_abs, e.sum_abs)
                         } else {
-                            let (m, sum) = Self::chunk_gap(local, &self.central, lo, hi);
+                            let (m, sum) = Self::chunk_gap(local, &self.central, clo, chi);
                             *e = CacheEntry {
                                 sig,
+                                central_ver: ver,
                                 max_abs: m,
                                 sum_abs: sum,
                                 valid: true,
                                 reused: false,
                             };
-                            if let Some(sk) = &self.gap_sketch {
-                                sk.record(m);
-                            }
+                            gate_state.record(m);
                             (m, sum)
                         }
                     }
@@ -448,10 +572,8 @@ impl SyncPsGroup {
                             e.valid = false;
                             e.reused = false;
                         }
-                        let (m, sum) = Self::chunk_gap(local, &self.central, lo, hi);
-                        if let Some(sk) = &self.gap_sketch {
-                            sk.record(m);
-                        }
+                        let (m, sum) = Self::chunk_gap(local, &self.central, clo, chi);
+                        gate_state.record(m);
                         (m, sum)
                     }
                 };
@@ -468,12 +590,16 @@ impl SyncPsGroup {
                     c.entry(k).valid = false;
                 }
             }
-            let chunk_bytes = ((hi - lo) * 4) as u64;
+            let chunk_bytes = ((chi - clo) * 4) as u64;
             // trainer pushes the chunk, PS answers with the moved chunk
             net.transfer(trainer, node, chunk_bytes);
-            let gap = HogwildBuffer::elastic_pair(local, &self.central, lo, hi, alpha);
+            let gap = HogwildBuffer::elastic_pair(local, &self.central, clo, chi, alpha);
             net.transfer(node, trainer, chunk_bytes);
-            gap_weighted += gap as f64 * (hi - lo) as f64;
+            // bump-after-move (Release): the moment a peer observes the new
+            // version, the elastic stores behind it are visible too, so its
+            // re-scan sees the drift this push introduced
+            self.chunk_versions[k].fetch_add(1, Release);
+            gap_weighted += gap as f64 * (chi - clo) as f64;
             bytes += 2 * chunk_bytes;
             pushed += 1;
         }
@@ -483,7 +609,7 @@ impl SyncPsGroup {
         self.chunks_skipped.fetch_add(skipped, Relaxed);
         self.chunks_scan_skipped.fetch_add(scan_skipped, Relaxed);
         PushStats {
-            gap: (gap_weighted / self.central.len().max(1) as f64) as f32,
+            gap: (gap_weighted / (hi - lo).max(1) as f64) as f32,
             bytes,
             chunks_pushed: pushed,
             chunks_skipped: skipped,
@@ -536,17 +662,37 @@ impl SyncPsGroup {
         })
     }
 
+    /// The scoped walk of [`SyncPsGroup::push_chunks`]: every push chunk
+    /// overlapping `[lo, hi)`, as `(global ordinal, clipped lo, clipped
+    /// hi, shard node)`. Partitions that don't align to chunk boundaries
+    /// own exactly their clipped slice; the global ordinal keys both the
+    /// [`DeltaScanCache`] and the central version table, so adjacent
+    /// partitions sharing a clipped chunk invalidate each other
+    /// conservatively.
+    fn push_chunks_scoped(
+        &self,
+        lo: usize,
+        hi: usize,
+    ) -> impl Iterator<Item = (usize, usize, usize, NodeId)> + '_ {
+        self.push_chunks().enumerate().filter_map(move |(k, (clo, chi, node))| {
+            let l = clo.max(lo);
+            let h = chi.min(hi);
+            (l < h).then_some((k, l, h, node))
+        })
+    }
+
     /// The `[lo, hi)` ranges of every push chunk, in the order one elastic
     /// round visits them (== [`DeltaScanCache`] ordinals).
     pub fn push_chunk_ranges(&self) -> Vec<(usize, usize)> {
         self.push_chunks().map(|(lo, hi, _)| (lo, hi)).collect()
     }
 
-    /// The max-|Δ| threshold the *next* round would gate at (diagnostic;
-    /// adaptive mode tracks the sketch, so this moves between rounds).
+    /// The max-|Δ| threshold the *next* round of the group-level gate
+    /// would gate at (diagnostic; adaptive mode tracks the sketch, so this
+    /// moves between rounds).
     pub fn current_gate(&self) -> f32 {
-        if self.gating_enabled() {
-            self.round_gate()
+        if self.gate.enabled() {
+            self.gate.round_gate()
         } else {
             -1.0
         }
@@ -824,13 +970,13 @@ mod tests {
         for _ in 0..3 {
             g.elastic_sync_cached(&local, 0.5, trainer, &net, &mut cache);
         }
-        let before = g.gap_sketch.as_ref().unwrap().samples();
+        let before = g.gate.sketch_samples();
         // r4: every chunk untouched since its r3 scan -> all reused, and
         // every reuse still lands one observation in the sketch
         let st = g.elastic_sync_cached(&local, 0.5, trainer, &net, &mut cache);
         assert_eq!(st.chunks_scan_skipped, 8);
         assert_eq!(st.chunks_skipped, 8);
-        assert_eq!(g.gap_sketch.as_ref().unwrap().samples(), before + 8);
+        assert_eq!(g.gate.sketch_samples(), before + 8);
     }
 
     #[test]
@@ -845,6 +991,110 @@ mod tests {
             assert_eq!(st.chunks_scan_skipped, 0);
             assert_eq!(st.chunks_skipped, 4);
         }
+    }
+
+    #[test]
+    fn peer_push_invalidates_cached_scan_via_central_versions() {
+        // ROADMAP drift gap, closed: a chunk ANOTHER trainer pushed must
+        // not stay scan-skipped here just because our replica is untouched
+        let mut net = Network::new(None);
+        let ta = net.add_node(Role::Trainer);
+        let tb = net.add_node(Role::Trainer);
+        let p = 32;
+        let g = SyncPsGroup::build(&vec![0.0; p], 1, &mut net).with_push_chunking(8, 1e-3);
+        // trainer A converges exactly, with dirty tracking + scan cache
+        let a = HogwildBuffer::from_slice(&vec![0.0; p]).with_dirty_epochs(8);
+        let mut ca = DeltaScanCache::new();
+        let st = g.elastic_sync_cached(&a, 0.5, ta, &net, &mut ca);
+        assert_eq!(st.chunks_skipped, 4);
+        // round 2: nothing changed anywhere -> every scan reused
+        let st = g.elastic_sync_cached(&a, 0.5, ta, &net, &mut ca);
+        assert_eq!(st.chunks_scan_skipped, 4);
+        // trainer B pushes chunk 0 (its replica diverged there)
+        let mut bv = vec![0.0f32; p];
+        for x in bv.iter_mut().take(8) {
+            *x = 2.0;
+        }
+        let v0 = g.chunk_version(0);
+        let st = g.elastic_sync_stats(&HogwildBuffer::from_slice(&bv), 0.5, tb, &net);
+        assert_eq!(st.chunks_pushed, 1);
+        assert_eq!(g.chunk_version(0), v0 + 1, "a push must bump its chunk version");
+        // round 3: A's replica is still untouched, but chunk 0's central
+        // moved — the version counter forces exactly that chunk to
+        // re-scan, and the fresh scan sees (and re-syncs) B's drift
+        let st = g.elastic_sync_cached(&a, 0.5, ta, &net, &mut ca);
+        assert_eq!(st.chunks_scan_skipped, 3, "chunk 0 must re-scan after B's push");
+        assert!(!ca.scan_skipped(0));
+        assert_eq!(st.chunks_pushed, 1, "the drift B introduced must be re-synced");
+    }
+
+    #[test]
+    fn partition_scoped_sync_touches_only_its_range() {
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let p = 64;
+        let g = SyncPsGroup::build(&vec![0.0; p], 2, &mut net).with_push_chunking(8, 0.0);
+        let local = HogwildBuffer::from_slice(&vec![2.0; p]);
+        let mut cache = DeltaScanCache::new();
+        // sync only the second quarter [16, 32)
+        let range = ParamRange { offset: 16, len: 16 };
+        let st = g.elastic_sync_partition(&local, range, 0.5, trainer, &net, &mut cache, None);
+        assert_eq!(st.chunks_pushed, 2);
+        assert_eq!(st.bytes, 2 * 16 * 4);
+        assert!((st.gap - 2.0).abs() < 1e-6, "gap is over the partition, not the vector");
+        // only the partition moved, on both sides
+        let lv = local.to_vec();
+        let cv = g.central.to_vec();
+        assert!(lv[..16].iter().all(|&x| x == 2.0));
+        assert!(lv[16..32].iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        assert!(lv[32..].iter().all(|&x| x == 2.0));
+        assert!(cv[..16].iter().all(|&x| x == 0.0));
+        assert!(cv[16..32].iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        assert!(cv[32..].iter().all(|&x| x == 0.0));
+        // NIC counters carry exactly the partition's bytes
+        assert_eq!(net.role_bytes(Role::SyncPs), st.bytes);
+    }
+
+    #[test]
+    fn partition_boundaries_clip_push_chunks() {
+        // chunk size 8, partition [4, 12): two clipped half-chunks (global
+        // ordinals 0 and 1) move 4 elements each
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let g = SyncPsGroup::build(&vec![0.0; 16], 1, &mut net).with_push_chunking(8, 0.0);
+        let local = HogwildBuffer::from_slice(&vec![1.0; 16]);
+        let mut cache = DeltaScanCache::new();
+        let range = ParamRange { offset: 4, len: 8 };
+        let st = g.elastic_sync_partition(&local, range, 0.5, trainer, &net, &mut cache, None);
+        assert_eq!(st.chunks_pushed, 2);
+        assert_eq!(st.bytes, 2 * 8 * 4);
+        let lv = local.to_vec();
+        assert!(lv[..4].iter().all(|&x| x == 1.0));
+        assert!(lv[4..12].iter().all(|&x| (x - 0.5).abs() < 1e-6));
+        assert!(lv[12..].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn per_partition_gates_sketch_independently() {
+        // two strategies' gates over disjoint partitions: each sketch only
+        // sees its own partition's gap observations
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let p = 64;
+        let g = SyncPsGroup::build(&vec![0.0; p], 1, &mut net).with_push_chunking(8, 0.0);
+        let local = HogwildBuffer::from_slice(&vec![1.0; p]);
+        let gate_a = DeltaGate::new(0.0, 0.5);
+        let gate_b = DeltaGate::new(0.0, 0.5);
+        let (mut ca, mut cb) = (DeltaScanCache::new(), DeltaScanCache::new());
+        let ra = ParamRange { offset: 0, len: 32 };
+        let rb = ParamRange { offset: 32, len: 32 };
+        g.elastic_sync_partition(&local, ra, 0.5, trainer, &net, &mut ca, Some(&gate_a));
+        assert_eq!(gate_a.sketch_samples(), 4, "4 chunks observed in partition A");
+        assert_eq!(gate_b.sketch_samples(), 0, "partition B's gate saw nothing");
+        g.elastic_sync_partition(&local, rb, 0.5, trainer, &net, &mut cb, Some(&gate_b));
+        assert_eq!(gate_b.sketch_samples(), 4);
+        // the group-level gate was bypassed entirely
+        assert_eq!(g.gate.sketch_samples(), 0);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 
 pub mod ops;
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Acquire, Ordering::Relaxed, Ordering::Release};
+use std::sync::atomic::{
+    AtomicU32, AtomicU64,
+    Ordering::{Acquire, Relaxed, Release},
+};
 
 /// Per-chunk write counters ("dirty epochs") for a [`HogwildBuffer`].
 ///
@@ -212,14 +215,26 @@ impl HogwildBuffer {
     /// Snapshot into a caller-provided buffer (no allocation on hot path).
     pub fn read_into(&self, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.len());
-        for (o, a) in out.iter_mut().zip(&self.data) {
+        self.read_range_into(0, out);
+    }
+
+    /// Snapshot `[lo, lo + out.len())` into `out` — the partition-scoped
+    /// read the range-scoped sync strategies use.
+    #[inline]
+    pub fn read_range_into(&self, lo: usize, out: &mut [f32]) {
+        for (o, a) in out.iter_mut().zip(&self.data[lo..lo + out.len()]) {
             *o = f32::from_bits(a.load(Relaxed));
         }
     }
 
     pub fn to_vec(&self) -> Vec<f32> {
-        let mut v = vec![0f32; self.len()];
-        self.read_into(&mut v);
+        self.to_vec_range(0, self.len())
+    }
+
+    /// Snapshot of `[lo, hi)` as a fresh vector.
+    pub fn to_vec_range(&self, lo: usize, hi: usize) -> Vec<f32> {
+        let mut v = vec![0f32; hi - lo];
+        self.read_range_into(lo, &mut v);
         v
     }
 
@@ -236,11 +251,18 @@ impl HogwildBuffer {
     /// asymmetric update (Algorithm 2).
     pub fn lerp_toward_slice(&self, target: &[f32], alpha: f32) {
         debug_assert_eq!(target.len(), self.len());
-        for (a, &t) in self.data.iter().zip(target) {
+        self.lerp_range_toward_slice(0, target, alpha);
+    }
+
+    /// Racy elastic interpolation of `[lo, lo + target.len())` toward
+    /// `target` — the partition-scoped elastic pull of the range-scoped
+    /// MA/BMUF strategies.
+    pub fn lerp_range_toward_slice(&self, lo: usize, target: &[f32], alpha: f32) {
+        for (a, &t) in self.data[lo..lo + target.len()].iter().zip(target) {
             let v = f32::from_bits(a.load(Relaxed));
             a.store((v + alpha * (t - v)).to_bits(), Relaxed);
         }
-        self.mark_dirty_range(0, target.len());
+        self.mark_dirty_range(lo, lo + target.len());
     }
 
     /// Symmetric-pair elastic move between two shared buffers over a range:
@@ -328,6 +350,30 @@ mod tests {
             assert!(gap1 <= gap0 + 1e-5);
             assert!((reported - gap0 / n as f32).abs() < 1e-4 * (1.0 + gap0));
         });
+    }
+
+    #[test]
+    fn range_ops_match_full_vector_ops() {
+        let b = HogwildBuffer::from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).with_dirty_epochs(2);
+        // scoped read sees exactly the slice
+        let mut out = [0f32; 3];
+        b.read_range_into(2, &mut out);
+        assert_eq!(out, [3.0, 4.0, 5.0]);
+        assert_eq!(b.to_vec_range(1, 4), vec![2.0, 3.0, 4.0]);
+        // scoped lerp moves only its range and marks only its chunks
+        let sig_outside = b.dirty_signature(0, 2).unwrap();
+        b.lerp_range_toward_slice(2, &[0.0, 0.0], 0.5);
+        assert_eq!(b.to_vec(), vec![1.0, 2.0, 1.5, 2.0, 5.0, 6.0]);
+        assert_eq!(b.dirty_signature(0, 2), Some(sig_outside), "untouched chunk stays clean");
+        assert_ne!(b.dirty_signature(2, 4), Some(0));
+        // the full-vector APIs are the lo = 0 specialization, bit for bit
+        let x = HogwildBuffer::from_slice(&[1.0, -2.0, 0.5]);
+        let y = HogwildBuffer::from_slice(&[1.0, -2.0, 0.5]);
+        x.lerp_toward_slice(&[0.3, 0.3, 0.3], 0.25);
+        y.lerp_range_toward_slice(0, &[0.3, 0.3, 0.3], 0.25);
+        for (a, b) in x.to_vec().iter().zip(y.to_vec()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

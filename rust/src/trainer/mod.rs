@@ -49,8 +49,9 @@ impl Trainer {
         // per-chunk dirty epochs on the replica let the EASGD delta gate
         // skip the gap scan for chunks no worker wrote since the last push;
         // only worth the (tiny) write-path bookkeeping when a gate is on
+        // for at least one (possibly algo-mapped) partition
         let mut replica = HogwildBuffer::from_slice(w0);
-        if cfg.algo == crate::config::SyncAlgo::Easgd
+        if cfg.any_easgd()
             && cfg.dirty_epoch_scan
             && cfg.delta_gated()
             && cfg.easgd_chunk_elems > 0
@@ -157,12 +158,7 @@ pub fn spawn_worker(
                     ForegroundPlan::None => {}
                     ForegroundPlan::PerWorkerEasgd { strategy, gap } => {
                         if my_iters % *gap as u64 == 0 {
-                            let ctx = SyncCtx {
-                                local: &replica,
-                                trainer_node: node,
-                                net: &env.net,
-                                metrics: &env.metrics,
-                            };
+                            let ctx = SyncCtx::full(&replica, node, &env.net, &env.metrics);
                             strategy.sync_round(&ctx)?;
                         }
                     }
@@ -173,12 +169,7 @@ pub fn spawn_worker(
                             .max(1.0) as u64;
                         if my_iters >= last_decay_sync + gap {
                             last_decay_sync = my_iters;
-                            let ctx = SyncCtx {
-                                local: &replica,
-                                trainer_node: node,
-                                net: &env.net,
-                                metrics: &env.metrics,
-                            };
+                            let ctx = SyncCtx::full(&replica, node, &env.net, &env.metrics);
                             strategy.sync_round(&ctx)?;
                         }
                     }
@@ -186,12 +177,7 @@ pub fn spawn_worker(
                         if trainer_iters >= last_collective + *gap as u64 {
                             last_collective = trainer_iters;
                             let _world = gate.stop_the_world();
-                            let ctx = SyncCtx {
-                                local: &replica,
-                                trainer_node: node,
-                                net: &env.net,
-                                metrics: &env.metrics,
-                            };
+                            let ctx = SyncCtx::full(&replica, node, &env.net, &env.metrics);
                             strategy.sync_round(&ctx)?;
                         }
                     }

@@ -85,7 +85,8 @@ fn concurrent_execution_is_correct() {
     // reference: loss per distinct label pattern, computed serially
     let b = meta.batch;
     let dense = vec![0.2f32; b * meta.num_dense];
-    let mk_labels = |k: usize| -> Vec<f32> { (0..b).map(|i| (i % (k + 2) == 0) as u8 as f32).collect() };
+    let mk_labels =
+        |k: usize| -> Vec<f32> { (0..b).map(|i| (i % (k + 2) == 0) as u8 as f32).collect() };
     let mut want = Vec::new();
     {
         let mut io = model.new_io();

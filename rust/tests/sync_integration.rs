@@ -7,12 +7,14 @@ use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::Arc;
 use std::time::Duration;
 
+use shadowsync::config::{RunConfig, SyncAlgo};
 use shadowsync::metrics::Metrics;
 use shadowsync::net::{Network, Role};
-use shadowsync::sync::driver::spawn_shadow;
+use shadowsync::sync::driver::{spawn_shadow, spawn_shadow_pool, ShadowTask};
+use shadowsync::sync::partition::lpt_contiguous_ranges;
 use shadowsync::sync::{
-    AllReduceGroup, BmufSync, EasgdSync, MaSync, ReduceEngine, SyncCtx, SyncPsGroup,
-    SyncStrategy,
+    build_group, build_strategy, AllReduceGroup, BmufSync, DeltaGate, EasgdSync, MaSync,
+    ParamRange, PartitionPlan, ReduceEngine, SyncCtx, SyncPsGroup, SyncStrategy,
 };
 use shadowsync::tensor::HogwildBuffer;
 use shadowsync::util::rng::Rng;
@@ -193,7 +195,7 @@ where
             let mut strategy = strategy_for(i);
             s.spawn(move || {
                 let replica = HogwildBuffer::from_slice(&vec![i as f32; p]);
-                let ctx = SyncCtx { local: &replica, trainer_node: node, net: &net, metrics: &metrics };
+                let ctx = SyncCtx::full(&replica, node, &net, &metrics);
                 for _ in 0..rounds {
                     strategy.sync_round(&ctx).unwrap();
                 }
@@ -255,7 +257,7 @@ fn delta_gated_easgd_metrics_agree_with_nic_counters() {
     let metrics = Metrics::new();
     let local = HogwildBuffer::from_slice(&vec![1.0; p]);
     let mut s = EasgdSync::new(group.clone(), 0.5);
-    let ctx = SyncCtx { local: &local, trainer_node: t, net: &net, metrics: &metrics };
+    let ctx = SyncCtx::full(&local, t, &net, &metrics);
     for _ in 0..30 {
         s.sync_round(&ctx).unwrap();
     }
@@ -389,7 +391,7 @@ fn adaptive_gate_with_dirty_epochs_tracks_nic_counters_exactly() {
     let metrics = Metrics::new();
     let local = HogwildBuffer::from_slice(&vec![0.0; p]).with_dirty_epochs(chunk);
     let mut s = EasgdSync::new(group.clone(), 0.4);
-    let ctx = SyncCtx { local: &local, trainer_node: t, net: &net, metrics: &metrics };
+    let ctx = SyncCtx::full(&local, t, &net, &metrics);
     let mut rng = Rng::new(0xD1A7);
     for round in 0..50 {
         // perturb a few random subranges between rounds (workers writing)
@@ -427,9 +429,10 @@ fn bmuf_ring_traffic_lands_on_trainer_nics() {
     let (n, p, rounds) = (3usize, 9_999usize, 10u64);
     let group = Arc::new(AllReduceGroup::new(n, p));
     let g = group.clone();
-    let (net, nodes, _metrics) = drive_collective_rounds(n, p, rounds, move |_| -> Box<dyn SyncStrategy> {
-        Box::new(BmufSync::new(g.clone(), 0.5, 1.0, 0.0, &vec![0.0; p]))
-    });
+    let (net, nodes, _metrics) =
+        drive_collective_rounds(n, p, rounds, move |_| -> Box<dyn SyncStrategy> {
+            Box::new(BmufSync::new(g.clone(), 0.5, 1.0, 0.0, &vec![0.0; p]))
+        });
     let formula = group.ring_bytes_per_member(n) * rounds;
     let slack = rounds * 2 * (n as u64 - 1) * 4; // flat: one segment's rounding
     for &node in &nodes {
@@ -438,5 +441,271 @@ fn bmuf_ring_traffic_lands_on_trainer_nics() {
             "tx {} vs ring formula {formula}",
             net.tx(node)
         );
+    }
+}
+
+/// Satellite/acceptance: a `P = 1, S = 1` partition plan is bit-identical
+/// to the pre-refactor single-strategy path — final replicas, the central
+/// copy, `metrics.sync_bytes`, and every NIC counter — for EASGD, driven
+/// deterministically (sequential rounds, identical perturbations).
+#[test]
+fn p1_easgd_partition_fabric_is_bit_identical_to_single_strategy_path() {
+    let p = 96usize;
+    let rounds = 10usize;
+    // pre-generate deterministic inputs shared by both paths
+    let mut rng = Rng::new(0x51D);
+    let init: Vec<Vec<f32>> = (0..2)
+        .map(|_| (0..p).map(|_| rng.u01() * 4.0 - 2.0).collect())
+        .collect();
+    let perturb: Vec<Vec<Vec<f32>>> = (0..rounds)
+        .map(|_| (0..2).map(|_| (0..p).map(|_| rng.u01() - 0.5).collect()).collect())
+        .collect();
+    let cfg = RunConfig {
+        num_trainers: 2,
+        easgd_chunk_elems: 8,
+        delta_threshold: 1e-3,
+        ..RunConfig::default()
+    };
+
+    type Fingerprint = (Vec<Vec<u32>>, Vec<u32>, u64, u64, Vec<(u64, u64)>);
+    let fingerprint = |replicas: &[HogwildBuffer],
+                       central: &HogwildBuffer,
+                       sync_bytes: u64,
+                       ps_bytes: u64,
+                       nics: Vec<(u64, u64)>|
+     -> Fingerprint {
+        (
+            replicas
+                .iter()
+                .map(|r| r.to_vec().iter().map(|x| x.to_bits()).collect())
+                .collect(),
+            central.to_vec().iter().map(|x| x.to_bits()).collect(),
+            sync_bytes,
+            ps_bytes,
+            nics,
+        )
+    };
+
+    // legacy path: whole-vector strategies falling back to the group gate
+    let legacy: Fingerprint = {
+        let mut net = Network::new(None);
+        let nodes = [net.add_node(Role::Trainer), net.add_node(Role::Trainer)];
+        let group = Arc::new(
+            SyncPsGroup::build(&vec![0.0; p], 2, &mut net)
+                .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold),
+        );
+        let metrics = Metrics::new();
+        let replicas: Vec<HogwildBuffer> = init
+            .iter()
+            .map(|v| HogwildBuffer::from_slice(v).with_dirty_epochs(cfg.easgd_chunk_elems))
+            .collect();
+        let mut strategies: Vec<EasgdSync> =
+            (0..2).map(|_| EasgdSync::new(group.clone(), 0.4)).collect();
+        for r in 0..rounds {
+            for t in 0..2 {
+                replicas[t].axpy(0.5, &perturb[r][t]);
+                let ctx = SyncCtx::full(&replicas[t], nodes[t], &net, &metrics);
+                strategies[t].sync_round(&ctx).unwrap();
+            }
+        }
+        let nics = nodes.iter().map(|&n| (net.tx(n), net.rx(n))).collect();
+        fingerprint(
+            &replicas,
+            &group.central,
+            metrics.snapshot().sync_bytes,
+            net.role_bytes(Role::SyncPs),
+            nics,
+        )
+    };
+
+    // partitioned path: the P = 1 plan + build_strategy (per-strategy gate)
+    let partitioned: Fingerprint = {
+        let plan = PartitionPlan::build(p, &cfg).unwrap();
+        assert_eq!(plan.len(), 1, "default config must produce the single plan");
+        let mut net = Network::new(None);
+        let nodes = [net.add_node(Role::Trainer), net.add_node(Role::Trainer)];
+        let group = Arc::new(
+            SyncPsGroup::build(&vec![0.0; p], 2, &mut net)
+                .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold),
+        );
+        let metrics = Metrics::new();
+        let replicas: Vec<HogwildBuffer> = init
+            .iter()
+            .map(|v| HogwildBuffer::from_slice(v).with_dirty_epochs(cfg.easgd_chunk_elems))
+            .collect();
+        let w0 = vec![0.0f32; p];
+        let mut strategies: Vec<Box<dyn SyncStrategy>> = (0..2)
+            .map(|t| {
+                build_strategy(&cfg, &plan.partitions[0], t, &w0, Some(group.clone()), None)
+                    .unwrap()
+            })
+            .collect();
+        for r in 0..rounds {
+            for t in 0..2 {
+                replicas[t].axpy(0.5, &perturb[r][t]);
+                let ctx = SyncCtx {
+                    local: &replicas[t],
+                    range: plan.partitions[0].range,
+                    partition: 0,
+                    trainer_node: nodes[t],
+                    net: &net,
+                    metrics: &metrics,
+                };
+                strategies[t].sync_round(&ctx).unwrap();
+            }
+        }
+        let nics = nodes.iter().map(|&n| (net.tx(n), net.rx(n))).collect();
+        fingerprint(
+            &replicas,
+            &group.central,
+            metrics.snapshot().sync_bytes,
+            net.role_bytes(Role::SyncPs),
+            nics,
+        )
+    };
+
+    assert_eq!(legacy, partitioned, "P=1 fabric must be bit-identical to the legacy path");
+    // the run must actually exercise the gate (some skips, some pushes)
+    assert!(legacy.2 > 0, "nothing ever moved");
+}
+
+/// Same `P = 1` equivalence for the decentralized algorithms: the
+/// range-scoped read/AllReduce/elastic-pull wrapper must be bit-identical
+/// to the legacy whole-vector round (deterministic singleton rings).
+#[test]
+fn p1_collective_partition_fabric_matches_single_strategy_path() {
+    let p = 73usize;
+    let rounds = 8usize;
+    let mut rng = Rng::new(0xB0F);
+    let w0: Vec<f32> = (0..p).map(|_| rng.u01() * 2.0 - 1.0).collect();
+    let perturb: Vec<Vec<f32>> = (0..rounds)
+        .map(|_| (0..p).map(|_| rng.u01() - 0.5).collect())
+        .collect();
+    for algo in [SyncAlgo::Ma, SyncAlgo::Bmuf] {
+        let cfg = RunConfig { algo, num_trainers: 1, num_sync_ps: 0, ..RunConfig::default() };
+        let drive = |mut strategy: Box<dyn SyncStrategy>, range: ParamRange| -> (Vec<u32>, u64) {
+            let mut net = Network::new(None);
+            let node = net.add_node(Role::Trainer);
+            let metrics = Metrics::new();
+            let replica = HogwildBuffer::from_slice(&w0);
+            for pert in &perturb {
+                replica.axpy(0.25, pert);
+                let ctx = SyncCtx {
+                    local: &replica,
+                    range,
+                    partition: 0,
+                    trainer_node: node,
+                    net: &net,
+                    metrics: &metrics,
+                };
+                strategy.sync_round(&ctx).unwrap();
+            }
+            strategy.leave();
+            (replica.to_vec().iter().map(|x| x.to_bits()).collect(), metrics.snapshot().syncs)
+        };
+        let legacy: Box<dyn SyncStrategy> = match algo {
+            SyncAlgo::Ma => Box::new(MaSync::new(build_group(&cfg, p), cfg.alpha, p)),
+            _ => Box::new(BmufSync::new(
+                build_group(&cfg, p),
+                cfg.alpha,
+                cfg.bmuf_eta,
+                cfg.bmuf_momentum,
+                &w0,
+            )),
+        };
+        let plan = PartitionPlan::build(p, &cfg).unwrap();
+        let partitioned =
+            build_strategy(&cfg, &plan.partitions[0], 0, &w0, None, Some(build_group(&cfg, p)))
+                .unwrap();
+        let a = drive(legacy, ParamRange::full(p));
+        let b = drive(partitioned, plan.partitions[0].range);
+        assert_eq!(a, b, "{algo:?}: P=1 fabric diverged from the legacy path");
+    }
+}
+
+/// Acceptance: a hybrid partitioned fabric — EASGD partitions (with their
+/// own per-partition gates) next to MA partitions (each with its own ring)
+/// — driven by 2-thread shadow pools on 2 trainers, completes end-to-end
+/// with `metrics.sync_bytes` exactly equal to the summed sync-PS NIC
+/// counters plus the ring NIC counters.
+#[test]
+fn hybrid_partition_fabric_accounts_every_byte() {
+    let len = 1024usize;
+    let chunk = 64usize;
+    let ranges = lpt_contiguous_ranges(len, 4, chunk);
+    let mut net = Network::new(None);
+    let nodes = [net.add_node(Role::Trainer), net.add_node(Role::Trainer)];
+    let sync_ps = Arc::new(
+        SyncPsGroup::build(&vec![0.0; len], 2, &mut net).with_push_chunking(chunk, 1e-4),
+    );
+    // partitions 0-1: EASGD; partitions 2-3: MA over their own rings
+    let ma_groups: Vec<Arc<AllReduceGroup>> = ranges[2..]
+        .iter()
+        .map(|r| Arc::new(AllReduceGroup::new(2, r.len).with_chunks(4)))
+        .collect();
+    let net = Arc::new(net);
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    let mut replicas = Vec::new();
+    for (t, &node) in nodes.iter().enumerate() {
+        let replica = Arc::new(
+            HogwildBuffer::from_slice(&vec![t as f32 + 1.0; len]).with_dirty_epochs(chunk),
+        );
+        replicas.push(replica.clone());
+        let tasks: Vec<ShadowTask> = ranges
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let strategy: Box<dyn SyncStrategy> = if i < 2 {
+                    Box::new(
+                        EasgdSync::new(sync_ps.clone(), 0.3).with_gate(DeltaGate::new(1e-4, 0.0)),
+                    )
+                } else {
+                    Box::new(MaSync::new(ma_groups[i - 2].clone(), 0.3, r.len))
+                };
+                ShadowTask { partition: i, range: *r, strategy }
+            })
+            .collect();
+        handles.push(spawn_shadow_pool(
+            tasks,
+            replica,
+            node,
+            net.clone(),
+            metrics.clone(),
+            stop.clone(),
+            Duration::from_micros(200),
+            t,
+            2,
+        ));
+    }
+    std::thread::sleep(Duration::from_millis(250));
+    stop.store(true, Relaxed);
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    let snap = metrics.snapshot();
+    assert!(snap.syncs > 0);
+    // every partition ran rounds (the per-partition gap metric is live)
+    assert_eq!(snap.partition_syncs.len(), 4);
+    for (i, &s) in snap.partition_syncs.iter().enumerate() {
+        assert!(s > 0, "partition {i} never synced: {:?}", snap.partition_syncs);
+    }
+    // byte identity: EASGD legs land on the sync-PS tier (both directions
+    // == role_bytes); ring hops are trainer-to-trainer, so the collective
+    // tx is total trainer tx minus the trainer→PS push legs (== sync-PS rx)
+    let trainer_tx: u64 = nodes.iter().map(|&n| net.tx(n)).sum();
+    let ring_tx = trainer_tx - net.role_rx(Role::SyncPs);
+    assert_eq!(
+        snap.sync_bytes,
+        net.role_bytes(Role::SyncPs) + ring_tx,
+        "metrics.sync_bytes must equal summed sync-PS + ring NIC counters"
+    );
+    // the EASGD partitions pulled the replicas together through the hub;
+    // the MA partitions averaged them through their rings
+    let (a, b) = (replicas[0].to_vec(), replicas[1].to_vec());
+    for r in &ranges {
+        let gap = shadowsync::tensor::ops::mean_abs_diff(&a[r.lo()..r.hi()], &b[r.lo()..r.hi()]);
+        assert!(gap < 0.6, "partition {r:?} never converged: gap {gap}");
     }
 }

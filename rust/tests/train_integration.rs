@@ -173,3 +173,97 @@ fn decaying_gap_mode_completes_and_syncs() {
     // the annealed schedule averages strictly inside (end, start)
     assert!(out.avg_sync_gap > 2.0 && out.avg_sync_gap < 40.0, "gap {}", out.avg_sync_gap);
 }
+
+#[test]
+fn checkpoint_roundtrip_is_bit_exact() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = base_cfg();
+    cfg.train_examples = 1_024;
+    cfg.eval_examples = 128;
+    let cluster = coordinator::build(&cfg, &rt).unwrap();
+    coordinator::train(&cluster).unwrap();
+    let dir = std::env::temp_dir().join(format!("shadowsync-rt-{}", std::process::id()));
+    coordinator::checkpoint(&cluster, &dir).unwrap();
+    // reload w.bin: every f32 must be bit-equal to the live first replica
+    // (training is quiescent after train(), so live == checkpointed)
+    let w_file = std::fs::read(dir.join("w.bin")).unwrap();
+    let live = cluster.trainers[0].replica.to_vec();
+    assert_eq!(w_file.len(), live.len() * 4);
+    for (i, v) in live.iter().enumerate() {
+        let bytes: [u8; 4] = w_file[i * 4..i * 4 + 4].try_into().unwrap();
+        assert_eq!(
+            f32::from_le_bytes(bytes).to_bits(),
+            v.to_bits(),
+            "w.bin[{i}] diverged from the live replica"
+        );
+    }
+    // reload every embedding shard file: bit-equal to the live tables
+    let mut shard_files = 0;
+    for shard in cluster.embeddings.shards() {
+        let path = dir.join(format!("emb_t{}_r{}.bin", shard.table, shard.row_lo));
+        let bytes = std::fs::read(&path).unwrap();
+        let mut off = 0usize;
+        for r in shard.row_lo..shard.row_hi {
+            for v in shard.row(r) {
+                let b: [u8; 4] = bytes[off..off + 4].try_into().unwrap();
+                assert_eq!(
+                    f32::from_le_bytes(b).to_bits(),
+                    v.to_bits(),
+                    "shard t{} row {r} diverged",
+                    shard.table
+                );
+                off += 4;
+            }
+        }
+        assert_eq!(off, bytes.len(), "shard file has trailing bytes");
+        shard_files += 1;
+    }
+    assert!(shard_files > 0, "no embedding shards checkpointed");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hybrid_algo_map_run_completes_with_per_partition_gaps() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // the paper's §3.2 hybrid scenario, end-to-end: 4 partitions, EASGD on
+    // 0-1 (against the sync PSs), MA on 2-3 (per-partition rings), 2
+    // shadow threads per trainer
+    let mut cfg = base_cfg();
+    cfg.sync_partitions = 4;
+    cfg.shadow_threads = 2;
+    cfg.algo_map = Some("easgd:0-1,ma:2-3".parse().unwrap());
+    cfg.easgd_chunk_elems = 64; // tiny preset: 537 dense params
+    cfg.train_examples = 4_096;
+    cfg.eval_examples = 512;
+    cfg.validate().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let out = coordinator::run_timed(&cfg, &rt)
+        .unwrap_or_else(|e| panic!("hybrid run failed: {e}"));
+    assert_eq!(out.metrics.examples, 4_096);
+    assert!(out.train_loss.is_finite());
+    assert!(out.metrics.syncs > 0, "hybrid fabric never synced");
+    // every partition's shadow rounds were recorded, so every per-partition
+    // gap is measurable (finite)
+    assert_eq!(out.partition_gaps.len(), 4, "gaps: {:?}", out.partition_gaps);
+    for (i, g) in out.partition_gaps.iter().enumerate() {
+        assert!(g.is_finite(), "partition {i} never synced: {:?}", out.partition_gaps);
+    }
+    // both tiers moved bytes: the sync-PS tier (EASGD partitions) and the
+    // trainer rings (MA partitions); metrics.sync_bytes covers exactly both
+    assert!(out.sync_ps_bytes > 0, "EASGD partitions never pushed");
+    // metrics.sync_bytes = EASGD legs (== the sync-PS role counters) plus
+    // the MA partitions' ring tx, so it must strictly exceed the PS share
+    assert!(
+        out.metrics.sync_bytes > out.sync_ps_bytes,
+        "ring bytes missing from metrics.sync_bytes ({} <= {})",
+        out.metrics.sync_bytes,
+        out.sync_ps_bytes
+    );
+}
