@@ -343,6 +343,13 @@ pub struct RunConfig {
     /// optional per-partition algorithm map (`--algo-map easgd:0-1,ma:2-3`);
     /// unmapped partitions run `algo`
     pub algo_map: Option<AlgoMap>,
+    /// measured-cost adaptive repartitioning: every N shadow sweeps (per
+    /// trainer, aggregated across trainers) the partition plan is rebuilt
+    /// with a cost-balanced cut over the measured per-range write rates,
+    /// with a live cutover at the next sweep boundary. 0 disables — the
+    /// static LPT plan is then never touched, so golden P=1 / static-P
+    /// runs are bit-for-bit unchanged
+    pub repartition_every: u64,
     /// chunk count `C` of the MA/BMUF ring-AllReduce schedule: the
     /// parameter vector is reduced as `C` pipelined reduce-scatter +
     /// all-gather rings (1 = flat single-chunk collective)
@@ -401,6 +408,7 @@ impl Default for RunConfig {
             sync_partitions: 1,
             shadow_threads: 1,
             algo_map: None,
+            repartition_every: 0,
             allreduce_chunks: 8,
             reduce_engine: crate::sync::ReduceEngine::Overlapped,
             easgd_chunk_elems: 4096,
@@ -434,6 +442,15 @@ impl RunConfig {
             && !matches!(self.mode, SyncMode::Shadow)
         {
             bail!("the partitioned fabric (--sync-partitions / --algo-map) is shadow-mode only");
+        }
+        if self.repartition_every > 0 && !matches!(self.mode, SyncMode::Shadow) {
+            bail!("adaptive repartitioning (--repartition-every) is shadow-mode only");
+        }
+        if self.repartition_every > 0 && self.easgd_chunk_elems == 0 {
+            bail!(
+                "adaptive repartitioning needs a positive --sync-chunk: the push-chunk \
+                 granule is the write-rate accumulator's block size"
+            );
         }
         if let Some(m) = &self.algo_map {
             if let Some(max) = m.max_partition() {
@@ -623,6 +640,30 @@ mod tests {
         assert!(c.any_easgd());
         assert_eq!(c.partition_algo(0), SyncAlgo::Easgd);
         assert_eq!(c.partition_algo(2), SyncAlgo::Ma);
+    }
+
+    #[test]
+    fn repartition_validation() {
+        let mut c = RunConfig {
+            sync_partitions: 4,
+            shadow_threads: 2,
+            repartition_every: 10,
+            ..RunConfig::default()
+        };
+        c.validate().unwrap();
+        // shadow-mode only: the foreground drivers have no sweep boundary
+        c.mode = SyncMode::FixedRate { gap: 5 };
+        assert!(c.validate().is_err());
+        c.mode = SyncMode::Shadow;
+        // the write-rate accumulator blocks on the push-chunk granule
+        c.easgd_chunk_elems = 0;
+        assert!(c.validate().is_err());
+        c.easgd_chunk_elems = 4096;
+        c.validate().unwrap();
+        // disabled repartitioning never constrains anything
+        c.repartition_every = 0;
+        c.easgd_chunk_elems = 0;
+        c.validate().unwrap();
     }
 
     #[test]

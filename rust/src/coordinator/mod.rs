@@ -20,9 +20,11 @@ use crate::embedding::EmbeddingSystem;
 use crate::metrics::{EpsMeter, EvalAccum, Metrics, MetricsSnapshot};
 use crate::net::{Network, Role};
 use crate::runtime::{Model, Runtime};
-use crate::sync::driver::{spawn_shadow_pool, ShadowTask};
+use crate::sync::driver::{spawn_shadow_pool_adaptive, ShadowTask};
 use crate::sync::ps::PsTrafficSnapshot;
-use crate::sync::{AllReduceGroup, EasgdSync, PartitionPlan, SyncPsGroup};
+use crate::sync::{
+    AllReduceGroup, EasgdSync, PartitionPlan, RepartitionController, SyncPsGroup,
+};
 use crate::trainer::{spawn_worker, ForegroundPlan, Trainer, WorkerEnv};
 
 /// Everything a finished run reports (feeds the experiment tables).
@@ -51,6 +53,10 @@ pub struct TrainOutcome {
     /// the `sim/` cost model's measured push fraction and the skip-rate
     /// columns, instead of re-deriving it from summed metrics
     pub sync_traffic: Option<PsTrafficSnapshot>,
+    /// adaptive repartitions performed during the run — replans some
+    /// trainer actually cut over to (0 when `--repartition-every` is off
+    /// or no published plan was ever adopted)
+    pub repartitions: u64,
     pub elp: u64,
 }
 
@@ -76,6 +82,9 @@ pub struct Cluster {
     /// one ring fabric per decentralized partition, sized to its range
     /// (None for EASGD/none partitions); indexed by partition
     pub groups: Vec<Option<Arc<AllReduceGroup>>>,
+    /// measured-cost adaptive repartitioning brain, shared by every
+    /// trainer's shadow pool (None when `--repartition-every` is 0)
+    pub repartition: Option<Arc<RepartitionController>>,
     pub trainers: Vec<Trainer>,
     pub teacher: Arc<TeacherModel>,
 }
@@ -121,7 +130,7 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
     // each decentralized partition gets its own chunked ring-AllReduce
     // fabric, sized to its range; every trainer's hops are driven through
     // (and attributed to) its own NIC
-    let groups = plan
+    let groups: Vec<Option<Arc<AllReduceGroup>>> = plan
         .partitions
         .iter()
         .map(|p| match p.algo {
@@ -129,6 +138,18 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
             _ => None,
         })
         .collect();
+    // adaptive repartitioning: one shared controller wrapping generation 0
+    // (the plan + groups the trainers' initial strategies are built from)
+    let repartition = (cfg.repartition_every > 0 && matches!(cfg.mode, SyncMode::Shadow))
+        .then(|| {
+            Arc::new(RepartitionController::new(
+                cfg,
+                meta.num_params,
+                sync_ps.clone(),
+                plan.clone(),
+                groups.clone(),
+            ))
+        });
     let trainers = trainer_nodes
         .iter()
         .enumerate()
@@ -145,6 +166,7 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         plan,
         sync_ps,
         groups,
+        repartition,
         trainers,
         teacher,
     })
@@ -207,7 +229,7 @@ pub fn train(cluster: &Cluster) -> Result<()> {
                     })
                     .collect::<Result<Vec<_>>>()?;
                 if !tasks.is_empty() {
-                    shadow_handles.push(spawn_shadow_pool(
+                    shadow_handles.push(spawn_shadow_pool_adaptive(
                         tasks,
                         trainer.replica.clone(),
                         trainer.node,
@@ -217,6 +239,7 @@ pub fn train(cluster: &Cluster) -> Result<()> {
                         Duration::from_millis(cfg.shadow_interval_ms),
                         trainer.id,
                         cfg.shadow_threads,
+                        cluster.repartition.clone(),
                     ));
                 }
                 for w in 0..cfg.worker_threads {
@@ -335,6 +358,7 @@ pub fn finish(cluster: Cluster) -> Result<TrainOutcome> {
         partition_gaps,
         sync_ps_bytes: cluster.net.role_bytes(Role::SyncPs),
         sync_traffic: cluster.sync_ps.as_ref().map(|g| g.traffic()),
+        repartitions: cluster.repartition.as_ref().map_or(0, |c| c.repartitions()),
         metrics: m,
         elp: cfg.elp(cluster.meta.batch),
     })

@@ -68,6 +68,7 @@ pub const ALL_IDS: &[&str] = &[
     "ablate-shadow-rate",
     "ablate-decay-gap",
     "ablate-partitions",
+    "ablate-repartition",
     "calibrate",
 ];
 
@@ -87,6 +88,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "ablate-shadow-rate" => ablate::run_shadow_rate(opts)?,
         "ablate-decay-gap" => ablate::run_decay_gap(opts)?,
         "ablate-partitions" => ablate::run_partitions(opts)?,
+        "ablate-repartition" => ablate::run_repartition(opts)?,
         "calibrate" => calibrate::run(opts)?,
         _ => bail!("unknown experiment {id:?}; known: {}", ALL_IDS.join(", ")),
     };
@@ -99,6 +101,19 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
 }
 
 /// Markdown report builder shared by the experiment modules.
+///
+/// # Examples
+///
+/// ```
+/// use shadowsync::exp::Report;
+///
+/// let mut report = Report::new("Figure 0", "paper Figure 0");
+/// report.para("One calibrated point:");
+/// report.table(&["trainers", "EPS"], &[vec!["20".into(), "96000".into()]]);
+/// let text = report.finish();
+/// assert!(text.contains("# Figure 0"));
+/// assert!(text.contains("| 20 | 96000 |"));
+/// ```
 #[derive(Default)]
 pub struct Report {
     buf: String,

@@ -16,6 +16,11 @@
 //!   --algo-map <map>             per-partition algorithms, e.g.
 //!                                easgd:0-1,ma:2-3 (unmapped partitions
 //!                                run --algo)
+//!   --repartition-every <N>      measured-cost adaptive repartitioning:
+//!                                rebuild the plan every N shadow sweeps
+//!                                from the measured per-range write rates
+//!                                (hot partitions shrink, cold ones grow)
+//!                                with a live cutover; 0 = static plan
 //!
 //! Delta gating (EASGD pushes against the sync PSs):
 //!   --sync-chunk <elems>         elements per push chunk (0 = whole shard)
@@ -105,6 +110,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         shadow_interval_ms: args.parse_or("shadow-interval-ms", 0u64)?,
         sync_partitions: args.parse_or("sync-partitions", 1usize)?,
         shadow_threads: args.parse_or("shadow-threads", 1usize)?,
+        repartition_every: args.parse_or("repartition-every", 0u64)?,
         allreduce_chunks: args.parse_or("chunks", 8usize)?,
         reduce_engine: args.parse_or("reduce-engine", ReduceEngine::Overlapped)?,
         easgd_chunk_elems: args.parse_or("sync-chunk", 4096usize)?,
@@ -177,6 +183,9 @@ fn print_outcome(out: &coordinator::TrainOutcome) {
     }
     println!("sync rounds   {}", out.metrics.syncs);
     println!("sync bytes    {}", out.metrics.sync_bytes);
+    if out.repartitions > 0 {
+        println!("repartitions  {}", out.repartitions);
+    }
     if let Some(t) = &out.sync_traffic {
         println!("skip rate     {:.1}%", 100.0 * t.skip_fraction());
         println!("scan skips    {:.1}%", 100.0 * t.scan_skip_fraction());
@@ -251,7 +260,8 @@ fn cmd_list() -> Result<()> {
     );
     println!(
         "partitioned fabric: --sync-partitions <P>, --shadow-threads <S>, \
-         --algo-map easgd:0-1,ma:2-3 (shadow mode only)"
+         --algo-map easgd:0-1,ma:2-3, --repartition-every <N sweeps> \
+         (shadow mode only)"
     );
     println!("reduce engines: --reduce-engine overlapped|striped|serial");
     Ok(())

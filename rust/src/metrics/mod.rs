@@ -58,6 +58,10 @@ pub struct Metrics {
     /// A mutex, not atomics: rounds are off the training hot path and the
     /// partition count is a run-time knob
     partition_syncs: Mutex<Vec<u64>>,
+    /// per-partition sync bytes (index = partition), recorded by every
+    /// strategy alongside `sync_bytes` — the measured byte shares that let
+    /// `sim/` price heterogeneous plans and `--algo-map`s exactly
+    partition_sync_bytes: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
@@ -93,6 +97,17 @@ impl Metrics {
             v.resize(partition + 1, 0);
         }
         v[partition] += 1;
+    }
+
+    /// Record one sync round's measured bytes under its partition index
+    /// (strategies call this alongside [`Metrics::record_sync`]; grows the
+    /// table on first sight of a partition).
+    pub fn record_partition_sync_bytes(&self, partition: usize, bytes: u64) {
+        let mut v = self.partition_sync_bytes.lock().unwrap();
+        if partition >= v.len() {
+            v.resize(partition + 1, 0);
+        }
+        v[partition] += bytes;
     }
 
     /// Per-partition average sync gap (paper Eq. 2, per partition):
@@ -141,6 +156,7 @@ impl Metrics {
             sync_scan_skipped: self.sync_scan_skipped.load(Relaxed),
             embedding_bytes: self.embedding_bytes.load(Relaxed),
             partition_syncs: self.partition_syncs.lock().unwrap().clone(),
+            partition_sync_bytes: self.partition_sync_bytes.lock().unwrap().clone(),
         }
     }
 }
@@ -158,6 +174,8 @@ pub struct MetricsSnapshot {
     pub embedding_bytes: u64,
     /// per-partition sync round counts (empty when no shadow pool ran)
     pub partition_syncs: Vec<u64>,
+    /// per-partition sync bytes (empty when nothing recorded per partition)
+    pub partition_sync_bytes: Vec<u64>,
 }
 
 impl MetricsSnapshot {
@@ -170,6 +188,15 @@ impl MetricsSnapshot {
         } else {
             self.sync_chunks_skipped as f64 / total as f64
         }
+    }
+
+    /// Measured per-partition byte shares (normalized to sum to 1) — the
+    /// cross-algorithm companion of
+    /// `PsTrafficSnapshot::partition_byte_shares`: EASGD partitions report
+    /// sync-PS push bytes, MA/BMUF partitions report ring tx bytes. Empty
+    /// when nothing was recorded per partition.
+    pub fn partition_byte_shares(&self) -> Vec<f64> {
+        crate::util::byte_shares(&self.partition_sync_bytes)
     }
 }
 
@@ -321,6 +348,22 @@ mod tests {
         assert_eq!(gaps[0], 5.0); // 10 iterations / 2 rounds
         assert!(gaps[1].is_infinite(), "partition with no rounds has no gap");
         assert_eq!(gaps[2], 10.0);
+    }
+
+    #[test]
+    fn partition_byte_counters_and_shares() {
+        let m = Metrics::new();
+        assert!(m.snapshot().partition_byte_shares().is_empty(), "nothing recorded yet");
+        m.record_partition_sync_bytes(2, 300);
+        m.record_partition_sync_bytes(0, 100);
+        m.record_partition_sync_bytes(2, 100);
+        let snap = m.snapshot();
+        assert_eq!(snap.partition_sync_bytes, vec![100, 0, 400]);
+        let shares = snap.partition_byte_shares();
+        assert!((shares[0] - 0.2).abs() < 1e-12);
+        assert_eq!(shares[1], 0.0);
+        assert!((shares[2] - 0.8).abs() < 1e-12);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
     }
 
     #[test]

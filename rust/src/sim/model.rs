@@ -6,6 +6,27 @@
 //! closed-form `2·(n-1)/n` textbook estimate, and EASGD rounds are scaled
 //! by the measured push fraction of the chunked/delta-gated sync-PS tier
 //! (`SyncPsGroup::traffic`, fed in by the experiment harness).
+//!
+//! The partitioned shadow fabric is priced per partition. By default every
+//! partition costs `1/P` of the vector; feeding measured per-partition
+//! byte shares ([`CostModel::with_partition_byte_shares`], from
+//! `PsTrafficSnapshot::partition_byte_shares` or
+//! `MetricsSnapshot::partition_byte_shares`) prices heterogeneous plans —
+//! including mixed `--algo-map` fabrics via
+//! [`CostModel::simulate_hybrid_shadow`] — from what each partition
+//! actually moved, not `round_bytes / P`.
+//!
+//! # Examples
+//!
+//! ```
+//! use shadowsync::config::{SyncAlgo, SyncMode};
+//! use shadowsync::sim::CostModel;
+//!
+//! let model = CostModel::paper_scale();
+//! let point = model.simulate(20, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+//! assert_eq!(point.train_fraction, 1.0, "shadow sync never throttles training");
+//! assert!(point.eps > 0.0);
+//! ```
 
 use crate::config::{SyncAlgo, SyncMode};
 use crate::sync::ps::PsTrafficSnapshot;
@@ -44,6 +65,12 @@ pub struct CostModel {
     /// shadow threads `S` per trainer servicing the partitions (`S ≤ P`);
     /// concurrent partition rounds share the trainer NIC
     pub shadow_threads: usize,
+    /// measured per-partition cost shares (normalized, one entry per
+    /// partition). Empty = uniform `1/P` — the static-plan assumption;
+    /// feed [`CostModel::with_partition_byte_shares`] to price
+    /// heterogeneous (adaptively repartitioned / algo-mapped) fabrics
+    /// from what each partition actually moved
+    pub partition_shares: Vec<f64>,
 }
 
 /// One simulated operating point.
@@ -78,6 +105,7 @@ impl CostModel {
             easgd_push_fraction: 1.0,
             sync_partitions: 1,
             shadow_threads: 1,
+            partition_shares: Vec::new(),
         }
     }
 
@@ -87,6 +115,24 @@ impl CostModel {
     pub fn with_partitioned_shadow(mut self, p: usize, s: usize) -> Self {
         self.sync_partitions = p.max(1);
         self.shadow_threads = s.clamp(1, self.sync_partitions);
+        self
+    }
+
+    /// Price the shadow fabric from *measured* per-partition byte shares
+    /// (one entry per partition; normalized here). Non-positive or
+    /// non-finite entries count as zero cost; an all-zero profile is
+    /// ignored and the uniform `1/P` assumption stays. Sets the partition
+    /// count to the profile's length.
+    pub fn with_partition_byte_shares(mut self, shares: &[f64]) -> Self {
+        let total: f64 = shares.iter().filter(|s| s.is_finite() && **s > 0.0).sum();
+        if !shares.is_empty() && total > 0.0 {
+            self.partition_shares = shares
+                .iter()
+                .map(|s| if s.is_finite() && *s > 0.0 { s / total } else { 0.0 })
+                .collect();
+            self.sync_partitions = self.partition_shares.len();
+            self.shadow_threads = self.shadow_threads.clamp(1, self.sync_partitions);
+        }
         self
     }
 
@@ -189,26 +235,21 @@ impl CostModel {
                 train_frac = t_batch_eff / (t_batch_eff + t_sync / k);
             }
             (_, SyncMode::Decaying { .. }) => unreachable!("normalized above"),
-            (SyncAlgo::Easgd, SyncMode::Shadow) => {
-                // background sync never throttles training
+            (_, SyncMode::Shadow) => {
+                // background sync never throttles training; the sweep is
+                // priced per partition (uniform 1/P by default, measured
+                // shares when fed) and shared by the S pool threads
                 iter_rate_total = n * r_trainer;
-                let p_parts = self.sync_partitions.max(1) as f64;
-                let s = self.shadow_threads.clamp(1, self.sync_partitions.max(1)) as f64;
-                // one partition round moves 1/P of the full round's bytes;
-                // the S concurrent shadow threads share the trainer NIC,
-                // and the sync tier serves every trainer's partition rounds
-                let part_bytes = round_bytes / p_parts;
-                let t_part = (part_bytes / (self.nic_bytes_per_sec / s))
-                    .max(n * part_bytes / sync_cap)
-                    + self.round_latency;
-                // each thread sweeps its P/S partitions sequentially, so
-                // every partition completes one round per sweep
-                let sync_rate_per_partition = 1.0 / ((p_parts / s) * t_part);
+                let algos = vec![algo; self.sync_partitions.max(1)];
+                let (sweep, ps_round_bytes) = self.shadow_sweep(trainers, &algos, sync_ps);
                 // reader cap may slow iterations (affects the measured gap)
                 let capped_iter_total = self.apply_reader_cap(iter_rate_total);
-                gap = (capped_iter_total / n) / sync_rate_per_partition;
-                util =
-                    (n * sync_rate_per_partition * p_parts * part_bytes / sync_cap).min(1.0);
+                gap = (capped_iter_total / n) * sweep;
+                util = if ps_round_bytes > 0.0 {
+                    (n * ps_round_bytes / sweep / sync_cap).min(1.0)
+                } else {
+                    0.0
+                };
                 train_frac = 1.0;
             }
             (SyncAlgo::Ma | SyncAlgo::Bmuf, SyncMode::FixedRate { gap: k }) => {
@@ -220,19 +261,6 @@ impl CostModel {
                 gap = k;
                 util = 0.0;
                 train_frac = t_k_iters / (t_k_iters + t_round);
-            }
-            (SyncAlgo::Ma | SyncAlgo::Bmuf, SyncMode::Shadow) => {
-                iter_rate_total = n * r_trainer;
-                let p_parts = self.sync_partitions.max(1) as f64;
-                let s = self.shadow_threads.clamp(1, self.sync_partitions.max(1)) as f64;
-                // per-partition ring over ~1/P of the vector; S concurrent
-                // rings share the trainer NIC (each hop slows by S)
-                let t_part = self.ring_secs_scoped(trainers) * s + self.round_latency;
-                let capped_iter_total = self.apply_reader_cap(iter_rate_total);
-                // per-partition gap: P/S partition rounds per sweep
-                gap = (capped_iter_total / n) * (p_parts / s) * t_part;
-                util = 0.0;
-                train_frac = 1.0;
             }
         }
         iter_rate_total = self.apply_reader_cap(iter_rate_total);
@@ -261,19 +289,102 @@ impl CostModel {
         measured.max_member_bytes() as f64 / self.nic_bytes_per_sec
     }
 
-    /// [`CostModel::ring_secs`] over the *largest partition's* slice of
-    /// the vector (the schedule's leading part under the `equal_ranges`
-    /// split rule), at full NIC rate — the partitioned shadow arm scales
-    /// it by the NIC share when `S` rings run concurrently. `P = 1`
-    /// reduces to `ring_secs` exactly.
-    fn ring_secs_scoped(&self, trainers: usize) -> f64 {
+    /// [`CostModel::ring_secs`] over an explicit element count (one
+    /// partition's slice), at full NIC rate — the shadow sweep scales it
+    /// by the NIC share when `S` rings run concurrently.
+    fn ring_elems_secs(&self, elems: usize, trainers: usize) -> f64 {
         if trainers <= 1 {
             return 0.0;
         }
-        let elems = (self.w_bytes / 4.0).round() as usize;
-        let part_elems = crate::sync::traffic::part_len(elems, self.sync_partitions.max(1), 0);
-        let measured = RingTraffic::measure(part_elems, self.ring_chunks, trainers);
+        let measured = RingTraffic::measure(elems, self.ring_chunks, trainers);
         measured.max_member_bytes() as f64 / self.nic_bytes_per_sec
+    }
+
+    /// Wall time of one shadow *sweep* per pool thread (every partition
+    /// completes one round per sweep) plus the sync-PS bytes one trainer's
+    /// full sweep demands. `algos[i]` is partition `i`'s algorithm;
+    /// partition costs come from the measured shares when fed
+    /// ([`CostModel::with_partition_byte_shares`]) and the uniform `1/P`
+    /// split otherwise. EASGD partitions contend for the sync-PS tier
+    /// (`n` trainers sweep concurrently); ring partitions are
+    /// trainer-to-trainer, and the `S` concurrent threads share the
+    /// trainer NIC in both cases.
+    ///
+    /// The sweep is the summed round time divided across the `S` threads,
+    /// floored by the slowest single partition round — one round runs on
+    /// one thread, so an imbalanced plan is gated by its hottest partition
+    /// no matter how many threads idle beside it. That floor is why
+    /// measured-cost repartitioning (which equalizes round costs) lowers
+    /// the priced worst-partition gap while leaving total bytes unchanged.
+    fn shadow_sweep(&self, trainers: usize, algos: &[SyncAlgo], sync_ps: usize) -> (f64, f64) {
+        let n = trainers as f64;
+        let p = algos.len().max(1);
+        let s = self.shadow_threads.clamp(1, p) as f64;
+        let sync_cap = sync_ps.max(1) as f64 * self.nic_bytes_per_sec;
+        let round_bytes = 2.0 * self.w_bytes * self.easgd_push_fraction;
+        let elems = (self.w_bytes / 4.0).round() as usize;
+        let mut sum = 0.0;
+        let mut slowest = 0.0f64;
+        let mut ps_bytes = 0.0;
+        for (i, algo) in algos.iter().enumerate() {
+            let t = match algo {
+                SyncAlgo::Easgd => {
+                    let b = match self.partition_shares.get(i) {
+                        Some(&share) => round_bytes * share,
+                        None => round_bytes / p as f64,
+                    };
+                    ps_bytes += b;
+                    (b * s / self.nic_bytes_per_sec).max(n * b / sync_cap)
+                        + self.round_latency
+                }
+                SyncAlgo::Ma | SyncAlgo::Bmuf => {
+                    let part_elems = match self.partition_shares.get(i) {
+                        Some(&share) => ((elems as f64 * share).round() as usize).max(1),
+                        None => crate::sync::traffic::part_len(elems, p, i).max(1),
+                    };
+                    self.ring_elems_secs(part_elems, trainers) * s + self.round_latency
+                }
+                SyncAlgo::None => 0.0,
+            };
+            sum += t;
+            slowest = slowest.max(t);
+        }
+        ((sum / s).max(slowest), ps_bytes)
+    }
+
+    /// Price a heterogeneous `--algo-map` shadow fabric: `algos[i]` is
+    /// partition `i`'s algorithm, partition costs come from the measured
+    /// byte shares when fed. Training throughput is untouched (shadow);
+    /// the per-partition Eq.-2 gap and sync-PS utilization reflect the
+    /// mixed sweep.
+    pub fn simulate_hybrid_shadow(
+        &self,
+        trainers: usize,
+        threads: usize,
+        algos: &[SyncAlgo],
+        sync_ps: usize,
+    ) -> SimPoint {
+        let n = trainers as f64;
+        let iter_rate_total = self.apply_reader_cap(n * self.trainer_rate(threads));
+        let (sweep, ps_round_bytes) = self.shadow_sweep(trainers, algos, sync_ps);
+        let sync_cap = sync_ps.max(1) as f64 * self.nic_bytes_per_sec;
+        let util = if ps_round_bytes > 0.0 && sweep > 0.0 {
+            (n * ps_round_bytes / sweep / sync_cap).min(1.0)
+        } else {
+            0.0
+        };
+        SimPoint {
+            trainers,
+            threads,
+            eps: iter_rate_total * self.batch as f64,
+            avg_sync_gap: if sweep > 0.0 {
+                (iter_rate_total / n) * sweep
+            } else {
+                f64::INFINITY
+            },
+            sync_ps_util: util,
+            train_fraction: 1.0,
+        }
     }
 
     fn apply_reader_cap(&self, iter_rate_total: f64) -> f64 {
@@ -402,21 +513,81 @@ mod tests {
             bytes_moved: 40_000,
             chunks_pushed: 10,
             chunks_skipped: 30,
-            chunks_scan_skipped: 0,
             full_round_bytes: 16_000,
+            ..PsTrafficSnapshot::default()
         };
         let m2 = CostModel::paper_scale().with_measured_easgd(&snap);
         assert!((m2.easgd_push_fraction - 0.25).abs() < 1e-12);
         // no measured rounds -> keep the full-push default
         let empty = PsTrafficSnapshot {
-            rounds: 0,
-            bytes_moved: 0,
-            chunks_pushed: 0,
-            chunks_skipped: 0,
-            chunks_scan_skipped: 0,
             full_round_bytes: 16_000,
+            ..PsTrafficSnapshot::default()
         };
         let m3 = CostModel::paper_scale().with_measured_easgd(&empty);
         assert!((m3.easgd_push_fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_partition_shares_reshape_the_sweep() {
+        // a skewed measured profile vs the uniform assumption, same P and S
+        let uniform = CostModel::paper_scale().with_partitioned_shadow(4, 2);
+        let skewed = CostModel::paper_scale()
+            .with_partitioned_shadow(4, 2)
+            .with_partition_byte_shares(&[0.85, 0.05, 0.05, 0.05]);
+        assert_eq!(skewed.sync_partitions, 4);
+        assert!((skewed.partition_shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let pu = uniform.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+        let ps = skewed.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+        // shadow throughput is untouched either way; the measured shares
+        // reshape the sweep: total bytes are equal, but one partition
+        // round runs on one thread, so the 85%-hot plan is gated by its
+        // hottest partition and prices a strictly larger sweep (gap) than
+        // the balanced plan — the effect adaptive repartitioning removes
+        assert_eq!(pu.eps, ps.eps);
+        assert!(pu.avg_sync_gap > 0.0);
+        assert!(
+            ps.avg_sync_gap > pu.avg_sync_gap * 1.2,
+            "skewed sweep must be gated by its hot partition: \
+             uniform {} vs skewed {}",
+            pu.avg_sync_gap,
+            ps.avg_sync_gap
+        );
+        // degenerate profiles are ignored, keeping the uniform assumption
+        let bad = CostModel::paper_scale()
+            .with_partitioned_shadow(4, 2)
+            .with_partition_byte_shares(&[0.0, f64::NAN, -1.0, 0.0]);
+        assert!(bad.partition_shares.is_empty());
+        let pb = bad.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+        assert_eq!(pb.avg_sync_gap, pu.avg_sync_gap);
+    }
+
+    #[test]
+    fn hybrid_algo_map_pricing_mixes_ps_and_ring_costs() {
+        use crate::config::SyncAlgo::{Bmuf, Easgd, Ma, None as NoAlgo};
+        let m = CostModel::paper_scale().with_partitioned_shadow(4, 2);
+        let hybrid = m.simulate_hybrid_shadow(10, 24, &[Easgd, Easgd, Ma, Bmuf], 2);
+        assert_eq!(hybrid.train_fraction, 1.0, "shadow never throttles training");
+        assert!(hybrid.avg_sync_gap.is_finite() && hybrid.avg_sync_gap > 0.0);
+        // EASGD partitions demand sync-PS bandwidth, rings do not
+        assert!(hybrid.sync_ps_util > 0.0);
+        let rings_only = m.simulate_hybrid_shadow(10, 24, &[Ma, Ma, Bmuf, Bmuf], 2);
+        assert_eq!(rings_only.sync_ps_util, 0.0);
+        // an all-EASGD map through the hybrid entry point matches simulate()
+        let all_easgd = m.simulate_hybrid_shadow(10, 24, &[Easgd; 4], 2);
+        let direct = m.simulate(10, 24, Easgd, SyncMode::Shadow, 2);
+        assert_eq!(all_easgd.avg_sync_gap, direct.avg_sync_gap);
+        assert_eq!(all_easgd.eps, direct.eps);
+        // all-None partitions never sync: the gap is infinite
+        let idle = m.simulate_hybrid_shadow(10, 24, &[NoAlgo; 4], 2);
+        assert!(idle.avg_sync_gap.is_infinite());
+        // measured shares shift cost between the PS tier and the rings
+        let skewed = CostModel::paper_scale()
+            .with_partitioned_shadow(4, 2)
+            .with_partition_byte_shares(&[0.7, 0.1, 0.1, 0.1]);
+        let sk = skewed.simulate_hybrid_shadow(10, 24, &[Easgd, Easgd, Ma, Bmuf], 2);
+        assert!(
+            (sk.avg_sync_gap - hybrid.avg_sync_gap).abs() > 1e-9,
+            "measured shares must reprice the hybrid sweep"
+        );
     }
 }

@@ -38,6 +38,50 @@
 //! the collective every `gap` trainer-level iterations while a write-lock
 //! [`Gate`] stops that trainer's other workers — synchronization literally
 //! interrupts training.
+//!
+//! **Repartition cutover** ([`spawn_shadow_pool_adaptive`]): when a
+//! [`RepartitionController`] publishes a new generation, each trainer's
+//! pool cuts over *independently*, at its own sweep boundary — no global
+//! barrier. Safety rests on two facts. First, a pool thread that exits
+//! always `leave()`s its rendezvous strategies, so a peer still blocked in
+//! an old-generation round sees the membership shrink and its round
+//! closes: a trainer on the old plan can always finish its sweep, which is
+//! why the mixed state (some trainers cut, some not) cannot deadlock —
+//! the acyclic-round-order argument for chains extends across the cutover
+//! because departure, not arrival, is what closes rounds. Second, the
+//! controller publishes at most one pending generation (a rebuild waits
+//! until every active trainer adopted the current one), so adoption never
+//! skips an epoch and a trainer that stops early can vacate exactly the
+//! one pending epoch it never joined ([`RepartitionController::depart`]).
+//!
+//! # Examples
+//!
+//! ```
+//! use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//! use shadowsync::metrics::Metrics;
+//! use shadowsync::net::{Network, Role};
+//! use shadowsync::sync::driver::spawn_shadow;
+//! use shadowsync::sync::NoSync;
+//! use shadowsync::tensor::HogwildBuffer;
+//!
+//! let mut net = Network::new(None);
+//! let node = net.add_node(Role::Trainer);
+//! let stop = Arc::new(AtomicBool::new(false));
+//! let shadow = spawn_shadow(
+//!     Box::new(NoSync),
+//!     Arc::new(HogwildBuffer::zeros(8)),
+//!     node,
+//!     Arc::new(net),
+//!     Arc::new(Metrics::new()),
+//!     stop.clone(),
+//!     Duration::ZERO,
+//!     0,
+//! );
+//! stop.store(true, Relaxed);
+//! shadow.join().unwrap().unwrap();
+//! ```
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
 use std::sync::{Arc, Mutex, RwLock};
@@ -50,7 +94,8 @@ use crate::metrics::Metrics;
 use crate::net::{Network, NodeId};
 use crate::tensor::HogwildBuffer;
 
-use super::{ParamRange, SyncStrategy};
+use super::repartition::RepartitionController;
+use super::{ParamRange, RepartitionCarry, SyncStrategy};
 
 /// Shared flag a trainer raises when its shard is exhausted.
 pub type StopFlag = Arc<AtomicBool>;
@@ -119,82 +164,171 @@ pub fn spawn_shadow_pool(
     trainer_id: usize,
     threads: usize,
 ) -> JoinHandle<Result<u64>> {
-    let threads = threads.clamp(1, tasks.len().max(1));
-    // rendezvous strategies are pinned to chains in plan order — every
-    // trainer builds the exact same chains, which is what keeps the
-    // cross-trainer round order acyclic (see the module doc); everything
-    // else goes into the shared work-stealing pool
-    let mut chains: Vec<Vec<ShadowTask>> = (0..threads).map(|_| Vec::new()).collect();
-    let mut steal_tasks = Vec::new();
-    let mut next_chain = 0usize;
-    for t in tasks {
-        if t.strategy.rendezvous() {
-            chains[next_chain % threads].push(t);
-            next_chain += 1;
-        } else {
-            steal_tasks.push(Mutex::new(t));
-        }
-    }
-    let pool = Arc::new(StealPool { tasks: steal_tasks, ticket: AtomicUsize::new(0) });
+    spawn_shadow_pool_adaptive(
+        tasks,
+        local,
+        trainer_node,
+        net,
+        metrics,
+        stop,
+        interval,
+        trainer_id,
+        threads,
+        None,
+    )
+}
+
+/// [`spawn_shadow_pool`] with measured-cost adaptive repartitioning: when
+/// `controller` is given, the pool runs *epochs*. Each epoch services the
+/// current [`super::repartition::PlanEpoch`]'s tasks exactly like the
+/// static pool; once the controller publishes a new generation, every pool
+/// thread exits at its next sweep boundary (a blocked rendezvous round is
+/// unblocked by faster peers leaving, the same mechanism as shutdown), the
+/// retiring strategies `leave()` their old groups, EASGD gate state is
+/// carried across by partition index (cache ordinals are global, so
+/// entries stay valid wherever their chunks now live), and the pool
+/// re-spawns over the new ranges. With `controller = None` this is exactly
+/// the static pool.
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_shadow_pool_adaptive(
+    tasks: Vec<ShadowTask>,
+    local: Arc<HogwildBuffer>,
+    trainer_node: NodeId,
+    net: Arc<Network>,
+    metrics: Arc<Metrics>,
+    stop: StopFlag,
+    interval: Duration,
+    trainer_id: usize,
+    threads: usize,
+    controller: Option<Arc<RepartitionController>>,
+) -> JoinHandle<Result<u64>> {
     std::thread::Builder::new()
         .name(format!("shadow-{trainer_id}"))
         .spawn(move || {
-            let mut workers = Vec::new();
-            for (k, chain) in chains.into_iter().enumerate() {
-                let local = local.clone();
-                let net = net.clone();
-                let metrics = metrics.clone();
-                let stop = stop.clone();
-                let pool = pool.clone();
-                workers.push(
-                    std::thread::Builder::new()
-                        .name(format!("shadow-{trainer_id}.{k}"))
-                        .spawn(move || {
-                            pool_thread(
-                                chain,
-                                &pool,
-                                &local,
-                                trainer_node,
-                                &net,
-                                &metrics,
-                                &stop,
-                                interval,
-                            )
-                        })
-                        .expect("spawn shadow pool thread"),
-                );
-            }
-            let mut rounds = 0u64;
-            let mut first_err = None;
-            for w in workers {
-                match w.join().expect("shadow pool thread panicked") {
-                    Ok(r) => rounds += r,
-                    Err(e) => first_err = first_err.or(Some(e)),
-                }
-            }
-            // all pool threads are gone: retire the stolen strategies too
-            match Arc::try_unwrap(pool) {
-                Ok(pool) => {
-                    for slot in pool.tasks {
-                        slot.into_inner().unwrap().strategy.leave();
+            let mut tasks = tasks;
+            let mut my_gen = controller.as_ref().map_or(0, |c| c.generation());
+            let mut total_rounds = 0u64;
+            loop {
+                let threads_now = threads.clamp(1, tasks.len().max(1));
+                // rendezvous strategies are pinned to chains in plan order
+                // — every trainer builds the exact same chains, which is
+                // what keeps the cross-trainer round order acyclic (see the
+                // module doc); everything else goes into the shared
+                // work-stealing pool
+                let mut chains: Vec<Vec<ShadowTask>> =
+                    (0..threads_now).map(|_| Vec::new()).collect();
+                let mut steal_tasks = Vec::new();
+                let mut next_chain = 0usize;
+                for t in tasks {
+                    if t.strategy.rendezvous() {
+                        chains[next_chain % threads_now].push(t);
+                        next_chain += 1;
+                    } else {
+                        steal_tasks.push(Mutex::new(t));
                     }
                 }
-                Err(pool) => {
-                    for slot in &pool.tasks {
-                        slot.lock().unwrap().strategy.leave();
+                let pool =
+                    Arc::new(StealPool { tasks: steal_tasks, ticket: AtomicUsize::new(0) });
+                let mut workers = Vec::new();
+                for (k, chain) in chains.into_iter().enumerate() {
+                    let local = local.clone();
+                    let net = net.clone();
+                    let metrics = metrics.clone();
+                    let stop = stop.clone();
+                    let pool = pool.clone();
+                    let repart = controller.as_ref().map(|c| (c.clone(), my_gen));
+                    workers.push(
+                        std::thread::Builder::new()
+                            .name(format!("shadow-{trainer_id}.{k}"))
+                            .spawn(move || {
+                                pool_thread(
+                                    chain,
+                                    &pool,
+                                    &local,
+                                    trainer_node,
+                                    &net,
+                                    &metrics,
+                                    &stop,
+                                    interval,
+                                    repart,
+                                    k == 0,
+                                )
+                            })
+                            .expect("spawn shadow pool thread"),
+                    );
+                }
+                let mut first_err = None;
+                let mut recovered: Vec<ShadowTask> = Vec::new();
+                for w in workers {
+                    let exit = w.join().expect("shadow pool thread panicked");
+                    total_rounds += exit.rounds;
+                    recovered.extend(exit.chain);
+                    first_err = first_err.or(exit.err);
+                }
+                // all pool threads are gone: recover (and retire) the
+                // stolen strategies too
+                let pool =
+                    Arc::try_unwrap(pool).ok().expect("pool threads still hold the steal pool");
+                for slot in pool.tasks {
+                    let mut t = slot.into_inner().unwrap();
+                    t.strategy.leave();
+                    recovered.push(t);
+                }
+                let recut = first_err.is_none()
+                    && !stop.load(Relaxed)
+                    && controller.as_ref().is_some_and(|c| c.generation() != my_gen);
+                if !recut {
+                    if let Some(c) = &controller {
+                        // vacate any pending epoch this trainer never
+                        // adopted, so adopters don't wait on a ghost
+                        c.depart(my_gen);
+                    }
+                    return match first_err {
+                        Some(e) => Err(e),
+                        None => Ok(total_rounds),
+                    };
+                }
+                // cutover: the pool is quiesced between rounds and the old
+                // strategies have left their groups — adopt the new epoch
+                // and rebuild the tasks over its ranges
+                let c = controller.as_ref().unwrap();
+                let epoch = c.adopt(my_gen);
+                my_gen = epoch.gen;
+                let mut carry: Vec<Option<RepartitionCarry>> =
+                    (0..epoch.plan.len()).map(|_| None).collect();
+                for t in &mut recovered {
+                    if t.partition < carry.len() {
+                        carry[t.partition] = t.strategy.take_repartition_carry();
                     }
                 }
-            }
-            match first_err {
-                Some(e) => Err(e),
-                None => Ok(rounds),
+                let seed = local.to_vec();
+                tasks = match c.build_tasks(trainer_id, &epoch, &seed, carry) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        c.depart(my_gen);
+                        return Err(e);
+                    }
+                };
             }
         })
         .expect("spawn shadow thread")
 }
 
+/// What one pool thread hands back when it exits: the partition rounds it
+/// ran, its rendezvous chain (strategies already `leave()`d, carry state
+/// intact), and the first strategy error it hit, if any.
+struct PoolThreadExit {
+    rounds: u64,
+    chain: Vec<ShadowTask>,
+    err: Option<anyhow::Error>,
+}
+
 /// One pool thread: per lap, run the next round of the owned rendezvous
-/// chain (cyclic order) and steal one non-rendezvous round.
+/// chain (cyclic order) and steal one non-rendezvous round. Thread 0 of an
+/// adaptive pool additionally records one *sweep* per lap with the
+/// replica's dirty-epoch write delta; every thread checks the controller's
+/// generation once per lap and exits at the sweep boundary when a new plan
+/// is pending (the cutover's quiesce point).
 #[allow(clippy::too_many_arguments)]
 fn pool_thread(
     mut chain: Vec<ShadowTask>,
@@ -205,10 +339,13 @@ fn pool_thread(
     metrics: &Metrics,
     stop: &AtomicBool,
     interval: Duration,
-) -> Result<u64> {
+    repart: Option<(Arc<RepartitionController>, u64)>,
+    record_sweeps: bool,
+) -> PoolThreadExit {
     let mut rounds = 0u64;
     let mut chain_idx = 0usize;
     let mut err = None;
+    let mut last_epochs: Vec<u64> = Vec::new();
     'run: while !stop.load(Relaxed) {
         let mut worked = false;
         if !chain.is_empty() {
@@ -271,15 +408,41 @@ fn pool_thread(
         if !interval.is_zero() {
             std::thread::sleep(interval);
         }
+        if let Some((c, adopted_gen)) = &repart {
+            if record_sweeps {
+                // feed the measured write rates: dirty-epoch bumps since
+                // this thread's previous sweep (empty when untracked; the
+                // first observation only primes the baseline — re-adding
+                // cumulative counts after every cutover would multiply the
+                // profile by its own history)
+                let delta = match local.dirty_chunk_epochs() {
+                    Some(now) => {
+                        let delta = if last_epochs.len() == now.len() {
+                            now.iter()
+                                .zip(&last_epochs)
+                                .map(|(n, l)| n.wrapping_sub(*l))
+                                .collect()
+                        } else {
+                            Vec::new()
+                        };
+                        last_epochs = now;
+                        delta
+                    }
+                    None => Vec::new(),
+                };
+                c.record_sweep(&delta);
+            }
+            if c.generation() != *adopted_gen {
+                break 'run; // quiesce for the cutover
+            }
+        }
     }
-    // leaving the owned chain is what unblocks peer trainers mid-round
+    // leaving the owned chain is what unblocks peer trainers mid-round —
+    // at shutdown and at a repartition cutover alike
     for t in &mut chain {
         t.strategy.leave();
     }
-    match err {
-        Some(e) => Err(e),
-        None => Ok(rounds),
-    }
+    PoolThreadExit { rounds, chain, err }
 }
 
 /// Foreground gate: workers hold a read lock while training; a fixed-rate

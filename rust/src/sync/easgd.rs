@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use super::{
     ps::{DeltaGate, DeltaScanCache, SyncPsGroup},
-    SyncCtx, SyncStrategy,
+    RepartitionCarry, SyncCtx, SyncStrategy,
 };
 
 pub struct EasgdSync {
@@ -68,7 +68,31 @@ impl SyncStrategy for EasgdSync {
             stats.chunks_skipped,
             stats.chunks_scan_skipped,
         );
+        // per-partition resolution: the measured byte shares feed the sim
+        // cost model and the adaptive repartitioner
+        ctx.metrics.record_partition_sync_bytes(ctx.partition, stats.bytes);
+        self.group.note_partition_round(
+            ctx.partition,
+            &stats,
+            2 * 4 * ctx.range.len as u64,
+        );
         Ok(stats.gap)
+    }
+
+    fn take_repartition_carry(&mut self) -> Option<RepartitionCarry> {
+        Some(RepartitionCarry {
+            cache: std::mem::take(&mut self.cache),
+            gate: self.gate.take(),
+        })
+    }
+
+    fn install_repartition_carry(&mut self, carry: RepartitionCarry) {
+        self.cache = carry.cache;
+        if carry.gate.is_some() {
+            // keep the warmed sketch instead of the freshly built gate; an
+            // ungated carry (legacy group-gate strategies) changes nothing
+            self.gate = carry.gate;
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -192,5 +216,54 @@ mod tests {
         let snap = metrics.snapshot();
         assert_eq!(snap.sync_bytes, 2 * 16 * 4, "converged partition moves nothing more");
         assert_eq!(snap.sync_chunks_skipped, 2);
+        // both rounds were recorded at per-partition resolution
+        assert_eq!(snap.partition_sync_bytes, vec![0, 2 * 16 * 4]);
+        let t = group.traffic();
+        assert_eq!(t.per_partition.len(), 2);
+        assert_eq!(t.per_partition[1].rounds, 2);
+        assert_eq!(t.per_partition[1].bytes_moved, 2 * 16 * 4);
+        assert_eq!(t.per_partition[1].full_round_bytes, 2 * 4 * 16);
+    }
+
+    #[test]
+    fn repartition_carry_moves_gate_and_cache_across_strategies() {
+        let mut net = Network::new(None);
+        let tnode = net.add_node(Role::Trainer);
+        let p = 64;
+        let group = Arc::new(
+            SyncPsGroup::build(&vec![0.0; p], 1, &mut net).with_push_chunking(8, 0.0),
+        );
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&vec![1.0; p]).with_dirty_epochs(8);
+        let mut old = EasgdSync::new(group.clone(), 0.5).with_gate(DeltaGate::new(0.0, 0.5));
+        let range = ParamRange::full(p);
+        let ctx = SyncCtx {
+            local: &local,
+            range,
+            partition: 0,
+            trainer_node: tnode,
+            net: &net,
+            metrics: &metrics,
+        };
+        // warm the sketch and the scan cache over a few rounds
+        for _ in 0..4 {
+            old.sync_round(&ctx).unwrap();
+        }
+        let carry = old.take_repartition_carry().expect("EASGD must carry gate state");
+        let warmed = carry.gate.as_ref().expect("gated strategy carries its gate");
+        assert!(warmed.sketch_samples() > 0, "carried sketch must be warm");
+        let samples = warmed.sketch_samples();
+        // a fresh strategy (as the cutover builds) inherits the state
+        let mut new = EasgdSync::new(group, 0.5).with_gate(DeltaGate::new(0.0, 0.5));
+        new.install_repartition_carry(carry);
+        // the installed gate is the warmed one, not the fresh empty sketch
+        let round_observations = p / 8;
+        new.sync_round(&ctx).unwrap();
+        let reinstalled = new.take_repartition_carry().unwrap();
+        assert_eq!(
+            reinstalled.gate.unwrap().sketch_samples(),
+            samples + round_observations,
+            "warmed sketch must keep accumulating where it left off"
+        );
     }
 }

@@ -75,6 +75,7 @@ impl SyncStrategy for MaSync {
         // ring traffic was driven hop-by-hop through ctx.net by the
         // collective itself; record the measured bytes this member moved
         ctx.metrics.record_sync(round.bytes_tx);
+        ctx.metrics.record_partition_sync_bytes(ctx.partition, round.bytes_tx);
         Ok(gap)
     }
 

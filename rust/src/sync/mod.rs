@@ -48,6 +48,15 @@
 //! the way toward the global/central model instead of being overwritten,
 //! so Hogwild progress made during the (background) round isn't thrown
 //! away.
+//!
+//! The fabric is **self-tuning** when `--repartition-every N` is set: a
+//! shared [`repartition::RepartitionController`] accumulates measured
+//! per-range write rates (dirty-epoch bump counts) and per-partition push
+//! bytes, and every `N` shadow sweeps republishes the plan with a
+//! cost-balanced cut — hot partitions shrink, cold ones grow — with a safe
+//! live cutover in [`driver`] (quiesce at a sweep boundary, retire + leave
+//! the old strategies, carry [`RepartitionCarry`] gate state across by
+//! global chunk ordinal, adopt the re-sized per-partition groups).
 
 pub mod allreduce;
 pub mod bmuf;
@@ -56,6 +65,7 @@ pub mod easgd;
 pub mod ma;
 pub mod partition;
 pub mod ps;
+pub mod repartition;
 pub mod traffic;
 
 use anyhow::Result;
@@ -121,7 +131,30 @@ pub trait SyncStrategy: Send {
         false
     }
 
+    /// Detach whatever per-strategy state should survive an adaptive
+    /// repartition cutover (see [`repartition`]). EASGD strategies hand
+    /// over their delta-gate sketch and dirty-scan cache; stateless and
+    /// collective strategies return `None` and are rebuilt fresh.
+    fn take_repartition_carry(&mut self) -> Option<RepartitionCarry> {
+        None
+    }
+
+    /// Install state carried out of the retiring strategy of the same
+    /// partition index by [`SyncStrategy::take_repartition_carry`].
+    fn install_repartition_carry(&mut self, _carry: RepartitionCarry) {}
+
     fn name(&self) -> &'static str;
+}
+
+/// Gate state an EASGD strategy hands across a repartition cutover: its
+/// private [`DeltaGate`] (warmed quantile sketch) and [`DeltaScanCache`].
+/// Cache entries are keyed by *global* push-chunk ordinal, so an entry
+/// stays valid for any chunk whose dirty signature and central version
+/// survived the cutover — wherever the new plan puts the chunk — and a
+/// chunk the carrying partition never scanned simply misses and re-scans.
+pub struct RepartitionCarry {
+    pub cache: DeltaScanCache,
+    pub gate: Option<DeltaGate>,
 }
 
 pub use allreduce::{AllReduceGroup, ReduceEngine, RoundOutcome};
@@ -130,6 +163,7 @@ pub use easgd::EasgdSync;
 pub use ma::MaSync;
 pub use partition::{ParamRange, Partition, PartitionPlan};
 pub use ps::{DeltaGate, DeltaScanCache, PushStats, QuantileSketch, SyncPsGroup};
+pub use repartition::{PlanEpoch, RepartitionController};
 
 /// Build one chunked ring-AllReduce fabric over all trainers for a
 /// `num_params`-element partition (MA, BMUF): wire traffic is driven — and

@@ -12,6 +12,39 @@
 //! adaptive runs gate independently by design (the ROADMAP
 //! per-trainer/per-shard follow-on). Fixed-threshold and ungated runs are
 //! exactly equivalent, regression-tested in `tests/sync_integration.rs`.
+//!
+//! Two cut rules are provided:
+//!
+//! - [`lpt_contiguous_ranges`] packs *uniform*-cost blocks — the static
+//!   plan every run starts on, and the only plan when adaptive
+//!   repartitioning is off (`--repartition-every 0`), so golden P=1 /
+//!   static-P runs are untouched by this module's growth.
+//! - [`lpt_contiguous_ranges_weighted`] balances *measured* per-block
+//!   costs (dirty-epoch write rates accumulated by
+//!   [`super::repartition::RepartitionController`]): hot blocks make their
+//!   partition shrink, cold blocks make it grow, so every partition's
+//!   sync round costs about the same. Contiguity makes raw LPT
+//!   reassembly unsound for non-uniform costs (bin *counts* no longer
+//!   imply bin *costs*), so the weighted rule is the contiguous analogue:
+//!   a greedy left-to-right cut targeting the LPT makespan
+//!   `total_cost / P`, feasibility-clamped so every partition keeps at
+//!   least one block.
+//!
+//! # Examples
+//!
+//! ```
+//! use shadowsync::sync::partition::lpt_contiguous_ranges_weighted;
+//!
+//! // First half of the vector is written 9x as often as the second half:
+//! // the cost-balanced cut gives the hot half more (smaller) partitions.
+//! let ranges = lpt_contiguous_ranges_weighted(1024, 4, 64, |lo, _hi| {
+//!     if lo < 512 { 9.0 } else { 1.0 }
+//! });
+//! assert_eq!(ranges.len(), 4);
+//! assert_eq!(ranges[0].lo(), 0);
+//! assert_eq!(ranges[3].hi(), 1024);
+//! assert!(ranges[0].len < ranges[3].len, "hot partitions shrink");
+//! ```
 
 use anyhow::{bail, Result};
 
@@ -92,6 +125,19 @@ impl PartitionPlan {
         Ok(Self { partitions })
     }
 
+    /// Assemble a plan from pre-cut ranges (the adaptive repartitioner's
+    /// entry point): partition `i` keeps `cfg.partition_algo(i)` — the
+    /// `--algo-map` keys on the partition *index*, which is stable across
+    /// repartitions — only the ranges move.
+    pub fn from_ranges(ranges: Vec<ParamRange>, cfg: &RunConfig) -> Self {
+        let partitions = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(index, range)| Partition { index, range, algo: cfg.partition_algo(index) })
+            .collect();
+        Self { partitions }
+    }
+
     pub fn len(&self) -> usize {
         self.partitions.len()
     }
@@ -138,6 +184,91 @@ pub fn lpt_contiguous_ranges(len: usize, p: usize, granule: usize) -> Vec<ParamR
     let mut lo = 0usize;
     for &c in &counts {
         let hi = (lo + c * granule).min(len);
+        out.push(ParamRange { offset: lo, len: hi - lo });
+        lo = hi;
+    }
+    debug_assert_eq!(out.last().map(|r| r.hi()), Some(len));
+    out
+}
+
+/// Cut `[0, len)` into `p` contiguous ranges balanced by *measured* block
+/// costs: blocks of up to `granule` elements are priced by `cost(lo, hi)`
+/// (non-finite or negative costs count as 0; an all-zero profile falls back
+/// to uniform element counts), and a greedy left-to-right cut closes each
+/// partition once its accumulated cost reaches the LPT makespan target
+/// `remaining_cost / remaining_partitions` (midpoint rule: a block joins
+/// the open partition only while half of it still fits under the target).
+///
+/// Contiguity is what raw LPT cannot give for non-uniform costs — packing
+/// blocks into bins by cost order and then re-reading bin *counts* as
+/// contiguous runs divorces each run from the cost its bin balanced — so
+/// this is the contiguous analogue the adaptive repartitioner uses: hot
+/// (high write rate) regions end up split across more, smaller partitions
+/// and cold regions merge into fewer, larger ones.
+///
+/// The same structural guarantees as [`lpt_contiguous_ranges`] hold: every
+/// returned range is non-empty, boundaries are block-aligned (except the
+/// tail), and the `p` ranges tile `[0, len)` exactly — no element is lost
+/// or double-counted across a replan.
+pub fn lpt_contiguous_ranges_weighted<F>(
+    len: usize,
+    p: usize,
+    granule: usize,
+    cost: F,
+) -> Vec<ParamRange>
+where
+    F: Fn(usize, usize) -> f64,
+{
+    assert!(p >= 1 && len >= p, "need at least one element per partition");
+    let granule = granule.clamp(1, (len / p).max(1));
+    let blocks = len.div_ceil(granule);
+    let mut costs: Vec<f64> = (0..blocks)
+        .map(|b| {
+            let lo = b * granule;
+            let hi = (lo + granule).min(len);
+            let c = cost(lo, hi);
+            if c.is_finite() && c > 0.0 {
+                c
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut total: f64 = costs.iter().sum();
+    if total <= 0.0 {
+        // degenerate profile (nothing measured): balance element counts
+        for (b, c) in costs.iter_mut().enumerate() {
+            *c = granule.min(len - b * granule) as f64;
+        }
+        total = costs.iter().sum();
+    }
+    let mut out = Vec::with_capacity(p);
+    let mut next = 0usize; // next unassigned block
+    let mut lo = 0usize;
+    let mut remaining = total;
+    for bin in 0..p {
+        let bins_left = p - bin;
+        let take = if bins_left == 1 {
+            blocks - next // the last partition absorbs the tail
+        } else {
+            // leave at least one block for every remaining partition
+            let max_take = blocks - next - (bins_left - 1);
+            let target = remaining / bins_left as f64;
+            let mut acc = 0.0;
+            let mut take = 0usize;
+            while take < max_take {
+                let c = costs[next + take];
+                if take > 0 && acc + 0.5 * c > target {
+                    break;
+                }
+                acc += c;
+                take += 1;
+            }
+            take
+        };
+        remaining -= costs[next..next + take].iter().sum::<f64>();
+        next += take;
+        let hi = (lo + take * granule).min(len);
         out.push(ParamRange { offset: lo, len: hi - lo });
         lo = hi;
     }
@@ -220,6 +351,92 @@ mod tests {
         assert_eq!(plan.partitions[3].algo, SyncAlgo::Ma);
         assert!(plan.uses_collective());
         assert!(plan.uses(SyncAlgo::Easgd));
+    }
+
+    #[test]
+    fn weighted_ranges_tile_exactly_for_any_profile() {
+        check("lpt-weighted", 40, |g| {
+            let p = g.usize_in(1, 8);
+            let len = g.usize_in(p.max(2), 5_000);
+            let granule = g.usize_in(1, 700);
+            // hot head: the first ~quarter of the vector costs 20x
+            let hot_hi = len / 4;
+            let rs = lpt_contiguous_ranges_weighted(len, p, granule, |lo, _hi| {
+                if lo < hot_hi {
+                    20.0
+                } else {
+                    1.0
+                }
+            });
+            assert_eq!(rs.len(), p);
+            assert_eq!(rs[0].lo(), 0);
+            assert_eq!(rs[p - 1].hi(), len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].hi(), w[1].lo(), "ranges must be contiguous");
+            }
+            for r in &rs {
+                assert!(r.len > 0, "empty partition in {rs:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_cut_splits_the_hot_region_across_partitions() {
+        // 16 blocks of 64; the first 4 blocks carry almost all the cost:
+        // cost-balancing splits them across partitions while the cold tail
+        // merges into one big partition
+        let rs = lpt_contiguous_ranges_weighted(1024, 4, 64, |lo, _hi| {
+            if lo < 256 {
+                100.0
+            } else {
+                1.0
+            }
+        });
+        assert_eq!(rs.len(), 4);
+        assert_eq!(rs.last().unwrap().hi(), 1024);
+        // the hot head is covered by more than one partition...
+        assert!(rs[0].hi() < 256, "hot region not split: {rs:?}");
+        // ...and the cold tail's partition is the largest by far
+        let uniform = 1024 / 4;
+        assert!(rs[0].len < uniform, "hot partition did not shrink: {rs:?}");
+        assert!(rs[3].len > uniform, "cold partition did not grow: {rs:?}");
+    }
+
+    #[test]
+    fn weighted_cut_degenerate_costs_fall_back_to_uniform() {
+        // zero / NaN cost profiles must still produce a sane balanced plan
+        for bad in [0.0f64, f64::NAN, -3.0] {
+            let rs = lpt_contiguous_ranges_weighted(1000, 4, 10, |_, _| bad);
+            assert_eq!(rs.len(), 4);
+            assert_eq!(rs[3].hi(), 1000);
+            let sizes: Vec<usize> = rs.iter().map(|r| r.len).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 20, "uniform fallback unbalanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn from_ranges_keeps_index_stable_algo_mapping() {
+        let cfg = RunConfig {
+            sync_partitions: 4,
+            shadow_threads: 2,
+            algo_map: Some("easgd:0-1,ma:2-3".parse().unwrap()),
+            ..RunConfig::default()
+        };
+        let ranges = lpt_contiguous_ranges_weighted(64, 4, 8, |lo, _| {
+            if lo < 16 {
+                10.0
+            } else {
+                1.0
+            }
+        });
+        let plan = PartitionPlan::from_ranges(ranges, &cfg);
+        assert_eq!(plan.len(), 4);
+        // the algo map keys on index, so a replan never migrates algorithms
+        assert_eq!(plan.partitions[0].algo, SyncAlgo::Easgd);
+        assert_eq!(plan.partitions[1].algo, SyncAlgo::Easgd);
+        assert_eq!(plan.partitions[2].algo, SyncAlgo::Ma);
+        assert_eq!(plan.partitions[3].algo, SyncAlgo::Ma);
     }
 
     #[test]

@@ -42,7 +42,11 @@
 //! own ([`SyncPsGroup::elastic_sync_partition`]): only the push chunks
 //! overlapping the range move (chunks are clipped at partition
 //! boundaries), and both the scan cache and the gate belong to the calling
-//! strategy. Cache ordinals stay keyed by *global* chunk ordinal, and the
+//! strategy. Each round's measured bytes are additionally recorded under
+//! the partition's index ([`SyncPsGroup::note_partition_round`], exported
+//! through [`PsTrafficSnapshot::per_partition`]) so the `sim/` cost model
+//! and the adaptive repartitioner see per-partition byte fractions instead
+//! of assuming `round_bytes / P`. Cache ordinals stay keyed by *global* chunk ordinal, and the
 //! central vector keeps a per-chunk **version counter** that every elastic
 //! push bumps — so a chunk *another trainer* pushed no longer matches this
 //! trainer's cached `(signature, version)` pair and is re-scanned next
@@ -70,6 +74,7 @@ use std::sync::atomic::{
     AtomicU32, AtomicU64, AtomicUsize,
     Ordering::{Acquire, Relaxed, Release},
 };
+use std::sync::Mutex;
 
 use super::partition::ParamRange;
 use crate::net::{Network, NodeId, Role};
@@ -107,6 +112,19 @@ pub struct PushStats {
 /// snapshots and sorts the window (a few hundred floats — called once per
 /// sync round, off the training hot path). Old samples are overwritten ring-
 /// buffer style, so the estimate follows a drifting distribution.
+///
+/// # Examples
+///
+/// ```
+/// use shadowsync::sync::QuantileSketch;
+///
+/// let sketch = QuantileSketch::new(64);
+/// assert_eq!(sketch.quantile(0.5), None, "no answers before warmup");
+/// for x in 0..64 {
+///     sketch.record(x as f32);
+/// }
+/// assert_eq!(sketch.quantile(0.5), Some(31.0));
+/// ```
 #[derive(Debug)]
 pub struct QuantileSketch {
     window: Vec<AtomicU32>,
@@ -202,8 +220,31 @@ impl DeltaScanCache {
     }
 }
 
-/// Cumulative measured push traffic of a sync-PS group.
+/// Measured traffic of one partition's EASGD rounds — the per-partition
+/// resolution of [`PsTrafficSnapshot`]. `full_round_bytes` is what a
+/// no-skip round over the partition's *current* range would move (both
+/// legs), so `bytes_moved / rounds / full_round_bytes` is that partition's
+/// measured byte fraction.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionTraffic {
+    pub rounds: u64,
+    pub bytes_moved: u64,
+    pub full_round_bytes: u64,
+}
+
+impl PartitionTraffic {
+    /// Measured bytes of this partition's average round (both legs).
+    pub fn avg_round_bytes(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.bytes_moved as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// Cumulative measured push traffic of a sync-PS group.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct PsTrafficSnapshot {
     pub rounds: u64,
     pub bytes_moved: u64,
@@ -214,6 +255,11 @@ pub struct PsTrafficSnapshot {
     /// Bytes a full no-skip round would move (`SyncPsGroup::round_bytes`) —
     /// the denominator that turns `bytes_moved` into a scale-free fraction.
     pub full_round_bytes: u64,
+    /// Per-partition resolution (index = partition in the fabric's plan;
+    /// empty until a partition-scoped round is recorded). Feeds the `sim/`
+    /// cost model's measured per-partition byte shares so heterogeneous
+    /// plans and `--algo-map`s are priced exactly, not at `round_bytes/P`.
+    pub per_partition: Vec<PartitionTraffic>,
 }
 
 impl PsTrafficSnapshot {
@@ -229,6 +275,24 @@ impl PsTrafficSnapshot {
         if self.full_round_bytes == 0 {
             self.full_round_bytes = other.full_round_bytes;
         }
+        if self.per_partition.len() < other.per_partition.len() {
+            self.per_partition.resize(other.per_partition.len(), PartitionTraffic::default());
+        }
+        for (mine, theirs) in self.per_partition.iter_mut().zip(&other.per_partition) {
+            mine.rounds += theirs.rounds;
+            mine.bytes_moved += theirs.bytes_moved;
+            if mine.full_round_bytes == 0 {
+                mine.full_round_bytes = theirs.full_round_bytes;
+            }
+        }
+    }
+
+    /// Measured per-partition byte shares, normalized to sum to 1 — the
+    /// input `sim/` uses to price a heterogeneous fabric exactly. Empty
+    /// when no partition-scoped bytes were recorded.
+    pub fn partition_byte_shares(&self) -> Vec<f64> {
+        let bytes: Vec<u64> = self.per_partition.iter().map(|p| p.bytes_moved).collect();
+        crate::util::byte_shares(&bytes)
     }
 
     /// Measured bytes of an average round (both legs).
@@ -370,6 +434,11 @@ pub struct SyncPsGroup {
     chunks_pushed: AtomicU64,
     chunks_skipped: AtomicU64,
     chunks_scan_skipped: AtomicU64,
+    /// per-partition round/byte counters (index = partition in the
+    /// fabric's plan), recorded by the strategies after each round — a
+    /// mutex, not atomics: rounds are off the training hot path and the
+    /// partition count is a run-time knob
+    partition_traffic: Mutex<Vec<PartitionTraffic>>,
 }
 
 impl SyncPsGroup {
@@ -391,6 +460,7 @@ impl SyncPsGroup {
             chunks_pushed: AtomicU64::new(0),
             chunks_skipped: AtomicU64::new(0),
             chunks_scan_skipped: AtomicU64::new(0),
+            partition_traffic: Mutex::new(Vec::new()),
         };
         g.reset_chunk_versions();
         g
@@ -636,6 +706,21 @@ impl SyncPsGroup {
         (max_abs, sum_abs)
     }
 
+    /// Record one partition-scoped round's measured traffic under its
+    /// partition index (called by the EASGD strategies after each round;
+    /// `full_bytes` is the no-skip cost of the partition's current range,
+    /// `2 × 4 × range.len`). Grows the table on first sight.
+    pub fn note_partition_round(&self, partition: usize, stats: &PushStats, full_bytes: u64) {
+        let mut v = self.partition_traffic.lock().unwrap();
+        if partition >= v.len() {
+            v.resize(partition + 1, PartitionTraffic::default());
+        }
+        let e = &mut v[partition];
+        e.rounds += 1;
+        e.bytes_moved += stats.bytes;
+        e.full_round_bytes = full_bytes;
+    }
+
     /// Cumulative measured push traffic since construction.
     pub fn traffic(&self) -> PsTrafficSnapshot {
         PsTrafficSnapshot {
@@ -645,6 +730,7 @@ impl SyncPsGroup {
             chunks_skipped: self.chunks_skipped.load(Relaxed),
             chunks_scan_skipped: self.chunks_scan_skipped.load(Relaxed),
             full_round_bytes: self.round_bytes(),
+            per_partition: self.partition_traffic.lock().unwrap().clone(),
         }
     }
 
@@ -1106,15 +1192,12 @@ mod tests {
             chunks_skipped: 1,
             chunks_scan_skipped: 1,
             full_round_bytes: 80,
+            per_partition: vec![
+                PartitionTraffic { rounds: 1, bytes_moved: 60, full_round_bytes: 64 },
+                PartitionTraffic { rounds: 1, bytes_moved: 40, full_round_bytes: 16 },
+            ],
         };
-        let mut m = PsTrafficSnapshot {
-            rounds: 0,
-            bytes_moved: 0,
-            chunks_pushed: 0,
-            chunks_skipped: 0,
-            chunks_scan_skipped: 0,
-            full_round_bytes: 0,
-        };
+        let mut m = PsTrafficSnapshot::default();
         m.absorb(&a);
         m.absorb(&a);
         assert_eq!(m.rounds, 4);
@@ -1122,5 +1205,42 @@ mod tests {
         assert_eq!(m.full_round_bytes, 80);
         assert!((m.skip_fraction() - 0.25).abs() < 1e-12);
         assert!((m.scan_skip_fraction() - 0.25).abs() < 1e-12);
+        // per-partition counters merge element-wise
+        assert_eq!(m.per_partition.len(), 2);
+        assert_eq!(m.per_partition[0].rounds, 2);
+        assert_eq!(m.per_partition[0].bytes_moved, 120);
+        assert_eq!(m.per_partition[1].full_round_bytes, 16);
+        let shares = m.partition_byte_shares();
+        assert!((shares[0] - 0.6).abs() < 1e-12);
+        assert!((shares[1] - 0.4).abs() < 1e-12);
+        // no partition bytes -> no shares
+        assert!(PsTrafficSnapshot::default().partition_byte_shares().is_empty());
+    }
+
+    #[test]
+    fn partition_rounds_record_per_partition_traffic() {
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let p = 64;
+        let g = SyncPsGroup::build(&vec![0.0; p], 1, &mut net).with_push_chunking(8, 0.0);
+        let local = HogwildBuffer::from_slice(&vec![2.0; p]);
+        let mut cache = DeltaScanCache::new();
+        // partition 1 covers [32, 64): two rounds recorded under index 1
+        let range = ParamRange { offset: 32, len: 32 };
+        for _ in 0..2 {
+            let st = g.elastic_sync_partition(&local, range, 0.5, trainer, &net, &mut cache, None);
+            g.note_partition_round(1, &st, 2 * 4 * range.len as u64);
+        }
+        let t = g.traffic();
+        assert_eq!(t.per_partition.len(), 2, "table grows to cover partition 1");
+        assert_eq!(t.per_partition[0], PartitionTraffic::default());
+        assert_eq!(t.per_partition[1].rounds, 2);
+        assert_eq!(t.per_partition[1].full_round_bytes, 2 * 4 * 32);
+        // round 1 pushed everything, round 2 pushed the elastic residue
+        assert!(t.per_partition[1].bytes_moved >= 2 * 4 * 32);
+        assert!(t.per_partition[1].avg_round_bytes() > 0.0);
+        let shares = t.partition_byte_shares();
+        assert_eq!(shares[0], 0.0);
+        assert!((shares[1] - 1.0).abs() < 1e-12);
     }
 }

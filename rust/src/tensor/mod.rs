@@ -123,6 +123,18 @@ impl HogwildBuffer {
         self.dirty.as_ref().map(|d| d.signature(lo, hi))
     }
 
+    /// Snapshot of every chunk's cumulative write-epoch counter, in chunk
+    /// order (`None` when the buffer doesn't track dirty epochs). Each
+    /// counter is the number of tracked writes that touched the chunk since
+    /// construction — the measured per-range *write rate* the adaptive
+    /// repartitioner feeds into its cost-balanced plans (two snapshots
+    /// bracket a window; their difference is the window's write count).
+    pub fn dirty_chunk_epochs(&self) -> Option<Vec<u64>> {
+        self.dirty
+            .as_ref()
+            .map(|d| d.epochs.iter().map(|e| e.load(Acquire)).collect())
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len()
@@ -423,6 +435,24 @@ mod tests {
         let plain = HogwildBuffer::zeros(8);
         assert!(!plain.tracks_dirty_epochs());
         assert_eq!(plain.dirty_signature(0, 8), None);
+        assert_eq!(plain.dirty_chunk_epochs(), None);
+    }
+
+    #[test]
+    fn dirty_chunk_epochs_expose_per_chunk_write_rates() {
+        let b = HogwildBuffer::from_slice(&[0.0; 16]).with_dirty_epochs(4);
+        assert_eq!(b.dirty_chunk_epochs(), Some(vec![0, 0, 0, 0]));
+        b.set(1, 1.0); // chunk 0
+        b.set(2, 1.0); // chunk 0 again
+        b.axpy_range(9, 0.5, &[1.0, 1.0]); // chunk 2
+        let before = b.dirty_chunk_epochs().unwrap();
+        assert_eq!(before, vec![2, 0, 1, 0]);
+        // two snapshots bracket a window: the difference is the window's
+        // write count per chunk
+        b.set(14, 3.0); // chunk 3
+        let after = b.dirty_chunk_epochs().unwrap();
+        let delta: Vec<u64> = after.iter().zip(&before).map(|(a, b)| a - b).collect();
+        assert_eq!(delta, vec![0, 0, 0, 1]);
     }
 
     #[test]

@@ -49,13 +49,16 @@ impl Trainer {
         // per-chunk dirty epochs on the replica let the EASGD delta gate
         // skip the gap scan for chunks no worker wrote since the last push;
         // only worth the (tiny) write-path bookkeeping when a gate is on
-        // for at least one (possibly algo-mapped) partition
+        // for at least one (possibly algo-mapped) partition. The adaptive
+        // repartitioner needs the same counters — they ARE its measured
+        // per-range write rates — so it forces tracking on too.
         let mut replica = HogwildBuffer::from_slice(w0);
-        if cfg.any_easgd()
+        let gate_tracking = cfg.any_easgd()
             && cfg.dirty_epoch_scan
             && cfg.delta_gated()
-            && cfg.easgd_chunk_elems > 0
-        {
+            && cfg.easgd_chunk_elems > 0;
+        let repartition_tracking = cfg.repartition_every > 0 && cfg.easgd_chunk_elems > 0;
+        if gate_tracking || repartition_tracking {
             replica = replica.with_dirty_epochs(cfg.easgd_chunk_elems);
         }
         Self {
@@ -237,5 +240,9 @@ mod tests {
         let cfg =
             RunConfig { delta_threshold: 1e-4, dirty_epoch_scan: false, ..RunConfig::default() };
         assert!(!Trainer::new(0, node, &[0.0; 8], &cfg).replica.tracks_dirty_epochs());
+        // adaptive repartitioning forces tracking even without a gate: the
+        // dirty-epoch counters are its measured write rates
+        let cfg = RunConfig { repartition_every: 20, ..RunConfig::default() };
+        assert!(Trainer::new(0, node, &[0.0; 8], &cfg).replica.tracks_dirty_epochs());
     }
 }

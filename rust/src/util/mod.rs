@@ -12,6 +12,19 @@ pub mod json;
 pub mod proptest;
 pub mod rng;
 
+/// Normalize a per-bucket byte tally into fractional shares summing to 1.
+/// Empty when the tally is empty or all zero — the single definition behind
+/// `PsTrafficSnapshot::partition_byte_shares` and
+/// `MetricsSnapshot::partition_byte_shares`, so the share semantics the
+/// `sim/` cost model consumes can never diverge between the two sources.
+pub fn byte_shares(bytes: &[u64]) -> Vec<f64> {
+    let total: u64 = bytes.iter().sum();
+    if total == 0 {
+        return Vec::new();
+    }
+    bytes.iter().map(|&b| b as f64 / total as f64).collect()
+}
+
 /// Format a float with engineering-style thousands separators (for tables).
 pub fn fmt_count(x: f64) -> String {
     if x >= 1e9 {

@@ -5,6 +5,7 @@ use shadowsync::config::{EmbOptimizer, RunConfig, SyncAlgo, SyncMode};
 use shadowsync::metrics::{normalized_entropy, Metrics};
 use shadowsync::net::{Network, Role};
 use shadowsync::sim::CostModel;
+use shadowsync::sync::partition::{lpt_contiguous_ranges, lpt_contiguous_ranges_weighted};
 use shadowsync::sync::{DeltaScanCache, SyncPsGroup};
 use shadowsync::tensor::HogwildBuffer;
 use shadowsync::util::proptest::check;
@@ -209,6 +210,58 @@ fn dirty_epoch_scan_skip_never_hides_changed_elements() {
         // replicas converge under the gate, so the fast path must have
         // fired for untouched chunks
         assert!(total_scan_skips > 0, "dirty-epoch fast path never engaged");
+    });
+}
+
+#[test]
+fn repartition_never_loses_or_double_counts_a_chunk() {
+    // The cutover's structural safety net: for ANY measured write profile,
+    // the weighted replan and the uniform plan it replaces both tile
+    // [0, len) exactly — every element belongs to exactly one partition of
+    // each plan, so no chunk is dropped or double-synced across a replan.
+    check("repartition-tiling", 30, |g| {
+        let p = g.usize_in(1, 8);
+        let len = g.usize_in(p.max(2), 6_000);
+        let granule = g.usize_in(1, 512);
+        // random per-block write profile, including long zero stretches
+        let blocks = len.div_ceil(granule.max(1));
+        let weights: Vec<f64> = (0..blocks)
+            .map(|_| if g.bool() { g.f32_in(0.0, 1_000.0) as f64 } else { 0.0 })
+            .collect();
+        let cost = |lo: usize, hi: usize| -> f64 {
+            let mut c = (hi - lo) as f64;
+            for (b, w) in weights.iter().enumerate() {
+                let blo = b * granule;
+                let bhi = ((b + 1) * granule).min(len);
+                let overlap = hi.min(bhi).saturating_sub(lo.max(blo));
+                c += w * overlap as f64 / (bhi - blo).max(1) as f64;
+            }
+            c
+        };
+        let uniform = lpt_contiguous_ranges(len, p, granule);
+        let weighted = lpt_contiguous_ranges_weighted(len, p, granule, cost);
+        for (name, plan) in [("uniform", &uniform), ("weighted", &weighted)] {
+            assert_eq!(plan.len(), p, "{name}");
+            assert_eq!(plan[0].lo(), 0, "{name}");
+            assert_eq!(plan[p - 1].hi(), len, "{name}");
+            for w in plan.windows(2) {
+                assert_eq!(w[0].hi(), w[1].lo(), "{name} plan must be contiguous");
+            }
+            for r in plan.iter() {
+                assert!(r.len > 0, "{name} produced an empty partition: {plan:?}");
+            }
+            // element-level coverage: exactly once each
+            let mut owners = vec![0u32; len];
+            for r in plan.iter() {
+                for o in owners.iter_mut().take(r.hi()).skip(r.lo()) {
+                    *o += 1;
+                }
+            }
+            assert!(
+                owners.iter().all(|&o| o == 1),
+                "{name} plan lost or double-counted an element"
+            );
+        }
     });
 }
 

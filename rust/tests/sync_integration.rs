@@ -10,11 +10,14 @@ use std::time::Duration;
 use shadowsync::config::{RunConfig, SyncAlgo};
 use shadowsync::metrics::Metrics;
 use shadowsync::net::{Network, Role};
-use shadowsync::sync::driver::{spawn_shadow, spawn_shadow_pool, ShadowTask};
+use shadowsync::sync::driver::{
+    spawn_shadow, spawn_shadow_pool, spawn_shadow_pool_adaptive, ShadowTask,
+};
 use shadowsync::sync::partition::lpt_contiguous_ranges;
 use shadowsync::sync::{
     build_group, build_strategy, AllReduceGroup, BmufSync, DeltaGate, EasgdSync, MaSync,
-    ParamRange, PartitionPlan, ReduceEngine, SyncCtx, SyncPsGroup, SyncStrategy,
+    ParamRange, PartitionPlan, ReduceEngine, RepartitionController, SyncCtx, SyncPsGroup,
+    SyncStrategy,
 };
 use shadowsync::tensor::HogwildBuffer;
 use shadowsync::util::rng::Rng;
@@ -708,4 +711,217 @@ fn hybrid_partition_fabric_accounts_every_byte() {
         let gap = shadowsync::tensor::ops::mean_abs_diff(&a[r.lo()..r.hi()], &b[r.lo()..r.hi()]);
         assert!(gap < 0.6, "partition {r:?} never converged: gap {gap}");
     }
+}
+
+/// Acceptance (adaptive repartitioning churn): a hybrid EASGD+MA fabric on
+/// 2 trainers repartitions repeatedly mid-training, under concurrent
+/// replica writes, and the byte accounting stays *exact* — every recorded
+/// sync byte equals the sync-PS NIC counters plus the ring tx — while no
+/// cutover ever loses a partition, leaks collective-group membership, or
+/// corrupts the replicas/central vector.
+#[test]
+fn mid_training_repartition_keeps_byte_accounting_exact() {
+    let len = 4096usize;
+    let chunk = 64usize;
+    let cfg = RunConfig {
+        num_trainers: 2,
+        sync_partitions: 4,
+        shadow_threads: 2,
+        easgd_chunk_elems: chunk,
+        delta_threshold: 1e-4,
+        repartition_every: 50,
+        algo_map: Some("easgd:0-2,ma:3".parse().unwrap()),
+        ..RunConfig::default()
+    };
+    let mut net = Network::new(None);
+    let nodes = [net.add_node(Role::Trainer), net.add_node(Role::Trainer)];
+    let w0 = vec![0.0f32; len];
+    let sync_ps = Arc::new(
+        SyncPsGroup::build(&w0, 2, &mut net).with_push_chunking(chunk, cfg.delta_threshold),
+    );
+    let plan = PartitionPlan::build(len, &cfg).unwrap();
+    let groups: Vec<Option<Arc<AllReduceGroup>>> = plan
+        .partitions
+        .iter()
+        .map(|p| match p.algo {
+            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(&cfg, p.range.len)),
+            _ => None,
+        })
+        .collect();
+    let controller = Arc::new(RepartitionController::new(
+        &cfg,
+        len,
+        Some(sync_ps.clone()),
+        plan.clone(),
+        groups.clone(),
+    ));
+    let net = Arc::new(net);
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut pools = Vec::new();
+    let mut writers = Vec::new();
+    for (t, &node) in nodes.iter().enumerate() {
+        let replica = Arc::new(
+            HogwildBuffer::from_slice(&vec![t as f32 + 1.0; len]).with_dirty_epochs(chunk),
+        );
+        let tasks: Vec<ShadowTask> = plan
+            .partitions
+            .iter()
+            .map(|p| ShadowTask {
+                partition: p.index,
+                range: p.range,
+                strategy: build_strategy(
+                    &cfg,
+                    p,
+                    t,
+                    &w0,
+                    Some(sync_ps.clone()),
+                    groups[p.index].clone(),
+                )
+                .unwrap(),
+            })
+            .collect();
+        pools.push(spawn_shadow_pool_adaptive(
+            tasks,
+            replica.clone(),
+            node,
+            net.clone(),
+            metrics.clone(),
+            stop.clone(),
+            Duration::ZERO,
+            t,
+            cfg.shadow_threads,
+            Some(controller.clone()),
+        ));
+        // writers keep the hot first quarter dirty so replans have skew
+        let stop = stop.clone();
+        writers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xFEED ^ t as u64);
+            while !stop.load(Relaxed) {
+                let lo = (rng.next_u64() as usize) % (len / 4);
+                let noise: Vec<f32> = (0..32).map(|_| rng.u01() - 0.5).collect();
+                let lo = lo.min(len - 32);
+                replica.axpy_range(lo, 0.3, &noise);
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(400));
+    stop.store(true, Relaxed);
+    let mut rounds = 0u64;
+    for h in pools {
+        rounds += h.join().unwrap().unwrap();
+    }
+    for w in writers {
+        w.join().unwrap();
+    }
+    assert!(rounds > 0);
+    assert!(
+        controller.repartitions() >= 1,
+        "no cutover was ever adopted — the churn test proved nothing"
+    );
+    // exact byte identity across every cutover: recorded sync bytes ==
+    // sync-PS NIC bytes (both EASGD legs) + ring tx (trainer-to-trainer)
+    let snap = metrics.snapshot();
+    let trainer_tx: u64 = nodes.iter().map(|&n| net.tx(n)).sum();
+    let ring_tx = trainer_tx - net.role_rx(Role::SyncPs);
+    assert_eq!(
+        snap.sync_bytes,
+        net.role_bytes(Role::SyncPs) + ring_tx,
+        "byte accounting must stay exact across mid-training repartitions"
+    );
+    // the sync-PS group's own ledger agrees with the EASGD share
+    assert_eq!(sync_ps.traffic().bytes_moved, net.role_bytes(Role::SyncPs));
+    // every partition index kept syncing across the replans
+    assert_eq!(snap.partition_syncs.len(), 4);
+    for (i, &s) in snap.partition_syncs.iter().enumerate() {
+        assert!(s > 0, "partition {i} starved: {:?}", snap.partition_syncs);
+    }
+    // per-partition byte resolution covered all partitions too
+    assert_eq!(snap.partition_sync_bytes.len(), 4);
+    assert!(snap.partition_sync_bytes.iter().all(|&b| b > 0));
+    // no epoch leaked collective membership: the current epoch's groups
+    // were fully vacated by strategy leave()s and/or departs
+    for g in controller.current_epoch().groups.iter().flatten() {
+        assert_eq!(g.active(), 0, "leaked membership in a repartition epoch group");
+    }
+    // central + replicas stayed well-formed through every cutover
+    assert!(sync_ps.central.to_vec().iter().all(|x| x.is_finite()));
+}
+
+/// Deterministic cutover exactness: with no concurrent writers, a single
+/// trainer's delta-gated EASGD fabric repartitions mid-run and still
+/// converges local and central to within the gate everywhere — a chunk can
+/// never be lost by a replan (a lost chunk would stay at its initial gap),
+/// and recorded bytes equal the NIC counters exactly.
+#[test]
+fn repartition_preserves_every_chunk_of_the_replica() {
+    let len = 2048usize;
+    let chunk = 32usize;
+    let cfg = RunConfig {
+        num_trainers: 1,
+        sync_partitions: 4,
+        shadow_threads: 2,
+        easgd_chunk_elems: chunk,
+        delta_threshold: 1e-4,
+        repartition_every: 10,
+        ..RunConfig::default()
+    };
+    let mut net = Network::new(None);
+    let node = net.add_node(Role::Trainer);
+    let w0 = vec![0.0f32; len];
+    let sync_ps = Arc::new(
+        SyncPsGroup::build(&w0, 2, &mut net).with_push_chunking(chunk, cfg.delta_threshold),
+    );
+    let plan = PartitionPlan::build(len, &cfg).unwrap();
+    let controller = Arc::new(RepartitionController::new(
+        &cfg,
+        len,
+        Some(sync_ps.clone()),
+        plan.clone(),
+        vec![None; plan.len()],
+    ));
+    let net = Arc::new(net);
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    // every element starts 2.0 away from central: convergence below the
+    // gate everywhere proves every chunk was owned by some partition in
+    // every epoch
+    let replica = Arc::new(HogwildBuffer::from_slice(&vec![2.0; len]).with_dirty_epochs(chunk));
+    let tasks: Vec<ShadowTask> = plan
+        .partitions
+        .iter()
+        .map(|p| ShadowTask {
+            partition: p.index,
+            range: p.range,
+            strategy: build_strategy(&cfg, p, 0, &w0, Some(sync_ps.clone()), None).unwrap(),
+        })
+        .collect();
+    let pool = spawn_shadow_pool_adaptive(
+        tasks,
+        replica.clone(),
+        node,
+        net.clone(),
+        metrics.clone(),
+        stop.clone(),
+        Duration::ZERO,
+        0,
+        cfg.shadow_threads,
+        Some(controller.clone()),
+    );
+    std::thread::sleep(Duration::from_millis(200));
+    stop.store(true, Relaxed);
+    pool.join().unwrap().unwrap();
+    assert!(controller.repartitions() >= 1, "no repartition cutover ever happened");
+    let lv = replica.to_vec();
+    let cv = sync_ps.central.to_vec();
+    for (i, (l, c)) in lv.iter().zip(&cv).enumerate() {
+        let gap = (l - c).abs();
+        assert!(
+            gap <= cfg.delta_threshold,
+            "element {i} never converged (gap {gap}): its chunk was lost by a replan"
+        );
+    }
+    // byte accounting is exact here too
+    assert_eq!(metrics.snapshot().sync_bytes, net.role_bytes(Role::SyncPs));
 }

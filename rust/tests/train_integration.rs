@@ -227,6 +227,37 @@ fn checkpoint_roundtrip_is_bit_exact() {
 }
 
 #[test]
+fn adaptive_repartition_run_completes_and_replans() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // measured-cost adaptive repartitioning end-to-end through the
+    // coordinator: the run must replan at least once, keep every
+    // partition syncing, and finish with sane quality numbers
+    let mut cfg = base_cfg();
+    cfg.sync_partitions = 4;
+    cfg.shadow_threads = 2;
+    cfg.easgd_chunk_elems = 64; // tiny preset: 537 dense params
+    cfg.delta_skip_target = 0.25;
+    cfg.repartition_every = 5;
+    cfg.train_examples = 4_096;
+    cfg.eval_examples = 512;
+    cfg.validate().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let out = coordinator::run_timed(&cfg, &rt)
+        .unwrap_or_else(|e| panic!("adaptive repartition run failed: {e}"));
+    assert_eq!(out.metrics.examples, 4_096);
+    assert!(out.train_loss.is_finite());
+    assert!(out.metrics.syncs > 0, "repartitioned fabric never synced");
+    assert!(out.repartitions >= 1, "the plan was never rebuilt");
+    assert_eq!(out.partition_gaps.len(), 4, "gaps: {:?}", out.partition_gaps);
+    for (i, g) in out.partition_gaps.iter().enumerate() {
+        assert!(g.is_finite(), "partition {i} starved: {:?}", out.partition_gaps);
+    }
+}
+
+#[test]
 fn hybrid_algo_map_run_completes_with_per_partition_gaps() {
     if !have_artifacts() {
         eprintln!("skipping: run `make artifacts` first");
