@@ -1,7 +1,7 @@
 //! Ablations beyond the paper's tables, for the design choices §3.3 calls
 //! out in prose.
 
-use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -13,6 +13,7 @@ use crate::net::{Network, Role};
 use crate::runtime::Runtime;
 use crate::sim::CostModel;
 use crate::sync::driver::{spawn_shadow_pool_adaptive, ShadowTask};
+use crate::sync::prim::AtomicBool;
 use crate::sync::{
     build_strategy, AllReduceGroup, PartitionPlan, RepartitionController, SyncPsGroup,
 };

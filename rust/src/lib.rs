@@ -20,6 +20,7 @@ pub mod coordinator;
 pub mod data;
 pub mod embedding;
 pub mod exp;
+pub mod mc;
 pub mod metrics;
 pub mod net;
 pub mod optim;

@@ -1,0 +1,202 @@
+//! Modeled atomic types with PSO store-buffer semantics.
+//!
+//! Drop-in (subset) replacements for `std::sync::atomic::{AtomicBool,
+//! AtomicU32, AtomicU64, AtomicUsize}`, swapped in by `sync::prim` under
+//! `cfg(shadowsync_loom)`. Every operation is a schedule point. Values are
+//! widened to `u64` internally. Orderings are interpreted as described in the
+//! [`mc`](crate::mc) module docs: `Relaxed` stores sit in a per-thread store
+//! buffer until flushed; everything else publishes the whole buffer.
+
+use std::sync::atomic::Ordering;
+
+use super::{op, IdCell, Step};
+
+macro_rules! modeled_int_atomic {
+    ($name:ident, $ty:ty) => {
+        /// Modeled counterpart of the std atomic of the same name.
+        pub struct $name {
+            id: IdCell,
+            init: u64,
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::new(0)
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                // Reading the value would require a model context; don't.
+                f.write_str(concat!("mc::", stringify!($name)))
+            }
+        }
+
+        // The identity casts for the `u64` instantiation are macro noise.
+        #[allow(clippy::unnecessary_cast)]
+        impl $name {
+            pub const fn new(v: $ty) -> Self {
+                Self {
+                    id: IdCell::new(),
+                    init: v as u64,
+                }
+            }
+
+            fn aid(&self, st: &mut super::ExecState) -> usize {
+                let init = self.init;
+                self.id.resolve(st, |st| st.register_atom(init))
+            }
+
+            pub fn load(&self, _ord: Ordering) -> $ty {
+                op(|st, tid| {
+                    let aid = self.aid(st);
+                    Step::Done(st.atom_load(aid, tid))
+                }) as $ty
+            }
+
+            pub fn store(&self, v: $ty, ord: Ordering) {
+                op(|st, tid| {
+                    let aid = self.aid(st);
+                    st.atom_store(aid, tid, v as u64, ord);
+                    Step::Done(())
+                })
+            }
+
+            pub fn fetch_add(&self, v: $ty, ord: Ordering) -> $ty {
+                op(|st, tid| {
+                    let aid = self.aid(st);
+                    Step::Done(st.atom_rmw(aid, tid, ord, |cur| {
+                        (cur as $ty).wrapping_add(v) as u64
+                    }))
+                }) as $ty
+            }
+
+            pub fn fetch_max(&self, v: $ty, ord: Ordering) -> $ty {
+                op(|st, tid| {
+                    let aid = self.aid(st);
+                    Step::Done(st.atom_rmw(aid, tid, ord, |cur| (cur as $ty).max(v) as u64))
+                }) as $ty
+            }
+
+            pub fn swap(&self, v: $ty, ord: Ordering) -> $ty {
+                op(|st, tid| {
+                    let aid = self.aid(st);
+                    Step::Done(st.atom_rmw(aid, tid, ord, |_| v as u64))
+                }) as $ty
+            }
+
+            /// The success ordering drives the store-buffer flush; modeled as
+            /// always-strong (see module docs).
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                _failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                op(|st, tid| {
+                    let aid = self.aid(st);
+                    Step::Done(st.atom_cas(aid, tid, current as u64, new as u64, success))
+                })
+                .map(|v| v as $ty)
+                .map_err(|v| v as $ty)
+            }
+
+            /// Modeled as [`Self::compare_exchange`] (never fails spuriously;
+            /// a sound under-approximation — retry loops only see a subset of
+            /// real behaviors, all of which are legal).
+            pub fn compare_exchange_weak(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                self.compare_exchange(current, new, success, failure)
+            }
+        }
+    };
+}
+
+modeled_int_atomic!(AtomicU32, u32);
+modeled_int_atomic!(AtomicU64, u64);
+modeled_int_atomic!(AtomicUsize, usize);
+
+/// Modeled counterpart of `std::sync::atomic::AtomicBool`.
+pub struct AtomicBool {
+    id: IdCell,
+    init: u64,
+}
+
+impl Default for AtomicBool {
+    fn default() -> Self {
+        Self::new(false)
+    }
+}
+
+impl std::fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("mc::AtomicBool")
+    }
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self {
+            id: IdCell::new(),
+            init: v as u64,
+        }
+    }
+
+    fn aid(&self, st: &mut super::ExecState) -> usize {
+        let init = self.init;
+        self.id.resolve(st, |st| st.register_atom(init))
+    }
+
+    pub fn load(&self, _ord: Ordering) -> bool {
+        op(|st, tid| {
+            let aid = self.aid(st);
+            Step::Done(st.atom_load(aid, tid))
+        }) != 0
+    }
+
+    pub fn store(&self, v: bool, ord: Ordering) {
+        op(|st, tid| {
+            let aid = self.aid(st);
+            st.atom_store(aid, tid, v as u64, ord);
+            Step::Done(())
+        })
+    }
+
+    pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+        op(|st, tid| {
+            let aid = self.aid(st);
+            Step::Done(st.atom_rmw(aid, tid, ord, |_| v as u64))
+        }) != 0
+    }
+
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        _failure: Ordering,
+    ) -> Result<bool, bool> {
+        op(|st, tid| {
+            let aid = self.aid(st);
+            Step::Done(st.atom_cas(aid, tid, current as u64, new as u64, success))
+        })
+        .map(|v| v != 0)
+        .map_err(|v| v != 0)
+    }
+
+    pub fn compare_exchange_weak(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        self.compare_exchange(current, new, success, failure)
+    }
+}

@@ -1,0 +1,786 @@
+//! A dependency-free bounded model checker for the shadow-sync concurrency
+//! primitives — the engine behind the `--cfg shadowsync_loom` test config.
+//!
+//! # Why this exists
+//!
+//! The repo's correctness claims (bit-identical means under churn, exact byte
+//! accounting, deadlock-free repartition cutover) rest on hand-rolled lock-free
+//! protocols. Seeded stress tests *sample* schedules; this module *enumerates*
+//! them. The build environment is fully offline (see `util`), so instead of the
+//! `loom` crate this is a small in-tree checker with a loom-shaped API:
+//! [`model`] runs a closure under every distinguishable interleaving (up to a
+//! preemption bound), and [`model_finds_bug`] asserts that at least one
+//! interleaving panics — used by the mutation checks that deliberately weaken a
+//! fence and prove the model would have caught it.
+//!
+//! # Execution model
+//!
+//! Each modeled thread is a real OS thread, but a central scheduler grants
+//! exactly one of them a turn at a time. Every primitive operation (atomic
+//! access, mutex lock/unlock, condvar wait/notify, spawn/join/exit) is a
+//! *schedule point*: the thread parks until the scheduler picks it. The
+//! scheduler records its decision sequence and explores alternatives by
+//! depth-first replay: rerun the prefix, branch at the deepest decision with an
+//! unexplored alternative.
+//!
+//! # Memory model: PSO store buffers
+//!
+//! `Relaxed` stores do not become globally visible immediately. Each
+//! `(thread, atomic)` pair has a single pending-store slot (a later `Relaxed`
+//! store by the same thread overwrites it). The owner reads its own pending
+//! value; other threads read the last flushed value. Pending stores flush:
+//!
+//! * individually, as explicit scheduler decisions (modeling an arbitrary
+//!   store-buffer drain — this is what makes store-store reordering
+//!   observable);
+//! * all at once, on any `Release`/`SeqCst` store, non-`Relaxed` RMW, mutex or
+//!   rwlock unlock, condvar wait, spawn, or thread exit (release semantics);
+//! * for the *same atomic only*, on a `Relaxed` RMW (per-location coherence —
+//!   crucially this does **not** publish earlier stores to other locations,
+//!   which is exactly why weakening a bump-after-write from `Release` to
+//!   `Relaxed` becomes an observable model failure).
+//!
+//! The model is a sound *under-approximation* of C11: every execution it
+//! explores is a legal execution of the real program (so a reported failure is
+//! a real bug), but it does not model load-side staleness beyond store
+//! buffers, treats `SeqCst` as `Release`+`Acquire`, models
+//! `compare_exchange_weak` as strong, and does not generate spurious condvar
+//! wakeups. See `docs/CONCURRENCY.md` for the full fidelity notes.
+//!
+//! # Bounds
+//!
+//! Exploration is bounded by a preemption budget (`LOOM_MAX_PREEMPTIONS`, the
+//! same knob loom uses; default 2), a per-run execution cap
+//! (`SHADOWSYNC_MC_MAX_EXECS`), and a per-execution step cap
+//! (`SHADOWSYNC_MC_MAX_STEPS`). Store-buffer flushes never count against the
+//! preemption budget. [`thread::yield_now`](crate::mc::thread::yield_now)
+//! resets the "preferred thread" so spin loops that yield cannot livelock the
+//! bounded scheduler.
+
+use std::cell::RefCell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64 as StdAtomicU64, Ordering as StdOrdering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+
+pub mod atomic;
+pub mod sync;
+pub mod thread;
+
+pub use atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+pub use sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Global execution counter; used to lazily (re-)bind primitive objects to the
+/// per-execution state tables (an object created in one execution and reused
+/// in the next re-registers with its initial value).
+static EXEC_EPOCH: StdAtomicU64 = StdAtomicU64::new(1);
+
+/// Why a thread is not schedulable.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Blocked {
+    /// Waiting to acquire the mutex with this id.
+    Mutex(usize),
+    /// Parked on the condvar with this id (until a notify).
+    Condvar(usize),
+    /// Waiting to acquire the rwlock with this id.
+    RwLock(usize),
+    /// Waiting for the thread with this id to finish.
+    Join(usize),
+    /// Yielded (`yield_now`/`sleep`): not schedulable again until some other
+    /// thread is stepped — loom's rule, which keeps spin loops that yield
+    /// from generating unbounded interleavings under DFS.
+    Yield,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum ThreadState {
+    /// Executing non-primitive code; the scheduler waits for it to quiesce.
+    Running,
+    /// Parked at a schedule point, eligible to be stepped.
+    AtPoint,
+    /// Parked, not eligible until another thread's action wakes it.
+    Blocked(Blocked),
+    Finished,
+}
+
+/// One modeled atomic cell. Values are widened to `u64`.
+pub(crate) struct Atom {
+    pub value: u64,
+    /// Pending `Relaxed` stores: at most one `(thread, value)` slot per thread.
+    pub pending: Vec<(usize, u64)>,
+}
+
+#[derive(Default)]
+pub(crate) struct MutexSt {
+    pub held_by: Option<usize>,
+}
+
+#[derive(Default)]
+pub(crate) struct RwSt {
+    pub readers: usize,
+    pub writer: Option<usize>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Action {
+    /// Make thread `tid`'s pending store on atom `aid` globally visible.
+    Flush { tid: usize, aid: usize },
+    /// Grant thread `tid` its next primitive operation.
+    Step(usize),
+}
+
+#[derive(Clone, Debug)]
+pub(crate) enum Abort {
+    /// A modeled-program defect: an assertion/panic in user code or a deadlock.
+    Bug(String),
+    /// An engine/bounds problem: replay divergence or a blown step budget.
+    Fatal(String),
+}
+
+pub(crate) struct ExecState {
+    pub epoch: u64,
+    current: Option<usize>,
+    threads: Vec<ThreadState>,
+    names: Vec<String>,
+    os_handles: Vec<Option<std::thread::JoinHandle<()>>>,
+    pub atoms: Vec<Atom>,
+    pub mutexes: Vec<MutexSt>,
+    pub rwlocks: Vec<RwSt>,
+    pub condvars: usize,
+    schedule: Vec<usize>,
+    alt_counts: Vec<usize>,
+    pos: usize,
+    last_thread: Option<usize>,
+    preemptions: usize,
+    max_preemptions: usize,
+    steps: u64,
+    max_steps: u64,
+    abort: Option<Abort>,
+}
+
+impl ExecState {
+    pub fn register_atom(&mut self, init: u64) -> usize {
+        self.atoms.push(Atom { value: init, pending: Vec::new() });
+        self.atoms.len() - 1
+    }
+
+    pub fn register_mutex(&mut self) -> usize {
+        self.mutexes.push(MutexSt::default());
+        self.mutexes.len() - 1
+    }
+
+    pub fn register_rwlock(&mut self) -> usize {
+        self.rwlocks.push(RwSt::default());
+        self.rwlocks.len() - 1
+    }
+
+    pub fn register_condvar(&mut self) -> usize {
+        self.condvars += 1;
+        self.condvars - 1
+    }
+
+    fn register_thread(&mut self, name: String) -> usize {
+        self.threads.push(ThreadState::Running);
+        self.names.push(name);
+        self.os_handles.push(None);
+        self.threads.len() - 1
+    }
+
+    pub fn thread_finished(&self, tid: usize) -> bool {
+        self.threads[tid] == ThreadState::Finished
+    }
+
+    /// Wake every thread whose blocked reason satisfies `pred` (they become
+    /// schedulable again and will re-attempt their operation when stepped).
+    pub fn wake(&mut self, pred: impl Fn(Blocked) -> bool) {
+        for st in &mut self.threads {
+            if let ThreadState::Blocked(b) = *st {
+                if pred(b) {
+                    *st = ThreadState::AtPoint;
+                }
+            }
+        }
+    }
+
+    /// Wake the lowest-tid thread whose blocked reason satisfies `pred`.
+    pub fn wake_one(&mut self, pred: impl Fn(Blocked) -> bool) {
+        for st in &mut self.threads {
+            if let ThreadState::Blocked(b) = *st {
+                if pred(b) {
+                    *st = ThreadState::AtPoint;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Drain thread `tid`'s store buffer: every pending store becomes globally
+    /// visible. Release semantics — everything the thread wrote before this
+    /// point is published together.
+    pub fn flush_all(&mut self, tid: usize) {
+        for atom in &mut self.atoms {
+            if let Some(i) = atom.pending.iter().position(|&(t, _)| t == tid) {
+                atom.value = atom.pending.remove(i).1;
+            }
+        }
+    }
+
+    /// Flush thread `tid`'s pending store on one atom only (per-location
+    /// coherence, as forced by a `Relaxed` RMW on that atom).
+    pub fn flush_own(&mut self, tid: usize, aid: usize) {
+        let atom = &mut self.atoms[aid];
+        if let Some(i) = atom.pending.iter().position(|&(t, _)| t == tid) {
+            atom.value = atom.pending.remove(i).1;
+        }
+    }
+
+    /// Value of `aid` as seen by `tid`: its own pending store if any, else the
+    /// last globally flushed value.
+    pub fn atom_load(&self, aid: usize, tid: usize) -> u64 {
+        let atom = &self.atoms[aid];
+        match atom.pending.iter().find(|&&(t, _)| t == tid) {
+            Some(&(_, v)) => v,
+            None => atom.value,
+        }
+    }
+
+    pub fn atom_store(&mut self, aid: usize, tid: usize, v: u64, ord: StdOrdering) {
+        if ord == StdOrdering::Relaxed {
+            let atom = &mut self.atoms[aid];
+            match atom.pending.iter_mut().find(|p| p.0 == tid) {
+                Some(slot) => slot.1 = v,
+                None => atom.pending.push((tid, v)),
+            }
+        } else {
+            self.flush_all(tid);
+            self.atoms[aid].value = v;
+        }
+    }
+
+    /// Atomic read-modify-write; returns the previous value.
+    pub fn atom_rmw(
+        &mut self,
+        aid: usize,
+        tid: usize,
+        ord: StdOrdering,
+        f: impl FnOnce(u64) -> u64,
+    ) -> u64 {
+        if ord == StdOrdering::Relaxed {
+            self.flush_own(tid, aid);
+        } else {
+            self.flush_all(tid);
+        }
+        let old = self.atoms[aid].value;
+        self.atoms[aid].value = f(old);
+        old
+    }
+
+    pub fn atom_cas(
+        &mut self,
+        aid: usize,
+        tid: usize,
+        expect: u64,
+        new: u64,
+        ord: StdOrdering,
+    ) -> Result<u64, u64> {
+        if ord == StdOrdering::Relaxed {
+            self.flush_own(tid, aid);
+        } else {
+            self.flush_all(tid);
+        }
+        let old = self.atoms[aid].value;
+        if old == expect {
+            self.atoms[aid].value = new;
+            Ok(old)
+        } else {
+            Err(old)
+        }
+    }
+
+    /// Forget which thread ran last, so the next scheduling decision is not a
+    /// preemption no matter which thread is picked. Called by `yield_now`.
+    pub fn clear_preferred(&mut self) {
+        self.last_thread = None;
+    }
+
+    fn enumerate(&self) -> Vec<Action> {
+        let mut acts = Vec::new();
+        for (aid, atom) in self.atoms.iter().enumerate() {
+            for &(tid, _) in &atom.pending {
+                acts.push(Action::Flush { tid, aid });
+            }
+        }
+        for (tid, st) in self.threads.iter().enumerate() {
+            if *st == ThreadState::AtPoint {
+                acts.push(Action::Step(tid));
+            }
+        }
+        // Preemption bounding: once the budget is spent, the previously
+        // running thread (if still steppable) must keep going. Flushes model
+        // hardware, not the scheduler, and stay available.
+        if let Some(p) = self.last_thread {
+            let spent = self.preemptions >= self.max_preemptions;
+            if spent && self.threads[p] == ThreadState::AtPoint {
+                acts.retain(|a| !matches!(a, Action::Step(t) if *t != p));
+            }
+        }
+        acts
+    }
+}
+
+pub(crate) struct Exec {
+    inner: StdMutex<ExecState>,
+    cv: StdCondvar,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Exec>, usize)>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> (Arc<Exec>, usize) {
+    CTX.with(|c| {
+        c.borrow()
+            .clone()
+            .expect("shadowsync mc primitive used outside mc::model (or from an unmanaged thread)")
+    })
+}
+
+pub(crate) fn in_model() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+/// Sentinel panic payload used to unwind modeled threads when the execution
+/// aborts; never reported as the bug itself.
+struct McAbort;
+
+pub(crate) enum Step<R> {
+    Done(R),
+    Block(Blocked),
+}
+
+/// Run one primitive operation at a schedule point. `f` may be re-entered: if
+/// it returns [`Step::Block`], the thread parks until another thread's action
+/// wakes it, then `f` runs again on the thread's next granted turn.
+pub(crate) fn op<R>(mut f: impl FnMut(&mut ExecState, usize) -> Step<R>) -> R {
+    let (exec, tid) = ctx();
+    let mut g = exec.inner.lock().unwrap();
+    g.threads[tid] = ThreadState::AtPoint;
+    exec.cv.notify_all();
+    loop {
+        while g.current != Some(tid) && g.abort.is_none() {
+            g = exec.cv.wait(g).unwrap();
+        }
+        if g.abort.is_some() {
+            drop(g);
+            panic::resume_unwind(Box::new(McAbort));
+        }
+        g.current = None;
+        match f(&mut g, tid) {
+            Step::Done(r) => {
+                g.threads[tid] = ThreadState::Running;
+                exec.cv.notify_all();
+                return r;
+            }
+            Step::Block(b) => {
+                g.threads[tid] = ThreadState::Blocked(b);
+                exec.cv.notify_all();
+            }
+        }
+    }
+}
+
+fn payload_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "thread panicked (non-string payload)".to_string()
+    }
+}
+
+/// Terminal schedule point of a modeled thread: publish its stores, record the
+/// outcome, mark it finished, and wake its joiners. Unlike [`op`] the thread
+/// ends `Finished`, and an abort observed while waiting finishes it silently.
+pub(crate) fn finish_thread(
+    exec: &Arc<Exec>,
+    tid: usize,
+    panic_payload: Option<&(dyn std::any::Any + Send)>,
+) {
+    let mut g = exec.inner.lock().unwrap();
+    g.threads[tid] = ThreadState::AtPoint;
+    exec.cv.notify_all();
+    while g.current != Some(tid) && g.abort.is_none() {
+        g = exec.cv.wait(g).unwrap();
+    }
+    if g.abort.is_none() {
+        g.current = None;
+        if let Some(e) = panic_payload {
+            if e.downcast_ref::<McAbort>().is_none() {
+                let name = g.names[tid].clone();
+                g.abort = Some(Abort::Bug(format!(
+                    "thread '{name}' panicked: {}",
+                    payload_msg(e)
+                )));
+            }
+        }
+        g.flush_all(tid);
+    }
+    g.threads[tid] = ThreadState::Finished;
+    g.wake(|b| b == Blocked::Join(tid));
+    exec.cv.notify_all();
+}
+
+/// Spawn a modeled thread. Registration is a schedule point for the parent and
+/// publishes the parent's store buffer (spawn has release semantics).
+pub(crate) fn spawn_managed<T: Send + 'static>(
+    name: Option<String>,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> thread::JoinHandle<T> {
+    let (exec, _parent) = ctx();
+    let display = name.clone().unwrap_or_else(|| "<unnamed>".to_string());
+    let child = op(move |st, tid| {
+        st.flush_all(tid);
+        Step::Done(st.register_thread(display.clone()))
+    });
+    let slot = Arc::new(StdMutex::new(None));
+    let slot2 = Arc::clone(&slot);
+    let exec2 = Arc::clone(&exec);
+    let mut builder = std::thread::Builder::new();
+    if let Some(n) = name {
+        builder = builder.name(n);
+    }
+    let os = builder
+        .spawn(move || {
+            CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&exec2), child)));
+            let res = panic::catch_unwind(AssertUnwindSafe(f));
+            match res {
+                Ok(v) => {
+                    *slot2.lock().unwrap() = Some(Ok(v));
+                    finish_thread(&exec2, child, None);
+                }
+                Err(e) => {
+                    finish_thread(&exec2, child, Some(e.as_ref()));
+                    *slot2.lock().unwrap() = Some(Err(e));
+                }
+            }
+        })
+        .expect("mc: failed to spawn backing OS thread");
+    exec.inner.lock().unwrap().os_handles[child] = Some(os);
+    thread::JoinHandle::new(child, slot)
+}
+
+struct ExecOutcome {
+    schedule: Vec<usize>,
+    alt_counts: Vec<usize>,
+    abort: Option<Abort>,
+}
+
+/// Exploration statistics returned by [`Model::check`].
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    /// Number of complete executions explored.
+    pub executions: u64,
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Exploration configuration; see the module docs for the bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct Model {
+    max_preemptions: usize,
+    max_execs: u64,
+    max_steps: u64,
+}
+
+impl Default for Model {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Model {
+    /// Bounds from the environment: `LOOM_MAX_PREEMPTIONS` (default 2),
+    /// `SHADOWSYNC_MC_MAX_EXECS` (default 500 000 per model),
+    /// `SHADOWSYNC_MC_MAX_STEPS` (default 100 000 per execution).
+    pub fn new() -> Self {
+        Self {
+            max_preemptions: env_u64("LOOM_MAX_PREEMPTIONS", 2) as usize,
+            max_execs: env_u64("SHADOWSYNC_MC_MAX_EXECS", 500_000),
+            max_steps: env_u64("SHADOWSYNC_MC_MAX_STEPS", 100_000),
+        }
+    }
+
+    /// Set the preemption budget exactly (overrides the environment).
+    pub fn preemptions(mut self, n: usize) -> Self {
+        self.max_preemptions = n;
+        self
+    }
+
+    /// Clamp the preemption budget to at most `n` (heavy models stay
+    /// tractable even when the environment asks for a deeper search).
+    pub fn clamp_preemptions(mut self, n: usize) -> Self {
+        self.max_preemptions = self.max_preemptions.min(n);
+        self
+    }
+
+    fn run_one(&self, f: Arc<dyn Fn() + Send + Sync>, schedule: Vec<usize>) -> ExecOutcome {
+        let epoch = EXEC_EPOCH.fetch_add(1, StdOrdering::Relaxed);
+        let exec = Arc::new(Exec {
+            inner: StdMutex::new(ExecState {
+                epoch,
+                current: None,
+                threads: Vec::new(),
+                names: Vec::new(),
+                os_handles: Vec::new(),
+                atoms: Vec::new(),
+                mutexes: Vec::new(),
+                rwlocks: Vec::new(),
+                condvars: 0,
+                schedule,
+                alt_counts: Vec::new(),
+                pos: 0,
+                last_thread: None,
+                preemptions: 0,
+                max_preemptions: self.max_preemptions,
+                steps: 0,
+                max_steps: self.max_steps,
+                abort: None,
+            }),
+            cv: StdCondvar::new(),
+        });
+
+        // Thread 0 is the model closure itself; the scheduler runs here on the
+        // caller's thread.
+        let root = {
+            let mut g = exec.inner.lock().unwrap();
+            g.register_thread("model-root".to_string())
+        };
+        let exec2 = Arc::clone(&exec);
+        let os = std::thread::Builder::new()
+            .name("mc-root".to_string())
+            .spawn(move || {
+                CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&exec2), root)));
+                let res = panic::catch_unwind(AssertUnwindSafe(|| f()));
+                finish_thread(&exec2, root, res.err().as_deref());
+            })
+            .expect("mc: failed to spawn model root thread");
+        exec.inner.lock().unwrap().os_handles[root] = Some(os);
+
+        // Scheduler loop.
+        {
+            let mut g = exec.inner.lock().unwrap();
+            loop {
+                while g.abort.is_none()
+                    && (g.current.is_some()
+                        || g.threads.iter().any(|t| *t == ThreadState::Running))
+                {
+                    g = exec.cv.wait(g).unwrap();
+                }
+                if g.abort.is_some() {
+                    break;
+                }
+                if g.threads.iter().all(|t| *t == ThreadState::Finished) {
+                    break;
+                }
+                let mut acts = g.enumerate();
+                if acts.is_empty()
+                    && g.threads.iter().any(|t| *t == ThreadState::Blocked(Blocked::Yield))
+                {
+                    // Every other thread is stuck; yielded threads get to
+                    // re-check their condition (matches real scheduling,
+                    // where a yield never blocks forever).
+                    g.wake(|b| b == Blocked::Yield);
+                    acts = g.enumerate();
+                }
+                if acts.is_empty() {
+                    let states: Vec<String> = g
+                        .threads
+                        .iter()
+                        .zip(&g.names)
+                        .map(|(st, n)| format!("{n}: {st:?}"))
+                        .collect();
+                    g.abort = Some(Abort::Bug(format!("deadlock: [{}]", states.join(", "))));
+                    break;
+                }
+                let idx = if g.pos < g.schedule.len() {
+                    let i = g.schedule[g.pos];
+                    if i >= acts.len() {
+                        g.abort = Some(Abort::Fatal(format!(
+                            "replay divergence at step {}: index {} of {} actions \
+                             (model closure is nondeterministic?)",
+                            g.pos,
+                            i,
+                            acts.len()
+                        )));
+                        break;
+                    }
+                    i
+                } else {
+                    g.schedule.push(0);
+                    0
+                };
+                g.alt_counts.push(acts.len());
+                g.pos += 1;
+                g.steps += 1;
+                if g.steps > g.max_steps {
+                    g.abort = Some(Abort::Fatal(format!(
+                        "step budget ({}) exceeded — livelocked spin loop or model too \
+                         large; shrink the model or raise SHADOWSYNC_MC_MAX_STEPS",
+                        g.max_steps
+                    )));
+                    break;
+                }
+                match acts[idx] {
+                    Action::Flush { tid, aid } => g.flush_own(tid, aid),
+                    Action::Step(t) => {
+                        if let Some(p) = g.last_thread {
+                            if p != t && g.threads[p] == ThreadState::AtPoint {
+                                g.preemptions += 1;
+                            }
+                        }
+                        // Stepping any thread un-parks yielded peers: "some
+                        // other thread has run since the yield".
+                        g.wake(|b| b == Blocked::Yield);
+                        g.last_thread = Some(t);
+                        g.current = Some(t);
+                        exec.cv.notify_all();
+                    }
+                }
+            }
+            exec.cv.notify_all();
+        }
+
+        // Unwind and reap every backing OS thread before reading the outcome.
+        let handles: Vec<_> = {
+            let mut g = exec.inner.lock().unwrap();
+            g.os_handles.iter_mut().map(|h| h.take()).collect()
+        };
+        for h in handles.into_iter().flatten() {
+            let _ = h.join();
+        }
+
+        let g = exec.inner.lock().unwrap();
+        ExecOutcome {
+            schedule: g.schedule.clone(),
+            alt_counts: g.alt_counts.clone(),
+            abort: g.abort.clone(),
+        }
+    }
+
+    fn explore(&self, f: impl Fn() + Send + Sync + 'static) -> Result<Stats, (Abort, u64)> {
+        let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+        assert!(
+            !in_model(),
+            "mc::model may not be nested inside another model"
+        );
+        let mut prefix: Vec<usize> = Vec::new();
+        let mut execs: u64 = 0;
+        loop {
+            execs += 1;
+            if execs > self.max_execs {
+                panic!(
+                    "mc: execution budget ({}) exhausted before the state space was \
+                     covered; shrink the model or raise SHADOWSYNC_MC_MAX_EXECS",
+                    self.max_execs
+                );
+            }
+            let out = self.run_one(Arc::clone(&f), prefix.clone());
+            if let Some(a) = out.abort {
+                if let Abort::Fatal(msg) = &a {
+                    panic!("mc: {msg}\nschedule: {:?}", out.schedule);
+                }
+                return Err((a, execs));
+            }
+            let mut branch = None;
+            for i in (0..out.schedule.len()).rev() {
+                if out.schedule[i] + 1 < out.alt_counts[i] {
+                    branch = Some(i);
+                    break;
+                }
+            }
+            match branch {
+                Some(i) => {
+                    prefix = out.schedule[..i].to_vec();
+                    prefix.push(out.schedule[i] + 1);
+                }
+                None => return Ok(Stats { executions: execs }),
+            }
+        }
+    }
+
+    /// Exhaustively check `f` under every schedule within the bounds; panics
+    /// with the failing schedule if any interleaving panics or deadlocks.
+    pub fn check(&self, f: impl Fn() + Send + Sync + 'static) -> Stats {
+        match self.explore(f) {
+            Ok(stats) => stats,
+            Err((Abort::Bug(msg), execs)) => {
+                panic!("mc model failed (execution #{execs}): {msg}")
+            }
+            Err((Abort::Fatal(msg), _)) => panic!("mc: {msg}"),
+        }
+    }
+
+    /// Like [`Model::check`] but returns `true` when some interleaving fails
+    /// (panic or deadlock) instead of panicking. Used by mutation checks to
+    /// prove a deliberately weakened ordering is caught.
+    pub fn check_finds_bug(&self, f: impl Fn() + Send + Sync + 'static) -> bool {
+        self.explore(f).is_err()
+    }
+}
+
+/// Check `f` under every interleaving with the default [`Model`] bounds.
+pub fn model(f: impl Fn() + Send + Sync + 'static) {
+    Model::new().check(f);
+}
+
+/// `true` when some interleaving of `f` panics or deadlocks (default bounds).
+pub fn model_finds_bug(f: impl Fn() + Send + Sync + 'static) -> bool {
+    Model::new().check_finds_bug(f)
+}
+
+/// Per-object lazy binding into the per-execution state tables. Packs
+/// `(execution epoch, index + 1)` into one word; rebinding in a later
+/// execution resets the object to its initial state, matching loom's rule
+/// that modeled objects are created inside the model closure.
+pub(crate) struct IdCell(StdAtomicU64);
+
+impl Default for IdCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IdCell {
+    pub const fn new() -> Self {
+        IdCell(StdAtomicU64::new(0))
+    }
+
+    /// Resolve this object's index in the current execution, registering it on
+    /// first touch. Callers hold the engine lock (`op` closures), so the
+    /// load/store pair is race-free.
+    pub fn resolve(
+        &self,
+        st: &mut ExecState,
+        register: impl FnOnce(&mut ExecState) -> usize,
+    ) -> usize {
+        let packed = self.0.load(StdOrdering::Relaxed);
+        let (ep, idx1) = (packed >> 32, packed & 0xFFFF_FFFF);
+        if ep == (st.epoch & 0xFFFF_FFFF) && idx1 != 0 {
+            return (idx1 - 1) as usize;
+        }
+        let idx = register(st);
+        self.0.store(
+            ((st.epoch & 0xFFFF_FFFF) << 32) | (idx as u64 + 1),
+            StdOrdering::Relaxed,
+        );
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,335 @@
+//! Modeled `Mutex`, `Condvar`, and `RwLock`.
+//!
+//! Lock acquisition, release, and condvar wait/notify are schedule points;
+//! every release publishes the thread's store buffer (release semantics).
+//! Blocked threads are re-attempted, not queued: a release wakes every waiter
+//! and the scheduler explores all acquisition orders. Guards expose the
+//! protected data through an `UnsafeCell`; exclusivity is enforced by the
+//! modeled lock state, and poisoning is never reported (a modeled panic aborts
+//! the whole execution instead).
+
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, TryLockError, TryLockResult};
+
+use super::{op, Blocked, IdCell, Step};
+
+/// Modeled counterpart of `std::sync::Mutex`.
+pub struct Mutex<T> {
+    id: IdCell,
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: the modeled lock grants at most one live guard at a time (the
+// scheduler serializes every lock/unlock under the engine lock), so access to
+// the `UnsafeCell` contents is exclusive exactly as for `std::sync::Mutex`.
+unsafe impl<T: Send> Send for Mutex<T> {}
+// SAFETY: see above — `&Mutex<T>` only hands out data access through the
+// modeled lock, mirroring `std::sync::Mutex`'s `Sync` bound.
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("mc::Mutex")
+    }
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Self {
+            id: IdCell::new(),
+            data: UnsafeCell::new(t),
+        }
+    }
+
+    fn mid(&self, st: &mut super::ExecState) -> usize {
+        self.id.resolve(st, |st| st.register_mutex())
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        op(|st, tid| {
+            let mid = self.mid(st);
+            if st.mutexes[mid].held_by.is_none() {
+                st.mutexes[mid].held_by = Some(tid);
+                Step::Done(())
+            } else {
+                Step::Block(Blocked::Mutex(mid))
+            }
+        });
+        Ok(MutexGuard {
+            mutex: self,
+            _not_send: PhantomData,
+        })
+    }
+
+    pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+        let acquired = op(|st, tid| {
+            let mid = self.mid(st);
+            if st.mutexes[mid].held_by.is_none() {
+                st.mutexes[mid].held_by = Some(tid);
+                Step::Done(true)
+            } else {
+                Step::Done(false)
+            }
+        });
+        if acquired {
+            Ok(MutexGuard {
+                mutex: self,
+                _not_send: PhantomData,
+            })
+        } else {
+            Err(TryLockError::WouldBlock)
+        }
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        Ok(self.data.get_mut())
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(self.data.into_inner())
+    }
+}
+
+/// Guard for [`Mutex`]; dropping it is the unlock schedule point.
+pub struct MutexGuard<'a, T> {
+    mutex: &'a Mutex<T>,
+    /// Like `std::sync::MutexGuard`, not `Send`: the unlock must happen on
+    /// the acquiring modeled thread.
+    _not_send: PhantomData<*mut T>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // SAFETY: this guard proves the modeled lock is held by the current
+        // thread, so no other thread can obtain a reference concurrently.
+        unsafe { &*self.mutex.data.get() }
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: as for `deref` — the modeled lock is held, making this the
+        // only live reference to the contents.
+        unsafe { &mut *self.mutex.data.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        op(|st, tid| {
+            let mid = self.mutex.mid(st);
+            debug_assert_eq!(st.mutexes[mid].held_by, Some(tid), "unlock by non-owner");
+            st.mutexes[mid].held_by = None;
+            st.flush_all(tid);
+            st.wake(|b| b == Blocked::Mutex(mid));
+            Step::Done(())
+        })
+    }
+}
+
+/// Modeled counterpart of `std::sync::Condvar`. No spurious wakeups are
+/// generated (a sound under-approximation; all call sites re-check their
+/// predicate in a loop regardless).
+#[derive(Default)]
+pub struct Condvar {
+    id: IdCell,
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("mc::Condvar")
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Self { id: IdCell::new() }
+    }
+
+    fn cid(&self, st: &mut super::ExecState) -> usize {
+        self.id.resolve(st, |st| st.register_condvar())
+    }
+
+    /// Atomically release the guard's mutex and park until notified, then
+    /// reacquire. The release publishes the store buffer.
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let mutex = guard.mutex;
+        // The release happens inside the wait op below, not via Drop.
+        std::mem::forget(guard);
+        let mut parked = false;
+        op(|st, tid| {
+            let cid = self.cid(st);
+            if parked {
+                return Step::Done(());
+            }
+            parked = true;
+            let mid = mutex.mid(st);
+            debug_assert_eq!(st.mutexes[mid].held_by, Some(tid), "wait without lock");
+            st.mutexes[mid].held_by = None;
+            st.flush_all(tid);
+            st.wake(|b| b == Blocked::Mutex(mid));
+            Step::Block(Blocked::Condvar(cid))
+        });
+        mutex.lock()
+    }
+
+    pub fn notify_all(&self) {
+        op(|st, _tid| {
+            let cid = self.cid(st);
+            st.wake(|b| b == Blocked::Condvar(cid));
+            Step::Done(())
+        })
+    }
+
+    pub fn notify_one(&self) {
+        op(|st, _tid| {
+            let cid = self.cid(st);
+            st.wake_one(|b| b == Blocked::Condvar(cid));
+            Step::Done(())
+        })
+    }
+}
+
+/// Modeled counterpart of `std::sync::RwLock`.
+pub struct RwLock<T> {
+    id: IdCell,
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: readers hold shared access and the single writer holds exclusive
+// access, enforced by the modeled reader/writer counts — the same contract
+// that makes `std::sync::RwLock<T: Send + Sync>` Sync.
+unsafe impl<T: Send> Send for RwLock<T> {}
+// SAFETY: see above.
+unsafe impl<T: Send + Sync> Sync for RwLock<T> {}
+
+impl<T> std::fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("mc::RwLock")
+    }
+}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T> RwLock<T> {
+    pub const fn new(t: T) -> Self {
+        Self {
+            id: IdCell::new(),
+            data: UnsafeCell::new(t),
+        }
+    }
+
+    fn rid(&self, st: &mut super::ExecState) -> usize {
+        self.id.resolve(st, |st| st.register_rwlock())
+    }
+
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        op(|st, _tid| {
+            let rid = self.rid(st);
+            if st.rwlocks[rid].writer.is_none() {
+                st.rwlocks[rid].readers += 1;
+                Step::Done(())
+            } else {
+                Step::Block(Blocked::RwLock(rid))
+            }
+        });
+        Ok(RwLockReadGuard {
+            lock: self,
+            _not_send: PhantomData,
+        })
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        op(|st, tid| {
+            let rid = self.rid(st);
+            if st.rwlocks[rid].writer.is_none() && st.rwlocks[rid].readers == 0 {
+                st.rwlocks[rid].writer = Some(tid);
+                Step::Done(())
+            } else {
+                Step::Block(Blocked::RwLock(rid))
+            }
+        });
+        Ok(RwLockWriteGuard {
+            lock: self,
+            _not_send: PhantomData,
+        })
+    }
+}
+
+/// Shared guard for [`RwLock`].
+pub struct RwLockReadGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    _not_send: PhantomData<*mut T>,
+}
+
+impl<T> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // SAFETY: a live read guard excludes writers, so shared access to the
+        // contents is sound.
+        unsafe { &*self.lock.data.get() }
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        op(|st, tid| {
+            let rid = self.lock.rid(st);
+            debug_assert!(st.rwlocks[rid].readers > 0);
+            st.rwlocks[rid].readers -= 1;
+            st.flush_all(tid);
+            st.wake(|b| b == Blocked::RwLock(rid));
+            Step::Done(())
+        })
+    }
+}
+
+/// Exclusive guard for [`RwLock`].
+pub struct RwLockWriteGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    _not_send: PhantomData<*mut T>,
+}
+
+impl<T> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // SAFETY: a live write guard excludes all other readers and writers.
+        unsafe { &*self.lock.data.get() }
+    }
+}
+
+impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: as for `deref` — exclusive access is held.
+        unsafe { &mut *self.lock.data.get() }
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        op(|st, tid| {
+            let rid = self.lock.rid(st);
+            debug_assert_eq!(st.rwlocks[rid].writer, Some(tid));
+            st.rwlocks[rid].writer = None;
+            st.flush_all(tid);
+            st.wake(|b| b == Blocked::RwLock(rid));
+            Step::Done(())
+        })
+    }
+}

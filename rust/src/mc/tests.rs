@@ -1,0 +1,216 @@
+//! Self-tests for the bounded model checker. These run under the normal test
+//! config (the `mc` module is always compiled), so tier-1 CI validates the
+//! engine that the `--cfg shadowsync_loom` protocol models rely on.
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering::{Acquire, Relaxed, Release, SeqCst};
+use std::sync::Arc;
+use std::sync::Mutex as StdMutex;
+
+use super::thread;
+use super::{model, model_finds_bug, AtomicU64, Condvar, Model, Mutex};
+
+/// Both schedules of a store/load pair are explored: the reader observes the
+/// old *and* the new value across executions.
+#[test]
+fn explores_both_orders() {
+    let seen: Arc<StdMutex<HashSet<u64>>> = Arc::new(StdMutex::new(HashSet::new()));
+    let seen2 = Arc::clone(&seen);
+    let stats = Model::new().preemptions(4).check(move || {
+        let x = Arc::new(AtomicU64::new(0));
+        let x2 = Arc::clone(&x);
+        let t = thread::spawn(move || x2.store(1, SeqCst));
+        let observed = x.load(SeqCst);
+        t.join().unwrap();
+        seen2.lock().unwrap().insert(observed);
+    });
+    assert!(stats.executions >= 2, "expected multiple executions");
+    let seen = seen.lock().unwrap();
+    assert!(seen.contains(&0) && seen.contains(&1), "saw {seen:?}");
+}
+
+/// A load/store increment pair is racy; the model must find the lost update.
+#[test]
+fn finds_lost_update() {
+    assert!(model_finds_bug(|| {
+        let x = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let x = Arc::clone(&x);
+            handles.push(thread::spawn(move || {
+                let v = x.load(SeqCst);
+                x.store(v + 1, SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(x.load(SeqCst), 2, "lost update");
+    }));
+}
+
+/// The same increment via an atomic RMW can never lose an update.
+#[test]
+fn rmw_increment_is_sound() {
+    model(|| {
+        let x = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let x = Arc::clone(&x);
+            handles.push(thread::spawn(move || {
+                x.fetch_add(1, SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(x.load(SeqCst), 2);
+    });
+}
+
+/// Message passing with a `Release` flag store: whenever the flag is
+/// observed, the payload written before it must be visible too.
+#[test]
+fn message_passing_release_holds() {
+    model(|| {
+        let data = Arc::new(AtomicU64::new(0));
+        let flag = Arc::new(AtomicU64::new(0));
+        let (d2, f2) = (Arc::clone(&data), Arc::clone(&flag));
+        let t = thread::spawn(move || {
+            d2.store(1, Relaxed);
+            f2.store(1, Release);
+        });
+        if flag.load(Acquire) == 1 {
+            assert_eq!(data.load(Acquire), 1, "flag visible before payload");
+        }
+        t.join().unwrap();
+    });
+}
+
+/// Weakening the flag store to `Relaxed` lets the store buffer publish the
+/// flag before the payload — the model must catch it. This is the engine-level
+/// twin of the protocol mutation checks in `tests/loom_models.rs`.
+#[test]
+fn message_passing_relaxed_caught() {
+    assert!(model_finds_bug(|| {
+        let data = Arc::new(AtomicU64::new(0));
+        let flag = Arc::new(AtomicU64::new(0));
+        let (d2, f2) = (Arc::clone(&data), Arc::clone(&flag));
+        let t = thread::spawn(move || {
+            d2.store(1, Relaxed);
+            f2.store(1, Relaxed);
+        });
+        if flag.load(Acquire) == 1 {
+            assert_eq!(data.load(Acquire), 1, "flag visible before payload");
+        }
+        t.join().unwrap();
+    }));
+}
+
+/// A `Relaxed` RMW preserves per-location coherence with the thread's own
+/// earlier buffered store (but publishes nothing else).
+#[test]
+fn relaxed_rmw_is_self_coherent() {
+    model(|| {
+        let x = Arc::new(AtomicU64::new(0));
+        let x2 = Arc::clone(&x);
+        let t = thread::spawn(move || {
+            x2.store(5, Relaxed);
+            x2.fetch_add(1, Relaxed);
+        });
+        t.join().unwrap();
+        assert_eq!(x.load(Acquire), 6);
+    });
+}
+
+/// Non-atomic data behind the modeled mutex is never corrupted.
+#[test]
+fn mutex_provides_exclusion() {
+    model(|| {
+        let m = Arc::new(Mutex::new(0u64));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let m = Arc::clone(&m);
+            handles.push(thread::spawn(move || {
+                let mut g = m.lock().unwrap();
+                let v = *g;
+                thread::yield_now();
+                *g = v + 1;
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*m.lock().unwrap(), 2);
+    });
+}
+
+/// Classic AB-BA lock inversion: the model must report the deadlock.
+#[test]
+fn detects_abba_deadlock() {
+    assert!(model_finds_bug(|| {
+        let a = Arc::new(Mutex::new(()));
+        let b = Arc::new(Mutex::new(()));
+        let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+        let t = thread::spawn(move || {
+            let _ga = a2.lock().unwrap();
+            let _gb = b2.lock().unwrap();
+        });
+        {
+            let _gb = b.lock().unwrap();
+            let _ga = a.lock().unwrap();
+        }
+        t.join().unwrap();
+    }));
+}
+
+/// Condvar handoff terminates under every schedule (no lost wakeups when the
+/// predicate is checked under the mutex).
+#[test]
+fn condvar_handoff_terminates() {
+    model(|| {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let t = thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = m.lock().unwrap();
+            *g = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut g = m.lock().unwrap();
+        while !*g {
+            g = cv.wait(g).unwrap();
+        }
+        drop(g);
+        t.join().unwrap();
+    });
+}
+
+/// A spin loop that yields makes progress under the preemption bound instead
+/// of livelocking or blowing the step budget.
+#[test]
+fn yielding_spin_terminates() {
+    model(|| {
+        let flag = Arc::new(AtomicU64::new(0));
+        let f2 = Arc::clone(&flag);
+        let t = thread::spawn(move || f2.store(1, SeqCst));
+        while flag.load(SeqCst) == 0 {
+            thread::yield_now();
+        }
+        t.join().unwrap();
+    });
+}
+
+/// `join` has acquire semantics: the child's buffered stores are visible
+/// after it is reaped.
+#[test]
+fn join_publishes_child_stores() {
+    model(|| {
+        let x = Arc::new(AtomicU64::new(0));
+        let x2 = Arc::clone(&x);
+        let t = thread::spawn(move || x2.store(7, Relaxed));
+        t.join().unwrap();
+        assert_eq!(x.load(Relaxed), 7);
+    });
+}

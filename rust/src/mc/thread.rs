@@ -1,0 +1,103 @@
+//! Modeled `std::thread` subset: spawn/join, `Builder`, `yield_now`, `sleep`.
+//!
+//! Spawned closures run on real OS threads but only make progress when the
+//! scheduler grants them a turn. `join` is a blocking schedule point with
+//! acquire semantics (the child's exit publishes its store buffer). `sleep`
+//! has no modeled duration — it is just a schedule point, like `yield_now`.
+
+use std::sync::{Arc, Mutex as StdMutex};
+use std::time::Duration;
+
+use super::{op, spawn_managed, Blocked, Step};
+
+type ResultSlot<T> = Arc<StdMutex<Option<std::thread::Result<T>>>>;
+
+/// Modeled counterpart of `std::thread::JoinHandle`.
+pub struct JoinHandle<T> {
+    tid: usize,
+    slot: ResultSlot<T>,
+}
+
+impl<T> JoinHandle<T> {
+    pub(crate) fn new(tid: usize, slot: ResultSlot<T>) -> Self {
+        Self { tid, slot }
+    }
+
+    /// Park until the thread finishes; returns its result exactly as
+    /// `std::thread::JoinHandle::join` does (Err on a panicked child, though
+    /// in a model a child panic aborts the whole execution first).
+    pub fn join(self) -> std::thread::Result<T> {
+        let tid = self.tid;
+        op(move |st, _me| {
+            if st.thread_finished(tid) {
+                Step::Done(())
+            } else {
+                Step::Block(Blocked::Join(tid))
+            }
+        });
+        self.slot
+            .lock()
+            .unwrap()
+            .take()
+            .expect("mc join: thread finished without storing a result")
+    }
+
+    pub fn is_finished(&self) -> bool {
+        let tid = self.tid;
+        op(move |st, _me| Step::Done(st.thread_finished(tid)))
+    }
+}
+
+/// Modeled counterpart of `std::thread::Builder`.
+#[derive(Default)]
+pub struct Builder {
+    name: Option<String>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn name(mut self, name: String) -> Self {
+        self.name = Some(name);
+        self
+    }
+
+    /// Never fails in the model (OS spawn errors abort the run instead).
+    pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Ok(spawn_managed(self.name, f))
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    spawn_managed(None, f)
+}
+
+/// Yield to the scheduler: the thread parks until some other thread has been
+/// stepped (loom's rule). This both keeps yielding spin loops from generating
+/// unbounded interleavings and prevents livelock under the preemption bound.
+pub fn yield_now() {
+    let mut parked = false;
+    op(move |st, _tid| {
+        if parked {
+            return Step::Done(());
+        }
+        parked = true;
+        st.clear_preferred();
+        Step::Block(Blocked::Yield)
+    })
+}
+
+/// Modeled as [`yield_now`]; durations do not exist under the model.
+pub fn sleep(_dur: Duration) {
+    yield_now()
+}

@@ -4,9 +4,9 @@
 //! All counters are lock-free atomics so worker threads on the hot path pay
 //! one `fetch_add` per batch; aggregation happens off-path.
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::sync::prim::{AtomicU64, Mutex, Ordering::Relaxed};
 
 /// f64 accumulator over an AtomicU64 (CAS add on bits) — exact, unlike the
 /// Hogwild parameter buffers.

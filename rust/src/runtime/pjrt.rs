@@ -29,7 +29,11 @@ use super::EvalOut;
 /// `concurrent_execution_is_correct` exercises this from many threads.
 pub struct Executable(PjRtLoadedExecutable);
 
+// SAFETY: the executable is immutable after compilation and `Execute` is
+// thread-safe in the CPU plugin (see the struct-level contract above).
 unsafe impl Send for Executable {}
+// SAFETY: as for `Send` — shared references only reach the thread-safe
+// `Execute` entry point.
 unsafe impl Sync for Executable {}
 
 impl Executable {

@@ -81,9 +81,9 @@
 //! steady state allocates nothing.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
-use std::sync::{Condvar, Mutex};
 use std::time::Duration;
+
+use super::prim::{thread, AtomicU64, AtomicUsize, Condvar, Mutex, Ordering::SeqCst};
 
 use anyhow::{bail, ensure, Result};
 
@@ -454,7 +454,7 @@ impl AllReduceGroup {
     /// concurrent reduction bit-deterministic.
     fn reduce_chunk(&self, ss: &StripedState, c: usize, n: usize, generation: u64) {
         if let Some(stall) = self.reduce_stall {
-            std::thread::sleep(stall);
+            thread::sleep(stall);
         }
         let lo = traffic::part_offset(self.len, self.chunks, c);
         let clen = traffic::part_len(self.len, self.chunks, c);
@@ -630,7 +630,7 @@ impl AllReduceGroup {
             if let Some(idx) = st.done.iter().position(|r| r.generation == my_gen) {
                 if let Some(d) = delay.take() {
                     drop(st);
-                    std::thread::sleep(d);
+                    thread::sleep(d);
                     st = self.state.lock().unwrap();
                     continue;
                 }

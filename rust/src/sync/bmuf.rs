@@ -10,10 +10,9 @@
 //! sized to this strategy's partition — construct it with the partition's
 //! slice of `w0` — and rounds touch only `SyncCtx::range`.
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
+use super::prim::Arc;
 use super::{AllReduceGroup, SyncCtx, SyncStrategy};
 use crate::optim::BlockMomentum;
 use crate::tensor::ops;

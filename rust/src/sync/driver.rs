@@ -83,9 +83,6 @@
 //! shadow.join().unwrap().unwrap();
 //! ```
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
-use std::sync::{Arc, Mutex, RwLock};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::Result;
@@ -94,6 +91,11 @@ use crate::metrics::Metrics;
 use crate::net::{Network, NodeId};
 use crate::tensor::HogwildBuffer;
 
+use super::prim::thread::{self, JoinHandle};
+use super::prim::{
+    Arc, AtomicBool, AtomicU64, AtomicUsize, Mutex, Ordering::Relaxed, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};
 use super::repartition::RepartitionController;
 use super::{ParamRange, RepartitionCarry, SyncStrategy};
 
@@ -202,7 +204,7 @@ pub fn spawn_shadow_pool_adaptive(
     threads: usize,
     controller: Option<Arc<RepartitionController>>,
 ) -> JoinHandle<Result<u64>> {
-    std::thread::Builder::new()
+    thread::Builder::new()
         .name(format!("shadow-{trainer_id}"))
         .spawn(move || {
             let mut tasks = tasks;
@@ -238,7 +240,7 @@ pub fn spawn_shadow_pool_adaptive(
                     let pool = pool.clone();
                     let repart = controller.as_ref().map(|c| (c.clone(), my_gen));
                     workers.push(
-                        std::thread::Builder::new()
+                        thread::Builder::new()
                             .name(format!("shadow-{trainer_id}.{k}"))
                             .spawn(move || {
                                 pool_thread(
@@ -403,10 +405,10 @@ fn pool_thread(
             }
         }
         if !worked {
-            std::thread::yield_now();
+            thread::yield_now();
         }
         if !interval.is_zero() {
-            std::thread::sleep(interval);
+            thread::sleep(interval);
         }
         if let Some((c, adopted_gen)) = &repart {
             if record_sweeps {
@@ -458,12 +460,12 @@ impl Gate {
     }
 
     /// Workers wrap each iteration in this.
-    pub fn working(&self) -> std::sync::RwLockReadGuard<'_, ()> {
+    pub fn working(&self) -> RwLockReadGuard<'_, ()> {
         self.lock.read().unwrap()
     }
 
     /// The foreground syncer wraps the collective in this.
-    pub fn stop_the_world(&self) -> std::sync::RwLockWriteGuard<'_, ()> {
+    pub fn stop_the_world(&self) -> RwLockWriteGuard<'_, ()> {
         self.lock.write().unwrap()
     }
 }

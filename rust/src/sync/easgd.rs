@@ -15,10 +15,9 @@
 //! per-trainer/per-shard gating the monolithic group-level gate couldn't
 //! express.
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
+use super::prim::Arc;
 use super::{
     ps::{DeltaGate, DeltaScanCache, SyncPsGroup},
     RepartitionCarry, SyncCtx, SyncStrategy,

@@ -9,10 +9,9 @@
 //! sized to the partition (`SyncCtx::range`), so hybrid plans can run MA
 //! on some partitions while EASGD owns others.
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
+use super::prim::{thread, Arc};
 use super::{AllReduceGroup, SyncCtx, SyncStrategy};
 use crate::tensor::ops;
 
@@ -63,7 +62,7 @@ impl SyncStrategy for MaSync {
         // w_global <- AllReduce(w_global) / n; workers keep training during
         // this window — exactly what copy-back (alpha=1) would throw away
         if !self.round_delay.is_zero() {
-            std::thread::sleep(self.round_delay);
+            thread::sleep(self.round_delay);
         }
         let round = self.group.allreduce_mean(&mut self.global, ctx.trainer_node, ctx.net)?;
         let gap = ops::mean_abs_diff(

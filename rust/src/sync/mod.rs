@@ -64,12 +64,14 @@ pub mod driver;
 pub mod easgd;
 pub mod ma;
 pub mod partition;
+pub mod prim;
 pub mod ps;
 pub mod repartition;
 pub mod traffic;
 
 use anyhow::Result;
 
+use self::prim::Arc;
 use crate::metrics::Metrics;
 use crate::net::{Network, NodeId};
 use crate::tensor::HogwildBuffer;
@@ -174,8 +176,8 @@ pub use repartition::{PlanEpoch, RepartitionController};
 pub fn build_group(
     cfg: &crate::config::RunConfig,
     num_params: usize,
-) -> std::sync::Arc<AllReduceGroup> {
-    std::sync::Arc::new(
+) -> Arc<AllReduceGroup> {
+    Arc::new(
         AllReduceGroup::new(cfg.num_trainers, num_params)
             .with_chunks(cfg.allreduce_chunks)
             .with_engine(cfg.reduce_engine),
@@ -189,7 +191,7 @@ pub fn build_group(
 /// reaches them all.
 pub fn easgd_from_cfg(
     cfg: &crate::config::RunConfig,
-    sync_ps: std::sync::Arc<SyncPsGroup>,
+    sync_ps: Arc<SyncPsGroup>,
 ) -> EasgdSync {
     let mut s = EasgdSync::new(sync_ps, cfg.alpha);
     if cfg.delta_gated() {
@@ -209,8 +211,8 @@ pub fn build_strategy(
     part: &Partition,
     rank: usize,
     w0: &[f32],
-    sync_ps: Option<std::sync::Arc<SyncPsGroup>>,
-    group: Option<std::sync::Arc<AllReduceGroup>>,
+    sync_ps: Option<Arc<SyncPsGroup>>,
+    group: Option<Arc<AllReduceGroup>>,
 ) -> Result<Box<dyn SyncStrategy>> {
     use crate::config::SyncAlgo;
     let _ = rank; // ranks are implicit in-process; kept for API parity

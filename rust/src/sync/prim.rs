@@ -1,0 +1,45 @@
+//! The concurrency-primitive facade for the shadow-sync fabric.
+//!
+//! Every concurrent module in `sync/` and `tensor/` imports its atomics,
+//! locks, condvars, and thread entry points from here instead of from
+//! `std::sync`/`std::thread` (enforced by `cargo run -p xtask -- lint`).
+//! Normally these are straight re-exports of `std`; under
+//! `RUSTFLAGS="--cfg shadowsync_loom"` they swap to the bounded model
+//! checker in [`crate::mc`], so `tests/loom_models.rs` can exhaustively
+//! explore schedules of the real protocol code — not a copy of it.
+//!
+//! Two deliberate exceptions:
+//!
+//! * [`Arc`] is always `std::sync::Arc`. It carries no protocol state —
+//!   only reference counts — and modeling it would add schedule points
+//!   without adding behaviors (loom itself models `Arc` only to catch
+//!   leak/drop races, which the protocol models here do not exercise).
+//! * [`Ordering`] is always the `std` enum; the model checker interprets
+//!   it (see the `mc` module docs for exactly how each ordering maps onto
+//!   the PSO store-buffer semantics).
+//!
+//! Everything else must come from this module. When adding a new primitive
+//! to the fabric, extend the facade (and `mc`) rather than importing `std`
+//! directly — the lint will hold you to it.
+
+/// `std::sync::Arc` in both configs (refcount only, never protocol state).
+pub use std::sync::Arc;
+/// The std orderings in both configs; the model checker interprets them.
+pub use std::sync::atomic::Ordering;
+
+#[cfg(not(shadowsync_loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+#[cfg(not(shadowsync_loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(not(shadowsync_loom))]
+pub use std::thread;
+
+#[cfg(shadowsync_loom)]
+pub use crate::mc::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard, RwLock,
+    RwLockReadGuard, RwLockWriteGuard,
+};
+
+#[cfg(shadowsync_loom)]
+pub use crate::mc::thread;

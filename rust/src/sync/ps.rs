@@ -70,11 +70,10 @@
 //! (see the [`crate::tensor::DirtyEpochs`] precision caveat — the same
 //! transient-staleness class as the racy scan itself).
 
-use std::sync::atomic::{
-    AtomicU32, AtomicU64, AtomicUsize,
+use super::prim::{
+    AtomicU32, AtomicU64, AtomicUsize, Mutex,
     Ordering::{Acquire, Relaxed, Release},
 };
-use std::sync::Mutex;
 
 use super::partition::ParamRange;
 use crate::net::{Network, NodeId, Role};
@@ -150,14 +149,18 @@ impl QuantileSketch {
         let i = self.cursor.fetch_add(1, Relaxed) % self.window.len();
         self.window[i].store(x.to_bits(), Relaxed);
         if self.filled.load(Relaxed) < self.window.len() {
-            // may overshoot under races; clamped in `samples`
-            self.filled.fetch_add(1, Relaxed);
+            // may overshoot under races; clamped in `samples`. The Release
+            // bump publishes the slot store above, so a reader that observes
+            // `filled >= n` via `samples` also observes at least `n` real
+            // slot writes (never the zeroed initial values).
+            self.filled.fetch_add(1, Release);
         }
     }
 
-    /// Valid samples currently in the window.
+    /// Valid samples currently in the window (Acquire: pairs with the
+    /// Release bump in [`Self::record`]).
     pub fn samples(&self) -> usize {
-        self.filled.load(Relaxed).min(self.window.len())
+        self.filled.load(Acquire).min(self.window.len())
     }
 
     /// The `q`-quantile of the current window, chosen so that (for a

@@ -41,15 +41,16 @@
 //! vacates its membership slots via [`RepartitionController::depart`], so
 //! peers that did adopt are never left waiting on a ghost.
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::{Arc, Mutex};
-
 use anyhow::Result;
 
 use crate::config::{RunConfig, SyncAlgo};
 
 use super::driver::ShadowTask;
 use super::partition::{lpt_contiguous_ranges_weighted, PartitionPlan};
+use super::prim::{
+    Arc, AtomicU64, Mutex,
+    Ordering::{AcqRel, Acquire, Relaxed, Release},
+};
 use super::ps::SyncPsGroup;
 use super::{AllReduceGroup, RepartitionCarry};
 
@@ -130,9 +131,10 @@ impl RepartitionController {
 
     /// Generation of the current epoch — pool threads compare this against
     /// the generation they adopted, once per lap, to detect a pending
-    /// cutover without taking the state lock.
+    /// cutover without taking the state lock (Acquire: pairs with the
+    /// Release publish in [`Self::record_sweep`]).
     pub fn generation(&self) -> u64 {
-        self.gen.load(Relaxed)
+        self.gen.load(Acquire)
     }
 
     /// Record one shadow sweep: `write_delta` is the per-block dirty-epoch
@@ -157,7 +159,9 @@ impl RepartitionController {
             st.epoch = Arc::new(epoch);
             st.adopted = 0;
             st.sweeps = 0;
-            self.gen.store(st.epoch.gen, Relaxed);
+            // Release: a pool thread that observes the new generation (even
+            // without the lock) must also observe the epoch it names
+            self.gen.store(st.epoch.gen, Release);
         }
     }
 
@@ -168,7 +172,7 @@ impl RepartitionController {
         let mut st = self.state.lock().unwrap();
         debug_assert_eq!(st.epoch.gen, prev_gen + 1, "a trainer can only be one epoch behind");
         st.adopted += 1;
-        self.adopted_gen.fetch_max(st.epoch.gen, Relaxed);
+        self.adopted_gen.fetch_max(st.epoch.gen, AcqRel);
         st.epoch.clone()
     }
 
@@ -176,7 +180,7 @@ impl RepartitionController {
     /// trainer adopted. A plan published right at the end of a run that no
     /// pool ever cut over to does not count.
     pub fn repartitions(&self) -> u64 {
-        self.adopted_gen.load(Relaxed)
+        self.adopted_gen.load(Acquire)
     }
 
     /// A trainer stops syncing for good (shard exhausted, shutdown, or a

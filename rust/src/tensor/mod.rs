@@ -13,7 +13,7 @@
 
 pub mod ops;
 
-use std::sync::atomic::{
+use crate::sync::prim::{
     AtomicU32, AtomicU64,
     Ordering::{Acquire, Relaxed, Release},
 };

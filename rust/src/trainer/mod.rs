@@ -29,6 +29,7 @@ use crate::net::{Network, NodeId};
 use crate::optim::HogwildAdagrad;
 use crate::runtime::Model;
 use crate::sync::driver::{Gate, IterCounter, StopFlag};
+use crate::sync::prim::AtomicBool;
 use crate::sync::{EasgdSync, SyncCtx, SyncStrategy};
 use crate::tensor::HogwildBuffer;
 
@@ -68,7 +69,7 @@ impl Trainer {
             optimizer: Arc::new(HogwildAdagrad::new(w0.len(), cfg.learning_rate, cfg.adagrad_eps)),
             gate: Arc::new(Gate::new()),
             iters: Arc::new(IterCounter::default()),
-            stop_shadow: Arc::new(std::sync::atomic::AtomicBool::new(false)),
+            stop_shadow: Arc::new(AtomicBool::new(false)),
         }
     }
 }

@@ -1,0 +1,484 @@
+//! Exhaustive model checking of the shadow-sync fabric's concurrency
+//! protocols under the in-tree [`shadowsync::mc`] checker — a loom-style
+//! DFS over every thread interleaving within a preemption bound, on top of
+//! a PSO-class store-buffer memory model (relaxed stores really are
+//! delayed, so a missing release fence is an *observable* bug here, not a
+//! latent one).
+//!
+//! This suite only compiles under the model-checking cfg:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg shadowsync_loom" cargo test --release --test loom_models
+//! ```
+//!
+//! Four models run the *real* fabric code (`sync/allreduce.rs`,
+//! `sync/ps.rs`, `sync/repartition.rs`, `tensor/mod.rs`) through
+//! `sync::prim`, which swaps `std::sync`/`std::thread` for the modeled
+//! primitives under this cfg:
+//!
+//! 1. overlapped double-buffered deposit vs. a draining reduce (exact
+//!    means across racing rounds — a stale helper folding the wrong
+//!    parity bank would corrupt them);
+//! 2. the epoch-tagged chunk-claim cursor under leave/join churn;
+//! 3. dirty-epoch bump-after-write + scan-skip cache + central
+//!    bump-after-push ("a scan skip never misses a settled write");
+//! 4. the repartition adopt/depart handshake (at most one pending
+//!    generation, no lost `leave()`).
+//!
+//! Two distilled *mutation* pairs close the loop on checker power: the
+//! pre-epoch-tag claim cursor (the PR-1 generation race) and a
+//! `Relaxed`-weakened dirty bump are each shown to FAIL model checking,
+//! while their fixed twins — the accounting the fabric actually ships —
+//! pass exhaustively.
+#![cfg(shadowsync_loom)]
+
+use shadowsync::config::{RunConfig, SyncAlgo};
+use shadowsync::mc::{model, model_finds_bug, Model};
+use shadowsync::net::{Network, Role};
+use shadowsync::sync::prim::{
+    thread, Arc, AtomicU32, AtomicU64, AtomicUsize, Mutex,
+    Ordering::{Acquire, Relaxed, Release, SeqCst},
+};
+use shadowsync::sync::{
+    AllReduceGroup, DeltaScanCache, ParamRange, PartitionPlan, RepartitionController, SyncPsGroup,
+};
+use shadowsync::tensor::HogwildBuffer;
+
+// ---------------------------------------------------------------------------
+// Model 1: overlapped double-buffered AllReduce, two racing rounds
+// ---------------------------------------------------------------------------
+
+/// Two members drive two back-to-back rounds through the overlapped
+/// engine. Round `N+1` deposits are allowed to land while round `N`'s
+/// reduce plan is still draining (opposite parity bank), so every
+/// interleaving where a helper thread keeps folding across the round
+/// boundary is explored: if the parity fence in the claim cursor ever let
+/// a stale helper fold the wrong bank, some schedule would produce a mean
+/// polluted by the other round's deposits and the exact asserts would
+/// fire.
+#[test]
+fn overlapped_rounds_produce_exact_means() {
+    let stats = Model::new().clamp_preemptions(2).check(|| {
+        let mut net = Network::new(None);
+        let node_a = net.add_node(Role::Trainer);
+        let node_b = net.add_node(Role::Trainer);
+        let net = Arc::new(net);
+        let group = Arc::new(AllReduceGroup::new(2, 2));
+
+        let member_b = {
+            let group = Arc::clone(&group);
+            let net = Arc::clone(&net);
+            thread::spawn(move || {
+                let mut buf = [3.0f32, 5.0];
+                let r1 = group.allreduce_mean(&mut buf, node_b, &net).unwrap();
+                assert_eq!((r1.generation, r1.contributors), (0, 2));
+                assert_eq!(buf, [2.0, 4.0]);
+                buf = [7.0, 11.0];
+                let r2 = group.allreduce_mean(&mut buf, node_b, &net).unwrap();
+                assert_eq!((r2.generation, r2.contributors), (1, 2));
+                assert_eq!(buf, [6.0, 10.0]);
+            })
+        };
+
+        let mut buf = [1.0f32, 3.0];
+        let r1 = group.allreduce_mean(&mut buf, node_a, &net).unwrap();
+        assert_eq!((r1.generation, r1.contributors), (0, 2));
+        assert_eq!(buf, [2.0, 4.0]);
+        buf = [5.0, 9.0];
+        let r2 = group.allreduce_mean(&mut buf, node_a, &net).unwrap();
+        assert_eq!((r2.generation, r2.contributors), (1, 2));
+        assert_eq!(buf, [6.0, 10.0]);
+
+        member_b.join().unwrap();
+        assert_eq!(group.completed_rounds(), 2);
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+// ---------------------------------------------------------------------------
+// Model 2: epoch-tagged claim cursor under membership churn
+// ---------------------------------------------------------------------------
+
+/// Three members complete a round, two leave, and the survivor runs a
+/// singleton round — with every possible overlap between the leavers'
+/// result reads, their `leave()` calls, and the survivor's next deposit.
+/// The round-2 close races the round-1 reduce drain, so the epoch tag on
+/// the claim cursor is what keeps a late helper from claiming (or
+/// folding) chunks of the wrong generation; a lost `leave()` would
+/// deadlock round 2, which the checker reports as a bug in that schedule.
+#[test]
+fn claim_cursor_survives_leave_churn() {
+    // the fold order is ring-position order, so the mean is
+    // bit-deterministic: (3+6+9) * (1/3) in f32, not an approximate 6.0
+    let round1_mean = 18.0f32 * (1.0f32 / 3.0);
+    let stats = Model::new().clamp_preemptions(2).check(move || {
+        let mut net = Network::new(None);
+        let nodes = [
+            net.add_node(Role::Trainer),
+            net.add_node(Role::Trainer),
+            net.add_node(Role::Trainer),
+        ];
+        let net = Arc::new(net);
+        let group = Arc::new(AllReduceGroup::new(3, 1));
+
+        let leavers: Vec<_> = [(nodes[1], 6.0f32), (nodes[2], 9.0f32)]
+            .into_iter()
+            .map(|(node, v)| {
+                let group = Arc::clone(&group);
+                let net = Arc::clone(&net);
+                thread::spawn(move || {
+                    let mut buf = [v];
+                    let r = group.allreduce_mean(&mut buf, node, &net).unwrap();
+                    assert_eq!((r.generation, r.contributors), (0, 3));
+                    assert_eq!(buf, [round1_mean]);
+                    group.leave();
+                })
+            })
+            .collect();
+
+        let mut buf = [3.0f32];
+        let r1 = group.allreduce_mean(&mut buf, nodes[0], &net).unwrap();
+        assert_eq!((r1.generation, r1.contributors), (0, 3));
+        assert_eq!(buf, [round1_mean]);
+        // round 2 may start before either leaver has read round 1 (or
+        // left); it must close the moment the membership drops to one
+        buf = [7.0];
+        let r2 = group.allreduce_mean(&mut buf, nodes[0], &net).unwrap();
+        assert_eq!((r2.generation, r2.contributors), (1, 1));
+        assert_eq!(buf, [7.0]);
+
+        for h in leavers {
+            h.join().unwrap();
+        }
+        assert_eq!(group.active(), 1);
+        assert_eq!(group.completed_rounds(), 2);
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+// ---------------------------------------------------------------------------
+// Model 3: dirty-epoch scan skip vs. a racing write and a racing peer push
+// ---------------------------------------------------------------------------
+
+/// The scan-skip invariant: a chunk may only reuse its cached gap while
+/// neither the local replica (dirty-epoch signature) nor the central copy
+/// (per-chunk version) changed — and both counters bump strictly *after*
+/// their stores, so once a write has settled (here: `join()`), no later
+/// round can skip over it. Mid-race rounds may legally reuse a scan for
+/// one round (documented transient); the post-join round must not, and
+/// the final values prove neither the worker write nor the peer push was
+/// ever lost to a stale skip.
+#[test]
+fn scan_skip_never_misses_a_settled_write() {
+    let stats = Model::new().clamp_preemptions(2).check(|| {
+        let mut net = Network::new(None);
+        let node_a = net.add_node(Role::Trainer);
+        let node_b = net.add_node(Role::Trainer);
+        let group =
+            Arc::new(SyncPsGroup::build(&[0.0, 0.0], 1, &mut net).with_push_chunking(1, 0.01));
+        let net = Arc::new(net);
+        let local_a = Arc::new(HogwildBuffer::from_slice(&[0.0, 0.0]).with_dirty_epochs(1));
+        let local_b = Arc::new(HogwildBuffer::from_slice(&[0.0, 2.0]));
+        let mut cache = DeltaScanCache::new();
+
+        // round 1, pre-race: converged, so both chunks scan cold and skip
+        let r1 = group.elastic_sync_cached(&local_a, 0.5, node_a, &net, &mut cache);
+        assert_eq!((r1.chunks_pushed, r1.chunks_skipped, r1.chunks_scan_skipped), (0, 2, 0));
+
+        // a Hogwild worker writes chunk 0 (element store, then the Release
+        // dirty bump — HogwildBuffer::set)
+        let writer = {
+            let local_a = Arc::clone(&local_a);
+            thread::spawn(move || local_a.set(0, 4.0))
+        };
+        // a peer trainer pushes chunk 1 centrally (elastic move, then the
+        // Release version bump); alpha=1 swaps local and central
+        let peer = {
+            let group = Arc::clone(&group);
+            let net = Arc::clone(&net);
+            let local_b = Arc::clone(&local_b);
+            thread::spawn(move || {
+                let mut scratch = DeltaScanCache::new();
+                let range = ParamRange { offset: 1, len: 1 };
+                let s = group
+                    .elastic_sync_partition(&local_b, range, 1.0, node_b, &net, &mut scratch, None);
+                assert_eq!(s.chunks_pushed, 1);
+            })
+        };
+        // round 2 races both: any reuse here is the one-round transient
+        group.elastic_sync_cached(&local_a, 0.5, node_a, &net, &mut cache);
+        writer.join().unwrap();
+        peer.join().unwrap();
+
+        // round 3, post-join: both bumps happened-before this scan, so
+        // neither chunk may reuse a stale entry...
+        let r3 = group.elastic_sync_cached(&local_a, 0.5, node_a, &net, &mut cache);
+        assert_eq!(r3.chunks_scan_skipped, 0);
+        assert!(!cache.scan_skipped(0) && !cache.scan_skipped(1));
+        // ...and by now each dirty chunk was pushed exactly once in *some*
+        // round — these finals only hold if no schedule ever lost a write
+        assert_eq!((group.central.get(0), group.central.get(1)), (2.0, 1.0));
+        assert_eq!((local_a.get(0), local_a.get(1)), (2.0, 1.0));
+        assert_eq!(local_b.get(1), 0.0);
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+// ---------------------------------------------------------------------------
+// Model 4: repartition adopt/depart handshake
+// ---------------------------------------------------------------------------
+
+/// Two trainers sweep, adopt the generation-1 epoch, and race toward
+/// generation 2 — except one departs while still on generation 1. In
+/// every interleaving: at most one epoch is ever pending (the
+/// `adopt(prev_gen)` one-behind assert runs inside the model), the
+/// leaver's slots in a pending epoch's groups are vacated, and the
+/// survivor's singleton rounds on the new fabric complete instead of
+/// waiting on the ghost — a lost `leave()` surfaces as a modeled
+/// deadlock.
+#[test]
+fn repartition_adopt_depart_handshake() {
+    let stats = Model::new().clamp_preemptions(2).check(|| {
+        let cfg = RunConfig {
+            num_trainers: 2,
+            sync_partitions: 2,
+            repartition_every: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Ma,
+            num_sync_ps: 0,
+            ..RunConfig::default()
+        };
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let _peer_node = net.add_node(Role::Trainer);
+        let net = Arc::new(net);
+        let plan = PartitionPlan::build(16, &cfg).unwrap();
+        let groups = plan
+            .partitions
+            .iter()
+            .map(|p| Some(Arc::new(AllReduceGroup::new(2, p.range.len))))
+            .collect();
+        let ctrl = Arc::new(RepartitionController::new(&cfg, 16, None, plan, groups));
+
+        let survivor = {
+            let ctrl = Arc::clone(&ctrl);
+            let net = Arc::clone(&net);
+            thread::spawn(move || {
+                ctrl.record_sweep(&[1, 0]);
+                while ctrl.generation() == 0 {
+                    thread::yield_now();
+                }
+                let e1 = ctrl.adopt(0);
+                assert_eq!(e1.gen, 1);
+                ctrl.record_sweep(&[0, 1]);
+                while ctrl.generation() == 1 {
+                    thread::yield_now();
+                }
+                let e2 = ctrl.adopt(1);
+                assert_eq!(e2.gen, 2);
+                // liveness on the adopted fabric: whether the peer departed
+                // before the rebuild (groups sized 1) or after (sized 2,
+                // then vacated), singleton rounds must complete
+                for (part, g) in e2.plan.partitions.iter().zip(&e2.groups) {
+                    let g = g.as_ref().expect("MA partitions carry a ring group");
+                    let mut buf = vec![1.5f32; part.range.len];
+                    let r = g.allreduce_mean(&mut buf, node, &net).unwrap();
+                    assert_eq!(r.contributors, 1);
+                    assert!(buf.iter().all(|&x| x == 1.5));
+                }
+                ctrl.depart(2);
+            })
+        };
+        let leaver = {
+            let ctrl = Arc::clone(&ctrl);
+            thread::spawn(move || {
+                ctrl.record_sweep(&[1, 0]);
+                while ctrl.generation() == 0 {
+                    thread::yield_now();
+                }
+                let e1 = ctrl.adopt(0);
+                assert_eq!(e1.gen, 1);
+                ctrl.record_sweep(&[0, 1]);
+                // depart while still on generation 1: if generation 2 is
+                // already pending, our slots in its groups vacate here
+                ctrl.depart(1);
+            })
+        };
+        survivor.join().unwrap();
+        leaver.join().unwrap();
+
+        assert_eq!(ctrl.current_epoch().gen, 2);
+        assert_eq!(ctrl.repartitions(), 2);
+        for g in ctrl.current_epoch().groups.iter().flatten() {
+            assert_eq!(g.active(), 1);
+        }
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+// ---------------------------------------------------------------------------
+// Mutation pair A: the PR-1 generation race, distilled
+// ---------------------------------------------------------------------------
+//
+// Before the epoch-tagged cursor, the reduce used a plain chunk-index
+// cursor that was reset to 0 at every round close, and "all chunks
+// claimed" was treated as "round done". Two distinct corruptions hide in
+// that accounting, both found below: a helper that claimed a chunk but
+// hasn't folded yet starves the closing round's mean, and — the ABA — a
+// helper holding a stale index observes the *reset* cursor back at its
+// expected value, so its claim of round N's chunk succeeds against round
+// N+1 and folds round-N data into round N+1's sum. The fixed twin carries
+// the two ingredients the real engine ships (`pack_cursor` epoch tags +
+// the `chunks_done` fold counter) and passes exhaustively; the churn
+// model above pins the same guarantee on the real `AllReduceGroup`.
+
+const ROUND1: [f32; 2] = [4.0, 2.0];
+const ROUND2: [f32; 2] = [8.0, 6.0];
+
+#[test]
+fn untagged_claim_cursor_race_is_caught() {
+    assert!(
+        model_finds_bug(|| {
+            let cursor = Arc::new(AtomicUsize::new(0));
+            let sum = Arc::new(Mutex::new(0.0f32));
+            let helper = {
+                let cursor = Arc::clone(&cursor);
+                let sum = Arc::clone(&sum);
+                // one help_reduce-style claim attempt against round 1
+                thread::spawn(move || {
+                    let cur = cursor.load(SeqCst);
+                    if cur < 2 && cursor.compare_exchange(cur, cur + 1, SeqCst, SeqCst).is_ok() {
+                        *sum.lock().unwrap() += ROUND1[cur];
+                    }
+                })
+            };
+            for (round, src) in [ROUND1, ROUND2].into_iter().enumerate() {
+                if round > 0 {
+                    // old accounting: reset the plain-index cursor — the
+                    // window the stale helper's ABA claim sneaks through
+                    cursor.store(0, SeqCst);
+                    *sum.lock().unwrap() = 0.0;
+                }
+                loop {
+                    let cur = cursor.load(SeqCst);
+                    if cur >= 2 {
+                        break;
+                    }
+                    if cursor.compare_exchange(cur, cur + 1, SeqCst, SeqCst).is_ok() {
+                        *sum.lock().unwrap() += src[cur];
+                    }
+                }
+                // old accounting: "all claimed" == "round done"
+                let mean = *sum.lock().unwrap() / 2.0;
+                let want = (src[0] + src[1]) / 2.0;
+                assert!((mean - want).abs() < 1e-6, "round {round} mean {mean} != {want}");
+            }
+            helper.join().unwrap();
+        }),
+        "the untagged cursor's generation race must be caught"
+    );
+}
+
+/// Pack a claim cursor exactly like `sync::allreduce::pack_cursor`.
+fn pack(round: u64, idx: usize) -> u64 {
+    (round << 32) | idx as u64
+}
+
+#[test]
+fn epoch_tagged_fold_counted_cursor_is_safe() {
+    model(|| {
+        let cursor = Arc::new(AtomicU64::new(pack(1, 0)));
+        let folded = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(Mutex::new(0.0f32));
+        let helper = {
+            let cursor = Arc::clone(&cursor);
+            let folded = Arc::clone(&folded);
+            let sum = Arc::clone(&sum);
+            thread::spawn(move || loop {
+                let cur = cursor.load(SeqCst);
+                if cur >> 32 != 1 {
+                    break; // a different round owns the cursor; stand down
+                }
+                let idx = (cur & 0xFFFF_FFFF) as usize;
+                if idx >= 2 {
+                    break;
+                }
+                if cursor.compare_exchange(cur, cur + 1, SeqCst, SeqCst).is_err() {
+                    continue;
+                }
+                *sum.lock().unwrap() += ROUND1[idx];
+                folded.fetch_add(1, SeqCst);
+            })
+        };
+        for (round, src) in [(1u64, ROUND1), (2, ROUND2)] {
+            if round > 1 {
+                cursor.store(pack(round, 0), SeqCst);
+                *sum.lock().unwrap() = 0.0;
+                // safe to reset: close-on-folded below means every round-1
+                // fold (helper's included) completed before we got here
+                folded.store(0, SeqCst);
+            }
+            loop {
+                let cur = cursor.load(SeqCst);
+                let idx = (cur & 0xFFFF_FFFF) as usize;
+                if idx >= 2 {
+                    break;
+                }
+                if cursor.compare_exchange(cur, cur + 1, SeqCst, SeqCst).is_ok() {
+                    *sum.lock().unwrap() += src[idx];
+                    folded.fetch_add(1, SeqCst);
+                }
+            }
+            // fixed accounting: close on folds, not on claims
+            while folded.load(SeqCst) < 2 {
+                thread::yield_now();
+            }
+            let mean = *sum.lock().unwrap() / 2.0;
+            let want = (src[0] + src[1]) / 2.0;
+            assert!((mean - want).abs() < 1e-6, "round {round} mean {mean} != {want}");
+        }
+        helper.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Mutation pair B: the dirty-epoch bump's Release ordering is load-bearing
+// ---------------------------------------------------------------------------
+
+/// `HogwildBuffer::set` distilled to one cell: a relaxed element store
+/// followed by the dirty-epoch bump. A scanner that observes the bump
+/// must observe the store behind it — that is the entire contract the
+/// scan-skip cache leans on.
+fn dirty_cell(bump: shadowsync::sync::prim::Ordering) {
+    let data = Arc::new(AtomicU32::new(0.0f32.to_bits()));
+    let epoch = Arc::new(AtomicU64::new(0));
+    let writer = {
+        let data = Arc::clone(&data);
+        let epoch = Arc::clone(&epoch);
+        thread::spawn(move || {
+            data.store(4.0f32.to_bits(), Relaxed); // the element store
+            epoch.fetch_add(1, bump); // DirtyEpochs::mark
+        })
+    };
+    if epoch.load(Acquire) == 1 {
+        assert_eq!(f32::from_bits(data.load(Relaxed)), 4.0, "bump visible but store lost");
+    }
+    writer.join().unwrap();
+}
+
+#[test]
+fn relaxed_dirty_bump_is_caught() {
+    // weakened mutant: under the store-buffer model a Relaxed RMW drains
+    // only its own cell, so the element store can still be in flight when
+    // the epoch bump lands — and the checker finds that schedule
+    assert!(
+        model_finds_bug(|| dirty_cell(Relaxed)),
+        "a Relaxed dirty bump must be caught by the checker"
+    );
+}
+
+#[test]
+fn release_dirty_bump_is_safe() {
+    // the shipped ordering: the Release bump publishes the store
+    model(|| dirty_cell(Release));
+}

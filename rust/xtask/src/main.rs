@@ -1,0 +1,808 @@
+//! Repo-local concurrency lints for the shadow-sync fabric.
+//!
+//! `cargo run -p xtask -- lint` walks `rust/src/**` and enforces the
+//! invariants that `rustc` cannot see but the fabric's correctness
+//! arguments (docs/CONCURRENCY.md, rust/tests/loom_models.rs) rely on:
+//!
+//! 1. **relaxed-ordering** — no `Ordering::Relaxed` on any atomic whose
+//!    identifier is in the version/epoch/generation counter registry
+//!    ([`RELAXED_REGISTRY`]). Those counters publish cross-thread happens-
+//!    before edges; a Relaxed store/RMW on one is exactly the bug class the
+//!    loom mutation models (`relaxed_dirty_bump_is_caught`) demonstrate.
+//!    Deliberate exceptions live in [`RELAXED_ALLOWLIST`] with their
+//!    justification.
+//! 2. **std-sync-import** — no direct `std::sync` / `std::thread` paths in
+//!    `src/sync/**` or `src/tensor/**` (outside `#[cfg(test)]`): all
+//!    primitives must go through the `sync::prim` facade so the loom cfg
+//!    swaps them onto the model checker.
+//! 3. **hogwild-mark-dirty** — every public `HogwildBuffer` method that
+//!    stores into the shared buffer must call `mark_dirty_range` (the
+//!    dirty-epoch bump helper); a write path that skips the bump silently
+//!    breaks the delta gate's scan-skip cache and the repartitioner's
+//!    measured write rates.
+//! 4. **unsafe-needs-safety** — every `unsafe` token carries a `SAFETY:`
+//!    comment on the same line or within the three lines above it.
+//! 5. **concurrency-doc** — every registry identifier appears in
+//!    docs/CONCURRENCY.md, so the ordering table and the lint registry
+//!    cannot drift apart.
+//!
+//! The binary is dependency-free on purpose: a hand-rolled,
+//! length-preserving lexer ([`strip`]) blanks comments and string/char
+//! literals (so text inside them never trips a lint) while keeping byte
+//! offsets and line numbers identical to the raw source.
+
+#![forbid(unsafe_code)]
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Atomic counter identifiers that carry happens-before edges between
+/// threads. Any `Relaxed` access to one of these is a lint violation
+/// unless allowlisted. Kept in sync with docs/CONCURRENCY.md (lint 5).
+const RELAXED_REGISTRY: &[&str] = &[
+    "gen",            // repartition plan generation (RepartitionController)
+    "adopted_gen",    // per-trainer adopted plan generation
+    "generation",     // allreduce round generation (StripedState)
+    "chunk_versions", // central per-chunk push versions (SyncPsGroup)
+    "epochs",         // per-chunk dirty epochs (DirtyEpochs)
+    "chunks_done",    // allreduce folded-chunk counter
+    "cursor",         // allreduce epoch-tagged claim cursor / sketch ring index
+    "filled",         // quantile-sketch filled watermark
+];
+
+/// A deliberately-Relaxed use of a registry identifier, with the argument
+/// for why it is benign. Surfaced verbatim in the lint's `--explain`-style
+/// output so the exception is as visible as the rule.
+struct AllowEntry {
+    /// matched as a suffix of the repo-relative path (forward slashes)
+    file_suffix: &'static str,
+    ident: &'static str,
+    reason: &'static str,
+}
+
+const RELAXED_ALLOWLIST: &[AllowEntry] = &[
+    AllowEntry {
+        file_suffix: "src/sync/ps.rs",
+        ident: "cursor",
+        reason: "quantile-sketch ring index: slot choice under contention is \
+                 deliberately racy; two recorders sharing a slot merely drop a \
+                 sample, and the sketch is an estimator",
+    },
+    AllowEntry {
+        file_suffix: "src/sync/ps.rs",
+        ident: "filled",
+        reason: "overshoot-guard load: `filled` is published by a Release \
+                 fetch_add, so a Relaxed read can only under-count, which \
+                 keeps the guard conservative",
+    },
+];
+
+/// Substrings (on lexed text) that mean a `HogwildBuffer` method writes
+/// into the shared element array.
+const HOGWILD_WRITE_MARKERS: &[&str] = &[".store(", "store_unmarked(", "compare_exchange"];
+const HOGWILD_BUMP_HELPER: &str = "mark_dirty_range(";
+
+#[derive(Debug, PartialEq)]
+struct Violation {
+    file: String,
+    line: usize,
+    lint: &'static str,
+    msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: length-preserving comment/string stripping
+// ---------------------------------------------------------------------------
+
+/// Blank comments, string literals, and char literals out of `src`,
+/// replacing every byte except `\n` with a space, so the output has the
+/// same length and line structure as the input. Handles nested block
+/// comments, escapes, raw strings (`r"…"`, `r#"…"#`), byte strings, and
+/// the char-vs-lifetime ambiguity (`'a'` is a char; `&'a` is not).
+fn strip(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let blank = |out: &mut [u8], lo: usize, hi: usize| {
+        for x in &mut out[lo..hi] {
+            if *x != b'\n' {
+                *x = b' ';
+            }
+        }
+    };
+    let is_ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if j + 1 < n && b[j] == b'/' && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if j + 1 < n && b[j] == b'*' && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j.min(n));
+            i = j;
+        } else if (c == b'r' || c == b'b') && (i == 0 || !is_ident(b[i - 1])) {
+            if let Some((hashes, body_start)) = raw_string_open(b, i) {
+                // raw (byte) string: closed by `"` followed by `hashes` #s
+                let close = format!("\"{}", "#".repeat(hashes));
+                let j = match src[body_start..].find(&close) {
+                    Some(r) => body_start + r + close.len(),
+                    None => n,
+                };
+                blank(&mut out, i, j);
+                i = j;
+            } else if c == b'b' && i + 1 < n && b[i + 1] == b'"' {
+                // byte string: reuse the plain-string scan from the quote
+                let mut j = i + 2;
+                while j < n {
+                    if b[j] == b'\\' {
+                        j += 2;
+                    } else if b[j] == b'"' {
+                        j += 1;
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut out, i, j.min(n));
+                i = j;
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            // char literal iff `'\…'` or `'x'`; otherwise a lifetime
+            let is_char = (i + 1 < n && b[i + 1] == b'\\')
+                || (i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'');
+            if is_char {
+                let mut j = i + 1;
+                while j < n {
+                    if b[j] == b'\\' {
+                        j += 2;
+                    } else if b[j] == b'\'' {
+                        j += 1;
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut out, i, j.min(n));
+                i = j;
+            } else {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    String::from_utf8(out).expect("blanking ASCII bytes keeps the source valid UTF-8")
+}
+
+/// If `b[i..]` opens a raw (byte) string (`r"`, `r#"`, `br#"` …), return
+/// `(hash_count, index_past_opening_quote)`.
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + 1;
+    if b[i] == b'b' {
+        if j < b.len() && b[j] == b'r' {
+            j += 1;
+        } else {
+            return None;
+        }
+    }
+    let mut hashes = 0;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Byte offset of the start of each line (for pos → line mapping).
+fn line_starts(src: &str) -> Vec<usize> {
+    let mut v = vec![0];
+    for (i, c) in src.bytes().enumerate() {
+        if c == b'\n' {
+            v.push(i + 1);
+        }
+    }
+    v
+}
+
+fn line_of(starts: &[usize], pos: usize) -> usize {
+    starts.partition_point(|&s| s <= pos)
+}
+
+/// Byte spans of `#[cfg(test)]`-gated items (attribute through the
+/// matching close brace), computed on lexed text so commented-out
+/// attributes don't count.
+fn test_spans(stripped: &str) -> Vec<(usize, usize)> {
+    let b = stripped.as_bytes();
+    let mut spans = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = stripped[from..].find("#[cfg(test)]") {
+        let start = from + rel;
+        // first `{` after the attribute opens the gated item's body
+        let Some(open_rel) = stripped[start..].find('{') else { break };
+        let open = start + open_rel;
+        let mut depth = 0usize;
+        let mut end = stripped.len();
+        for (k, &c) in b[open..].iter().enumerate() {
+            if c == b'{' {
+                depth += 1;
+            } else if c == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    end = open + k + 1;
+                    break;
+                }
+            }
+        }
+        spans.push((start, end));
+        from = end;
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], pos: usize) -> bool {
+    spans.iter().any(|&(lo, hi)| pos >= lo && pos < hi)
+}
+
+/// Identifiers on a line: maximal `[A-Za-z0-9_]+` runs that don't start
+/// with a digit.
+fn idents(line: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let b = line.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i].is_ascii_alphabetic() || b[i] == b'_' {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            out.push(&line[start..i]);
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// `needle` present in `hay` as a path/token (previous byte is not part of
+/// an identifier)? Enough to tell `std::sync` from `mystd::sync`.
+fn path_token(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        let ok = at == 0 || {
+            let p = hay.as_bytes()[at - 1];
+            !(p.is_ascii_alphanumeric() || p == b'_')
+        };
+        if ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// One parsed source file
+// ---------------------------------------------------------------------------
+
+struct FileData {
+    /// path relative to `rust/`, forward slashes (e.g. `src/sync/ps.rs`)
+    rel: String,
+    raw: String,
+    stripped: String,
+    spans: Vec<(usize, usize)>,
+    starts: Vec<usize>,
+}
+
+impl FileData {
+    fn new(rel: &str, raw: &str) -> Self {
+        let stripped = strip(raw);
+        let spans = test_spans(&stripped);
+        let starts = line_starts(raw);
+        Self { rel: rel.to_string(), raw: raw.to_string(), stripped, spans, starts }
+    }
+
+    /// Lexed lines with (1-based line number, byte offset of line start).
+    fn code_lines(&self) -> impl Iterator<Item = (usize, usize, &str)> {
+        self.stripped
+            .lines()
+            .scan(0usize, |off, l| {
+                let start = *off;
+                *off += l.len() + 1;
+                Some((start, l))
+            })
+            .enumerate()
+            .map(|(i, (start, l))| (i + 1, start, l))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lints
+// ---------------------------------------------------------------------------
+
+fn lint_relaxed(f: &FileData) -> Vec<Violation> {
+    if !f.rel.starts_with("src/") || f.rel.starts_with("src/mc/") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (line_no, start, line) in f.code_lines() {
+        if in_spans(&f.spans, start) {
+            continue;
+        }
+        let ids = idents(line);
+        if !ids.contains(&"Relaxed") {
+            continue;
+        }
+        for reg in RELAXED_REGISTRY {
+            if !ids.contains(reg) {
+                continue;
+            }
+            let allowed = RELAXED_ALLOWLIST
+                .iter()
+                .any(|a| a.ident == *reg && f.rel.ends_with(a.file_suffix));
+            if !allowed {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: line_no,
+                    lint: "relaxed-ordering",
+                    msg: format!(
+                        "`{reg}` is a registered happens-before counter; use \
+                         Acquire/Release/SeqCst or add an allowlist entry with a \
+                         justification (see docs/CONCURRENCY.md)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn lint_std_sync(f: &FileData) -> Vec<Violation> {
+    let scoped = (f.rel.starts_with("src/sync/") || f.rel.starts_with("src/tensor/"))
+        && f.rel != "src/sync/prim.rs";
+    if !scoped {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (line_no, start, line) in f.code_lines() {
+        if in_spans(&f.spans, start) {
+            continue;
+        }
+        for needle in ["std::sync", "std::thread"] {
+            if path_token(line, needle) {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: line_no,
+                    lint: "std-sync-import",
+                    msg: format!(
+                        "direct `{needle}` in the fabric; go through `sync::prim` \
+                         so the loom cfg can swap in the model checker"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn lint_hogwild(f: &FileData) -> Vec<Violation> {
+    if f.rel != "src/tensor/mod.rs" {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let Some(impl_at) = f.stripped.find("impl HogwildBuffer") else {
+        return out;
+    };
+    let Some(open_rel) = f.stripped[impl_at..].find('{') else {
+        return out;
+    };
+    let body = match brace_span(&f.stripped, impl_at + open_rel) {
+        Some((lo, hi)) => &f.stripped[lo..hi],
+        None => return out,
+    };
+    let body_off = impl_at + open_rel;
+    let mut from = 0;
+    while let Some(rel) = body[from..].find("pub fn ") {
+        let at = from + rel;
+        let name: String = body[at + 7..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        let Some(fn_open_rel) = body[at..].find('{') else { break };
+        let Some((lo, hi)) = brace_span(body, at + fn_open_rel) else { break };
+        let fn_body = &body[lo..hi];
+        let writes = HOGWILD_WRITE_MARKERS.iter().any(|m| fn_body.contains(m));
+        if writes && !fn_body.contains(HOGWILD_BUMP_HELPER) {
+            out.push(Violation {
+                file: f.rel.clone(),
+                line: line_of(&f.starts, body_off + at),
+                lint: "hogwild-mark-dirty",
+                msg: format!(
+                    "pub fn `{name}` stores into the shared buffer without calling \
+                     `mark_dirty_range`; the delta gate's scan cache and the \
+                     repartitioner's write rates would miss these writes"
+                ),
+            });
+        }
+        from = hi;
+    }
+    out
+}
+
+/// Span of the brace-delimited block opening at `open` (byte index of a
+/// `{` in lexed text): `(open, index_past_close)`.
+fn brace_span(stripped: &str, open: usize) -> Option<(usize, usize)> {
+    let b = stripped.as_bytes();
+    debug_assert_eq!(b[open], b'{');
+    let mut depth = 0usize;
+    for (k, &c) in b[open..].iter().enumerate() {
+        if c == b'{' {
+            depth += 1;
+        } else if c == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some((open, open + k + 1));
+            }
+        }
+    }
+    None
+}
+
+fn lint_unsafe(f: &FileData) -> Vec<Violation> {
+    if !f.rel.starts_with("src/") {
+        return Vec::new();
+    }
+    let raw_lines: Vec<&str> = f.raw.lines().collect();
+    let mut out = Vec::new();
+    for (line_no, _start, line) in f.code_lines() {
+        if !idents(line).contains(&"unsafe") {
+            continue;
+        }
+        // same line or up to three lines above, on RAW text (the comment
+        // the lexer blanks is exactly what we are looking for)
+        let lo = line_no.saturating_sub(4); // 0-based index of line_no-3
+        let covered = raw_lines[lo..line_no].iter().any(|l| l.contains("SAFETY:"));
+        if !covered {
+            out.push(Violation {
+                file: f.rel.clone(),
+                line: line_no,
+                lint: "unsafe-needs-safety",
+                msg: "`unsafe` without a `// SAFETY:` comment on the same line or \
+                      within the three lines above"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Registry identifiers missing from the CONCURRENCY.md text.
+fn missing_doc_idents(doc: &str) -> Vec<&'static str> {
+    let ids: std::collections::HashSet<&str> = idents(doc).into_iter().collect();
+    RELAXED_REGISTRY.iter().copied().filter(|r| !ids.contains(r)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut entries: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Repo root, derived from this crate's fixed location at `<repo>/rust/xtask`.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(Path::parent)
+        .expect("xtask sits at <repo>/rust/xtask")
+        .to_path_buf()
+}
+
+/// Run every lint over `<repo>/rust/src/**` plus the doc cross-check.
+/// Returns `(files_scanned, violations)`.
+fn collect_violations(repo: &Path) -> Result<(usize, Vec<Violation>), String> {
+    let rust_dir = repo.join("rust");
+    let mut files = Vec::new();
+    walk_rs(&rust_dir.join("src"), &mut files);
+    let mut violations = Vec::new();
+    let mut scanned = 0usize;
+    for path in &files {
+        let raw = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(&rust_dir)
+            .expect("walked under rust/")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let fd = FileData::new(&rel, &raw);
+        scanned += 1;
+        violations.extend(lint_relaxed(&fd));
+        violations.extend(lint_std_sync(&fd));
+        violations.extend(lint_hogwild(&fd));
+        violations.extend(lint_unsafe(&fd));
+    }
+    match std::fs::read_to_string(repo.join("docs/CONCURRENCY.md")) {
+        Ok(doc) => {
+            for ident in missing_doc_idents(&doc) {
+                violations.push(Violation {
+                    file: "docs/CONCURRENCY.md".to_string(),
+                    line: 1,
+                    lint: "concurrency-doc",
+                    msg: format!(
+                        "registry counter `{ident}` has no entry in the atomics \
+                         table; document its ordering and invariant"
+                    ),
+                });
+            }
+        }
+        Err(_) => violations.push(Violation {
+            file: "docs/CONCURRENCY.md".to_string(),
+            line: 1,
+            lint: "concurrency-doc",
+            msg: "missing: the atomics/ordering table must exist and cover the \
+                  lint registry"
+                .to_string(),
+        }),
+    }
+    Ok((scanned, violations))
+}
+
+fn run_lint() -> ExitCode {
+    let (scanned, violations) = match collect_violations(&repo_root()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if violations.is_empty() {
+        println!("xtask lint: OK ({scanned} files, 5 lints, 0 violations)");
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("xtask lint: {} violation(s) in {scanned} files", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests: the lexer, and every lint against seeded violations
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd(rel: &str, src: &str) -> FileData {
+        FileData::new(rel, src)
+    }
+
+    #[test]
+    fn strip_blanks_comments_and_strings_preserving_length() {
+        let src =
+            "let a = 1; // Relaxed cursor\nlet s = \"Relaxed cursor\";\n/* gen */ let b = 2;\n";
+        let out = strip(src);
+        assert_eq!(out.len(), src.len());
+        assert_eq!(out.matches('\n').count(), src.matches('\n').count());
+        assert!(!out.contains("Relaxed"));
+        assert!(!out.contains("gen"));
+        assert!(out.contains("let a = 1;"));
+        assert!(out.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn strip_handles_raw_strings_chars_and_lifetimes() {
+        let src = "let r = r#\"cursor \"quoted\" gen\"#; let c = '\\''; let l: &'static str = x;";
+        let out = strip(src);
+        assert_eq!(out.len(), src.len());
+        assert!(!out.contains("cursor"));
+        assert!(!out.contains("quoted"));
+        // the lifetime must survive (it is code, not a literal)
+        assert!(out.contains("&'static str"));
+    }
+
+    #[test]
+    fn strip_handles_nested_block_comments() {
+        let src = "a /* x /* y */ cursor */ b";
+        let out = strip(src);
+        assert!(!out.contains("cursor"));
+        assert!(out.starts_with('a') && out.ends_with('b'));
+    }
+
+    #[test]
+    fn test_spans_cover_gated_modules() {
+        let src =
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn gated() {}\n}\nfn also_live() {}\n";
+        let stripped = strip(src);
+        let spans = test_spans(&stripped);
+        assert_eq!(spans.len(), 1);
+        let gated_at = src.find("gated").unwrap();
+        assert!(in_spans(&spans, gated_at));
+        assert!(!in_spans(&spans, src.find("live").unwrap()));
+        assert!(!in_spans(&spans, src.find("also_live").unwrap()));
+    }
+
+    #[test]
+    fn relaxed_lint_catches_registry_counters() {
+        let f = fd(
+            "src/sync/repartition.rs",
+            "fn bump(&self) {\n    self.generation.fetch_add(1, Ordering::Relaxed);\n}\n",
+        );
+        let v = lint_relaxed(&f);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 2);
+        assert_eq!(v[0].lint, "relaxed-ordering");
+        assert!(v[0].msg.contains("generation"));
+    }
+
+    #[test]
+    fn relaxed_lint_ignores_unregistered_counters_comments_and_tests() {
+        let src = "fn ok(&self) {\n    // the cursor comment mentions Relaxed harmlessly\n    \
+                   self.batches.fetch_add(1, Relaxed);\n}\n#[cfg(test)]\nmod tests {\n    fn t() \
+                   { x.generation.load(Relaxed); }\n}\n";
+        let f = fd("src/metrics/mod.rs", src);
+        assert!(lint_relaxed(&f).is_empty());
+    }
+
+    #[test]
+    fn relaxed_lint_honors_the_allowlist() {
+        let src = "fn rec(&self) {\n    let i = self.cursor.fetch_add(1, Relaxed);\n    let n = \
+                   self.filled.load(Relaxed);\n}\n";
+        assert!(lint_relaxed(&fd("src/sync/ps.rs", src)).is_empty());
+        // the same code anywhere else is a violation
+        assert_eq!(lint_relaxed(&fd("src/sync/allreduce.rs", src)).len(), 2);
+    }
+
+    #[test]
+    fn relaxed_lint_skips_the_model_checker_itself() {
+        let f = fd("src/mc/atomic.rs", "self.cursor.load(Relaxed);\n");
+        assert!(lint_relaxed(&f).is_empty());
+    }
+
+    #[test]
+    fn std_sync_lint_flags_direct_imports_outside_tests() {
+        let src = "use std::sync::Mutex;\nfn f() { std::thread::spawn(|| {}); }\n#[cfg(test)]\n\
+                   mod tests {\n    use std::sync::Arc;\n}\n";
+        let v = lint_std_sync(&fd("src/sync/driver.rs", src));
+        assert_eq!(v.len(), 2);
+        assert_eq!((v[0].line, v[1].line), (1, 2));
+        // prim.rs is the facade: exempt
+        assert!(lint_std_sync(&fd("src/sync/prim.rs", src)).is_empty());
+        // out-of-scope modules may use std directly
+        assert!(lint_std_sync(&fd("src/metrics/mod.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn hogwild_lint_requires_the_dirty_bump() {
+        let src = "impl HogwildBuffer {\n    pub fn set(&self, i: usize, v: f32) {\n        \
+                   self.data[i].store(v.to_bits(), Relaxed);\n        self.mark_dirty_range(i, i \
+                   + 1);\n    }\n    pub fn sneaky(&self, i: usize, v: f32) {\n        \
+                   self.data[i].store(v.to_bits(), Relaxed);\n    }\n    pub fn get(&self, i: \
+                   usize) -> f32 {\n        f32::from_bits(self.data[i].load(Relaxed))\n    }\n}\n";
+        let v = lint_hogwild(&fd("src/tensor/mod.rs", src));
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("sneaky"));
+        // only tensor/mod.rs hosts the impl
+        assert!(lint_hogwild(&fd("src/sync/ps.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn unsafe_lint_wants_an_adjacent_safety_comment() {
+        let bad = "fn f() {\n    let p = x.as_ptr();\n    unsafe { *p }\n}\n";
+        let v = lint_unsafe(&fd("src/runtime/pjrt.rs", bad));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 3);
+        let good = "fn f() {\n    let p = x.as_ptr();\n    // SAFETY: x outlives this call\n    \
+                    unsafe { *p }\n}\n";
+        assert!(lint_unsafe(&fd("src/runtime/pjrt.rs", good)).is_empty());
+        let same_line = "unsafe impl Send for T {} // SAFETY: T is a plain counter\n";
+        assert!(lint_unsafe(&fd("src/mc/sync.rs", same_line)).is_empty());
+        // UnsafeCell is an identifier, not the keyword
+        assert!(lint_unsafe(&fd("src/mc/atomic.rs", "use std::cell::UnsafeCell;\n")).is_empty());
+    }
+
+    #[test]
+    fn allowlist_entries_are_registered_and_justified() {
+        for a in RELAXED_ALLOWLIST {
+            assert!(
+                RELAXED_REGISTRY.contains(&a.ident),
+                "allowlisted `{}` is not a registry counter",
+                a.ident
+            );
+            assert!(
+                a.reason.len() > 40,
+                "allowlist entry `{}` needs a real written justification",
+                a.ident
+            );
+        }
+    }
+
+    #[test]
+    fn doc_lint_cross_checks_the_registry() {
+        let full = RELAXED_REGISTRY.join(" | ");
+        assert!(missing_doc_idents(&full).is_empty());
+        let missing = missing_doc_idents("only `cursor` and `gen` documented");
+        assert!(!missing.is_empty());
+        assert!(missing.contains(&"filled"));
+        assert!(!missing.contains(&"cursor"));
+    }
+
+    /// The real tree must be lint-clean: this is the acceptance check that
+    /// `cargo run -p xtask -- lint` passes, wired into `cargo test`.
+    #[test]
+    fn real_tree_is_clean() {
+        let (scanned, violations) = collect_violations(&repo_root()).expect("readable tree");
+        assert!(scanned > 30, "expected to scan the whole library, got {scanned} files");
+        assert!(
+            violations.is_empty(),
+            "tree has lint violations:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
