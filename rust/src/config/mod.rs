@@ -162,6 +162,30 @@ pub struct AlgoMap {
 }
 
 impl AlgoMap {
+    /// Build a map directly from `(algo, lo, hi)` entries — the health
+    /// controller republishes demoted/promoted maps this way instead of
+    /// round-tripping through the string form. Same invariants as
+    /// [`FromStr`](std::str::FromStr): non-empty, non-overlapping,
+    /// non-reversed ranges.
+    pub fn from_entries(entries: Vec<(SyncAlgo, usize, usize)>) -> Result<Self> {
+        if entries.is_empty() {
+            bail!("empty algo map");
+        }
+        if entries.iter().any(|(_, lo, hi)| lo > hi) {
+            bail!("algo-map range is reversed");
+        }
+        let map = Self { entries };
+        if map.overlaps() {
+            bail!("algo-map partition ranges overlap");
+        }
+        Ok(map)
+    }
+
+    /// The `(algo, lo, hi)` entries (inclusive partition-index ranges).
+    pub fn entries(&self) -> &[(SyncAlgo, usize, usize)] {
+        &self.entries
+    }
+
     /// The algorithm mapped to `partition`, if any entry covers it.
     pub fn algo_for(&self, partition: usize) -> Option<SyncAlgo> {
         self.entries
@@ -380,6 +404,29 @@ pub struct RunConfig {
     /// inject simulated wire latency per network transfer (quality runs
     /// leave this off; see `sim/` for throughput modelling)
     pub simulate_network: bool,
+    /// seeded fault schedule (`--fault-plan`, see [`crate::net::FaultPlan`]
+    /// for the grammar); None = the fabric is perfect
+    pub fault_plan: Option<String>,
+    /// bounded retries per EASGD push leg when a transfer faults (a chunk
+    /// whose retries are exhausted is skipped and feeds the skip metrics)
+    pub push_retries: u32,
+    /// initial backoff between push retries, doubling per attempt
+    pub push_backoff_ms: u64,
+    /// ring-AllReduce round timeout: a member that fails to deposit within
+    /// this window is evicted (treated as a `leave()`) so survivors re-form
+    /// and keep bit-deterministic means (0 = wait forever)
+    pub allreduce_timeout_ms: u64,
+    /// lap-time heartbeat watchdog: a trainer whose shadow pool has not
+    /// heartbeated for this long is departed from all groups and any
+    /// pending repartition generation (0 = no watchdog)
+    pub heartbeat_timeout_ms: u64,
+    /// straggler-adaptive algorithm switching: demote a rendezvous
+    /// (MA/BMUF) partition to EASGD when a straggler stalls its rounds,
+    /// promote back when healthy (shadow mode; needs a sync-PS tier)
+    pub health_adaptive: bool,
+    /// a trainer is a straggler when its EWMA lap time exceeds this factor
+    /// times the cluster median
+    pub health_stall_factor: f64,
 }
 
 impl Default for RunConfig {
@@ -417,6 +464,13 @@ impl Default for RunConfig {
             dirty_epoch_scan: true,
             collective_wire_ms: 0,
             simulate_network: false,
+            fault_plan: None,
+            push_retries: 3,
+            push_backoff_ms: 1,
+            allreduce_timeout_ms: 0,
+            heartbeat_timeout_ms: 0,
+            health_adaptive: false,
+            health_stall_factor: 4.0,
         }
     }
 }
@@ -476,6 +530,52 @@ impl RunConfig {
         }
         if !self.delta_skip_target.is_finite() || !(0.0..1.0).contains(&self.delta_skip_target) {
             bail!("delta_skip_target must be in [0, 1) (0 = fixed-threshold mode)");
+        }
+        if let Some(spec) = &self.fault_plan {
+            let plan = crate::net::FaultPlan::parse(spec, self.data_seed)
+                .context("parsing --fault-plan")?;
+            if plan.trainers_referenced() > self.num_trainers {
+                bail!(
+                    "--fault-plan names trainer t{} but only {} trainers exist",
+                    plan.trainers_referenced() - 1,
+                    self.num_trainers
+                );
+            }
+            if !matches!(self.mode, SyncMode::Shadow) {
+                bail!("--fault-plan windows are measured in shadow sweeps: shadow mode only");
+            }
+            let p = self.sync_partitions.max(1);
+            let rendezvous =
+                (0..p).any(|i| matches!(self.partition_algo(i), SyncAlgo::Ma | SyncAlgo::Bmuf));
+            if plan.has_crashes()
+                && rendezvous
+                && self.allreduce_timeout_ms == 0
+                && self.heartbeat_timeout_ms == 0
+            {
+                bail!(
+                    "--fault-plan schedules a crash against rendezvous (MA/BMUF) \
+                     partitions: give survivors a recovery path \
+                     (--allreduce-timeout-ms or --heartbeat-timeout-ms), or shutdown \
+                     deadlocks on the dead trainer's never-closing rounds"
+                );
+            }
+        }
+        if self.health_adaptive {
+            if !matches!(self.mode, SyncMode::Shadow) {
+                bail!("--health-adaptive drives the shadow fabric: shadow mode only");
+            }
+            if self.num_sync_ps == 0 {
+                bail!(
+                    "--health-adaptive demotes straggling rendezvous partitions to EASGD: \
+                     need at least one sync PS as the fallback tier"
+                );
+            }
+            if !self.health_stall_factor.is_finite() || self.health_stall_factor <= 1.0 {
+                bail!("--health-stall-factor must be > 1 (EWMA lap vs cluster median)");
+            }
+        }
+        if self.heartbeat_timeout_ms > 0 && !matches!(self.mode, SyncMode::Shadow) {
+            bail!("the heartbeat watchdog watches shadow laps: shadow mode only");
         }
         Ok(())
     }
@@ -664,6 +764,85 @@ mod tests {
         c.repartition_every = 0;
         c.easgd_chunk_elems = 0;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn algo_map_from_entries_mirrors_parse() {
+        let m = AlgoMap::from_entries(vec![(SyncAlgo::Easgd, 0, 1), (SyncAlgo::Bmuf, 2, 3)])
+            .unwrap();
+        assert_eq!(m, "easgd:0-1,bmuf:2-3".parse().unwrap());
+        assert_eq!(m.entries().len(), 2);
+        assert!(AlgoMap::from_entries(vec![]).is_err());
+        assert!(AlgoMap::from_entries(vec![(SyncAlgo::Ma, 3, 1)]).is_err());
+        assert!(
+            AlgoMap::from_entries(vec![(SyncAlgo::Ma, 0, 2), (SyncAlgo::Easgd, 2, 3)]).is_err(),
+            "overlap must fail"
+        );
+    }
+
+    #[test]
+    fn fault_plan_validation() {
+        let mut c = RunConfig::default();
+        c.fault_plan = Some("crash:t1@sweep5".into());
+        c.validate().unwrap();
+        // referencing a trainer beyond the topology is rejected
+        c.fault_plan = Some("crash:t2@sweep5".into());
+        assert!(c.validate().is_err());
+        // malformed plans are rejected at validation, not mid-run
+        c.fault_plan = Some("crash:t0".into());
+        assert!(c.validate().is_err());
+        // fault windows are sweep-anchored: shadow mode only
+        c.fault_plan = Some("stall:t0@sweep1+2".into());
+        c.mode = SyncMode::FixedRate { gap: 5 };
+        assert!(c.validate().is_err());
+        // a crash against rendezvous partitions needs a recovery mechanism
+        // (ring round timeout or heartbeat watchdog) or shutdown deadlocks
+        let mut c = RunConfig {
+            algo: SyncAlgo::Bmuf,
+            fault_plan: Some("crash:t1@sweep5".into()),
+            ..RunConfig::default()
+        };
+        assert!(c.validate().is_err());
+        c.allreduce_timeout_ms = 50;
+        c.validate().unwrap();
+        c.allreduce_timeout_ms = 0;
+        c.heartbeat_timeout_ms = 100;
+        c.validate().unwrap();
+        // stalls alone don't kill anyone: no recovery mechanism required
+        c.heartbeat_timeout_ms = 0;
+        c.fault_plan = Some("stall:t1@sweep5+4".into());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn health_adaptive_validation() {
+        let mut c = RunConfig {
+            sync_partitions: 2,
+            shadow_threads: 1,
+            health_adaptive: true,
+            ..RunConfig::default()
+        };
+        c.validate().unwrap();
+        // demotion targets EASGD: the sync-PS tier must exist even for an
+        // all-rendezvous map
+        c.algo = SyncAlgo::Bmuf;
+        c.num_sync_ps = 0;
+        assert!(c.validate().is_err());
+        c.num_sync_ps = 1;
+        c.validate().unwrap();
+        // the stall factor compares EWMA lap vs median: <= 1 is degenerate
+        c.health_stall_factor = 1.0;
+        assert!(c.validate().is_err());
+        c.health_stall_factor = 4.0;
+        // adaptive switching drives the shadow fabric
+        c.mode = SyncMode::FixedRate { gap: 5 };
+        assert!(c.validate().is_err());
+        c.mode = SyncMode::Shadow;
+        // the watchdog likewise watches shadow laps
+        c.health_adaptive = false;
+        c.heartbeat_timeout_ms = 100;
+        c.mode = SyncMode::FixedRate { gap: 5 };
+        assert!(c.validate().is_err());
     }
 
     #[test]

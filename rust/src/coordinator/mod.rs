@@ -18,12 +18,15 @@ use crate::data::reader::{Reader, Shard};
 use crate::data::TeacherModel;
 use crate::embedding::EmbeddingSystem;
 use crate::metrics::{EpsMeter, EvalAccum, Metrics, MetricsSnapshot};
+use crate::net::fault::FaultPlan;
 use crate::net::{Network, Role};
 use crate::runtime::{Model, Runtime};
 use crate::sync::driver::{spawn_shadow_pool_adaptive, ShadowTask};
+use crate::sync::prim::AtomicBool;
 use crate::sync::ps::PsTrafficSnapshot;
 use crate::sync::{
-    AllReduceGroup, EasgdSync, PartitionPlan, RepartitionController, SyncPsGroup,
+    AllReduceGroup, EasgdSync, HealthController, PartitionPlan, RepartitionController,
+    SyncPsGroup,
 };
 use crate::trainer::{spawn_worker, ForegroundPlan, Trainer, WorkerEnv};
 
@@ -57,6 +60,15 @@ pub struct TrainOutcome {
     /// trainer actually cut over to (0 when `--repartition-every` is off
     /// or no published plan was ever adopted)
     pub repartitions: u64,
+    /// crashed trainers the watchdog proxy-departed
+    pub health_departs: u64,
+    /// straggler demotions (rendezvous partitions → EASGD) published
+    pub health_demotions: u64,
+    /// recovery promotions (back to the configured algorithms) published
+    pub health_promotions: u64,
+    /// attempted-but-not-delivered bytes under the fault plan (never on
+    /// the NIC counters — the attempted-vs-delivered split stays exact)
+    pub dropped_bytes: u64,
     pub elp: u64,
 }
 
@@ -83,8 +95,12 @@ pub struct Cluster {
     /// (None for EASGD/none partitions); indexed by partition
     pub groups: Vec<Option<Arc<AllReduceGroup>>>,
     /// measured-cost adaptive repartitioning brain, shared by every
-    /// trainer's shadow pool (None when `--repartition-every` is 0)
+    /// trainer's shadow pool (None when neither `--repartition-every` nor
+    /// the health machinery needs its epoch protocol)
     pub repartition: Option<Arc<RepartitionController>>,
+    /// heartbeat/straggler brain (None unless `--heartbeat-timeout-ms` or
+    /// `--health-adaptive` armed it)
+    pub health: Option<Arc<HealthController>>,
     pub trainers: Vec<Trainer>,
     pub teacher: Arc<TeacherModel>,
 }
@@ -114,7 +130,10 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
     // the partitioned fabric's layout: P contiguous LPT-balanced ranges,
     // each mapped to its algorithm (P = 1: one full-range partition)
     let plan = PartitionPlan::build(meta.num_params, cfg)?;
-    let sync_ps = if plan.uses(SyncAlgo::Easgd) {
+    // health-adaptive runs need the sync-PS tier even when no partition
+    // starts on EASGD: it is both the demotion target and the rejoin
+    // warm-start source
+    let sync_ps = if plan.uses(SyncAlgo::Easgd) || cfg.health_adaptive {
         // chunked, delta-gated pushes: skipped chunks move zero bytes on
         // either leg, and recorded sync bytes are the measured traffic.
         // The group-level gate serves the legacy whole-vector API; the
@@ -122,7 +141,8 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         Some(Arc::new(
             SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net)
                 .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold)
-                .with_adaptive_gate(cfg.delta_skip_target),
+                .with_adaptive_gate(cfg.delta_skip_target)
+                .with_push_retry(cfg.push_retries, Duration::from_millis(cfg.push_backoff_ms)),
         ))
     } else {
         None
@@ -138,9 +158,28 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
             _ => None,
         })
         .collect();
+    // every node exists now: layer the seeded fault schedule (if any)
+    // under the network, so transfers from here on can crash/drop/stall
+    let net = match cfg.fault_plan.as_deref() {
+        Some(spec) => {
+            let fp = FaultPlan::parse(spec, cfg.data_seed)?;
+            anyhow::ensure!(
+                fp.trainers_referenced() <= cfg.num_trainers,
+                "fault plan names trainer t{}, but the run has only {} trainers",
+                fp.trainers_referenced() - 1,
+                cfg.num_trainers
+            );
+            net.with_faults(Arc::new(fp))
+        }
+        None => net,
+    };
     // adaptive repartitioning: one shared controller wrapping generation 0
-    // (the plan + groups the trainers' initial strategies are built from)
-    let repartition = (cfg.repartition_every > 0 && matches!(cfg.mode, SyncMode::Shadow))
+    // (the plan + groups the trainers' initial strategies are built from).
+    // The health machinery reuses the same epoch-gated cutover protocol for
+    // its departs, demotions and rejoins, so arming it forces a controller
+    // even when periodic repartitioning is off.
+    let repartition = (matches!(cfg.mode, SyncMode::Shadow)
+        && (cfg.repartition_every > 0 || cfg.heartbeat_timeout_ms > 0 || cfg.health_adaptive))
         .then(|| {
             Arc::new(RepartitionController::new(
                 cfg,
@@ -150,6 +189,12 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
                 groups.clone(),
             ))
         });
+    let health = match &repartition {
+        Some(c) if cfg.heartbeat_timeout_ms > 0 || cfg.health_adaptive => {
+            Some(Arc::new(HealthController::new(cfg, c.clone())))
+        }
+        _ => None,
+    };
     let trainers = trainer_nodes
         .iter()
         .enumerate()
@@ -167,6 +212,7 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         sync_ps,
         groups,
         repartition,
+        health,
         trainers,
         teacher,
     })
@@ -184,6 +230,13 @@ pub fn train(cluster: &Cluster) -> Result<()> {
     let cfg = &cluster.cfg;
     let mut worker_handles = Vec::new();
     let mut shadow_handles = Vec::new();
+    // the crash watchdog + straggler ticker outlives the shadow pools: it
+    // must still be proxy-departing dead trainers while survivors drain
+    // their last rendezvous rounds at shutdown
+    let watchdog = cluster.health.as_ref().map(|h| {
+        let stop = Arc::new(AtomicBool::new(false));
+        (h.spawn_watchdog(stop.clone()), stop)
+    });
 
     for trainer in &cluster.trainers {
         // reader service shard for this trainer
@@ -240,6 +293,7 @@ pub fn train(cluster: &Cluster) -> Result<()> {
                         trainer.id,
                         cfg.shadow_threads,
                         cluster.repartition.clone(),
+                        cluster.health.clone(),
                     ));
                 }
                 for w in 0..cfg.worker_threads {
@@ -301,17 +355,31 @@ pub fn train(cluster: &Cluster) -> Result<()> {
         }
     }
 
-    // workers drain their shards; then shadows stop and leave their groups
+    // workers drain their shards; then shadows stop and leave their groups.
+    // Errors are collected (not early-returned) so the watchdog is always
+    // stopped and joined before train() exits.
+    let mut first_err: Option<anyhow::Error> = None;
     for h in worker_handles {
-        h.join().expect("worker panicked")?;
+        if let Err(e) = h.join().expect("worker panicked") {
+            first_err.get_or_insert(e);
+        }
     }
     for t in &cluster.trainers {
         crate::trainer::stop_shadow(t);
     }
     for h in shadow_handles {
-        h.join().expect("shadow panicked")?;
+        if let Err(e) = h.join().expect("shadow panicked") {
+            first_err.get_or_insert(e);
+        }
     }
-    Ok(())
+    if let Some((handle, stop)) = watchdog {
+        stop.store(true, std::sync::atomic::Ordering::Release);
+        handle.join().expect("watchdog panicked");
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 fn env(cluster: &Cluster) -> WorkerEnv {
@@ -320,6 +388,7 @@ fn env(cluster: &Cluster) -> WorkerEnv {
         embeddings: cluster.embeddings.clone(),
         net: cluster.net.clone(),
         metrics: cluster.metrics.clone(),
+        health: cluster.health.clone(),
     }
 }
 
@@ -359,6 +428,10 @@ pub fn finish(cluster: Cluster) -> Result<TrainOutcome> {
         sync_ps_bytes: cluster.net.role_bytes(Role::SyncPs),
         sync_traffic: cluster.sync_ps.as_ref().map(|g| g.traffic()),
         repartitions: cluster.repartition.as_ref().map_or(0, |c| c.repartitions()),
+        health_departs: cluster.health.as_ref().map_or(0, |h| h.departs()),
+        health_demotions: cluster.health.as_ref().map_or(0, |h| h.demotions()),
+        health_promotions: cluster.health.as_ref().map_or(0, |h| h.promotions()),
+        dropped_bytes: cluster.net.faults().map_or(0, |f| f.dropped_bytes()),
         metrics: m,
         elp: cfg.elp(cluster.meta.batch),
     })

@@ -272,6 +272,7 @@ fn skewed_workload(adaptive: bool, millis: u64) -> Result<SkewOutcome> {
             t,
             SKEW_S,
             controller.clone(),
+            None,
         ));
         let stop = stop.clone();
         let metrics = metrics.clone();

@@ -15,6 +15,7 @@
 
 pub mod ablate;
 pub mod calibrate;
+pub mod faults;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
@@ -41,6 +42,9 @@ pub struct ExpOpts {
     pub scale: f64,
     /// seed for the synthetic stream
     pub seed: u64,
+    /// `--smoke`: shrink wall-clock-bound experiments (shorter fault
+    /// windows, fewer arms) so CI can afford them
+    pub smoke: bool,
 }
 
 impl Default for ExpOpts {
@@ -50,6 +54,7 @@ impl Default for ExpOpts {
             out_dir: PathBuf::from("results"),
             scale: 1.0,
             seed: 20200630,
+            smoke: false,
         }
     }
 }
@@ -69,6 +74,7 @@ pub const ALL_IDS: &[&str] = &[
     "ablate-decay-gap",
     "ablate-partitions",
     "ablate-repartition",
+    "ablate-faults",
     "calibrate",
 ];
 
@@ -89,6 +95,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "ablate-decay-gap" => ablate::run_decay_gap(opts)?,
         "ablate-partitions" => ablate::run_partitions(opts)?,
         "ablate-repartition" => ablate::run_repartition(opts)?,
+        "ablate-faults" => faults::run(opts)?,
         "calibrate" => calibrate::run(opts)?,
         _ => bail!("unknown experiment {id:?}; known: {}", ALL_IDS.join(", ")),
     };

@@ -38,6 +38,21 @@
 //!                                reuses that scan instead of re-reading
 //!                                every element)
 //!
+//! Fault injection and health (shadow mode only):
+//!   --fault-plan <spec>          seeded fault schedule, e.g.
+//!                                crash:t2@sweep40,stall:t1@sweep10+8,
+//!                                slow-link:t0<->ps@2x,drop:t0@0.01
+//!   --push-retries <N>           retries per EASGD push leg on a faulted
+//!                                transfer (exhausted chunks are skipped)
+//!   --push-backoff-ms <ms>       initial retry backoff, doubling per try
+//!   --allreduce-timeout-ms <ms>  ring round timeout: evict (leave) members
+//!                                that fail to deposit in time (0 = off)
+//!   --heartbeat-timeout-ms <ms>  watchdog: depart trainers whose shadow
+//!                                pool stops heartbeating (0 = off)
+//!   --health-adaptive            demote straggling rendezvous partitions
+//!                                to EASGD, promote back when healthy
+//!   --health-stall-factor <f>    straggler = EWMA lap > f × cluster median
+//!
 //! Examples:
 //!   shadowsync train --preset model_a --trainers 4 --threads 3 \
 //!       --algo easgd --mode shadow --examples 200000 \
@@ -117,6 +132,13 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         delta_threshold: args.parse_or("delta-threshold", 0.0f32)?,
         delta_skip_target: args.parse_or("delta-skip-target", 0.0f32)?,
         dirty_epoch_scan: !args.has("no-dirty-scan"),
+        fault_plan: args.get("fault-plan").map(str::to_string),
+        push_retries: args.parse_or("push-retries", 3u32)?,
+        push_backoff_ms: args.parse_or("push-backoff-ms", 1u64)?,
+        allreduce_timeout_ms: args.parse_or("allreduce-timeout-ms", 0u64)?,
+        heartbeat_timeout_ms: args.parse_or("heartbeat-timeout-ms", 0u64)?,
+        health_adaptive: args.has("health-adaptive"),
+        health_stall_factor: args.parse_or("health-stall-factor", 4.0f64)?,
         ..Default::default()
     };
     cfg.embedding.rows_per_table = args.parse_or("rows", cfg.embedding.rows_per_table)?;
@@ -128,8 +150,9 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         cfg.algo_map = Some(m.parse()?);
     }
     // the sync-PS tier exists iff some (possibly algo-mapped) partition
-    // runs the centralized algorithm
-    if !cfg.any_easgd() {
+    // runs the centralized algorithm — or the health controller may demote
+    // one to it mid-run
+    if !cfg.any_easgd() && !cfg.health_adaptive {
         cfg.num_sync_ps = 0;
     }
     Ok(cfg)
@@ -199,6 +222,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         out_dir: PathBuf::from(args.get_or("out", "results")),
         scale: args.parse_or("scale", 1.0f64)?,
         seed: args.parse_or("seed", 20200630u64)?,
+        smoke: args.has("smoke"),
     };
     let id = args.get_or("id", "all");
     if id == "all" {
@@ -264,5 +288,10 @@ fn cmd_list() -> Result<()> {
          (shadow mode only)"
     );
     println!("reduce engines: --reduce-engine overlapped|striped|serial");
+    println!(
+        "fault injection: --fault-plan crash:t2@sweep40,stall:t1@sweep10+8,... \
+         --push-retries <N>, --allreduce-timeout-ms <ms>, \
+         --heartbeat-timeout-ms <ms>, --health-adaptive (shadow mode only)"
+    );
     Ok(())
 }

@@ -137,6 +137,18 @@ impl<T> Drop for MutexGuard<'_, T> {
     }
 }
 
+/// Modeled counterpart of `std::sync::WaitTimeoutResult`: the model has no
+/// clock, so [`Condvar::wait_timeout`] never times out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    /// Always `false` under the model checker (waits only end by notify).
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
 /// Modeled counterpart of `std::sync::Condvar`. No spurious wakeups are
 /// generated (a sound under-approximation; all call sites re-check their
 /// predicate in a loop regardless).
@@ -181,6 +193,24 @@ impl Condvar {
             Step::Block(Blocked::Condvar(cid))
         });
         mutex.lock()
+    }
+
+    /// Modeled `wait_timeout`: the model has no clock, so this is exactly
+    /// [`Condvar::wait`] and the returned [`WaitTimeoutResult`] never
+    /// reports a timeout. That is a sound under-approximation for the
+    /// fabric's timeout paths (round-timeout eviction, watchdog departs):
+    /// they only *add* transitions that the untimed model also reaches via
+    /// an explicit `leave()`/`depart()` call, and every call site re-checks
+    /// its predicate in a loop regardless.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        _dur: std::time::Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match self.wait(guard) {
+            Ok(g) => Ok((g, WaitTimeoutResult(false))),
+            Err(_) => unreachable!("mc mutexes are never poisoned"),
+        }
     }
 
     pub fn notify_all(&self) {

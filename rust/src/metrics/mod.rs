@@ -51,6 +51,9 @@ pub struct Metrics {
     pub sync_chunks_skipped: AtomicU64,
     /// push chunks whose gap scan was skipped via dirty epochs
     pub sync_scan_skipped: AtomicU64,
+    /// push-leg transfer retries issued against a faulted fabric (a chunk
+    /// whose retries are exhausted lands in `sync_chunks_skipped`)
+    pub sync_push_retries: AtomicU64,
     /// bytes moved for embedding lookups+updates
     pub embedding_bytes: AtomicU64,
     /// per-partition sync round counts of the partitioned shadow fabric
@@ -87,6 +90,12 @@ impl Metrics {
         self.sync_chunks_pushed.fetch_add(pushed, Relaxed);
         self.sync_chunks_skipped.fetch_add(skipped, Relaxed);
         self.sync_scan_skipped.fetch_add(scan_skipped, Relaxed);
+    }
+
+    /// Record push-leg retries issued while degrading around a faulted
+    /// fabric (see `SyncPsGroup::with_push_retry`).
+    pub fn record_sync_retries(&self, retries: u64) {
+        self.sync_push_retries.fetch_add(retries, Relaxed);
     }
 
     /// Record one completed shadow round of `partition` (driven by the
@@ -154,6 +163,7 @@ impl Metrics {
             sync_chunks_pushed: self.sync_chunks_pushed.load(Relaxed),
             sync_chunks_skipped: self.sync_chunks_skipped.load(Relaxed),
             sync_scan_skipped: self.sync_scan_skipped.load(Relaxed),
+            sync_push_retries: self.sync_push_retries.load(Relaxed),
             embedding_bytes: self.embedding_bytes.load(Relaxed),
             partition_syncs: self.partition_syncs.lock().unwrap().clone(),
             partition_sync_bytes: self.partition_sync_bytes.lock().unwrap().clone(),
@@ -171,6 +181,8 @@ pub struct MetricsSnapshot {
     pub sync_chunks_pushed: u64,
     pub sync_chunks_skipped: u64,
     pub sync_scan_skipped: u64,
+    /// push-leg retries issued against a faulted fabric
+    pub sync_push_retries: u64,
     pub embedding_bytes: u64,
     /// per-partition sync round counts (empty when no shadow pool ran)
     pub partition_syncs: Vec<u64>,

@@ -1,0 +1,423 @@
+//! Deterministic fault injection for the in-process fabric.
+//!
+//! At scale the cluster is never healthy: trainers stall, links degrade,
+//! nodes die. A [`FaultPlan`] is a seeded, declarative schedule of such
+//! events, layered *under* [`super::Network`] so that every transfer
+//! becomes fallible or delayable without any sync-layer code knowing which
+//! plan (if any) is installed. The plan is parsed from the CLI
+//! (`--fault-plan`), e.g.:
+//!
+//! ```text
+//! crash:t2@sweep40,stall:t1@sweep10+8,slow-link:t0<->ps@2x,drop:t0@0.01
+//! ```
+//!
+//! Entry grammar (comma-separated, `tN` = trainer index `N`):
+//!
+//! | Entry | Meaning |
+//! |---|---|
+//! | `crash:tN@sweepK` | trainer `N` dies permanently at its shadow sweep `K` |
+//! | `crash:tN@sweepK+D` | down for `D` sweeps starting at `K`, then eligible to rejoin |
+//! | `stall:tN@sweepK+D` | straggler: each shadow lap in `[K, K+D)` pays [`STALL_LAP_DELAY`] |
+//! | `slow-link:tN<->ps@Fx` | the trainer↔sync-PS link runs `F`× slower |
+//! | `drop:tN@P` | each transfer touching trainer `N` is dropped with probability `P` (seeded) |
+//!
+//! Time is measured in *shadow sweeps* of the affected trainer: the shadow
+//! pool's lap thread calls [`FaultPlan::note_sweep`] once per lap —
+//! including while crashed, so finite crash windows expire and the elastic
+//! rejoin path can fire. This keeps plans deterministic per seed and
+//! independent of wall-clock noise.
+//!
+//! Byte accounting is preserved for attempted-vs-delivered analysis: a
+//! faulted transfer moves **zero** NIC bytes (neither `tx` nor `rx`) and
+//! instead accrues to the plan's [`dropped bytes`](FaultPlan::dropped_bytes)
+//! ledger, so `metrics.sync_bytes == sync-PS NIC + ring tx` stays exact
+//! under retries and crashes.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Why a transfer did not deliver (see [`super::Network::try_transfer`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultError {
+    /// A transient, seeded drop (`drop:tN@P`): retrying may succeed.
+    Dropped,
+    /// An endpoint is inside a crash window (`crash:tN@sweepK[+D]`):
+    /// retrying cannot help until the window ends.
+    Unreachable,
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultError::Dropped => write!(f, "transfer dropped (transient)"),
+            FaultError::Unreachable => write!(f, "endpoint crashed (unreachable)"),
+        }
+    }
+}
+
+/// Delay injected per shadow lap while a `stall:` window is active. Fixed
+/// rather than configurable: the experiments care about *relative* lap
+/// inflation (the EWMA-vs-median ratio the health controller watches), not
+/// the absolute magnitude.
+pub const STALL_LAP_DELAY: Duration = Duration::from_millis(20);
+
+#[derive(Debug, Clone, Copy)]
+struct CrashWindow {
+    trainer: usize,
+    start: u64,
+    /// `None` = permanent; `Some(d)` = down for `d` sweeps, then rejoin.
+    down: Option<u64>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct StallWindow {
+    trainer: usize,
+    start: u64,
+    down: u64,
+}
+
+/// A parsed, seeded fault schedule. Shared (`Arc`) between the [`Network`]
+/// (which consults it per transfer) and the shadow drivers / watchdog
+/// (which advance sweep clocks and poll crash state).
+///
+/// [`Network`]: super::Network
+#[derive(Debug)]
+pub struct FaultPlan {
+    crashes: Vec<CrashWindow>,
+    stalls: Vec<StallWindow>,
+    /// (trainer, factor) — trainer↔sync-PS link slowdown multipliers.
+    slow_links: Vec<(usize, f64)>,
+    /// (trainer, probability) — seeded transient drop rates.
+    drops: Vec<(usize, f64)>,
+    seed: u64,
+    /// Per-trainer shadow-sweep clocks (index = trainer id).
+    sweeps: Vec<AtomicU64>,
+    /// Per-trainer transfer-attempt counters feeding the drop hash.
+    attempts: Vec<AtomicU64>,
+    /// Attempted-but-not-delivered bytes (the NIC counters never see these).
+    dropped_bytes: AtomicU64,
+    /// Faulted transfer count (drops + unreachable), for reports.
+    dropped_transfers: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated fault spec (see the module docs for the
+    /// grammar). `seed` drives the `drop:` entries' per-transfer coin flips.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        let mut crashes = Vec::new();
+        let mut stalls = Vec::new();
+        let mut slow_links = Vec::new();
+        let mut drops = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = entry
+                .split_once(':')
+                .with_context(|| format!("fault entry `{entry}` missing `kind:` prefix"))?;
+            match kind {
+                "crash" => {
+                    let (trainer, start, down) = parse_trainer_window(rest, entry)?;
+                    crashes.push(CrashWindow { trainer, start, down });
+                }
+                "stall" => {
+                    let (trainer, start, down) = parse_trainer_window(rest, entry)?;
+                    let down = down.with_context(|| {
+                        format!("stall entry `{entry}` needs a window, e.g. stall:t1@sweep10+8")
+                    })?;
+                    ensure!(down > 0, "stall entry `{entry}` has an empty window");
+                    stalls.push(StallWindow { trainer, start, down });
+                }
+                "slow-link" => {
+                    let (pair, factor) = rest.split_once('@').with_context(|| {
+                        format!("slow-link entry `{entry}` missing `@Fx` factor")
+                    })?;
+                    let trainer = pair
+                        .strip_suffix("<->ps")
+                        .map(|t| parse_trainer(t, entry))
+                        .with_context(|| {
+                            format!("slow-link entry `{entry}` must name a `tN<->ps` link")
+                        })??;
+                    let factor: f64 = factor
+                        .strip_suffix('x')
+                        .with_context(|| format!("slow-link factor in `{entry}` must end in `x`"))?
+                        .parse()
+                        .with_context(|| format!("bad slow-link factor in `{entry}`"))?;
+                    ensure!(factor >= 1.0, "slow-link factor in `{entry}` must be >= 1");
+                    slow_links.push((trainer, factor));
+                }
+                "drop" => {
+                    let (t, p) = rest
+                        .split_once('@')
+                        .with_context(|| format!("drop entry `{entry}` missing `@P` probability"))?;
+                    let trainer = parse_trainer(t, entry)?;
+                    let p: f64 = p
+                        .parse()
+                        .with_context(|| format!("bad drop probability in `{entry}`"))?;
+                    ensure!((0.0..=1.0).contains(&p), "drop probability in `{entry}` not in [0,1]");
+                    drops.push((trainer, p));
+                }
+                other => bail!("unknown fault kind `{other}` in `{entry}`"),
+            }
+        }
+        let max_t = crashes
+            .iter()
+            .map(|c| c.trainer)
+            .chain(stalls.iter().map(|s| s.trainer))
+            .chain(slow_links.iter().map(|(t, _)| *t))
+            .chain(drops.iter().map(|(t, _)| *t))
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0);
+        Ok(Self {
+            crashes,
+            stalls,
+            slow_links,
+            drops,
+            seed,
+            sweeps: (0..max_t).map(|_| AtomicU64::new(0)).collect(),
+            attempts: (0..max_t).map(|_| AtomicU64::new(0)).collect(),
+            dropped_bytes: AtomicU64::new(0),
+            dropped_transfers: AtomicU64::new(0),
+        })
+    }
+
+    /// Highest trainer index any entry names, plus one (0 for an empty plan)
+    /// — config validation checks this against `--trainers`.
+    pub fn trainers_referenced(&self) -> usize {
+        self.sweeps.len()
+    }
+
+    /// Advance trainer `t`'s sweep clock by one lap; returns the new count.
+    /// Called once per shadow lap by the pool's clock thread — including
+    /// while `t` is crashed, so finite crash windows expire.
+    pub fn note_sweep(&self, t: usize) -> u64 {
+        match self.sweeps.get(t) {
+            Some(s) => s.fetch_add(1, Relaxed) + 1,
+            None => 0,
+        }
+    }
+
+    /// Trainer `t`'s current sweep clock.
+    pub fn sweep(&self, t: usize) -> u64 {
+        self.sweeps.get(t).map(|s| s.load(Relaxed)).unwrap_or(0)
+    }
+
+    /// Is trainer `t` inside a crash window right now?
+    pub fn crashed(&self, t: usize) -> bool {
+        let s = self.sweep(t);
+        self.crashes
+            .iter()
+            .any(|c| c.trainer == t && s >= c.start && c.down.is_none_or(|d| s < c.start + d))
+    }
+
+    /// Does trainer `t` have a *permanent* crash scheduled (no rejoin)?
+    pub fn crashes_permanently(&self, t: usize) -> bool {
+        self.crashes.iter().any(|c| c.trainer == t && c.down.is_none())
+    }
+
+    /// Does the plan schedule any crash window at all? Config validation
+    /// uses this: a crash against rendezvous partitions needs a recovery
+    /// mechanism (ring round timeout or heartbeat watchdog) or shutdown
+    /// would deadlock on the dead trainer's unclosed rounds.
+    pub fn has_crashes(&self) -> bool {
+        !self.crashes.is_empty()
+    }
+
+    /// Per-lap straggler delay for trainer `t`, if a stall window is active.
+    pub fn lap_delay(&self, t: usize) -> Option<Duration> {
+        let s = self.sweep(t);
+        self.stalls
+            .iter()
+            .any(|w| w.trainer == t && s >= w.start && s < w.start + w.down)
+            .then_some(STALL_LAP_DELAY)
+    }
+
+    /// Slowdown multiplier for trainer `t`'s link to the sync PSs (1.0 when
+    /// no `slow-link:` entry names `t`).
+    pub fn slowdown(&self, t: usize) -> f64 {
+        self.slow_links
+            .iter()
+            .filter(|(lt, _)| *lt == t)
+            .map(|(_, f)| *f)
+            .fold(1.0, f64::max)
+    }
+
+    /// Seeded per-transfer coin flip for trainer `t`'s `drop:` entries.
+    /// Deterministic: the same seed and attempt sequence reproduce the same
+    /// drops bit-for-bit.
+    pub fn should_drop(&self, t: usize) -> bool {
+        let p = self
+            .drops
+            .iter()
+            .filter(|(dt, _)| *dt == t)
+            .map(|(_, p)| *p)
+            .fold(0.0, f64::max);
+        if p <= 0.0 {
+            return false;
+        }
+        let attempt = match self.attempts.get(t) {
+            Some(a) => a.fetch_add(1, Relaxed),
+            None => return false,
+        };
+        hash01(self.seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ attempt) < p
+    }
+
+    /// Record `bytes` as attempted but not delivered.
+    pub fn note_dropped(&self, bytes: u64) {
+        self.dropped_bytes.fetch_add(bytes, Relaxed);
+        self.dropped_transfers.fetch_add(1, Relaxed);
+    }
+
+    /// Total attempted-but-not-delivered bytes.
+    pub fn dropped_bytes(&self) -> u64 {
+        self.dropped_bytes.load(Relaxed)
+    }
+
+    /// Total faulted transfers (transient drops + crashed endpoints).
+    pub fn dropped_transfers(&self) -> u64 {
+        self.dropped_transfers.load(Relaxed)
+    }
+}
+
+fn parse_trainer(s: &str, entry: &str) -> Result<usize> {
+    s.strip_prefix('t')
+        .and_then(|n| n.parse().ok())
+        .with_context(|| format!("expected trainer `tN` in `{entry}`, got `{s}`"))
+}
+
+/// Parse `tN@sweepK` or `tN@sweepK+D` into (trainer, start, window).
+fn parse_trainer_window(rest: &str, entry: &str) -> Result<(usize, u64, Option<u64>)> {
+    let (t, at) = rest
+        .split_once('@')
+        .with_context(|| format!("entry `{entry}` missing `@sweepK`"))?;
+    let trainer = parse_trainer(t, entry)?;
+    let at = at
+        .strip_prefix("sweep")
+        .with_context(|| format!("entry `{entry}` must anchor at `@sweepK`"))?;
+    let (start, down) = match at.split_once('+') {
+        Some((k, d)) => {
+            let d: u64 =
+                d.parse().with_context(|| format!("bad window length in `{entry}`"))?;
+            (k, Some(d))
+        }
+        None => (at, None),
+    };
+    let start: u64 =
+        start.parse().with_context(|| format!("bad sweep number in `{entry}`"))?;
+    Ok((trainer, start, down))
+}
+
+/// splitmix64 finalizer mapped to [0,1) — the plan's only randomness, so a
+/// seed fully determines every drop decision.
+fn hash01(x: u64) -> f64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_docstring_plan() {
+        let p = FaultPlan::parse(
+            "crash:t2@sweep40,stall:t1@sweep10+8,slow-link:t0<->ps@2x,drop:t0@0.01",
+            7,
+        )
+        .unwrap();
+        assert_eq!(p.trainers_referenced(), 3);
+        assert_eq!(p.slowdown(0), 2.0);
+        assert_eq!(p.slowdown(1), 1.0);
+        assert!(p.crashes_permanently(2));
+        assert!(!p.crashed(2), "crash only fires at sweep 40");
+    }
+
+    #[test]
+    fn bad_specs_bail() {
+        for bad in [
+            "crash:t2",               // no @sweep
+            "crash:x2@sweep4",        // no tN
+            "stall:t1@sweep10",       // stall needs a window
+            "stall:t1@sweep10+0",     // empty window
+            "slow-link:t0@2x",        // no <->ps
+            "slow-link:t0<->ps@0.5x", // speedup, not slowdown
+            "slow-link:t0<->ps@2",    // missing x suffix
+            "drop:t0@1.5",            // probability out of range
+            "teleport:t0@sweep1",     // unknown kind
+            "crash",                  // no colon
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::parse("", 0).unwrap();
+        assert_eq!(p.trainers_referenced(), 0);
+        assert!(!p.crashed(0));
+        assert!(!p.should_drop(0));
+        assert_eq!(p.note_sweep(0), 0, "unreferenced trainers have no clock");
+    }
+
+    #[test]
+    fn crash_window_opens_and_closes_on_the_sweep_clock() {
+        let p = FaultPlan::parse("crash:t0@sweep3+2", 0).unwrap();
+        assert!(!p.crashed(0));
+        for _ in 0..3 {
+            p.note_sweep(0);
+        }
+        assert!(p.crashed(0), "window [3,5) open at sweep 3");
+        p.note_sweep(0);
+        assert!(p.crashed(0), "still down at sweep 4");
+        p.note_sweep(0);
+        assert!(!p.crashed(0), "window closed at sweep 5 — rejoin eligible");
+        assert!(!p.crashes_permanently(0));
+    }
+
+    #[test]
+    fn permanent_crash_never_ends() {
+        let p = FaultPlan::parse("crash:t1@sweep2", 0).unwrap();
+        for _ in 0..100 {
+            p.note_sweep(1);
+        }
+        assert!(p.crashed(1));
+        assert!(p.crashes_permanently(1));
+    }
+
+    #[test]
+    fn stall_delay_tracks_its_window() {
+        let p = FaultPlan::parse("stall:t0@sweep1+2", 0).unwrap();
+        assert_eq!(p.lap_delay(0), None);
+        p.note_sweep(0);
+        assert_eq!(p.lap_delay(0), Some(STALL_LAP_DELAY));
+        p.note_sweep(0);
+        assert_eq!(p.lap_delay(0), Some(STALL_LAP_DELAY));
+        p.note_sweep(0);
+        assert_eq!(p.lap_delay(0), None, "window [1,3) closed at sweep 3");
+    }
+
+    #[test]
+    fn drops_are_seed_deterministic() {
+        let a = FaultPlan::parse("drop:t0@0.5", 42).unwrap();
+        let b = FaultPlan::parse("drop:t0@0.5", 42).unwrap();
+        let sa: Vec<bool> = (0..64).map(|_| a.should_drop(0)).collect();
+        let sb: Vec<bool> = (0..64).map(|_| b.should_drop(0)).collect();
+        assert_eq!(sa, sb, "same seed, same drop sequence");
+        assert!(sa.iter().any(|&d| d), "p=0.5 over 64 attempts drops something");
+        assert!(sa.iter().any(|&d| !d), "...and delivers something");
+        assert!(!a.should_drop(1), "entries are per-trainer");
+    }
+
+    #[test]
+    fn dropped_ledger_accumulates() {
+        let p = FaultPlan::parse("crash:t0@sweep0", 0).unwrap();
+        assert!(p.crashed(0), "window starting at sweep 0 is open immediately");
+        p.note_dropped(100);
+        p.note_dropped(24);
+        assert_eq!(p.dropped_bytes(), 124);
+        assert_eq!(p.dropped_transfers(), 2);
+    }
+}

@@ -24,9 +24,21 @@
 //! (`AllReduceGroup::ring_bytes_per_member`). Transfers are full-duplex:
 //! `tx` accrues to the source NIC and `rx` to the destination NIC of the
 //! same call.
+//!
+//! A [`FaultPlan`] ([`fault`]) can be layered underneath via
+//! [`Network::with_faults`]: transfers then become fallible
+//! ([`Network::try_transfer`]) — crashed endpoints are unreachable, drops
+//! are seeded coin flips, slow links stretch the wire time — while the NIC
+//! counters keep the attempted-vs-delivered split exact: faulted transfers
+//! move zero NIC bytes and accrue to the plan's dropped-bytes ledger.
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
 use std::time::Duration;
+
+pub mod fault;
+
+pub use fault::{FaultError, FaultPlan};
 
 /// Node roles for per-role aggregation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,11 +56,17 @@ pub struct Nic {
     pub rx_bytes: AtomicU64,
 }
 
-/// The cluster fabric: one NIC per node plus an optional bandwidth model.
+/// The cluster fabric: one NIC per node plus an optional bandwidth model
+/// and an optional fault plan.
 pub struct Network {
     nodes: Vec<(Role, Nic)>,
+    /// trainer id per node (trainer-role nodes are numbered in the order
+    /// they were added — the same order the coordinator builds trainers).
+    trainer_of: Vec<Option<usize>>,
     /// simulated per-NIC bandwidth in bytes/sec (None = only account)
     pub bandwidth: Option<f64>,
+    /// installed fault schedule (None = the fabric is perfect)
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Handle for one endpoint.
@@ -57,26 +75,95 @@ pub struct NodeId(pub usize);
 
 impl Network {
     pub fn new(bandwidth: Option<f64>) -> Self {
-        Self { nodes: Vec::new(), bandwidth }
+        Self { nodes: Vec::new(), trainer_of: Vec::new(), bandwidth, faults: None }
+    }
+
+    /// Install a fault plan: transfers become fallible per its schedule.
+    /// Trainer identity for fault purposes follows the order trainer-role
+    /// NICs were added (`t0` = first [`Role::Trainer`] node, ...).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// The installed fault plan, if any.
+    pub fn faults(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
+    }
+
+    /// Attempted-but-not-delivered bytes (0 without a fault plan). These
+    /// never appear in any NIC's `tx`/`rx`.
+    pub fn dropped_bytes(&self) -> u64 {
+        self.faults.as_ref().map(|f| f.dropped_bytes()).unwrap_or(0)
     }
 
     pub fn add_node(&mut self, role: Role) -> NodeId {
+        let trainer = (role == Role::Trainer)
+            .then(|| self.trainer_of.iter().flatten().count());
         self.nodes.push((role, Nic::default()));
+        self.trainer_of.push(trainer);
         NodeId(self.nodes.len() - 1)
     }
 
-    /// Record a transfer of `bytes` from `src` to `dst`; if a bandwidth model
-    /// is installed, block the calling thread for the wire time. Transfers
-    /// are full-duplex (tx and rx accounted separately).
+    /// Record a transfer of `bytes` from `src` to `dst`, ignoring faults
+    /// (a faulted transfer still moves zero NIC bytes — callers that cannot
+    /// react simply proceed). Use [`Network::try_transfer`] to observe the
+    /// outcome.
     pub fn transfer(&self, src: NodeId, dst: NodeId, bytes: u64) {
+        let _ = self.try_transfer(src, dst, bytes);
+    }
+
+    /// Fallible transfer of `bytes` from `src` to `dst`: consults the fault
+    /// plan (crashed endpoints, seeded drops), then accounts tx/rx and — if
+    /// a bandwidth model is installed — blocks the calling thread for the
+    /// wire time (stretched by any `slow-link:` factor on the endpoints).
+    /// Transfers are full-duplex (tx and rx accounted separately). Faulted
+    /// transfers move zero NIC bytes and accrue to the plan's dropped
+    /// ledger instead. Self-transfers (`src == dst`) are a caller bug:
+    /// rejected in debug builds, skipped (no accounting) in release.
+    pub fn try_transfer(&self, src: NodeId, dst: NodeId, bytes: u64) -> Result<(), FaultError> {
+        if src == dst {
+            debug_assert_ne!(
+                src.0, dst.0,
+                "self-transfer: src == dst moves nothing over any wire"
+            );
+            return Ok(());
+        }
+        let mut slowdown = 1.0_f64;
+        if let Some(f) = &self.faults {
+            for (a, b) in [(src, dst), (dst, src)] {
+                if let Some(t) = self.trainer_of[a.0] {
+                    if f.crashed(t) {
+                        f.note_dropped(bytes);
+                        return Err(FaultError::Unreachable);
+                    }
+                    if f.should_drop(t) {
+                        f.note_dropped(bytes);
+                        return Err(FaultError::Dropped);
+                    }
+                    if self.nodes[b.0].0 == Role::SyncPs {
+                        slowdown = slowdown.max(f.slowdown(t));
+                    }
+                }
+            }
+        }
         self.nodes[src.0].1.tx_bytes.fetch_add(bytes, Relaxed);
         self.nodes[dst.0].1.rx_bytes.fetch_add(bytes, Relaxed);
-        if let Some(bw) = self.bandwidth {
+        // Wire time: the configured bandwidth stretched by the slow-link
+        // factor; a slow link with no bandwidth model configured still
+        // sleeps for the *degraded* share, priced off the paper's NIC.
+        let effective_bw = match (self.bandwidth, slowdown > 1.0) {
+            (Some(bw), _) => Some(bw / slowdown),
+            (None, true) => Some(PAPER_NIC_BYTES_PER_SEC / slowdown),
+            (None, false) => None,
+        };
+        if let Some(bw) = effective_bw {
             let secs = bytes as f64 / bw;
             if secs > 1e-6 {
                 std::thread::sleep(Duration::from_secs_f64(secs));
             }
         }
+        Ok(())
     }
 
     pub fn tx(&self, n: NodeId) -> u64 {
@@ -176,5 +263,83 @@ mod tests {
         let t0 = std::time::Instant::now();
         net.transfer(a, b, 20_000); // 20ms at 1MB/s
         assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "self-transfer")]
+    fn self_transfer_rejected_in_debug() {
+        let mut net = Network::new(None);
+        let a = net.add_node(Role::Trainer);
+        net.transfer(a, a, 100);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn self_transfer_skips_accounting_in_release() {
+        let mut net = Network::new(None);
+        let a = net.add_node(Role::Trainer);
+        net.transfer(a, a, 100);
+        assert_eq!(net.tx(a), 0, "self-transfers move nothing");
+        assert_eq!(net.rx(a), 0);
+    }
+
+    #[test]
+    fn crashed_endpoint_feeds_the_dropped_ledger_not_the_nics() {
+        let plan = Arc::new(FaultPlan::parse("crash:t0@sweep0", 0).unwrap());
+        let mut net = Network::new(None);
+        let t0 = net.add_node(Role::Trainer);
+        let ps = net.add_node(Role::SyncPs);
+        let net = net.with_faults(plan.clone());
+        assert_eq!(net.try_transfer(t0, ps, 100), Err(FaultError::Unreachable));
+        assert_eq!(net.try_transfer(ps, t0, 40), Err(FaultError::Unreachable));
+        assert_eq!(net.tx(t0) + net.rx(t0), 0, "no NIC bytes while crashed");
+        assert_eq!(net.role_bytes(Role::SyncPs), 0);
+        assert_eq!(net.dropped_bytes(), 140, "attempted bytes land in the ledger");
+        assert_eq!(plan.dropped_transfers(), 2);
+    }
+
+    #[test]
+    fn transient_drops_split_attempted_from_delivered_exactly() {
+        let plan = Arc::new(FaultPlan::parse("drop:t0@0.5", 0xC0FFEE).unwrap());
+        let mut net = Network::new(None);
+        let t0 = net.add_node(Role::Trainer);
+        let ps = net.add_node(Role::SyncPs);
+        let net = net.with_faults(plan);
+        let mut delivered = 0u64;
+        for _ in 0..200 {
+            if net.try_transfer(t0, ps, 8).is_ok() {
+                delivered += 8;
+            }
+        }
+        assert_eq!(net.tx(t0), delivered, "NICs count only delivered bytes");
+        assert_eq!(net.rx(ps), delivered);
+        assert_eq!(net.dropped_bytes(), 200 * 8 - delivered);
+        assert!(net.dropped_bytes() > 0, "p=0.5 over 200 transfers drops some");
+        assert!(delivered > 0, "...and delivers some");
+    }
+
+    #[test]
+    fn fault_free_trainers_are_untouched_by_the_plan() {
+        let plan = Arc::new(FaultPlan::parse("crash:t0@sweep0", 0).unwrap());
+        let mut net = Network::new(None);
+        let _t0 = net.add_node(Role::Trainer);
+        let t1 = net.add_node(Role::Trainer);
+        let ps = net.add_node(Role::SyncPs);
+        let net = net.with_faults(plan);
+        assert_eq!(net.try_transfer(t1, ps, 64), Ok(()));
+        assert_eq!(net.tx(t1), 64);
+    }
+
+    #[test]
+    fn slow_link_stretches_wire_time() {
+        let plan = Arc::new(FaultPlan::parse("slow-link:t0<->ps@10x", 0).unwrap());
+        let mut net = Network::new(Some(1e6)); // 1 MB/s baseline
+        let t0 = net.add_node(Role::Trainer);
+        let ps = net.add_node(Role::SyncPs);
+        let net = net.with_faults(plan);
+        let start = std::time::Instant::now();
+        net.transfer(t0, ps, 2_000); // 2ms at 1MB/s -> 20ms at 10x slowdown
+        assert!(start.elapsed() >= Duration::from_millis(15));
     }
 }

@@ -75,6 +75,19 @@ impl BlockMomentum {
             *g += *v;
         }
     }
+
+    /// The momentum state, for carrying across a strategy migration.
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// Reinstall carried momentum state (must match the partition size).
+    pub fn set_velocity(&mut self, v: Vec<f32>) {
+        debug_assert_eq!(v.len(), self.velocity.len(), "carried velocity must fit");
+        if v.len() == self.velocity.len() {
+            self.velocity = v;
+        }
+    }
 }
 
 #[cfg(test)]

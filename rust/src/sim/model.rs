@@ -71,6 +71,13 @@ pub struct CostModel {
     /// heterogeneous (adaptively repartitioned / algo-mapped) fabrics
     /// from what each partition actually moved
     pub partition_shares: Vec<f64>,
+    /// one straggling trainer's lap-time inflation factor (1.0 = healthy
+    /// cluster). Rendezvous (MA/BMUF) rounds are paced by the straggler's
+    /// deposits so their round time inflates by this factor; centralized
+    /// (EASGD) sync and the healthy trainers' training never wait on it —
+    /// only the straggler's own contribution shrinks. This is the pricing
+    /// behind `exp ablate-faults`' static-vs-adaptive EPS comparison.
+    pub straggler_factor: f64,
 }
 
 /// One simulated operating point.
@@ -106,6 +113,7 @@ impl CostModel {
             sync_partitions: 1,
             shadow_threads: 1,
             partition_shares: Vec::new(),
+            straggler_factor: 1.0,
         }
     }
 
@@ -154,6 +162,26 @@ impl CostModel {
     pub fn with_easgd_push_fraction(mut self, fraction: f64) -> Self {
         self.easgd_push_fraction = fraction.clamp(0.0, 1.0);
         self
+    }
+
+    /// Price a degraded cluster in which one trainer's laps run `f`×
+    /// slow (floored at 1; non-finite = healthy). Rendezvous rounds are
+    /// gated by the straggler's pace; stop-the-world (fixed-rate) ring
+    /// modes drag the whole barrier down to it; centralized sync and the
+    /// healthy trainers' shadow-mode training are untouched.
+    pub fn with_straggler_factor(mut self, f: f64) -> Self {
+        self.straggler_factor = if f.is_finite() { f.max(1.0) } else { 1.0 };
+        self
+    }
+
+    /// Trainer-equivalents of compute once the straggler runs `1/f` as
+    /// fast: `n - 1 + 1/f` (the healthy peers never wait on it outside a
+    /// barrier).
+    fn straggled_trainers(&self, n: f64) -> f64 {
+        if n < 1.0 {
+            return n;
+        }
+        n - 1.0 + 1.0 / self.straggler_factor
     }
 
     /// Effective parallel threads after memory-bandwidth contention:
@@ -206,7 +234,7 @@ impl CostModel {
         let (mut iter_rate_total, gap, util, train_frac);
         match (algo, mode) {
             (SyncAlgo::None, _) => {
-                iter_rate_total = n * r_trainer;
+                iter_rate_total = self.straggled_trainers(n) * r_trainer;
                 gap = f64::INFINITY;
                 util = 0.0;
                 train_frac = 1.0;
@@ -228,7 +256,9 @@ impl CostModel {
                     t_sync *= over.min(1.5);
                 }
                 let per_thread = 1.0 / (t_batch_eff + t_sync / k);
-                iter_rate_total = n * m * per_thread;
+                // the straggler's threads contribute 1/f of a healthy
+                // trainer's share; nobody else waits on it (no barrier)
+                iter_rate_total = self.straggled_trainers(n) * m * per_thread;
                 let demand = iter_rate_total * round_bytes / k;
                 util = (demand / sync_cap).min(1.0);
                 gap = k;
@@ -239,7 +269,7 @@ impl CostModel {
                 // background sync never throttles training; the sweep is
                 // priced per partition (uniform 1/P by default, measured
                 // shares when fed) and shared by the S pool threads
-                iter_rate_total = n * r_trainer;
+                iter_rate_total = self.straggled_trainers(n) * r_trainer;
                 let algos = vec![algo; self.sync_partitions.max(1)];
                 let (sweep, ps_round_bytes) = self.shadow_sweep(trainers, &algos, sync_ps);
                 // reader cap may slow iterations (affects the measured gap)
@@ -253,10 +283,12 @@ impl CostModel {
                 train_frac = 1.0;
             }
             (SyncAlgo::Ma | SyncAlgo::Bmuf, SyncMode::FixedRate { gap: k }) => {
-                // stop-the-world ring collective every k trainer iterations
+                // stop-the-world ring collective every k trainer
+                // iterations: the barrier drags every member down to the
+                // straggler's lap pace
                 let k = k as f64;
                 let t_round = self.ring_secs(trainers) + self.round_latency;
-                let t_k_iters = k / r_trainer;
+                let t_k_iters = k / r_trainer * self.straggler_factor;
                 iter_rate_total = n * k / (t_k_iters + t_round);
                 gap = k;
                 util = 0.0;
@@ -342,7 +374,10 @@ impl CostModel {
                         Some(&share) => ((elems as f64 * share).round() as usize).max(1),
                         None => crate::sync::traffic::part_len(elems, p, i).max(1),
                     };
-                    self.ring_elems_secs(part_elems, trainers) * s + self.round_latency
+                    // rendezvous rounds close at the straggler's deposit
+                    // pace — centralized partitions below never wait on it
+                    (self.ring_elems_secs(part_elems, trainers) * s + self.round_latency)
+                        * self.straggler_factor
                 }
                 SyncAlgo::None => 0.0,
             };
@@ -365,7 +400,8 @@ impl CostModel {
         sync_ps: usize,
     ) -> SimPoint {
         let n = trainers as f64;
-        let iter_rate_total = self.apply_reader_cap(n * self.trainer_rate(threads));
+        let iter_rate_total =
+            self.apply_reader_cap(self.straggled_trainers(n) * self.trainer_rate(threads));
         let (sweep, ps_round_bytes) = self.shadow_sweep(trainers, algos, sync_ps);
         let sync_cap = sync_ps.max(1) as f64 * self.nic_bytes_per_sec;
         let util = if ps_round_bytes > 0.0 && sweep > 0.0 {
@@ -559,6 +595,53 @@ mod tests {
         assert!(bad.partition_shares.is_empty());
         let pb = bad.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
         assert_eq!(pb.avg_sync_gap, pu.avg_sync_gap);
+    }
+
+    #[test]
+    fn straggler_pricing_penalizes_rendezvous_not_centralized() {
+        use crate::config::SyncAlgo::{Bmuf, Easgd};
+        let healthy = CostModel::paper_scale().with_partitioned_shadow(2, 2);
+        let degraded = CostModel::paper_scale()
+            .with_partitioned_shadow(2, 2)
+            .with_straggler_factor(4.0);
+        // factor 1 (and garbage factors) are the healthy model exactly
+        let noop = CostModel::paper_scale().with_straggler_factor(0.2);
+        assert_eq!(noop.straggler_factor, 1.0);
+        assert_eq!(
+            CostModel::paper_scale().with_straggler_factor(f64::NAN).straggler_factor,
+            1.0
+        );
+
+        // shadow-mode training only loses the straggler's own share...
+        let hb = healthy.simulate(10, 24, Bmuf, SyncMode::Shadow, 0);
+        let db = degraded.simulate(10, 24, Bmuf, SyncMode::Shadow, 0);
+        assert!(db.eps > hb.eps * 0.9, "shadow EPS {} vs healthy {}", db.eps, hb.eps);
+        // ...but a static rendezvous fabric's sync gap inflates ~4x
+        assert!(
+            db.avg_sync_gap > hb.avg_sync_gap * 3.0,
+            "straggled ring gap {} vs healthy {}",
+            db.avg_sync_gap,
+            hb.avg_sync_gap
+        );
+        // the adaptive demotion (rings -> EASGD) keeps the gap near the
+        // healthy centralized fabric's: this is the EPS/gap argument the
+        // fault ablation reports at paper scale
+        let de = degraded.simulate_hybrid_shadow(10, 24, &[Easgd, Easgd], 4);
+        let he = healthy.simulate_hybrid_shadow(10, 24, &[Easgd, Easgd], 4);
+        assert!(de.avg_sync_gap <= he.avg_sync_gap * 1.01);
+        let dstatic = degraded.simulate_hybrid_shadow(10, 24, &[Bmuf, Bmuf], 0);
+        assert!(
+            dstatic.avg_sync_gap > de.avg_sync_gap * 2.0,
+            "static ring {} !>> demoted {}",
+            dstatic.avg_sync_gap,
+            de.avg_sync_gap
+        );
+
+        // stop-the-world ring modes pay the barrier: the whole cluster
+        // drops toward the straggler's pace
+        let hfr = healthy.simulate(10, 24, Bmuf, SyncMode::FixedRate { gap: 10 }, 0);
+        let dfr = degraded.simulate(10, 24, Bmuf, SyncMode::FixedRate { gap: 10 }, 0);
+        assert!(dfr.eps < hfr.eps * 0.5, "FR ring EPS {} vs healthy {}", dfr.eps, hfr.eps);
     }
 
     #[test]

@@ -61,8 +61,9 @@
 //! [`super::traffic`]): a chunk of length `L` is cut into `n` near-equal
 //! segments, and every member sends one segment per hop to its ring
 //! successor for `n-1` reduce-scatter hops followed by `n-1` all-gather
-//! hops. Every per-hop transfer is driven through [`Network::transfer`], so
-//! NIC counters see the *actual* ring traffic of every round; the textbook
+//! hops. Every per-hop transfer is driven through [`Network::try_transfer`]
+//! and only delivered hops are recorded, so NIC counters and recorded sync
+//! bytes both see the *actual* ring traffic of every round; the textbook
 //! `2·(n-1)/n · bytes` formula survives only as the cross-check reference
 //! ([`AllReduceGroup::ring_bytes_per_member`]) — the paper-scale throughput
 //! model in `sim/` now prices collectives from the measured schedule
@@ -83,7 +84,7 @@
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use super::prim::{thread, AtomicU64, AtomicUsize, Condvar, Mutex, Ordering::SeqCst};
+use super::prim::{thread, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard, Ordering::SeqCst};
 
 use anyhow::{bail, ensure, Result};
 
@@ -151,8 +152,10 @@ pub struct RoundOutcome {
     /// This member's ring position within its round (also its fixed place
     /// in the deterministic summation order).
     pub position: usize,
-    /// Bytes this member pushed onto the wire for this round (its
-    /// reduce-scatter + all-gather hops, as accounted through `Network`).
+    /// Bytes this member actually delivered for this round (its
+    /// reduce-scatter + all-gather hops, as accounted through `Network`;
+    /// hops faulted by a crash window or seeded drop are excluded, keeping
+    /// recorded sync bytes identical to the NIC counters).
     pub bytes_tx: u64,
 }
 
@@ -266,6 +269,10 @@ pub struct AllReduceGroup {
     /// tests can deterministically observe deposits overlapping a draining
     /// reduce. `None` (the default) costs one branch per chunk.
     reduce_stall: Option<Duration>,
+    /// Round timeout: members blocked on a round longer than this evict
+    /// the missing members (an implicit [`AllReduceGroup::leave`] per
+    /// absentee) so survivors re-form. `None` = wait forever.
+    round_timeout: Option<Duration>,
     /// Vector length every contribution must match.
     pub len: usize,
     /// Chunk count `C` of the ring schedule (1 = flat single-chunk rings).
@@ -293,6 +300,7 @@ impl AllReduceGroup {
             engine: ReduceEngine::Overlapped,
             capacity: members,
             reduce_stall: None,
+            round_timeout: None,
             len,
             chunks: 1,
         };
@@ -325,6 +333,21 @@ impl AllReduceGroup {
     /// is still draining.
     pub fn with_reduce_stall(mut self, stall: Duration) -> Self {
         self.reduce_stall = Some(stall);
+        self
+    }
+
+    /// Bound every blocking wait inside a round by `timeout`: when it
+    /// expires, members that have not even *started* depositing are
+    /// treated as crashed and evicted — membership shrinks to the members
+    /// actually present, exactly as if each absentee had called
+    /// [`AllReduceGroup::leave`] — so survivors close the round and keep
+    /// bit-deterministic means over the actual contributor list. A member
+    /// mid-deposit is never evicted (it is in `contributors` already). An
+    /// evicted member that was merely slow rejoins the accounting
+    /// implicitly: its late deposit lands in the next round, whose close
+    /// waits for `deposited >= active` with it included in `contributors`.
+    pub fn with_round_timeout(mut self, timeout: Duration) -> Self {
+        self.round_timeout = Some(timeout);
         self
     }
 
@@ -370,6 +393,45 @@ impl AllReduceGroup {
                     }
                 }
             }
+        }
+    }
+
+    /// Block on the round condvar, bounded by the round timeout when one is
+    /// configured. On expiry, evict the members that never showed up for
+    /// the pending round (see [`AllReduceGroup::with_round_timeout`]), then
+    /// return to the caller's predicate loop.
+    fn wait_round<'a>(&'a self, st: MutexGuard<'a, Control>) -> MutexGuard<'a, Control> {
+        match self.round_timeout {
+            None => self.cv.wait(st).unwrap(),
+            Some(timeout) => {
+                let (mut st, res) = self.cv.wait_timeout(st, timeout).unwrap();
+                if res.timed_out() {
+                    self.evict_absentees(&mut st);
+                }
+                st
+            }
+        }
+    }
+
+    /// Round-timeout eviction: shrink `active` down to the members that
+    /// have at least *started* depositing into the pending round — each
+    /// absentee is treated exactly as if it had called
+    /// [`AllReduceGroup::leave`] — and close the round if that completes
+    /// it. The mean stays bit-deterministic: it is always computed over
+    /// the actual `contributors` list, never over `active`.
+    fn evict_absentees(&self, st: &mut Control) {
+        let present = st.contributors.len().max(1);
+        if st.active <= present {
+            // nobody is missing: the wait was for a draining reduce or a
+            // mid-deposit member, both of which make progress on their own
+            return;
+        }
+        st.active = present;
+        if Self::round_complete(st) {
+            self.close_round(st);
+            // waiters blocked on this round (us included — the caller
+            // re-checks its predicate) must observe the close
+            self.cv.notify_all();
         }
     }
 
@@ -589,7 +651,7 @@ impl AllReduceGroup {
                             let claimed = self.help_reduce(pg, pn);
                             st = self.state.lock().unwrap();
                             if !claimed && st.plan.is_some() {
-                                st = self.cv.wait(st).unwrap();
+                                st = self.wait_round(st);
                             }
                         }
                     }
@@ -642,7 +704,7 @@ impl AllReduceGroup {
                 Self::gc(&mut st);
                 break (n, succ);
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.wait_round(st);
         };
         drop(st);
         let bytes_tx = self.account_ring(me, succ, my_pos, n, net);
@@ -652,7 +714,16 @@ impl AllReduceGroup {
     /// Drive this member's hops of the chunked ring schedule through the
     /// network: `n-1` reduce-scatter hops then `n-1` all-gather hops, each
     /// moving one segment of every chunk to the ring successor (schedule
-    /// math shared with [`super::traffic`]). Returns the bytes sent.
+    /// math shared with [`super::traffic`]). Returns the bytes *delivered*:
+    /// a hop faulted by the run's [`FaultPlan`] (this member's crash window
+    /// opening mid-round, or a seeded drop) moves zero NIC bytes and is
+    /// excluded, so `metrics.sync_bytes` — fed from this return value —
+    /// stays exactly equal to the NIC counters under faults. The ring
+    /// successor is always a *depositor* of this round (evicted or crashed
+    /// members never appear in `Round::ring`), so the undelivered cases are
+    /// all on this member's own side.
+    ///
+    /// [`FaultPlan`]: crate::net::fault::FaultPlan
     fn account_ring(
         &self,
         me: NodeId,
@@ -668,14 +739,16 @@ impl AllReduceGroup {
         for hop in 0..n - 1 {
             let seg = traffic::reduce_scatter_segment(my_pos, n, hop);
             let bytes = traffic::segment_bytes(self.len, self.chunks, n, seg);
-            net.transfer(me, succ, bytes);
-            tx += bytes;
+            if net.try_transfer(me, succ, bytes).is_ok() {
+                tx += bytes;
+            }
         }
         for hop in 0..n - 1 {
             let seg = traffic::all_gather_segment(my_pos, n, hop);
             let bytes = traffic::segment_bytes(self.len, self.chunks, n, seg);
-            net.transfer(me, succ, bytes);
-            tx += bytes;
+            if net.try_transfer(me, succ, bytes).is_ok() {
+                tx += bytes;
+            }
         }
         tx
     }

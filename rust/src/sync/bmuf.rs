@@ -13,9 +13,20 @@
 use anyhow::Result;
 
 use super::prim::Arc;
-use super::{AllReduceGroup, SyncCtx, SyncStrategy};
+use super::{AllReduceGroup, RepartitionCarry, SyncCtx, SyncStrategy};
 use crate::optim::BlockMomentum;
 use crate::tensor::ops;
+
+/// BMUF state that survives a strategy migration (the health controller's
+/// demote→EASGD→promote cycle): the block-momentum velocity and the private
+/// `w^global`, both sized to the partition. Reinstalled only when the sizes
+/// still match — forced rebuilds keep ranges fixed, so a round trip through
+/// EASGD rehydrates exactly; a periodic repartition that moved the cut
+/// simply drops the carry and the promoted strategy warm-starts fresh.
+pub struct BmufCarry {
+    pub velocity: Vec<f32>,
+    pub global: Vec<f32>,
+}
 
 pub struct BmufSync {
     group: Arc<AllReduceGroup>,
@@ -79,6 +90,26 @@ impl SyncStrategy for BmufSync {
         true
     }
 
+    fn take_repartition_carry(&mut self) -> Option<RepartitionCarry> {
+        Some(RepartitionCarry {
+            cache: super::DeltaScanCache::new(),
+            gate: None,
+            bmuf: Some(BmufCarry {
+                velocity: self.momentum.velocity().to_vec(),
+                global: self.global.clone(),
+            }),
+        })
+    }
+
+    fn install_repartition_carry(&mut self, carry: RepartitionCarry) {
+        if let Some(b) = carry.bmuf {
+            if b.global.len() == self.global.len() {
+                self.global = b.global;
+                self.momentum.set_velocity(b.velocity);
+            }
+        }
+    }
+
     fn name(&self) -> &'static str {
         "bmuf"
     }
@@ -125,6 +156,33 @@ mod tests {
         b.sync_round(&ctx).unwrap();
         // avg=20, desc=10, global=20; local moves 25% of (20-20)=0 -> stays
         assert_eq!(b.global, vec![20.0, 20.0]);
+    }
+
+    #[test]
+    fn carry_round_trips_momentum_and_global() {
+        // warm a strategy, carry its state out, and rehydrate a fresh one:
+        // the promoted strategy must continue exactly where the old left off
+        let group = Arc::new(AllReduceGroup::new(1, 1));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let metrics = Metrics::new();
+        let local = HogwildBuffer::from_slice(&[1.0]);
+        let mut old = BmufSync::new(group.clone(), 0.0, 1.0, 0.5, &[0.0]);
+        let ctx = SyncCtx::full(&local, node, &net, &metrics);
+        old.sync_round(&ctx).unwrap(); // v = 1, global = 1
+        let carry = old.take_repartition_carry().expect("BMUF must carry");
+        let mut new = BmufSync::new(group, 0.0, 1.0, 0.5, &[0.0]);
+        new.install_repartition_carry(carry);
+        assert_eq!(new.global, vec![1.0]);
+        new.sync_round(&ctx).unwrap();
+        // desc = 1 - 1 = 0; v = 0.5 (carried momentum); global = 1.5 —
+        // identical to an uninterrupted strategy's second round
+        assert_eq!(new.global, vec![1.5]);
+        // a size-mismatched carry is dropped, not force-fit
+        let mut other = BmufSync::new(Arc::new(AllReduceGroup::new(1, 2)), 0.0, 1.0, 0.5, &[0.0, 0.0]);
+        let carry = new.take_repartition_carry().unwrap();
+        other.install_repartition_carry(carry);
+        assert_eq!(other.global, vec![0.0, 0.0]);
     }
 
     #[test]

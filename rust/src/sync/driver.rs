@@ -39,20 +39,52 @@
 //! [`Gate`] stops that trainer's other workers — synchronization literally
 //! interrupts training.
 //!
-//! **Repartition cutover** ([`spawn_shadow_pool_adaptive`]): when a
-//! [`RepartitionController`] publishes a new generation, each trainer's
-//! pool cuts over *independently*, at its own sweep boundary — no global
-//! barrier. Safety rests on two facts. First, a pool thread that exits
-//! always `leave()`s its rendezvous strategies, so a peer still blocked in
-//! an old-generation round sees the membership shrink and its round
-//! closes: a trainer on the old plan can always finish its sweep, which is
-//! why the mixed state (some trainers cut, some not) cannot deadlock —
-//! the acyclic-round-order argument for chains extends across the cutover
-//! because departure, not arrival, is what closes rounds. Second, the
-//! controller publishes at most one pending generation (a rebuild waits
-//! until every active trainer adopted the current one), so adoption never
-//! skips an epoch and a trainer that stops early can vacate exactly the
-//! one pending epoch it never joined ([`RepartitionController::depart`]).
+//! **Persistent workers and epochs** ([`spawn_shadow_pool_adaptive`]): a
+//! pool's OS threads are spawned **once** and live for the whole run.
+//! Layout changes — adaptive repartitions, health demotions/promotions,
+//! crash rejoins — are *installs*: the pool controller publishes a new
+//! task set into the shared [`PoolCore`] and the workers pick it up off a
+//! condvar, so a cutover swaps task vectors in place instead of tearing
+//! down and respawning `S` threads per epoch (the respawn cost used to be
+//! the main cutover overhead at high `--shadow-threads`).
+//!
+//! **Repartition cutover**: when a [`RepartitionController`] publishes a
+//! new generation, each trainer's pool cuts over *independently*, at its
+//! own sweep boundary — no global barrier. Safety rests on two facts.
+//! First, a pool worker that quiesces cleanly always `leave()`s its
+//! rendezvous strategies, so a peer still blocked in an old-generation
+//! round sees the membership shrink and its round closes: a trainer on
+//! the old plan can always finish its sweep, which is why the mixed state
+//! (some trainers cut, some not) cannot deadlock — the acyclic-round-order
+//! argument for chains extends across the cutover because departure, not
+//! arrival, is what closes rounds. Second, the controller publishes at
+//! most one pending generation (a rebuild waits until every active
+//! trainer adopted the current one), so adoption never skips an epoch and
+//! a trainer that stops early can vacate exactly the one pending epoch it
+//! never joined ([`RepartitionController::depart`]).
+//!
+//! **Fault semantics**: when the run's [`Network`] carries a
+//! [`FaultPlan`], the pool's lead worker (thread 0) advances the
+//! trainer's sweep clock once per lap and every worker checks the crash
+//! window at its lap boundary. A crash is a *dirty* quiesce: strategies
+//! do **not** leave their groups (a dead process doesn't say goodbye) —
+//! peers recover via the allreduce round timeout's eviction or the
+//! health watchdog's proxy-depart. The pool controller keeps the sweep
+//! clock ticking while the pool is dark so the window can expire, then
+//! either resumes in place (nobody departed us; adopt first if the plan
+//! moved while we were dark), or — if the watchdog departed the trainer —
+//! re-enters through [`RepartitionController::rejoin`], warm-starting the
+//! replica from the sync-PS central model. Stall windows stretch every
+//! lap by the plan's delay, shadow laps and training iterations alike.
+//!
+//! The pool never *checks* the departed flag and then acts on the answer —
+//! that would race the watchdog. It **claims**: terminal paths go through
+//! [`HealthController::claim_exit`] (flag flipped under the watchdog's
+//! lock, so the goodbye runs exactly once, here or by proxy, never both)
+//! and the crash-resume path goes through [`HealthController::try_resume`]
+//! (fresh heartbeat stamped under the same lock, so a tick that measured
+//! the dark window's silence can no longer depart a trainer that already
+//! resumed). `tests/loom_models.rs` model-checks this handshake.
 //!
 //! # Examples
 //!
@@ -88,13 +120,15 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::metrics::Metrics;
+use crate::net::fault::FaultPlan;
 use crate::net::{Network, NodeId};
 use crate::tensor::HogwildBuffer;
 
+use super::health::HealthController;
 use super::prim::thread::{self, JoinHandle};
 use super::prim::{
-    Arc, AtomicBool, AtomicU64, AtomicUsize, Mutex, Ordering::Relaxed, RwLock, RwLockReadGuard,
-    RwLockWriteGuard,
+    Arc, AtomicBool, AtomicU64, AtomicUsize, Condvar, Mutex, Ordering::Relaxed, RwLock,
+    RwLockReadGuard, RwLockWriteGuard,
 };
 use super::repartition::RepartitionController;
 use super::{ParamRange, RepartitionCarry, SyncStrategy};
@@ -177,20 +211,78 @@ pub fn spawn_shadow_pool(
         trainer_id,
         threads,
         None,
+        None,
     )
 }
 
-/// [`spawn_shadow_pool`] with measured-cost adaptive repartitioning: when
-/// `controller` is given, the pool runs *epochs*. Each epoch services the
-/// current [`super::repartition::PlanEpoch`]'s tasks exactly like the
-/// static pool; once the controller publishes a new generation, every pool
-/// thread exits at its next sweep boundary (a blocked rendezvous round is
-/// unblocked by faster peers leaving, the same mechanism as shutdown), the
-/// retiring strategies `leave()` their old groups, EASGD gate state is
-/// carried across by partition index (cache ordinals are global, so
-/// entries stay valid wherever their chunks now live), and the pool
-/// re-spawns over the new ranges. With `controller = None` this is exactly
-/// the static pool.
+/// Immutable context shared by a pool's controller and workers.
+struct PoolCtx {
+    local: Arc<HogwildBuffer>,
+    trainer_node: NodeId,
+    net: Arc<Network>,
+    metrics: Arc<Metrics>,
+    stop: StopFlag,
+    interval: Duration,
+    trainer_id: usize,
+    ctrl: Option<Arc<RepartitionController>>,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+/// The install/quiesce rendezvous between a pool's controller and its
+/// persistent workers. The controller publishes a task set (an *install*);
+/// each worker takes its chain + a steal handle, runs laps until a quiesce
+/// reason (stop, generation change, crash window, strategy error), parks
+/// its chain back, and waits for the next install.
+struct PoolCore {
+    state: Mutex<CoreState>,
+    cv: Condvar,
+}
+
+struct CoreState {
+    /// monotonically increasing install counter; workers wake when it moves
+    install: u64,
+    /// the controller generation this install was built against
+    install_gen: u64,
+    /// per-worker rendezvous chains of the current install (taken on wake)
+    chains: Vec<Option<Vec<ShadowTask>>>,
+    /// the current install's shared work-stealing pool
+    steal: Option<Arc<StealPool>>,
+    /// chains handed back by quiesced workers
+    parked: Vec<Option<Vec<ShadowTask>>>,
+    /// workers parked since the current install
+    quiesced: usize,
+    /// partition rounds accumulated across all installs
+    rounds: u64,
+    /// first strategy error any worker hit
+    first_err: Option<anyhow::Error>,
+    /// some worker quiesced because the trainer's crash window opened
+    /// (dirty exit: its strategies did NOT leave their groups)
+    crashed: bool,
+    /// terminal: workers exit their outer loop
+    shutdown: bool,
+}
+
+/// What one worker's lap loop hands back when it quiesces.
+struct LapExit {
+    rounds: u64,
+    err: Option<anyhow::Error>,
+    crashed: bool,
+}
+
+/// [`spawn_shadow_pool`] with measured-cost adaptive repartitioning and
+/// fault/health handling: when `controller` is given the pool runs
+/// *epochs* — each services the current [`super::repartition::PlanEpoch`]
+/// exactly like the static pool; once the controller publishes a new
+/// generation every worker quiesces at its next sweep boundary (a blocked
+/// rendezvous round is unblocked by faster peers leaving, the same
+/// mechanism as shutdown), the retiring strategies `leave()` their old
+/// groups, per-partition [`RepartitionCarry`] state is carried across
+/// (cache ordinals are global, so entries stay valid wherever their
+/// chunks now live), and the controller installs tasks over the new
+/// ranges into the *same* worker threads. With `controller = None` this
+/// is exactly the static pool. `health`, when given, supplies the
+/// departed/rejoin handshake with the crash watchdog (see the module
+/// docs).
 #[allow(clippy::too_many_arguments)]
 pub fn spawn_shadow_pool_adaptive(
     tasks: Vec<ShadowTask>,
@@ -203,97 +295,167 @@ pub fn spawn_shadow_pool_adaptive(
     trainer_id: usize,
     threads: usize,
     controller: Option<Arc<RepartitionController>>,
+    health: Option<Arc<HealthController>>,
 ) -> JoinHandle<Result<u64>> {
     thread::Builder::new()
         .name(format!("shadow-{trainer_id}"))
         .spawn(move || {
-            let mut tasks = tasks;
-            let mut my_gen = controller.as_ref().map_or(0, |c| c.generation());
-            let mut total_rounds = 0u64;
+            // worker count is fixed for the lifetime of the pool: installs
+            // swap task vectors, never threads
+            let nworkers = threads.clamp(1, tasks.len().max(1));
+            let faults = net.faults().cloned();
+            let ctx = Arc::new(PoolCtx {
+                local,
+                trainer_node,
+                net,
+                metrics,
+                stop,
+                interval,
+                trainer_id,
+                ctrl: controller,
+                faults,
+            });
+            let core = Arc::new(PoolCore {
+                state: Mutex::new(CoreState {
+                    install: 0,
+                    install_gen: 0,
+                    chains: (0..nworkers).map(|_| None).collect(),
+                    steal: None,
+                    parked: (0..nworkers).map(|_| None).collect(),
+                    quiesced: 0,
+                    rounds: 0,
+                    first_err: None,
+                    crashed: false,
+                    shutdown: false,
+                }),
+                cv: Condvar::new(),
+            });
+            let mut workers = Vec::with_capacity(nworkers);
+            for k in 0..nworkers {
+                let core = core.clone();
+                let ctx = ctx.clone();
+                workers.push(
+                    thread::Builder::new()
+                        .name(format!("shadow-{trainer_id}.{k}"))
+                        .spawn(move || worker_loop(k, &core, &ctx))
+                        .expect("spawn shadow pool worker"),
+                );
+            }
+            let mut my_gen = ctx.ctrl.as_ref().map_or(0, |c| c.generation());
+            install_epoch(&core, tasks, nworkers, my_gen);
             loop {
-                let threads_now = threads.clamp(1, tasks.len().max(1));
-                // rendezvous strategies are pinned to chains in plan order
-                // — every trainer builds the exact same chains, which is
-                // what keeps the cross-trainer round order acyclic (see the
-                // module doc); everything else goes into the shared
-                // work-stealing pool
-                let mut chains: Vec<Vec<ShadowTask>> =
-                    (0..threads_now).map(|_| Vec::new()).collect();
-                let mut steal_tasks = Vec::new();
-                let mut next_chain = 0usize;
-                for t in tasks {
-                    if t.strategy.rendezvous() {
-                        chains[next_chain % threads_now].push(t);
-                        next_chain += 1;
-                    } else {
-                        steal_tasks.push(Mutex::new(t));
+                let (mut recovered, err, crashed) = wait_quiesced(&core, nworkers);
+                // terminal paths claim the exit against the watchdog: true
+                // means we own the goodbye; false means a proxy-depart
+                // already left our groups and vacated our slots
+                let claim_exit =
+                    || health.as_ref().map_or(true, |h| h.claim_exit(trainer_id));
+                if let Some(e) = err {
+                    if claim_exit() {
+                        leave_all(&mut recovered);
+                        if let Some(c) = &ctx.ctrl {
+                            c.depart(my_gen);
+                        }
+                    }
+                    let _ = shutdown_workers(&core, workers);
+                    return Err(e);
+                }
+                if crashed && !ctx.stop.load(Relaxed) {
+                    let f = ctx.faults.as_ref().expect("crash quiesce implies a fault plan");
+                    if f.crashes_permanently(trainer_id) {
+                        // dead for good: a crashed process says no goodbyes —
+                        // no leave, no depart. The watchdog's proxy-depart
+                        // (or ring eviction) removes us from survivors' view.
+                        return Ok(shutdown_workers(&core, workers));
+                    }
+                    // dark: keep the trainer's sweep clock ticking so the
+                    // crash window can expire
+                    while f.crashed(trainer_id) && !ctx.stop.load(Relaxed) {
+                        f.note_sweep(trainer_id);
+                        thread::sleep(Duration::from_millis(1));
+                    }
+                    if !ctx.stop.load(Relaxed) {
+                        // try_resume stamps a fresh heartbeat under the
+                        // watchdog's own lock, so a tick that measured our
+                        // dark-window silence can no longer depart us
+                        let resumed =
+                            health.as_ref().map_or(true, |h| h.try_resume(trainer_id));
+                        if !resumed {
+                            // the watchdog took us out while we were dark:
+                            // elastic rejoin. The dead strategies are dropped
+                            // WITHOUT leave() — the watchdog already left
+                            // their groups on our behalf.
+                            drop(recovered);
+                            let (c, h) = (
+                                ctx.ctrl.as_ref().expect("departed implies a controller"),
+                                health.as_ref().expect("departed implies health"),
+                            );
+                            let mut epoch = None;
+                            while !ctx.stop.load(Relaxed) {
+                                match c.rejoin() {
+                                    Some(e) => {
+                                        epoch = Some(e);
+                                        break;
+                                    }
+                                    // survivors are mid-cutover: retry once
+                                    // the pending epoch is fully adopted
+                                    None => thread::sleep(Duration::from_millis(1)),
+                                }
+                            }
+                            let Some(epoch) = epoch else {
+                                return Ok(shutdown_workers(&core, workers));
+                            };
+                            // warm-start the replica from the central model:
+                            // the survivors kept pushing while we were dark,
+                            // so central is the freshest consistent state
+                            if let Some(ps) = c.sync_ps() {
+                                ctx.local.write_from(&ps.central.to_vec());
+                            }
+                            let seed = ctx.local.to_vec();
+                            match c.build_tasks(trainer_id, &epoch, &seed, Vec::new()) {
+                                Ok(tasks) => {
+                                    h.mark_rejoined(trainer_id, &epoch);
+                                    my_gen = epoch.gen;
+                                    install_epoch(&core, tasks, nworkers, my_gen);
+                                    continue;
+                                }
+                                Err(e) => {
+                                    let _ = shutdown_workers(&core, workers);
+                                    return Err(e);
+                                }
+                            }
+                        }
+                        // a short window nobody noticed: resume in place. If
+                        // the plan moved while we were dark, cut over first
+                        // (we are alive again, so now we say goodbye
+                        // properly); the cutover block below handles it.
+                        if !ctx.ctrl.as_ref().is_some_and(|c| c.generation() != my_gen) {
+                            install_epoch(&core, recovered, nworkers, my_gen);
+                            continue;
+                        }
                     }
                 }
-                let pool =
-                    Arc::new(StealPool { tasks: steal_tasks, ticket: AtomicUsize::new(0) });
-                let mut workers = Vec::new();
-                for (k, chain) in chains.into_iter().enumerate() {
-                    let local = local.clone();
-                    let net = net.clone();
-                    let metrics = metrics.clone();
-                    let stop = stop.clone();
-                    let pool = pool.clone();
-                    let repart = controller.as_ref().map(|c| (c.clone(), my_gen));
-                    workers.push(
-                        thread::Builder::new()
-                            .name(format!("shadow-{trainer_id}.{k}"))
-                            .spawn(move || {
-                                pool_thread(
-                                    chain,
-                                    &pool,
-                                    &local,
-                                    trainer_node,
-                                    &net,
-                                    &metrics,
-                                    &stop,
-                                    interval,
-                                    repart,
-                                    k == 0,
-                                )
-                            })
-                            .expect("spawn shadow pool thread"),
-                    );
-                }
-                let mut first_err = None;
-                let mut recovered: Vec<ShadowTask> = Vec::new();
-                for w in workers {
-                    let exit = w.join().expect("shadow pool thread panicked");
-                    total_rounds += exit.rounds;
-                    recovered.extend(exit.chain);
-                    first_err = first_err.or(exit.err);
-                }
-                // all pool threads are gone: recover (and retire) the
-                // stolen strategies too
-                let pool =
-                    Arc::try_unwrap(pool).ok().expect("pool threads still hold the steal pool");
-                for slot in pool.tasks {
-                    let mut t = slot.into_inner().unwrap();
-                    t.strategy.leave();
-                    recovered.push(t);
-                }
-                let recut = first_err.is_none()
-                    && !stop.load(Relaxed)
-                    && controller.as_ref().is_some_and(|c| c.generation() != my_gen);
+                let recut = !ctx.stop.load(Relaxed)
+                    && ctx.ctrl.as_ref().is_some_and(|c| c.generation() != my_gen);
                 if !recut {
-                    if let Some(c) = &controller {
-                        // vacate any pending epoch this trainer never
-                        // adopted, so adopters don't wait on a ghost
-                        c.depart(my_gen);
+                    if claim_exit() {
+                        // clean quiesces already left their chains; this
+                        // retires the stolen strategies (and is idempotent
+                        // on the chains) and covers a crash-at-stop
+                        leave_all(&mut recovered);
+                        if let Some(c) = &ctx.ctrl {
+                            // vacate any pending epoch we never adopted, so
+                            // adopters don't wait on a ghost
+                            c.depart(my_gen);
+                        }
                     }
-                    return match first_err {
-                        Some(e) => Err(e),
-                        None => Ok(total_rounds),
-                    };
+                    return Ok(shutdown_workers(&core, workers));
                 }
-                // cutover: the pool is quiesced between rounds and the old
-                // strategies have left their groups — adopt the new epoch
-                // and rebuild the tasks over its ranges
-                let c = controller.as_ref().unwrap();
+                // cutover: the pool is quiesced between rounds — retire the
+                // old strategies, adopt the new epoch, rebuild the tasks
+                // over its ranges, and install them into the same workers
+                leave_all(&mut recovered);
+                let c = ctx.ctrl.as_ref().unwrap();
                 let epoch = c.adopt(my_gen);
                 my_gen = epoch.gen;
                 let mut carry: Vec<Option<RepartitionCarry>> =
@@ -303,67 +465,193 @@ pub fn spawn_shadow_pool_adaptive(
                         carry[t.partition] = t.strategy.take_repartition_carry();
                     }
                 }
-                let seed = local.to_vec();
-                tasks = match c.build_tasks(trainer_id, &epoch, &seed, carry) {
+                let seed = ctx.local.to_vec();
+                let tasks = match c.build_tasks(trainer_id, &epoch, &seed, carry) {
                     Ok(t) => t,
                     Err(e) => {
                         c.depart(my_gen);
+                        let _ = shutdown_workers(&core, workers);
                         return Err(e);
                     }
                 };
+                if let Some(h) = &health {
+                    h.note_adopt(trainer_id, &epoch);
+                }
+                install_epoch(&core, tasks, nworkers, my_gen);
             }
         })
         .expect("spawn shadow thread")
 }
 
-/// What one pool thread hands back when it exits: the partition rounds it
-/// ran, its rendezvous chain (strategies already `leave()`d, carry state
-/// intact), and the first strategy error it hit, if any.
-struct PoolThreadExit {
-    rounds: u64,
-    chain: Vec<ShadowTask>,
-    err: Option<anyhow::Error>,
+/// Distribute a task set to the persistent workers and wake them:
+/// rendezvous strategies round-robin onto chains in plan order — every
+/// trainer builds the exact same chains, which is what keeps the
+/// cross-trainer round order acyclic (see the module doc) — everything
+/// else goes into the shared work-stealing pool.
+fn install_epoch(core: &PoolCore, tasks: Vec<ShadowTask>, nworkers: usize, install_gen: u64) {
+    let mut chains: Vec<Vec<ShadowTask>> = (0..nworkers).map(|_| Vec::new()).collect();
+    let mut steal_tasks = Vec::new();
+    let mut next_chain = 0usize;
+    for t in tasks {
+        if t.strategy.rendezvous() {
+            chains[next_chain % nworkers].push(t);
+            next_chain += 1;
+        } else {
+            steal_tasks.push(Mutex::new(t));
+        }
+    }
+    let mut st = core.state.lock().unwrap();
+    st.chains = chains.into_iter().map(Some).collect();
+    st.steal = Some(Arc::new(StealPool { tasks: steal_tasks, ticket: AtomicUsize::new(0) }));
+    st.parked = (0..nworkers).map(|_| None).collect();
+    st.quiesced = 0;
+    st.crashed = false;
+    st.install += 1;
+    st.install_gen = install_gen;
+    core.cv.notify_all();
 }
 
-/// One pool thread: per lap, run the next round of the owned rendezvous
-/// chain (cyclic order) and steal one non-rendezvous round. Thread 0 of an
-/// adaptive pool additionally records one *sweep* per lap with the
-/// replica's dirty-epoch write delta; every thread checks the controller's
-/// generation once per lap and exits at the sweep boundary when a new plan
-/// is pending (the cutover's quiesce point).
-#[allow(clippy::too_many_arguments)]
-fn pool_thread(
-    mut chain: Vec<ShadowTask>,
+/// Block until every worker parked, then collect every strategy of the
+/// retired install (chains and stolen tasks alike) plus the quiesce
+/// verdict: the first error, and whether the exit was a crash.
+fn wait_quiesced(
+    core: &PoolCore,
+    nworkers: usize,
+) -> (Vec<ShadowTask>, Option<anyhow::Error>, bool) {
+    let mut st = core.state.lock().unwrap();
+    while st.quiesced < nworkers {
+        st = core.cv.wait(st).unwrap();
+    }
+    let mut recovered = Vec::new();
+    for slot in st.parked.iter_mut() {
+        recovered.extend(slot.take().unwrap_or_default());
+    }
+    let steal = st.steal.take().expect("an installed epoch has a steal pool");
+    let err = st.first_err.take();
+    let crashed = st.crashed;
+    drop(st);
+    // every worker dropped its handle before parking, so the pool is ours
+    let pool = Arc::try_unwrap(steal).ok().expect("workers still hold the steal pool");
+    for slot in pool.tasks {
+        recovered.push(slot.into_inner().unwrap());
+    }
+    (recovered, err, crashed)
+}
+
+/// Terminal: wake the workers into their exit path, join them, and return
+/// the pool's total round count.
+fn shutdown_workers(core: &PoolCore, workers: Vec<JoinHandle<()>>) -> u64 {
+    {
+        let mut st = core.state.lock().unwrap();
+        st.shutdown = true;
+        core.cv.notify_all();
+    }
+    for w in workers {
+        w.join().expect("shadow pool worker panicked");
+    }
+    let st = core.state.lock().unwrap();
+    st.rounds
+}
+
+/// Retire strategies: idempotent for chains that already left on their
+/// clean quiesce, a no-op for centralized strategies, and the real
+/// goodbye for a crash-at-stop chain.
+fn leave_all(tasks: &mut [ShadowTask]) {
+    for t in tasks.iter_mut() {
+        t.strategy.leave();
+    }
+}
+
+/// One persistent worker: wait for an install (or shutdown), run laps
+/// until a quiesce reason, park the chain back, repeat. The dirty-epoch
+/// baseline (`last_epochs`) lives across installs, so sweep write-deltas
+/// stay continuous through cutovers.
+fn worker_loop(k: usize, core: &PoolCore, ctx: &PoolCtx) {
+    let mut seen = 0u64;
+    let mut last_epochs: Vec<u64> = Vec::new();
+    loop {
+        let (mut chain, steal, my_gen) = {
+            let mut st = core.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.install > seen {
+                    seen = st.install;
+                    let chain = st.chains[k].take().unwrap_or_default();
+                    let steal = st.steal.clone().expect("an install publishes a steal pool");
+                    break (chain, steal, st.install_gen);
+                }
+                st = core.cv.wait(st).unwrap();
+            }
+        };
+        let exit = run_laps(&mut chain, &steal, ctx, k == 0, my_gen, &mut last_epochs);
+        // the controller try-unwraps the steal pool once every worker has
+        // parked: our clone must be gone first
+        drop(steal);
+        let mut st = core.state.lock().unwrap();
+        st.rounds += exit.rounds;
+        if let Some(e) = exit.err {
+            st.first_err.get_or_insert(e);
+        }
+        if exit.crashed {
+            st.crashed = true;
+        }
+        st.parked[k] = Some(chain);
+        st.quiesced += 1;
+        core.cv.notify_all();
+    }
+}
+
+/// The lap loop of one worker for one install: per lap, run the next
+/// round of the owned rendezvous chain (cyclic order) and steal one
+/// non-rendezvous round. The lead worker (thread 0) additionally advances
+/// the fault plan's sweep clock and records one repartition *sweep* per
+/// lap with the replica's dirty-epoch write delta; every worker checks
+/// the crash window and the controller's generation once per lap and
+/// quiesces at the boundary. Clean exits `leave()` the chain — a crash
+/// does not (dirty exit; see the module docs).
+fn run_laps(
+    chain: &mut [ShadowTask],
     pool: &StealPool,
-    local: &HogwildBuffer,
-    trainer_node: NodeId,
-    net: &Network,
-    metrics: &Metrics,
-    stop: &AtomicBool,
-    interval: Duration,
-    repart: Option<(Arc<RepartitionController>, u64)>,
-    record_sweeps: bool,
-) -> PoolThreadExit {
+    ctx: &PoolCtx,
+    lead: bool,
+    my_gen: u64,
+    last_epochs: &mut Vec<u64>,
+) -> LapExit {
     let mut rounds = 0u64;
     let mut chain_idx = 0usize;
     let mut err = None;
-    let mut last_epochs: Vec<u64> = Vec::new();
-    'run: while !stop.load(Relaxed) {
+    let mut crashed = false;
+    'run: while !ctx.stop.load(Relaxed) {
+        if let Some(f) = &ctx.faults {
+            if lead {
+                f.note_sweep(ctx.trainer_id);
+            }
+            if f.crashed(ctx.trainer_id) {
+                crashed = true;
+                break 'run;
+            }
+            if let Some(d) = f.lap_delay(ctx.trainer_id) {
+                // straggling: every lap pays the stall
+                thread::sleep(d);
+            }
+        }
         let mut worked = false;
         if !chain.is_empty() {
             let t = &mut chain[chain_idx % chain.len()];
             chain_idx += 1;
-            let ctx = super::SyncCtx {
-                local,
+            let sctx = super::SyncCtx {
+                local: &ctx.local,
                 range: t.range,
                 partition: t.partition,
-                trainer_node,
-                net,
-                metrics,
+                trainer_node: ctx.trainer_node,
+                net: &ctx.net,
+                metrics: &ctx.metrics,
             };
-            match t.strategy.sync_round(&ctx) {
+            match t.strategy.sync_round(&sctx) {
                 Ok(_) => {
-                    metrics.record_partition_sync(t.partition);
+                    ctx.metrics.record_partition_sync(t.partition);
                     rounds += 1;
                     worked = true;
                 }
@@ -380,17 +668,17 @@ fn pool_thread(
             for off in 0..pool.tasks.len() {
                 let slot = &pool.tasks[(start.wrapping_add(off)) % pool.tasks.len()];
                 let Ok(mut t) = slot.try_lock() else { continue };
-                let ctx = super::SyncCtx {
-                    local,
+                let sctx = super::SyncCtx {
+                    local: &ctx.local,
                     range: t.range,
                     partition: t.partition,
-                    trainer_node,
-                    net,
-                    metrics,
+                    trainer_node: ctx.trainer_node,
+                    net: &ctx.net,
+                    metrics: &ctx.metrics,
                 };
-                match t.strategy.sync_round(&ctx) {
+                match t.strategy.sync_round(&sctx) {
                     Ok(_) => {
-                        metrics.record_partition_sync(t.partition);
+                        ctx.metrics.record_partition_sync(t.partition);
                         rounds += 1;
                         worked = true;
                     }
@@ -407,44 +695,47 @@ fn pool_thread(
         if !worked {
             thread::yield_now();
         }
-        if !interval.is_zero() {
-            thread::sleep(interval);
+        if !ctx.interval.is_zero() {
+            thread::sleep(ctx.interval);
         }
-        if let Some((c, adopted_gen)) = &repart {
-            if record_sweeps {
+        if let Some(c) = &ctx.ctrl {
+            if lead {
                 // feed the measured write rates: dirty-epoch bumps since
-                // this thread's previous sweep (empty when untracked; the
+                // this worker's previous sweep (empty when untracked; the
                 // first observation only primes the baseline — re-adding
                 // cumulative counts after every cutover would multiply the
                 // profile by its own history)
-                let delta = match local.dirty_chunk_epochs() {
+                let delta = match ctx.local.dirty_chunk_epochs() {
                     Some(now) => {
                         let delta = if last_epochs.len() == now.len() {
                             now.iter()
-                                .zip(&last_epochs)
+                                .zip(last_epochs.iter())
                                 .map(|(n, l)| n.wrapping_sub(*l))
                                 .collect()
                         } else {
                             Vec::new()
                         };
-                        last_epochs = now;
+                        *last_epochs = now;
                         delta
                     }
                     None => Vec::new(),
                 };
                 c.record_sweep(&delta);
             }
-            if c.generation() != *adopted_gen {
+            if c.generation() != my_gen {
                 break 'run; // quiesce for the cutover
             }
         }
     }
-    // leaving the owned chain is what unblocks peer trainers mid-round —
-    // at shutdown and at a repartition cutover alike
-    for t in &mut chain {
-        t.strategy.leave();
+    if !crashed {
+        // leaving the owned chain is what unblocks peer trainers mid-round
+        // — at shutdown and at a repartition cutover alike; a crash keeps
+        // its memberships (a dead process doesn't say goodbye)
+        for t in chain.iter_mut() {
+            t.strategy.leave();
+        }
     }
-    PoolThreadExit { rounds, chain, err }
+    LapExit { rounds, err, crashed }
 }
 
 /// Foreground gate: workers hold a read lock while training; a fixed-rate
@@ -635,6 +926,80 @@ mod tests {
         stop.store(true, Relaxed);
         assert!(h.join().unwrap().unwrap() >= 3);
         assert!(left.load(Relaxed));
+    }
+
+    #[test]
+    fn crash_window_quiesces_the_pool_then_resumes() {
+        // a transient crash window: the pool goes dark at the window's
+        // sweep, the controller ticks the clock until it closes, the same
+        // tasks are reinstalled, and rounds keep flowing afterwards
+        let rounds = Arc::new(AtomicU64::new(0));
+        let left = Arc::new(AtomicBool::new(false));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let faults =
+            Arc::new(FaultPlan::parse("crash:t0@sweep5+3", 7).expect("valid plan"));
+        let net = net.with_faults(faults.clone());
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_shadow_pool(
+            vec![ShadowTask {
+                partition: 0,
+                range: ParamRange::full(4),
+                strategy: Box::new(CountingSync { rounds: rounds.clone(), left: left.clone() }),
+            }],
+            Arc::new(HogwildBuffer::zeros(4)),
+            node,
+            Arc::new(net),
+            Arc::new(Metrics::new()),
+            stop.clone(),
+            Duration::ZERO,
+            0,
+            1,
+        );
+        // wait until the window has definitely opened and closed again
+        while faults.sweep(0) < 20 {
+            std::thread::yield_now();
+        }
+        let before = rounds.load(Relaxed);
+        while rounds.load(Relaxed) <= before {
+            std::thread::yield_now();
+        }
+        stop.store(true, Relaxed);
+        let total = h.join().unwrap().unwrap();
+        assert!(total > before, "no rounds after the crash window closed");
+        assert!(left.load(Relaxed), "resumed pool must still leave at shutdown");
+    }
+
+    #[test]
+    fn permanent_crash_shuts_the_pool_down_without_goodbyes() {
+        // a permanent crash (no +duration): the pool returns on its own,
+        // without stop ever being raised, and the dead strategies never
+        // leave their groups — that's the watchdog's job
+        let rounds = Arc::new(AtomicU64::new(0));
+        let left = Arc::new(AtomicBool::new(false));
+        let mut net = Network::new(None);
+        let node = net.add_node(Role::Trainer);
+        let faults = Arc::new(FaultPlan::parse("crash:t0@sweep3", 7).expect("valid plan"));
+        let net = net.with_faults(faults);
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_shadow_pool(
+            vec![ShadowTask {
+                partition: 0,
+                range: ParamRange::full(4),
+                strategy: Box::new(CountingSync { rounds: rounds.clone(), left: left.clone() }),
+            }],
+            Arc::new(HogwildBuffer::zeros(4)),
+            node,
+            Arc::new(net),
+            Arc::new(Metrics::new()),
+            stop,
+            Duration::ZERO,
+            0,
+            2,
+        );
+        let total = h.join().unwrap().unwrap();
+        assert_eq!(total, rounds.load(Relaxed));
+        assert!(!left.load(Relaxed), "a crashed trainer must not say goodbye");
     }
 
     #[test]

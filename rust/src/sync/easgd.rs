@@ -32,11 +32,14 @@ pub struct EasgdSync {
     /// this strategy's own delta gate (per trainer × partition); `None`
     /// falls back to the group-level gate
     gate: Option<DeltaGate>,
+    /// BMUF state parked while this partition is health-demoted to EASGD,
+    /// held untouched and re-emitted so a later promotion rehydrates it
+    bmuf_parked: Option<super::bmuf::BmufCarry>,
 }
 
 impl EasgdSync {
     pub fn new(group: Arc<SyncPsGroup>, alpha: f32) -> Self {
-        Self { group, alpha, cache: DeltaScanCache::new(), gate: None }
+        Self { group, alpha, cache: DeltaScanCache::new(), gate: None, bmuf_parked: None }
     }
 
     /// Give this strategy its own [`DeltaGate`] — its private quantile
@@ -82,6 +85,7 @@ impl SyncStrategy for EasgdSync {
         Some(RepartitionCarry {
             cache: std::mem::take(&mut self.cache),
             gate: self.gate.take(),
+            bmuf: self.bmuf_parked.take(),
         })
     }
 
@@ -91,6 +95,10 @@ impl SyncStrategy for EasgdSync {
             // keep the warmed sketch instead of the freshly built gate; an
             // ungated carry (legacy group-gate strategies) changes nothing
             self.gate = carry.gate;
+        }
+        if carry.bmuf.is_some() {
+            // a demoted BMUF partition: park the momentum for the promotion
+            self.bmuf_parked = carry.bmuf;
         }
     }
 

@@ -1,0 +1,733 @@
+//! Straggler-adaptive algorithm switching and crash recovery — the
+//! fabric's health controller.
+//!
+//! A rendezvous partition (MA/BMUF) is only as fast as its slowest member:
+//! one straggling trainer stretches every peer's round, and a *crashed*
+//! trainer would stall rounds forever. This module closes both holes with
+//! a [`HealthController`] shared by every trainer, a sibling of
+//! [`RepartitionController`] that reuses its epoch-gated cutover instead
+//! of inventing a second protocol:
+//!
+//! * **Liveness** — every training worker stamps a per-trainer heartbeat
+//!   each iteration ([`HealthController::note_lap`]). Heartbeats come from
+//!   the *training* loop, not the shadow pool, deliberately: in shadow
+//!   mode workers never block on sync, so a healthy trainer whose shadow
+//!   thread is parked in a rendezvous round behind a straggler still beats
+//!   at full rate — pool-side heartbeats would depart the victims before
+//!   the culprit. A watchdog thread ([`HealthController::spawn_watchdog`])
+//!   departs any trainer silent past `--heartbeat-timeout-ms`: it proxies
+//!   the dead trainer's `leave()` on every collective group of the epoch
+//!   it last adopted, then runs the normal
+//!   [`RepartitionController::depart`] (which also vacates the trainer's
+//!   slots in a pending epoch), so survivors keep closing rounds and the
+//!   next rebuild sizes rings to the real roster. The departed trainer's
+//!   pool later rejoins through [`RepartitionController::rejoin`] once its
+//!   crash window closes.
+//! * **Straggler adaptation** (`--health-adaptive`) — the controller keeps
+//!   an EWMA of each trainer's beat interval and compares every alive
+//!   trainer against the roster's lower-median rate. When some trainer's
+//!   effective interval (its EWMA, or its current silence if longer)
+//!   exceeds `--health-stall-factor ×` the median, the controller
+//!   *demotes*: it publishes an algo-map override that re-resolves every
+//!   rendezvous partition to EASGD — same ranges, no rounds to stall —
+//!   and forces an epoch cutover. Trainers then sync the demoted
+//!   partitions through the sync-PS tier at their own pace (which is why
+//!   `--health-adaptive` requires `--num-sync-ps ≥ 1`). When the roster
+//!   stays healthy for [`PROMOTE_AFTER`] consecutive watchdog ticks, the
+//!   override is cleared and a second forced cutover *promotes* the
+//!   partitions back; BMUF momentum survives the round trip inside
+//!   [`crate::sync::RepartitionCarry`] (parked by the interim EASGD
+//!   strategy), because forced rebuilds keep partition ranges fixed.
+//!
+//! Orderings (enforced by `cargo run -p xtask -- lint`, documented in
+//! docs/CONCURRENCY.md): `heartbeat` stamps are Release stores paired with
+//! Acquire loads in the watchdog, so a depart decision never acts on a
+//! stale-but-published beat; `departed` flags only *transition* inside the
+//! controller's state lock (reads stay lock-free Acquire loads), and every
+//! depart re-validates staleness under that lock. The lock is what makes
+//! the three racing claimants — watchdog ticks ([`Self::check_heartbeats`]),
+//! a pool resuming from a closed crash window ([`Self::try_resume`]), and a
+//! pool's terminal goodbye ([`Self::claim_exit`]) — mutually exclusive: the
+//! proxy-leave runs exactly once per crash, a resume can never be
+//! invalidated by a tick that measured pre-resume silence, and a terminal
+//! `leave()` can never double with a proxy one. `tests/loom_models.rs`
+//! model-checks this handshake exhaustively.
+
+use std::time::{Duration, Instant};
+
+use crate::config::{AlgoMap, RunConfig, SyncAlgo};
+
+use super::prim::{
+    thread::{self, JoinHandle},
+    Arc, AtomicBool, AtomicU64, Mutex,
+    Ordering::{Acquire, Relaxed, Release},
+};
+use super::repartition::{PlanEpoch, RepartitionController};
+
+/// Consecutive healthy watchdog ticks before a demoted fabric is promoted
+/// back to its configured algorithms (hysteresis: one clean tick is not
+/// recovery).
+pub const PROMOTE_AFTER: u32 = 8;
+
+/// EWMA weight of the newest beat interval.
+const EWMA_NEW: f64 = 0.3;
+
+/// Effective intervals at or below this (ms) are never called straggling,
+/// whatever the ratio: sub-5ms jitter is scheduler noise, not a stall.
+const MIN_STALL_MS: f64 = 5.0;
+
+/// Per-trainer EWMA/clock bookkeeping plus the demote/promote hysteresis.
+/// Everything time-flavored lives here, under one lock, so the watchdog
+/// evaluates a consistent snapshot.
+struct HealthState {
+    /// EWMA of each trainer's beat interval in ms (0.0 = not yet primed)
+    ewma: Vec<f64>,
+    /// previous beat timestamp, for the EWMA delta (None = never beat)
+    last_beat: Vec<Option<u64>>,
+    /// the epoch each trainer most recently adopted; *taken* by a depart,
+    /// so the proxy-leave of its groups can only happen once
+    adopted: Vec<Option<Arc<PlanEpoch>>>,
+    /// consecutive straggler-free ticks while demoted
+    healthy_ticks: u32,
+    /// is the demotion override currently published?
+    demoted: bool,
+    /// an override flip happened while an epoch was pending adoption; the
+    /// forced cutover is retried on later ticks until the gate opens
+    cut_pending: bool,
+}
+
+/// Shared per-run health brain: heartbeat registry, crash watchdog, and
+/// the straggler demote/promote lever over [`RepartitionController`].
+pub struct HealthController {
+    ctrl: Arc<RepartitionController>,
+    /// heartbeat staleness budget in ms (0 = crash watchdog disabled)
+    timeout_ms: u64,
+    /// demote when an interval exceeds this multiple of the median
+    stall_factor: f64,
+    /// straggler adaptation armed (config flag + at least one rendezvous
+    /// partition to demote)
+    adaptive: bool,
+    /// the override published on demotion: every rendezvous partition
+    /// re-resolved to EASGD, everything else untouched
+    demoted_map: AlgoMap,
+    start: Instant,
+    /// per-trainer last-heartbeat stamp, ms since `start` (Release store
+    /// by workers / Acquire load by the watchdog)
+    heartbeat: Vec<AtomicU64>,
+    /// per-trainer crash flag: read lock-free (Acquire), but only ever
+    /// *written* under `state`'s lock, which serializes the three racing
+    /// claimants (watchdog depart, pool resume, pool terminal exit)
+    departed: Vec<AtomicBool>,
+    /// per-trainer shard-exhausted flag: a finished trainer stops beating
+    /// legitimately (its workers are done, its pool drains until the
+    /// coordinator raises stop) and must never be departed or counted as
+    /// a straggler
+    done: Vec<AtomicBool>,
+    state: Mutex<HealthState>,
+    stat_departs: AtomicU64,
+    stat_demotions: AtomicU64,
+    stat_promotions: AtomicU64,
+}
+
+impl HealthController {
+    pub fn new(cfg: &RunConfig, ctrl: Arc<RepartitionController>) -> Self {
+        let n = cfg.num_trainers;
+        let p = cfg.sync_partitions.max(1);
+        let entries: Vec<(SyncAlgo, usize, usize)> = (0..p)
+            .map(|i| {
+                let algo = match cfg.partition_algo(i) {
+                    SyncAlgo::Ma | SyncAlgo::Bmuf => SyncAlgo::Easgd,
+                    keep => keep,
+                };
+                (algo, i, i)
+            })
+            .collect();
+        let has_rendezvous =
+            (0..p).any(|i| matches!(cfg.partition_algo(i), SyncAlgo::Ma | SyncAlgo::Bmuf));
+        let epoch0 = ctrl.current_epoch();
+        let mut heartbeat = Vec::with_capacity(n);
+        heartbeat.resize_with(n, || AtomicU64::new(0));
+        let mut departed = Vec::with_capacity(n);
+        departed.resize_with(n, || AtomicBool::new(false));
+        let mut done = Vec::with_capacity(n);
+        done.resize_with(n, || AtomicBool::new(false));
+        Self {
+            ctrl,
+            timeout_ms: cfg.heartbeat_timeout_ms,
+            stall_factor: cfg.health_stall_factor,
+            adaptive: cfg.health_adaptive && has_rendezvous,
+            demoted_map: AlgoMap::from_entries(entries)
+                .expect("per-partition identity entries cannot overlap"),
+            start: Instant::now(),
+            heartbeat,
+            departed,
+            done,
+            state: Mutex::new(HealthState {
+                ewma: vec![0.0; n],
+                last_beat: vec![None; n],
+                adopted: (0..n).map(|_| Some(epoch0.clone())).collect(),
+                healthy_ticks: 0,
+                demoted: false,
+                cut_pending: false,
+            }),
+            stat_departs: AtomicU64::new(0),
+            stat_demotions: AtomicU64::new(0),
+            stat_promotions: AtomicU64::new(0),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    /// One training iteration happened on trainer `t`: stamp its
+    /// heartbeat. Called from every Hogwild worker, every iteration —
+    /// the stamp is a lock-free store; the EWMA bookkeeping is
+    /// best-effort (`try_lock`, a contended beat just skips its sample).
+    pub fn note_lap(&self, t: usize) {
+        self.observe_beat(t, self.now_ms());
+    }
+
+    fn observe_beat(&self, t: usize, now: u64) {
+        self.heartbeat[t].store(now, Release);
+        if !self.adaptive {
+            return;
+        }
+        if let Ok(mut st) = self.state.try_lock() {
+            if let Some(prev) = st.last_beat[t] {
+                let dt = now.saturating_sub(prev) as f64;
+                st.ewma[t] =
+                    if st.ewma[t] > 0.0 { EWMA_NEW * dt + (1.0 - EWMA_NEW) * st.ewma[t] } else { dt };
+            }
+            st.last_beat[t] = Some(now);
+        }
+    }
+
+    /// Trainer `t` cut over to `epoch` (the pool's adopt path). The stored
+    /// epoch is what a later crash proxy-leaves.
+    pub fn note_adopt(&self, t: usize, epoch: &Arc<PlanEpoch>) {
+        self.state.lock().unwrap().adopted[t] = Some(epoch.clone());
+    }
+
+    /// Trainer `t` exhausted its shard: it will stop beating for the
+    /// legitimate reason. The watchdog must neither depart it (its shadow
+    /// pool is still alive and will `leave()` properly at stop — a proxy
+    /// depart now would make the groups shrink twice) nor read its silence
+    /// as straggling.
+    pub fn mark_done(&self, t: usize) {
+        self.done[t].store(true, Release);
+    }
+
+    /// Has trainer `t` left the roster — by watchdog proxy-depart or by
+    /// its own claimed exit? Observational only: the pool never branches
+    /// on this read-then-act (that would race the watchdog); it uses the
+    /// claiming APIs [`Self::claim_exit`] / [`Self::try_resume`] instead.
+    pub fn is_departed(&self, t: usize) -> bool {
+        self.departed[t].load(Acquire)
+    }
+
+    /// Trainer `t` re-entered via [`RepartitionController::rejoin`] with
+    /// the returned `epoch`: reset its clocks (so the watchdog doesn't
+    /// instantly re-depart it off the stale stamp) and lower the flag.
+    pub fn mark_rejoined(&self, t: usize, epoch: &Arc<PlanEpoch>) {
+        let now = self.now_ms();
+        self.heartbeat[t].store(now, Release);
+        let mut st = self.state.lock().unwrap();
+        st.adopted[t] = Some(epoch.clone());
+        st.ewma[t] = 0.0;
+        st.last_beat[t] = Some(now);
+        // lowered under the lock, like every `departed` transition
+        self.departed[t].store(false, Release);
+    }
+
+    /// Depart trainer `t` on its behalf: claim the `departed` flag under
+    /// the state lock (one winner, ever — a racing [`Self::try_resume`] or
+    /// [`Self::claim_exit`] excludes this call entirely), `leave()` every
+    /// collective group of the epoch the trainer last adopted so peers
+    /// mid-round stop waiting on it, then run the controller's normal
+    /// depart (which also vacates its slots in a pending epoch). Returns
+    /// whether this call was the one that did it.
+    pub fn depart_trainer(&self, t: usize) -> bool {
+        self.depart_with(t, None)
+    }
+
+    /// The depart claim. With `stale_check = Some(now)` (the watchdog
+    /// path) staleness is re-validated *under the lock*: a pool that
+    /// resumed through [`Self::try_resume`] stamped a fresh heartbeat
+    /// under this same lock first, so a tick that measured pre-resume
+    /// silence aborts here instead of departing a live trainer.
+    fn depart_with(&self, t: usize, stale_check: Option<u64>) -> bool {
+        let epoch = {
+            let mut st = self.state.lock().unwrap();
+            if self.departed[t].load(Acquire) {
+                return false;
+            }
+            if let Some(now) = stale_check {
+                if now.saturating_sub(self.heartbeat[t].load(Acquire)) <= self.timeout_ms {
+                    return false;
+                }
+            }
+            self.departed[t].store(true, Release);
+            st.adopted[t].take()
+        };
+        let Some(epoch) = epoch else { return false };
+        for g in epoch.groups.iter().flatten() {
+            g.leave();
+        }
+        self.ctrl.depart(epoch.gen);
+        self.stat_departs.fetch_add(1, Relaxed);
+        true
+    }
+
+    /// A pool controller resuming from a *closed* crash window calls this
+    /// before touching its strategies again: under the same lock the
+    /// watchdog departs under, it re-checks the flag and stamps a fresh
+    /// heartbeat, so the answer cannot be invalidated by a tick that
+    /// measured pre-resume silence. `true` means the trainer still owns
+    /// its memberships and simply carries on; `false` means the watchdog
+    /// already departed it — the pool must drop its dead strategies and
+    /// re-enter through [`RepartitionController::rejoin`].
+    pub fn try_resume(&self, t: usize) -> bool {
+        self.resume_at(t, self.now_ms())
+    }
+
+    fn resume_at(&self, t: usize, now: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if self.departed[t].load(Acquire) {
+            return false;
+        }
+        self.heartbeat[t].store(now, Release);
+        st.last_beat[t] = Some(now);
+        st.ewma[t] = 0.0;
+        true
+    }
+
+    /// Deterministic clock hooks for the integration tests and the loom
+    /// models in `tests/` (a separate crate, where the private `*_at`
+    /// internals are unreachable and model checking cannot consult wall
+    /// clocks). `now` is milliseconds since construction; the production
+    /// paths ([`Self::note_lap`], [`Self::check_heartbeats`],
+    /// [`Self::try_resume`], [`Self::spawn_watchdog`]) use the real clock.
+    #[doc(hidden)]
+    pub fn beat_at_ms(&self, t: usize, now: u64) {
+        self.observe_beat(t, now);
+    }
+
+    #[doc(hidden)]
+    pub fn check_at_ms(&self, now: u64) -> usize {
+        self.check_at(now)
+    }
+
+    #[doc(hidden)]
+    pub fn resume_at_ms(&self, t: usize, now: u64) -> bool {
+        self.resume_at(t, now)
+    }
+
+    /// A pool's terminal paths (stop raised, shard drained, strategy
+    /// error) claim the exit before saying their goodbyes: whoever flips
+    /// the flag — this claim or a watchdog depart — owns the teardown, so
+    /// the `leave()`/`depart()` pair can never run twice for one trainer.
+    /// `true` means the pool leaves its own strategies (the normal case);
+    /// `false` means a watchdog depart already proxied them.
+    pub fn claim_exit(&self, t: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if self.departed[t].load(Acquire) {
+            return false;
+        }
+        self.departed[t].store(true, Release);
+        st.adopted[t] = None;
+        true
+    }
+
+    /// Scan for trainers silent past the timeout and depart them. Returns
+    /// how many were departed by this scan. No-op when the watchdog
+    /// timeout is 0.
+    pub fn check_heartbeats(&self) -> usize {
+        self.check_at(self.now_ms())
+    }
+
+    fn check_at(&self, now: u64) -> usize {
+        if self.timeout_ms == 0 {
+            return 0;
+        }
+        let mut taken = 0;
+        for t in 0..self.heartbeat.len() {
+            if self.departed[t].load(Acquire) || self.done[t].load(Acquire) {
+                continue;
+            }
+            let last = self.heartbeat[t].load(Acquire);
+            if now.saturating_sub(last) > self.timeout_ms && self.depart_with(t, Some(now)) {
+                taken += 1;
+            }
+        }
+        taken
+    }
+
+    /// One adaptation tick: compare every alive trainer's effective beat
+    /// interval against the roster's lower median and flip the demotion
+    /// override when a straggler appears / the roster recovers.
+    pub fn tick(&self) {
+        self.eval_at(self.now_ms());
+    }
+
+    fn eval_at(&self, now: u64) {
+        if !self.adaptive {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.cut_pending {
+            // an earlier flip is still waiting for the adoption gate
+            if self.ctrl.force_rebuild() {
+                st.cut_pending = false;
+            } else {
+                return;
+            }
+        }
+        // effective interval = smoothed rate, or the current silence if
+        // longer (a fresh stall shows up before its next beat ever lands)
+        let mut eff: Vec<f64> = Vec::with_capacity(self.heartbeat.len());
+        for t in 0..self.heartbeat.len() {
+            if self.departed[t].load(Acquire) || self.done[t].load(Acquire) {
+                continue;
+            }
+            let silent = now.saturating_sub(self.heartbeat[t].load(Acquire)) as f64;
+            eff.push(if st.ewma[t] > 0.0 { st.ewma[t].max(silent) } else { silent });
+        }
+        if eff.len() < 2 {
+            return; // nobody to straggle relative to
+        }
+        let mut sorted = eff.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        // lower median: with a 2-trainer roster the baseline is the FASTER
+        // one, so a straggling half is still detected
+        let baseline = sorted[(sorted.len() - 1) / 2].max(0.1);
+        let straggling =
+            eff.iter().any(|&e| e > MIN_STALL_MS && e > self.stall_factor * baseline);
+        if straggling {
+            st.healthy_ticks = 0;
+            if !st.demoted {
+                st.demoted = true;
+                self.stat_demotions.fetch_add(1, Relaxed);
+                self.ctrl.set_algo_override(Some(self.demoted_map.clone()));
+                st.cut_pending = !self.ctrl.force_rebuild();
+            }
+        } else if st.demoted {
+            st.healthy_ticks += 1;
+            if st.healthy_ticks >= PROMOTE_AFTER {
+                st.demoted = false;
+                st.healthy_ticks = 0;
+                self.stat_promotions.fetch_add(1, Relaxed);
+                self.ctrl.set_algo_override(None);
+                st.cut_pending = !self.ctrl.force_rebuild();
+            }
+        }
+    }
+
+    /// Run the watchdog on its own thread until `stop` is raised:
+    /// heartbeat scan + adaptation tick, every few ms (a quarter of the
+    /// heartbeat timeout, clamped, so a crash is caught within ~1.25
+    /// timeouts worst-case).
+    pub fn spawn_watchdog(self: &Arc<Self>, stop: Arc<AtomicBool>) -> JoinHandle<()> {
+        let h = self.clone();
+        let poll = if h.timeout_ms > 0 {
+            Duration::from_millis((h.timeout_ms / 4).clamp(1, 20))
+        } else {
+            Duration::from_millis(2)
+        };
+        thread::Builder::new()
+            .name("health-watchdog".into())
+            .spawn(move || {
+                while !stop.load(Acquire) {
+                    h.check_heartbeats();
+                    h.tick();
+                    thread::sleep(poll);
+                }
+            })
+            .expect("spawn health watchdog")
+    }
+
+    /// Is the demotion override currently published?
+    pub fn demoted(&self) -> bool {
+        self.state.lock().unwrap().demoted
+    }
+
+    /// Trainers departed by the watchdog (crashes caught).
+    pub fn departs(&self) -> u64 {
+        self.stat_departs.load(Relaxed)
+    }
+
+    /// Straggler demotions published.
+    pub fn demotions(&self) -> u64 {
+        self.stat_demotions.load(Relaxed)
+    }
+
+    /// Recovery promotions published.
+    pub fn promotions(&self) -> u64 {
+        self.stat_promotions.load(Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::partition::PartitionPlan;
+
+    fn fixture(cfg: &RunConfig, len: usize) -> (Arc<RepartitionController>, HealthController) {
+        let plan = PartitionPlan::build(len, cfg).unwrap();
+        let groups = plan
+            .partitions
+            .iter()
+            .map(|p| match p.algo {
+                SyncAlgo::Ma | SyncAlgo::Bmuf => {
+                    Some(crate::sync::build_group(cfg, p.range.len))
+                }
+                _ => None,
+            })
+            .collect();
+        let ctrl = Arc::new(RepartitionController::new(cfg, len, None, plan, groups));
+        let health = HealthController::new(cfg, ctrl.clone());
+        (ctrl, health)
+    }
+
+    #[test]
+    fn stale_heartbeat_departs_once_and_vacates_groups() {
+        let cfg = RunConfig {
+            num_trainers: 2,
+            sync_partitions: 2,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Ma,
+            num_sync_ps: 0,
+            heartbeat_timeout_ms: 50,
+            ..RunConfig::default()
+        };
+        let (ctrl, health) = fixture(&cfg, 64);
+        let epoch0 = ctrl.current_epoch();
+        health.observe_beat(0, 10);
+        health.observe_beat(1, 10);
+        assert_eq!(health.check_at(40), 0, "nobody is stale yet");
+        assert_eq!(ctrl.active(), 2);
+        // trainer 1 goes silent; trainer 0 keeps beating
+        health.observe_beat(0, 100);
+        assert_eq!(health.check_at(100), 1);
+        assert!(health.is_departed(1));
+        assert!(!health.is_departed(0));
+        assert_eq!(ctrl.active(), 1);
+        for g in epoch0.groups.iter().flatten() {
+            assert_eq!(g.active(), 1, "the crash must proxy-leave every ring");
+        }
+        assert_eq!(health.departs(), 1);
+        // re-scans are idempotent on an already-departed trainer
+        health.observe_beat(0, 190);
+        assert_eq!(health.check_at(200), 0);
+        assert_eq!(ctrl.active(), 1);
+        assert_eq!(health.departs(), 1);
+        // ... and the rejoin path resets the clocks and lowers the flag
+        let ep = ctrl.rejoin().expect("roster is idle");
+        health.mark_rejoined(1, &ep);
+        assert!(!health.is_departed(1));
+        assert_eq!(ctrl.active(), 2);
+    }
+
+    #[test]
+    fn exit_and_resume_claims_exclude_the_watchdog() {
+        let cfg = RunConfig {
+            num_trainers: 2,
+            sync_partitions: 1,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Ma,
+            num_sync_ps: 0,
+            heartbeat_timeout_ms: 40,
+            ..RunConfig::default()
+        };
+        let (ctrl, health) = fixture(&cfg, 64);
+        // trainer 1's pool claims its terminal exit: from here on no
+        // watchdog depart (and no second claim) can double its goodbye
+        assert!(health.claim_exit(1));
+        assert!(!health.claim_exit(1));
+        assert!(!health.depart_trainer(1));
+        assert!(health.is_departed(1));
+        assert_eq!(health.departs(), 0, "a claimed exit is not a crash");
+        assert_eq!(ctrl.active(), 2, "the pool runs its own leave/depart");
+        // trainer 0 goes silent past the timeout, but resumes (stamping a
+        // fresh beat under the lock) before the watchdog's next scan: the
+        // scan re-validates staleness under the same lock and aborts
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(health.try_resume(0));
+        assert_eq!(health.check_heartbeats(), 0);
+        assert!(!health.is_departed(0));
+        // without a resume, the same silence is departed — and a resume
+        // attempted after losing the race reports the depart
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(health.check_heartbeats(), 1);
+        assert!(!health.try_resume(0));
+        assert_eq!(health.departs(), 1);
+        assert_eq!(ctrl.active(), 1);
+    }
+
+    #[test]
+    fn straggler_demotes_to_easgd_and_recovery_promotes_back() {
+        let cfg = RunConfig {
+            num_trainers: 2,
+            sync_partitions: 2,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Bmuf,
+            num_sync_ps: 0,
+            health_adaptive: true,
+            health_stall_factor: 4.0,
+            ..RunConfig::default()
+        };
+        let (ctrl, health) = fixture(&cfg, 64);
+        // prime both trainers at a 1ms cadence: healthy, nothing happens
+        for t in 1..=20u64 {
+            health.observe_beat(0, t);
+            health.observe_beat(1, t);
+        }
+        health.eval_at(21);
+        assert!(!health.demoted());
+        assert_eq!(ctrl.current_epoch().gen, 0);
+        // trainer 1 stalls to a 40ms cadence while trainer 0 keeps 1ms
+        let mut now = 21;
+        for _ in 0..10 {
+            for _ in 0..40 {
+                now += 1;
+                health.observe_beat(0, now);
+            }
+            health.observe_beat(1, now);
+        }
+        health.eval_at(now + 1);
+        assert!(health.demoted());
+        assert_eq!(health.demotions(), 1);
+        let demoted = ctrl.current_epoch();
+        assert_eq!(demoted.gen, 1, "demotion must force a cutover");
+        assert!(demoted.plan.partitions.iter().all(|p| p.algo == SyncAlgo::Easgd));
+        // a second straggling tick does not re-demote
+        health.eval_at(now + 2);
+        assert_eq!(health.demotions(), 1);
+        // both pools adopt the demoted epoch
+        ctrl.adopt(0);
+        ctrl.adopt(0);
+        // trainer 1 recovers; the EWMA has to decay below the threshold and
+        // the roster must stay healthy for PROMOTE_AFTER consecutive ticks
+        for round in 0..PROMOTE_AFTER {
+            for _ in 0..40 {
+                now += 1;
+                health.observe_beat(0, now);
+                health.observe_beat(1, now);
+            }
+            health.eval_at(now);
+            assert_eq!(
+                health.promotions(),
+                u64::from(round + 1 >= PROMOTE_AFTER),
+                "promotion requires {PROMOTE_AFTER} healthy ticks"
+            );
+        }
+        assert!(!health.demoted());
+        let promoted = ctrl.current_epoch();
+        assert_eq!(promoted.gen, 2, "promotion must force a second cutover");
+        assert!(promoted.plan.partitions.iter().all(|p| p.algo == SyncAlgo::Bmuf));
+        assert!(ctrl.algo_override().is_none());
+        // ranges survived the round trip (what makes the BMUF carry fit)
+        let r0: Vec<_> = demoted.plan.partitions.iter().map(|p| p.range).collect();
+        let r1: Vec<_> = promoted.plan.partitions.iter().map(|p| p.range).collect();
+        assert_eq!(r0, r1);
+    }
+
+    #[test]
+    fn promotion_retries_while_the_adoption_gate_is_closed() {
+        let cfg = RunConfig {
+            num_trainers: 2,
+            sync_partitions: 1,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Ma,
+            num_sync_ps: 0,
+            health_adaptive: true,
+            health_stall_factor: 4.0,
+            ..RunConfig::default()
+        };
+        let (ctrl, health) = fixture(&cfg, 64);
+        for t in 1..=20u64 {
+            health.observe_beat(0, t);
+            health.observe_beat(1, t);
+        }
+        // stall trainer 1 hard, then demote
+        health.observe_beat(0, 100);
+        health.eval_at(100);
+        assert_eq!(health.demotions(), 1);
+        assert_eq!(ctrl.current_epoch().gen, 1);
+        // only ONE pool adopts: the gate stays closed. Recovery ticks want
+        // to promote, but the forced cutover must wait...
+        ctrl.adopt(0);
+        let mut now = 100;
+        for _ in 0..=PROMOTE_AFTER {
+            for _ in 0..20 {
+                now += 1;
+                health.observe_beat(0, now);
+                health.observe_beat(1, now);
+            }
+            health.eval_at(now);
+        }
+        assert_eq!(health.promotions(), 1, "the flip itself is recorded");
+        assert_eq!(ctrl.current_epoch().gen, 1, "cutover is gated on adoption");
+        assert!(ctrl.algo_override().is_none(), "the override is already cleared");
+        // ...until the second pool catches up, when a later tick lands it
+        ctrl.adopt(0);
+        health.eval_at(now + 1);
+        assert_eq!(ctrl.current_epoch().gen, 2);
+        assert!(ctrl.current_epoch().plan.partitions.iter().all(|p| p.algo == SyncAlgo::Ma));
+    }
+
+    #[test]
+    fn finished_trainers_are_never_departed_or_called_stragglers() {
+        let cfg = RunConfig {
+            num_trainers: 2,
+            sync_partitions: 1,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Ma,
+            num_sync_ps: 0,
+            heartbeat_timeout_ms: 50,
+            health_adaptive: true,
+            health_stall_factor: 4.0,
+            ..RunConfig::default()
+        };
+        let (ctrl, health) = fixture(&cfg, 64);
+        for t in 1..=20u64 {
+            health.observe_beat(0, t);
+            health.observe_beat(1, t);
+        }
+        // trainer 1 drains its shard and goes legitimately silent
+        health.mark_done(1);
+        health.observe_beat(0, 500);
+        assert_eq!(health.check_at(500), 0, "a finished trainer is not a crash");
+        assert!(!health.is_departed(1));
+        assert_eq!(ctrl.active(), 2, "its pool still owns its memberships");
+        health.eval_at(500);
+        assert!(!health.demoted(), "a finished trainer is not a straggler");
+    }
+
+    #[test]
+    fn adaptation_disarms_without_rendezvous_partitions() {
+        // an all-EASGD map has nothing to demote: adaptive must disarm
+        let cfg = RunConfig {
+            num_trainers: 2,
+            sync_partitions: 1,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Easgd,
+            health_adaptive: true,
+            health_stall_factor: 4.0,
+            ..RunConfig::default()
+        };
+        let (ctrl, health) = fixture(&cfg, 64);
+        for t in 1..=20u64 {
+            health.observe_beat(0, t);
+        }
+        health.eval_at(1_000); // trainer 1 looks infinitely slow
+        assert_eq!(health.demotions(), 0);
+        assert_eq!(ctrl.current_epoch().gen, 0);
+    }
+}

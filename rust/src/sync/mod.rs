@@ -62,6 +62,7 @@ pub mod allreduce;
 pub mod bmuf;
 pub mod driver;
 pub mod easgd;
+pub mod health;
 pub mod ma;
 pub mod partition;
 pub mod prim;
@@ -157,11 +158,18 @@ pub trait SyncStrategy: Send {
 pub struct RepartitionCarry {
     pub cache: DeltaScanCache,
     pub gate: Option<DeltaGate>,
+    /// BMUF momentum + private `w^global`, carried across a health-driven
+    /// demote→promote cycle: the retiring [`BmufSync`] emits it, the interim
+    /// EASGD strategy parks and re-emits it untouched, and the promoted
+    /// [`BmufSync`] rehydrates it (forced rebuilds keep ranges fixed, so the
+    /// carried vectors still fit their partition).
+    pub bmuf: Option<bmuf::BmufCarry>,
 }
 
 pub use allreduce::{AllReduceGroup, ReduceEngine, RoundOutcome};
-pub use bmuf::BmufSync;
+pub use bmuf::{BmufCarry, BmufSync};
 pub use easgd::EasgdSync;
+pub use health::HealthController;
 pub use ma::MaSync;
 pub use partition::{ParamRange, Partition, PartitionPlan};
 pub use ps::{DeltaGate, DeltaScanCache, PushStats, QuantileSketch, SyncPsGroup};
@@ -177,11 +185,25 @@ pub fn build_group(
     cfg: &crate::config::RunConfig,
     num_params: usize,
 ) -> Arc<AllReduceGroup> {
-    Arc::new(
-        AllReduceGroup::new(cfg.num_trainers, num_params)
-            .with_chunks(cfg.allreduce_chunks)
-            .with_engine(cfg.reduce_engine),
-    )
+    build_group_sized(cfg, cfg.num_trainers, num_params)
+}
+
+/// [`build_group`] for an explicit member count — repartition / rejoin
+/// epochs size their rings to the trainers still active, not the configured
+/// roster. The one place `--allreduce-timeout-ms` is wired, so every ring —
+/// initial, repartitioned, or rejoin-built — degrades the same way.
+pub fn build_group_sized(
+    cfg: &crate::config::RunConfig,
+    members: usize,
+    num_params: usize,
+) -> Arc<AllReduceGroup> {
+    let mut g = AllReduceGroup::new(members, num_params)
+        .with_chunks(cfg.allreduce_chunks)
+        .with_engine(cfg.reduce_engine);
+    if cfg.allreduce_timeout_ms > 0 {
+        g = g.with_round_timeout(std::time::Duration::from_millis(cfg.allreduce_timeout_ms));
+    }
+    Arc::new(g)
 }
 
 /// The single place the config→gate wiring lives: an [`EasgdSync`]

@@ -70,13 +70,15 @@
 //! (see the [`crate::tensor::DirtyEpochs`] precision caveat — the same
 //! transient-staleness class as the racy scan itself).
 
+use std::time::Duration;
+
 use super::prim::{
-    AtomicU32, AtomicU64, AtomicUsize, Mutex,
+    thread, AtomicU32, AtomicU64, AtomicUsize, Mutex,
     Ordering::{Acquire, Relaxed, Release},
 };
 
 use super::partition::ParamRange;
-use crate::net::{Network, NodeId, Role};
+use crate::net::{FaultError, Network, NodeId, Role};
 use crate::placement::equal_ranges;
 use crate::tensor::HogwildBuffer;
 
@@ -104,6 +106,10 @@ pub struct PushStats {
     /// trainer's dirty epochs showed no write since (a subset of
     /// `chunks_pushed + chunks_skipped`).
     pub chunks_scan_skipped: u64,
+    /// Push-leg transfer retries issued against a faulted fabric (0 on a
+    /// healthy one). A chunk whose retries are exhausted counts under
+    /// `chunks_skipped` and moves zero further bytes.
+    pub push_retries: u64,
 }
 
 /// Lock-free sliding-window sketch of a scalar stream, queried for
@@ -437,6 +443,12 @@ pub struct SyncPsGroup {
     chunks_pushed: AtomicU64,
     chunks_skipped: AtomicU64,
     chunks_scan_skipped: AtomicU64,
+    /// retries per push leg when a transfer faults (see
+    /// [`SyncPsGroup::with_push_retry`]); the default matches
+    /// `RunConfig::push_retries`
+    push_retries: u32,
+    /// initial backoff between retries, doubling per attempt
+    push_backoff: Duration,
     /// per-partition round/byte counters (index = partition in the
     /// fabric's plan), recorded by the strategies after each round — a
     /// mutex, not atomics: rounds are off the training hot path and the
@@ -463,6 +475,8 @@ impl SyncPsGroup {
             chunks_pushed: AtomicU64::new(0),
             chunks_skipped: AtomicU64::new(0),
             chunks_scan_skipped: AtomicU64::new(0),
+            push_retries: 3,
+            push_backoff: Duration::from_millis(1),
             partition_traffic: Mutex::new(Vec::new()),
         };
         g.reset_chunk_versions();
@@ -489,6 +503,49 @@ impl SyncPsGroup {
     pub fn with_adaptive_gate(mut self, skip_target: f32) -> Self {
         self.gate = DeltaGate::new(self.gate.delta_threshold, skip_target);
         self
+    }
+
+    /// Configure degradation around a faulted fabric: each push leg whose
+    /// transfer faults transiently is retried up to `retries` times with
+    /// exponential backoff starting at `backoff` (crashed endpoints are
+    /// not retried — the backoff cannot outlast a crash window). A chunk
+    /// whose retries are exhausted is *skipped with retry*: it feeds the
+    /// existing skip metrics and moves zero further bytes, so
+    /// `metrics.sync_bytes` stays exactly equal to the delivered NIC
+    /// traffic. On a healthy fabric this builder is inert.
+    pub fn with_push_retry(mut self, retries: u32, backoff: Duration) -> Self {
+        self.push_retries = retries;
+        self.push_backoff = backoff;
+        self
+    }
+
+    /// Deliver one push leg, retrying transient faults with bounded
+    /// exponential backoff. Returns `(delivered, retries_issued)`.
+    fn push_leg_with_retry(
+        &self,
+        net: &Network,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+    ) -> (bool, u64) {
+        let mut retries = 0u64;
+        let mut backoff = self.push_backoff;
+        loop {
+            match net.try_transfer(src, dst, bytes) {
+                Ok(()) => return (true, retries),
+                // a crashed endpoint stays crashed for whole sweep windows:
+                // backing off cannot help, give the chunk up immediately
+                Err(FaultError::Unreachable) => return (false, retries),
+                Err(FaultError::Dropped) => {
+                    if retries >= self.push_retries as u64 {
+                        return (false, retries);
+                    }
+                    retries += 1;
+                    thread::sleep(backoff);
+                    backoff = backoff.saturating_mul(2);
+                }
+            }
+        }
     }
 
     /// One zeroed version counter per global push chunk (builder phase).
@@ -596,6 +653,7 @@ impl SyncPsGroup {
         let mut pushed = 0u64;
         let mut skipped = 0u64;
         let mut scan_skipped = 0u64;
+        let mut retries = 0u64;
         // the shared walk keeps [`DeltaScanCache`] ordinals `k` in lockstep
         // with `push_chunk_ranges` by construction
         for (k, clo, chi, node) in self.push_chunks_scoped(lo, hi) {
@@ -664,16 +722,34 @@ impl SyncPsGroup {
                 }
             }
             let chunk_bytes = ((chi - clo) * 4) as u64;
-            // trainer pushes the chunk, PS answers with the moved chunk
-            net.transfer(trainer, node, chunk_bytes);
+            // trainer pushes the chunk, PS answers with the moved chunk;
+            // either leg may fault under an installed fault plan
+            let (leg1_ok, leg1_retries) =
+                self.push_leg_with_retry(net, trainer, node, chunk_bytes);
+            retries += leg1_retries;
+            if !leg1_ok {
+                // skipped-with-retry: the elastic move never ran, central
+                // is untouched, zero bytes crossed any wire — the chunk
+                // lands in the existing skip metrics and the next round
+                // retries it from scratch
+                skipped += 1;
+                continue;
+            }
             let gap = HogwildBuffer::elastic_pair(local, &self.central, clo, chi, alpha);
-            net.transfer(node, trainer, chunk_bytes);
+            let (leg2_ok, leg2_retries) =
+                self.push_leg_with_retry(net, node, trainer, chunk_bytes);
+            retries += leg2_retries;
             // bump-after-move (Release): the moment a peer observes the new
             // version, the elastic stores behind it are visible too, so its
-            // re-scan sees the drift this push introduced
+            // re-scan sees the drift this push introduced. The bump happens
+            // even when the reply leg faulted: the elastic move already
+            // rewrote central, so peers' cached scans *are* stale
             self.chunk_versions[k].fetch_add(1, Release);
             gap_weighted += gap as f64 * (chi - clo) as f64;
-            bytes += 2 * chunk_bytes;
+            // count only delivered legs: a faulted reply moved one leg of
+            // wire traffic, and `metrics.sync_bytes` must stay exactly
+            // equal to the NIC counters
+            bytes += if leg2_ok { 2 * chunk_bytes } else { chunk_bytes };
             pushed += 1;
         }
         self.rounds.fetch_add(1, Relaxed);
@@ -687,6 +763,7 @@ impl SyncPsGroup {
             chunks_pushed: pushed,
             chunks_skipped: skipped,
             chunks_scan_skipped: scan_skipped,
+            push_retries: retries,
         }
     }
 
@@ -1245,5 +1322,53 @@ mod tests {
         let shares = t.partition_byte_shares();
         assert_eq!(shares[0], 0.0);
         assert!((shares[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_retries_ride_out_transient_drops() {
+        use crate::net::FaultPlan;
+        use crate::sync::prim::Arc;
+        let plan = Arc::new(FaultPlan::parse("drop:t0@0.5", 0xBEEF).unwrap());
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let p = 64;
+        let g = SyncPsGroup::build(&vec![0.0; p], 1, &mut net)
+            .with_push_chunking(8, 0.0)
+            // p=0.5 with 60 retries: every leg delivers with near certainty
+            .with_push_retry(60, Duration::from_micros(1));
+        let net = net.with_faults(plan);
+        let local = HogwildBuffer::from_slice(&vec![2.0; p]);
+        let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
+        assert_eq!(st.chunks_pushed, 8, "every chunk delivered after retries");
+        assert_eq!(st.chunks_skipped, 0);
+        assert!(st.push_retries > 0, "p=0.5 must have needed retries");
+        assert_eq!(st.bytes, g.round_bytes());
+        // the exactness invariant under faults: stats bytes == NIC bytes,
+        // and dropped attempts live only in the plan's ledger
+        assert_eq!(st.bytes, net.role_bytes(Role::SyncPs));
+        assert!(net.dropped_bytes() > 0);
+    }
+
+    #[test]
+    fn exhausted_retries_skip_chunks_and_keep_bytes_exact() {
+        use crate::net::FaultPlan;
+        use crate::sync::prim::Arc;
+        let plan = Arc::new(FaultPlan::parse("crash:t0@sweep0", 0).unwrap());
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let w0 = vec![1.0f32; 16];
+        let g = SyncPsGroup::build(&w0, 1, &mut net)
+            .with_push_chunking(8, 0.0)
+            .with_push_retry(3, Duration::from_micros(1));
+        let net = net.with_faults(plan);
+        let local = HogwildBuffer::from_slice(&vec![5.0; 16]);
+        let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
+        assert_eq!(st.chunks_pushed, 0, "a crashed trainer delivers nothing");
+        assert_eq!(st.chunks_skipped, 2, "exhausted chunks feed the skip metrics");
+        assert_eq!(st.bytes, 0);
+        assert_eq!(net.role_bytes(Role::SyncPs), 0, "zero NIC bytes moved");
+        assert_eq!(g.central.to_vec(), w0, "central untouched by failed pushes");
+        assert_eq!(local.to_vec(), vec![5.0; 16], "replica untouched too");
+        assert!(net.dropped_bytes() > 0, "attempts land in the dropped ledger");
     }
 }

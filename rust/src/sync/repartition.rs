@@ -43,10 +43,10 @@
 
 use anyhow::Result;
 
-use crate::config::{RunConfig, SyncAlgo};
+use crate::config::{AlgoMap, RunConfig, SyncAlgo};
 
 use super::driver::ShadowTask;
-use super::partition::{lpt_contiguous_ranges_weighted, PartitionPlan};
+use super::partition::{lpt_contiguous_ranges_weighted, ParamRange, PartitionPlan};
 use super::prim::{
     Arc, AtomicU64, Mutex,
     Ordering::{AcqRel, Acquire, Relaxed, Release},
@@ -93,6 +93,9 @@ pub struct RepartitionController {
     /// highest generation any trainer actually adopted — the "repartitions
     /// performed" count (a published-but-never-adopted epoch doesn't count)
     adopted_gen: AtomicU64,
+    /// live replacement for `cfg.algo_map`, published by the health
+    /// controller (straggler demotions); `None` = run the configured map
+    algo_override: Mutex<Option<AlgoMap>>,
     state: Mutex<CtrlState>,
 }
 
@@ -120,6 +123,7 @@ impl RepartitionController {
             writes,
             gen: AtomicU64::new(0),
             adopted_gen: AtomicU64::new(0),
+            algo_override: Mutex::new(None),
             state: Mutex::new(CtrlState {
                 active: cfg.num_trainers,
                 adopted: cfg.num_trainers,
@@ -240,6 +244,79 @@ impl RepartitionController {
         self.state.lock().unwrap().epoch.clone()
     }
 
+    /// Trainers that haven't departed (test / health observability).
+    pub fn active(&self) -> usize {
+        self.state.lock().unwrap().active
+    }
+
+    /// The sync-PS tier strategies are built against, if the run has one —
+    /// the warm-start source for a rejoining trainer's replica.
+    pub fn sync_ps(&self) -> Option<&Arc<SyncPsGroup>> {
+        self.sync_ps.as_ref()
+    }
+
+    /// Publish (or clear, with `None`) a live algo-map override. The next
+    /// rebuild — periodic or [`Self::force_rebuild`] — resolves partition
+    /// algorithms through this map instead of the configured one: the
+    /// health controller's demote/promote lever.
+    pub fn set_algo_override(&self, map: Option<AlgoMap>) {
+        *self.algo_override.lock().unwrap() = map;
+    }
+
+    /// The override currently published, if any.
+    pub fn algo_override(&self) -> Option<AlgoMap> {
+        self.algo_override.lock().unwrap().clone()
+    }
+
+    /// Publish a new epoch *now*, keeping the current ranges but re-resolving
+    /// each partition's algorithm (through the live override) and re-sizing
+    /// the collective groups — the health controller's cutover trigger.
+    /// Subject to the same gate as periodic rebuilds: refused (returns
+    /// `false`) while an epoch is still pending adoption, so at most one
+    /// generation is ever in flight. Keeping the ranges fixed is what lets a
+    /// demote→promote cycle rehydrate BMUF momentum exactly (the carried
+    /// state is range-shaped).
+    pub fn force_rebuild(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.active == 0 || st.adopted != st.active {
+            return false;
+        }
+        let ranges: Vec<ParamRange> =
+            st.epoch.plan.partitions.iter().map(|p| p.range).collect();
+        let epoch = self.rebuild_over(st.epoch.gen + 1, st.active, ranges);
+        st.epoch = Arc::new(epoch);
+        st.adopted = 0;
+        st.sweeps = 0;
+        self.gen.store(st.epoch.gen, Release);
+        true
+    }
+
+    /// A departed trainer comes back (its crash window closed): grow the
+    /// membership back by one and publish a fresh epoch over the current
+    /// ranges, pre-sized to the enlarged roster. The rejoiner counts as
+    /// having adopted the new epoch at birth (it builds its tasks straight
+    /// from the returned [`PlanEpoch`], never calling [`Self::adopt`] —
+    /// which would trip the one-behind invariant for a trainer that sat out
+    /// several generations); every surviving trainer cuts over through the
+    /// normal adopt path. Returns `None` while an epoch is still pending
+    /// adoption — the caller retries after the survivors catch up.
+    pub fn rejoin(&self) -> Option<Arc<PlanEpoch>> {
+        let mut st = self.state.lock().unwrap();
+        if st.adopted != st.active {
+            return None;
+        }
+        st.active += 1;
+        let ranges: Vec<ParamRange> =
+            st.epoch.plan.partitions.iter().map(|p| p.range).collect();
+        let epoch = self.rebuild_over(st.epoch.gen + 1, st.active, ranges);
+        st.epoch = Arc::new(epoch);
+        st.adopted = 1; // the rejoiner itself
+        st.sweeps = 0;
+        self.adopted_gen.fetch_max(st.epoch.gen, AcqRel);
+        self.gen.store(st.epoch.gen, Release);
+        Some(st.epoch.clone())
+    }
+
     /// Accumulated per-block write counts (test / report observability).
     pub fn write_profile(&self) -> Vec<u64> {
         self.writes.iter().map(|w| w.load(Relaxed)).collect()
@@ -267,25 +344,38 @@ impl RepartitionController {
         };
         let p = self.cfg.sync_partitions.max(1);
         let ranges = lpt_contiguous_ranges_weighted(num_params, p, granule, cost);
-        let plan = PartitionPlan::from_ranges(ranges, &self.cfg);
-        let groups = plan
-            .partitions
-            .iter()
-            .map(|part| match part.algo {
-                SyncAlgo::Ma | SyncAlgo::Bmuf => Some(Arc::new(
-                    AllReduceGroup::new(active, part.range.len)
-                        .with_chunks(self.cfg.allreduce_chunks)
-                        .with_engine(self.cfg.reduce_engine),
-                )),
-                _ => None,
-            })
-            .collect();
         // decay: rebuilds see a half-life-weighted profile, so the plan
         // follows a drifting workload instead of its all-time average
         for w in &self.writes {
             let v = w.load(Relaxed);
             w.store(v / 2, Relaxed);
         }
+        self.rebuild_over(gen, active, ranges)
+    }
+
+    /// Assemble a [`PlanEpoch`] over the given ranges: partition algorithms
+    /// resolved through the live override (when one is published), one
+    /// collective group per decentralized partition sized to `active`.
+    fn rebuild_over(&self, gen: u64, active: usize, ranges: Vec<ParamRange>) -> PlanEpoch {
+        let cfg = match &*self.algo_override.lock().unwrap() {
+            Some(map) => {
+                let mut c = self.cfg.clone();
+                c.algo_map = Some(map.clone());
+                c
+            }
+            None => self.cfg.clone(),
+        };
+        let plan = PartitionPlan::from_ranges(ranges, &cfg);
+        let groups = plan
+            .partitions
+            .iter()
+            .map(|part| match part.algo {
+                SyncAlgo::Ma | SyncAlgo::Bmuf => {
+                    Some(super::build_group_sized(&cfg, active, part.range.len))
+                }
+                _ => None,
+            })
+            .collect();
         PlanEpoch { gen, plan, groups }
     }
 }
@@ -420,5 +510,73 @@ mod tests {
         for g in next.groups.iter().flatten() {
             assert_eq!(g.active(), 1);
         }
+    }
+
+    #[test]
+    fn algo_override_demotes_then_promotes_over_fixed_ranges() {
+        let cfg = RunConfig {
+            num_trainers: 1,
+            sync_partitions: 2,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Ma,
+            num_sync_ps: 0,
+            ..RunConfig::default()
+        };
+        let c = ctrl(&cfg, 64);
+        let base_ranges: Vec<_> =
+            c.current_epoch().plan.partitions.iter().map(|p| p.range).collect();
+        // demote: every partition to EASGD, published as a forced epoch
+        c.set_algo_override(Some(
+            AlgoMap::from_entries(vec![(SyncAlgo::Easgd, 0, 1)]).unwrap(),
+        ));
+        assert!(c.force_rebuild(), "idle controller must accept a forced rebuild");
+        let demoted = c.current_epoch();
+        assert_eq!(demoted.gen, 1);
+        assert!(demoted.plan.partitions.iter().all(|p| p.algo == SyncAlgo::Easgd));
+        assert!(demoted.groups.iter().all(|g| g.is_none()), "EASGD needs no rings");
+        // one pending generation max: a second force must refuse until adopted
+        assert!(!c.force_rebuild(), "forced rebuild must respect the adoption gate");
+        c.adopt(0);
+        // promote: clearing the override restores the configured map
+        c.set_algo_override(None);
+        assert!(c.force_rebuild());
+        let promoted = c.current_epoch();
+        assert_eq!(promoted.gen, 2);
+        assert!(promoted.plan.partitions.iter().all(|p| p.algo == SyncAlgo::Ma));
+        // both cutovers kept the ranges — what makes carried state re-installable
+        for (ep, r0) in [(&demoted, &base_ranges), (&promoted, &base_ranges)] {
+            let got: Vec<_> = ep.plan.partitions.iter().map(|p| p.range).collect();
+            assert_eq!(&got, r0, "forced rebuilds must preserve ranges");
+        }
+    }
+
+    #[test]
+    fn rejoin_grows_membership_and_preadopts_the_rejoiner() {
+        let cfg = RunConfig {
+            num_trainers: 2,
+            sync_partitions: 2,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            algo: SyncAlgo::Ma,
+            num_sync_ps: 0,
+            ..RunConfig::default()
+        };
+        let c = ctrl(&cfg, 64);
+        c.depart(0); // the watchdog takes a crashed trainer out
+        assert_eq!(c.active(), 1);
+        let ep = c.rejoin().expect("idle controller must accept a rejoin");
+        assert_eq!(ep.gen, 1);
+        assert_eq!(c.active(), 2);
+        for g in ep.groups.iter().flatten() {
+            assert_eq!(g.active(), 2, "rejoin epoch must be sized to the new roster");
+        }
+        // the rejoiner adopted at birth; the survivor adopts normally, after
+        // which the next generation may land
+        assert_eq!(c.repartitions(), 1);
+        c.adopt(0);
+        assert!(c.force_rebuild());
+        // ... and a rejoin attempted while that epoch is pending must wait
+        assert!(c.rejoin().is_none(), "rejoin must respect the adoption gate");
     }
 }

@@ -30,7 +30,7 @@ use crate::optim::HogwildAdagrad;
 use crate::runtime::Model;
 use crate::sync::driver::{Gate, IterCounter, StopFlag};
 use crate::sync::prim::AtomicBool;
-use crate::sync::{EasgdSync, SyncCtx, SyncStrategy};
+use crate::sync::{EasgdSync, HealthController, SyncCtx, SyncStrategy};
 use crate::tensor::HogwildBuffer;
 
 /// Shared state of one trainer (everything its threads hang off).
@@ -99,6 +99,11 @@ pub struct WorkerEnv {
     pub embeddings: Arc<EmbeddingSystem>,
     pub net: Arc<Network>,
     pub metrics: Arc<Metrics>,
+    /// heartbeat sink (None when the health machinery is off); heartbeats
+    /// come from *this* loop, never the shadow pool — training workers
+    /// don't block on sync, so a healthy trainer parked behind a straggler
+    /// in a rendezvous round still beats at full rate
+    pub health: Option<Arc<HealthController>>,
 }
 
 /// Spawn one worker thread. `queue` is the trainer's shared reader output.
@@ -123,15 +128,42 @@ pub fn spawn_worker(
             let mut last_collective = 0u64;
             let mut last_decay_sync = 0u64;
             loop {
+                // a crashed trainer trains nothing: its workers go silent
+                // (no batches, no heartbeats) for the window — or for good
+                if let Some(f) = env.net.faults() {
+                    if f.crashed(tid) {
+                        if f.crashes_permanently(tid) {
+                            // the process died: abandon the shard. The
+                            // watchdog (or ring eviction) removes the
+                            // trainer from the survivors' view.
+                            return Ok(my_iters);
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                        continue;
+                    }
+                }
                 // pull next batch; the queue lock is held across recv, which
                 // is fine: idle peers sleep on the same batch source anyway
                 let batch = {
                     let q = queue.lock().unwrap();
                     match q.recv() {
                         Ok(b) => b,
-                        Err(_) => break, // shard exhausted
+                        Err(_) => {
+                            // shard exhausted: the silence about to start is
+                            // legitimate — the watchdog must not read it as
+                            // a crash or a straggle
+                            if let Some(h) = &env.health {
+                                h.mark_done(tid);
+                            }
+                            break;
+                        }
                     }
                 };
+                // an active stall window stretches every iteration, which
+                // is exactly what the health controller's EWMA sees
+                if let Some(d) = env.net.faults().and_then(|f| f.lap_delay(tid)) {
+                    std::thread::sleep(d);
+                }
                 {
                     // training itself happens under the gate's read lock so
                     // foreground collectives can stop-the-world
@@ -157,6 +189,9 @@ pub fn spawn_worker(
                 }
                 my_iters += 1;
                 let trainer_iters = iters.bump();
+                if let Some(h) = &env.health {
+                    h.note_lap(tid);
+                }
 
                 match &mut plan {
                     ForegroundPlan::None => {}

@@ -1,0 +1,358 @@
+//! Chaos suite for the fault-injection fabric: real shadow pools + crash
+//! watchdog + elastic rejoin under a seeded [`FaultPlan`], with the two
+//! invariants the fabric promises under faults checked end-to-end —
+//!
+//! 1. **byte exactness**: `metrics.sync_bytes` equals the summed sync-PS
+//!    NIC counters plus the ring tx, no matter which transfers a plan
+//!    crashed or dropped (faulted legs count on *neither* side);
+//! 2. **no membership leaks**: every collective group of the final epoch
+//!    is fully vacated — by strategy `leave()`s, watchdog proxy-departs,
+//!    or pending-epoch vacation — never doubly, never not at all.
+//!
+//! The first test is parameterized by environment so CI can run it as a
+//! seed × plan matrix:
+//!
+//! ```text
+//! SHADOWSYNC_FAULT_PLAN="crash:t1@sweep20" SHADOWSYNC_PROPTEST_SEED=7 \
+//!     cargo test --release --test fault_suite
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+use std::time::Duration;
+
+use shadowsync::config::{RunConfig, SyncAlgo};
+use shadowsync::metrics::Metrics;
+use shadowsync::net::fault::FaultPlan;
+use shadowsync::net::{Network, Role};
+use shadowsync::sync::driver::{spawn_shadow_pool_adaptive, ShadowTask};
+use shadowsync::sync::{
+    build_group, build_strategy, AllReduceGroup, HealthController, PartitionPlan,
+    RepartitionController, SyncPsGroup,
+};
+use shadowsync::tensor::HogwildBuffer;
+use shadowsync::util::rng::Rng;
+
+const LEN: usize = 4096;
+const CHUNK: usize = 64;
+
+/// Everything a chaos run leaves behind for assertions.
+struct Chaos {
+    rounds: u64,
+    net: Arc<Network>,
+    metrics: Arc<Metrics>,
+    controller: Arc<RepartitionController>,
+    health: Arc<HealthController>,
+    nodes: Vec<shadowsync::net::NodeId>,
+    /// roster size sampled just before stop (terminal exits depart the
+    /// controller for everyone, so post-join `active()` is always 0)
+    mid_active: usize,
+    mid_departs: u64,
+}
+
+/// The full fabric under a fault plan: `n` trainers × `shadow_threads`
+/// pool workers over a partitioned EASGD/MA fabric, a repartition + health
+/// controller pair, the crash watchdog, and writer threads standing in for
+/// training workers (they dirty the replica, stamp heartbeats, and honor
+/// the plan's crash/stall windows exactly like `trainer::run_trainer`).
+fn run_chaos(cfg: &RunConfig, faults: Arc<FaultPlan>, run: Duration) -> Chaos {
+    let n = cfg.num_trainers;
+    let mut net = Network::new(None);
+    let nodes: Vec<_> = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
+    let w0 = vec![0.0f32; LEN];
+    let sync_ps = Arc::new(
+        SyncPsGroup::build(&w0, 2, &mut net)
+            .with_push_chunking(CHUNK, cfg.delta_threshold)
+            .with_push_retry(3, Duration::from_millis(1)),
+    );
+    let net = Arc::new(net.with_faults(faults.clone()));
+    let plan = PartitionPlan::build(LEN, cfg).unwrap();
+    let groups: Vec<Option<Arc<AllReduceGroup>>> = plan
+        .partitions
+        .iter()
+        .map(|p| match p.algo {
+            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(cfg, p.range.len)),
+            _ => None,
+        })
+        .collect();
+    let controller = Arc::new(RepartitionController::new(
+        cfg,
+        LEN,
+        Some(sync_ps.clone()),
+        plan.clone(),
+        groups.clone(),
+    ));
+    let health = Arc::new(HealthController::new(cfg, controller.clone()));
+    let wd_stop = Arc::new(AtomicBool::new(false));
+    let watchdog = health.spawn_watchdog(wd_stop.clone());
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut pools = Vec::new();
+    let mut writers = Vec::new();
+    for (t, &node) in nodes.iter().enumerate() {
+        let replica = Arc::new(
+            HogwildBuffer::from_slice(&vec![t as f32 + 1.0; LEN]).with_dirty_epochs(CHUNK),
+        );
+        let tasks: Vec<ShadowTask> = plan
+            .partitions
+            .iter()
+            .map(|p| ShadowTask {
+                partition: p.index,
+                range: p.range,
+                strategy: build_strategy(
+                    cfg,
+                    p,
+                    t,
+                    &w0,
+                    Some(sync_ps.clone()),
+                    groups[p.index].clone(),
+                )
+                .unwrap(),
+            })
+            .collect();
+        pools.push(spawn_shadow_pool_adaptive(
+            tasks,
+            replica.clone(),
+            node,
+            net.clone(),
+            metrics.clone(),
+            stop.clone(),
+            Duration::ZERO,
+            t,
+            cfg.shadow_threads,
+            Some(controller.clone()),
+            Some(health.clone()),
+        ));
+        // training stand-in: dirty the replica and stamp heartbeats,
+        // honoring crash windows (a crashed trainer goes silent — the
+        // pool's dark loop keeps the sweep clock ticking, not us) and
+        // stall windows (capped at 5ms/lap so the suite stays fast; a
+        // capped straggler still beats, which is the point — stalls are
+        // not crashes)
+        let stop = stop.clone();
+        let faults = faults.clone();
+        let health = health.clone();
+        writers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xFA07 ^ t as u64);
+            while !stop.load(Relaxed) {
+                if faults.crashed(t) {
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+                if let Some(d) = faults.lap_delay(t) {
+                    std::thread::sleep(d.min(Duration::from_millis(5)));
+                }
+                let lo = (rng.next_u64() as usize) % (LEN - 32);
+                let noise: Vec<f32> = (0..32).map(|_| rng.u01() - 0.5).collect();
+                replica.axpy_range(lo, 0.3, &noise);
+                health.note_lap(t);
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }));
+    }
+    std::thread::sleep(run);
+    let mid_departs = health.departs();
+    let mid_active = controller.active();
+    stop.store(true, Relaxed);
+    let mut rounds = 0u64;
+    for p in pools {
+        rounds += p.join().unwrap().unwrap();
+    }
+    for w in writers {
+        w.join().unwrap();
+    }
+    // like the coordinator: the watchdog outlives the pools, so a trainer
+    // crashed right at stop is still proxy-departed, never deadlocked on
+    wd_stop.store(true, Relaxed);
+    watchdog.join().unwrap();
+    Chaos { rounds, net, metrics, controller, health, nodes, mid_active, mid_departs }
+}
+
+/// The CI chaos matrix entry: run whatever `SHADOWSYNC_FAULT_PLAN` +
+/// `SHADOWSYNC_PROPTEST_SEED` name (defaults: a permanent single-trainer
+/// crash, seed 7) through the full fabric and check both invariants.
+#[test]
+fn chaos_plan_preserves_byte_exactness_and_membership() {
+    let spec = std::env::var("SHADOWSYNC_FAULT_PLAN")
+        .unwrap_or_else(|_| "crash:t1@sweep20".into());
+    let seed: u64 = std::env::var("SHADOWSYNC_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    let faults = Arc::new(FaultPlan::parse(&spec, seed).expect("CI plan must parse"));
+    let n = faults.trainers_referenced().max(2);
+    // drop plans run an all-EASGD fabric so the push-retry path is what
+    // the drops exercise; everything else gets the hybrid EASGD+MA fabric
+    let drops = spec.contains("drop");
+    let cfg = RunConfig {
+        num_trainers: n,
+        sync_partitions: 4,
+        shadow_threads: 2,
+        easgd_chunk_elems: CHUNK,
+        delta_threshold: 1e-4,
+        repartition_every: 40,
+        algo: SyncAlgo::Easgd,
+        algo_map: (!drops).then(|| "easgd:0-2,ma:3".parse().unwrap()),
+        heartbeat_timeout_ms: 40,
+        ..RunConfig::default()
+    };
+    let c = run_chaos(&cfg, faults.clone(), Duration::from_millis(400));
+
+    let permanent: Vec<usize> = (0..n).filter(|&t| faults.crashes_permanently(t)).collect();
+    if permanent.len() < n {
+        assert!(c.rounds > 0, "survivors never completed a sync round");
+    }
+    for &t in &permanent {
+        assert!(
+            c.health.is_departed(t),
+            "permanently crashed trainer {t} was never departed by the watchdog"
+        );
+    }
+    assert!(
+        c.mid_departs >= permanent.len() as u64,
+        "watchdog caught {} crashes, plan schedules {} permanent ones",
+        c.mid_departs,
+        permanent.len()
+    );
+    assert!(
+        c.mid_active <= n - permanent.len(),
+        "roster still counts permanently crashed trainers"
+    );
+    if spec.contains("drop") {
+        assert!(faults.dropped_bytes() > 0, "a drop plan that dropped nothing proved nothing");
+    }
+    // invariant 1: byte exactness under whatever the plan faulted
+    let snap = c.metrics.snapshot();
+    let trainer_tx: u64 = c.nodes.iter().map(|&nd| c.net.tx(nd)).sum();
+    let ring_tx = trainer_tx - c.net.role_rx(Role::SyncPs);
+    assert_eq!(
+        snap.sync_bytes,
+        c.net.role_bytes(Role::SyncPs) + ring_tx,
+        "metrics.sync_bytes diverged from the NIC counters under plan `{spec}` (seed {seed})"
+    );
+    assert!(snap.syncs > 0);
+    assert_eq!(snap.partition_syncs.len(), 4);
+    for (i, &s) in snap.partition_syncs.iter().enumerate() {
+        assert!(s > 0, "partition {i} starved under plan `{spec}`: {:?}", snap.partition_syncs);
+    }
+    // invariant 2: no membership leaks in the final epoch's groups
+    for g in c.controller.current_epoch().groups.iter().flatten() {
+        assert_eq!(g.active(), 0, "leaked collective membership under plan `{spec}`");
+    }
+}
+
+/// The ISSUE's pinned scenario, deterministically: a trainer crashes while
+/// a repartition generation is *pending* (published, not yet adopted). Its
+/// slots in the pending epoch's groups must be vacated, the survivor
+/// adopts without blocking on the ghost, the next rebuild sizes groups to
+/// the real roster, and the crashed trainer rejoins cleanly afterward.
+#[test]
+fn crash_during_pending_repartition_vacates_the_generation() {
+    let cfg = RunConfig {
+        num_trainers: 2,
+        sync_partitions: 2,
+        shadow_threads: 1,
+        easgd_chunk_elems: 8,
+        algo: SyncAlgo::Ma,
+        num_sync_ps: 0,
+        heartbeat_timeout_ms: 50,
+        ..RunConfig::default()
+    };
+    let len = 128;
+    let plan = PartitionPlan::build(len, &cfg).unwrap();
+    let groups: Vec<Option<Arc<AllReduceGroup>>> = plan
+        .partitions
+        .iter()
+        .map(|p| match p.algo {
+            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(&cfg, p.range.len)),
+            _ => None,
+        })
+        .collect();
+    let ctrl = Arc::new(RepartitionController::new(&cfg, len, None, plan, groups));
+    let health = HealthController::new(&cfg, ctrl.clone());
+    let epoch0 = ctrl.current_epoch();
+    // a generation goes pending: published, nobody has adopted it yet
+    assert!(ctrl.force_rebuild());
+    let pending = ctrl.current_epoch();
+    assert_eq!(pending.gen, 1);
+    for g in pending.groups.iter().flatten() {
+        assert_eq!(g.active(), 2, "pending groups are pre-sized to the full roster");
+    }
+    // trainer 1 crashes NOW — before anyone adopted the pending epoch
+    assert!(health.depart_trainer(1));
+    assert_eq!(ctrl.active(), 1);
+    assert_eq!(health.departs(), 1);
+    // its adopted-epoch groups were proxy-left...
+    for g in epoch0.groups.iter().flatten() {
+        assert_eq!(g.active(), 1, "the crash must proxy-leave the adopted epoch's rings");
+    }
+    // ...and its slots in the PENDING generation were vacated too, so the
+    // survivor's rounds on the new fabric never wait on the ghost
+    for g in pending.groups.iter().flatten() {
+        assert_eq!(g.active(), 1, "the pending generation must be vacated by the depart");
+    }
+    // the survivor adopts the (vacated) pending epoch normally
+    let e1 = ctrl.adopt(0);
+    health.note_adopt(0, &e1);
+    assert_eq!(ctrl.repartitions(), 1);
+    // with the ghost gone, the adoption gate opens on the survivor alone:
+    // the next rebuild sizes fresh groups to the real roster
+    assert!(ctrl.force_rebuild());
+    let solo = ctrl.current_epoch();
+    assert_eq!(solo.gen, 2);
+    for g in solo.groups.iter().flatten() {
+        assert_eq!(g.active(), 1, "post-crash rebuilds must size groups to the survivors");
+    }
+    let e2 = ctrl.adopt(1);
+    health.note_adopt(0, &e2);
+    // the crash window closes: elastic rejoin grows the roster back
+    let e3 = ctrl.rejoin().expect("rejoin must succeed once the survivor adopted");
+    health.mark_rejoined(1, &e3);
+    assert!(!health.is_departed(1));
+    assert_eq!(ctrl.active(), 2);
+    assert_eq!(e3.gen, 3);
+    for g in e3.groups.iter().flatten() {
+        assert_eq!(g.active(), 2, "the rejoin epoch is sized for the grown roster");
+    }
+}
+
+/// Transient crash end-to-end: the trainer goes dark mid-run, the watchdog
+/// departs it, its window closes, and the pool rejoins elastically —
+/// roster restored, byte accounting exact, no leaked memberships.
+#[test]
+fn transient_crash_departs_then_rejoins() {
+    // crash at sweep 10 for 150 sweeps: the dark loop ticks the sweep
+    // clock at ~1ms/lap, so the trainer is gone for ~150ms of a 500ms run
+    // — long past the 25ms heartbeat timeout, with ample time to rejoin
+    let faults = Arc::new(FaultPlan::parse("crash:t0@sweep10+150", 11).unwrap());
+    let cfg = RunConfig {
+        num_trainers: 2,
+        sync_partitions: 2,
+        shadow_threads: 2,
+        easgd_chunk_elems: CHUNK,
+        delta_threshold: 1e-4,
+        algo: SyncAlgo::Easgd,
+        algo_map: Some("easgd:0,ma:1".parse().unwrap()),
+        heartbeat_timeout_ms: 25,
+        ..RunConfig::default()
+    };
+    let c = run_chaos(&cfg, faults, Duration::from_millis(500));
+    assert!(c.rounds > 0);
+    assert_eq!(c.mid_departs, 1, "exactly one depart: the crash, caught once");
+    assert_eq!(c.mid_active, 2, "the rejoin must restore the full roster");
+    assert!(
+        c.controller.repartitions() >= 1,
+        "the rejoin publishes (and the survivor adopts) a fresh generation"
+    );
+    let snap = c.metrics.snapshot();
+    let trainer_tx: u64 = c.nodes.iter().map(|&nd| c.net.tx(nd)).sum();
+    let ring_tx = trainer_tx - c.net.role_rx(Role::SyncPs);
+    assert_eq!(
+        snap.sync_bytes,
+        c.net.role_bytes(Role::SyncPs) + ring_tx,
+        "byte accounting must stay exact across depart + rejoin"
+    );
+    for g in c.controller.current_epoch().groups.iter().flatten() {
+        assert_eq!(g.active(), 0, "leaked collective membership across a rejoin");
+    }
+}

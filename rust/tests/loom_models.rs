@@ -11,10 +11,10 @@
 //! RUSTFLAGS="--cfg shadowsync_loom" cargo test --release --test loom_models
 //! ```
 //!
-//! Four models run the *real* fabric code (`sync/allreduce.rs`,
-//! `sync/ps.rs`, `sync/repartition.rs`, `tensor/mod.rs`) through
-//! `sync::prim`, which swaps `std::sync`/`std::thread` for the modeled
-//! primitives under this cfg:
+//! Six models run the *real* fabric code (`sync/allreduce.rs`,
+//! `sync/ps.rs`, `sync/repartition.rs`, `sync/health.rs`,
+//! `tensor/mod.rs`) through `sync::prim`, which swaps
+//! `std::sync`/`std::thread` for the modeled primitives under this cfg:
 //!
 //! 1. overlapped double-buffered deposit vs. a draining reduce (exact
 //!    means across racing rounds — a stale helper folding the wrong
@@ -23,7 +23,12 @@
 //! 3. dirty-epoch bump-after-write + scan-skip cache + central
 //!    bump-after-push ("a scan skip never misses a settled write");
 //! 4. the repartition adopt/depart handshake (at most one pending
-//!    generation, no lost `leave()`).
+//!    generation, no lost `leave()`);
+//! 5. the heartbeat-depart claim protocol (watchdog ticks vs. a pool's
+//!    terminal goodbye — the proxy-leave runs exactly once);
+//! 6. the resume/depart TOCTOU closure (a tick that measured dark-window
+//!    silence re-validates staleness under the lock a resume stamps
+//!    through, so no schedule departs a resumed trainer).
 //!
 //! Two distilled *mutation* pairs close the loop on checker power: the
 //! pre-epoch-tag claim cursor (the PR-1 generation race) and a
@@ -40,7 +45,8 @@ use shadowsync::sync::prim::{
     Ordering::{Acquire, Relaxed, Release, SeqCst},
 };
 use shadowsync::sync::{
-    AllReduceGroup, DeltaScanCache, ParamRange, PartitionPlan, RepartitionController, SyncPsGroup,
+    AllReduceGroup, DeltaScanCache, HealthController, ParamRange, PartitionPlan,
+    RepartitionController, SyncPsGroup,
 };
 use shadowsync::tensor::HogwildBuffer;
 
@@ -311,6 +317,147 @@ fn repartition_adopt_depart_handshake() {
         assert_eq!(ctrl.repartitions(), 2);
         for g in ctrl.current_epoch().groups.iter().flatten() {
             assert_eq!(g.active(), 1);
+        }
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+// ---------------------------------------------------------------------------
+// Models 5 & 6: the heartbeat-depart claim protocol
+// ---------------------------------------------------------------------------
+
+fn health_fixture() -> (
+    Arc<RepartitionController>,
+    Arc<HealthController>,
+    Arc<shadowsync::sync::PlanEpoch>,
+) {
+    let cfg = RunConfig {
+        num_trainers: 2,
+        sync_partitions: 1,
+        easgd_chunk_elems: 8,
+        algo: SyncAlgo::Ma,
+        num_sync_ps: 0,
+        heartbeat_timeout_ms: 10,
+        ..RunConfig::default()
+    };
+    let plan = PartitionPlan::build(16, &cfg).unwrap();
+    let groups = plan
+        .partitions
+        .iter()
+        .map(|p| Some(Arc::new(AllReduceGroup::new(2, p.range.len))))
+        .collect();
+    let ctrl = Arc::new(RepartitionController::new(&cfg, 16, None, plan, groups));
+    let health = Arc::new(HealthController::new(&cfg, Arc::clone(&ctrl)));
+    let e0 = ctrl.current_epoch();
+    health.note_adopt(0, &e0);
+    health.note_adopt(1, &e0);
+    (ctrl, health, e0)
+}
+
+/// Trainer 1 goes silent; two watchdog ticks and the trainer's own pool
+/// terminal path race to take it out of the roster. Every `departed`
+/// transition happens under the health controller's state lock, so in
+/// every interleaving the goodbye — proxy-leave plus controller depart —
+/// has exactly one owner: the epoch's groups shrink by exactly one slot
+/// (a double `leave()` would underflow the ring's membership), the
+/// roster by exactly one trainer, and a rejoin restores both.
+#[test]
+fn heartbeat_depart_claims_are_exactly_once() {
+    let stats = Model::new().clamp_preemptions(2).check(|| {
+        let (ctrl, health, e0) = health_fixture();
+        // trainer 0 beat recently; trainer 1 never beat and is stale
+        health.beat_at_ms(0, 95);
+
+        let ticks: Vec<_> = [100u64, 101]
+            .into_iter()
+            .map(|now| {
+                let health = Arc::clone(&health);
+                thread::spawn(move || health.check_at_ms(now))
+            })
+            .collect();
+        let pool = {
+            let health = Arc::clone(&health);
+            let ctrl = Arc::clone(&ctrl);
+            let e0 = Arc::clone(&e0);
+            thread::spawn(move || {
+                // the driver's terminal path: claim, then say goodbye
+                if health.claim_exit(1) {
+                    for g in e0.groups.iter().flatten() {
+                        g.leave();
+                    }
+                    ctrl.depart(0);
+                    1usize
+                } else {
+                    0
+                }
+            })
+        };
+        let ticked: usize = ticks.into_iter().map(|h| h.join().unwrap()).sum();
+        let claimed = pool.join().unwrap();
+
+        assert_eq!(ticked + claimed, 1, "the goodbye must have exactly one owner");
+        assert_eq!(health.departs() as usize, ticked);
+        assert!(health.is_departed(1));
+        assert_eq!(ctrl.active(), 1);
+        for g in e0.groups.iter().flatten() {
+            assert_eq!(g.active(), 1, "trainer 1's slot must vacate exactly once");
+        }
+        // the roster recovers identically whichever claimant won
+        let e1 = ctrl.rejoin().expect("survivor roster is idle");
+        health.mark_rejoined(1, &e1);
+        assert!(!health.is_departed(1));
+        assert_eq!(ctrl.active(), 2);
+        for g in e1.groups.iter().flatten() {
+            assert_eq!(g.active(), 2);
+        }
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+/// The resume/depart TOCTOU, closed. A watchdog tick measured trainer
+/// 1's dark-window silence *before* taking the lock; the pool's resume
+/// stamps a fresh heartbeat *under* that lock. Because the tick
+/// re-validates staleness once it holds the lock, no schedule departs a
+/// trainer that already resumed — and no resume slips past a depart that
+/// already landed. Exactly one of the two wins in every interleaving.
+#[test]
+fn resume_and_depart_exclude_each_other() {
+    let stats = Model::new().clamp_preemptions(2).check(|| {
+        let (ctrl, health, e0) = health_fixture();
+        // trainer 0 is fresh; trainer 1 last beat at t=50ms — stale at 100
+        health.beat_at_ms(0, 95);
+        health.beat_at_ms(1, 50);
+
+        let tick = {
+            let health = Arc::clone(&health);
+            thread::spawn(move || health.check_at_ms(100))
+        };
+        let resume = {
+            let health = Arc::clone(&health);
+            // the pool's crash window closed just in time
+            thread::spawn(move || health.resume_at_ms(1, 96))
+        };
+        let departed = tick.join().unwrap();
+        let resumed = resume.join().unwrap();
+
+        assert_eq!(departed == 1, !resumed, "each schedule picks exactly one winner");
+        if resumed {
+            assert!(!health.is_departed(1));
+            assert_eq!(health.departs(), 0);
+            assert_eq!(ctrl.active(), 2);
+            for g in e0.groups.iter().flatten() {
+                assert_eq!(g.active(), 2, "a resumed trainer keeps its slots");
+            }
+        } else {
+            assert!(health.is_departed(1));
+            assert_eq!(health.departs(), 1);
+            assert_eq!(ctrl.active(), 1);
+            for g in e0.groups.iter().flatten() {
+                assert_eq!(g.active(), 1);
+            }
+            let e1 = ctrl.rejoin().expect("survivor roster is idle");
+            health.mark_rejoined(1, &e1);
+            assert_eq!(ctrl.active(), 2);
         }
     });
     assert!(stats.executions > 1, "model never branched");

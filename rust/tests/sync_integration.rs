@@ -792,6 +792,7 @@ fn mid_training_repartition_keeps_byte_accounting_exact() {
             t,
             cfg.shadow_threads,
             Some(controller.clone()),
+            None,
         ));
         // writers keep the hot first quarter dirty so replans have skew
         let stop = stop.clone();
@@ -908,6 +909,7 @@ fn repartition_preserves_every_chunk_of_the_replica() {
         0,
         cfg.shadow_threads,
         Some(controller.clone()),
+        None,
     );
     std::thread::sleep(Duration::from_millis(200));
     stop.store(true, Relaxed);

@@ -48,6 +48,8 @@ const RELAXED_REGISTRY: &[&str] = &[
     "chunks_done",    // allreduce folded-chunk counter
     "cursor",         // allreduce epoch-tagged claim cursor / sketch ring index
     "filled",         // quantile-sketch filled watermark
+    "heartbeat",      // per-trainer liveness stamps (HealthController)
+    "departed",       // lock-claimed roster-exit flags (HealthController)
 ];
 
 /// A deliberately-Relaxed use of a registry identifier, with the argument
@@ -699,6 +701,27 @@ mod tests {
         assert_eq!(v[0].line, 2);
         assert_eq!(v[0].lint, "relaxed-ordering");
         assert!(v[0].msg.contains("generation"));
+    }
+
+    #[test]
+    fn relaxed_lint_guards_the_health_roster_atomics() {
+        // heartbeat stamps and departed flags joined the registry with the
+        // fault fabric: a Relaxed touch on either would break the watchdog's
+        // staleness reads or the lock-claimed depart handshake
+        let beat = fd(
+            "src/sync/health.rs",
+            "fn beat(&self, t: usize) {\n    self.heartbeat[t].store(now, Relaxed);\n}\n",
+        );
+        let v = lint_relaxed(&beat);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("heartbeat"));
+        let flag = fd(
+            "src/sync/driver.rs",
+            "fn gone(&self, t: usize) -> bool {\n    self.departed[t].load(Relaxed)\n}\n",
+        );
+        let v = lint_relaxed(&flag);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("departed"));
     }
 
     #[test]
