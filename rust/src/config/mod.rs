@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::sync::WireCodec;
 use crate::util::json::Json;
 
 /// Static shape info of one AOT-compiled model preset.
@@ -245,6 +246,135 @@ impl std::str::FromStr for AlgoMap {
     }
 }
 
+/// Per-partition wire-codec map, parsed from the map form of
+/// `--wire-codec`: `fp16:0-1,topk:0.25:2-3` (inclusive partition-index
+/// ranges, same grammar as [`AlgoMap`]; the codec itself may contain a `:`
+/// — the *last* `:`-separated field of each entry is the range). Partitions
+/// not named fall back to the run's base `wire_codec`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CodecMap {
+    /// `(codec, lo, hi)` with `lo..=hi` partition indices, non-overlapping
+    entries: Vec<(WireCodec, usize, usize)>,
+}
+
+impl CodecMap {
+    /// Build a map directly from `(codec, lo, hi)` entries. Same invariants
+    /// as [`FromStr`](std::str::FromStr): non-empty, non-overlapping,
+    /// non-reversed ranges.
+    pub fn from_entries(entries: Vec<(WireCodec, usize, usize)>) -> Result<Self> {
+        if entries.is_empty() {
+            bail!("empty wire-codec map");
+        }
+        if entries.iter().any(|(_, lo, hi)| lo > hi) {
+            bail!("wire-codec map range is reversed");
+        }
+        let map = Self { entries };
+        if map.overlaps() {
+            bail!("wire-codec map partition ranges overlap");
+        }
+        Ok(map)
+    }
+
+    /// The `(codec, lo, hi)` entries (inclusive partition-index ranges).
+    pub fn entries(&self) -> &[(WireCodec, usize, usize)] {
+        &self.entries
+    }
+
+    /// The codec mapped to `partition`, if any entry covers it.
+    pub fn codec_for(&self, partition: usize) -> Option<WireCodec> {
+        self.entries
+            .iter()
+            .find(|(_, lo, hi)| (*lo..=*hi).contains(&partition))
+            .map(|(c, _, _)| *c)
+    }
+
+    /// Highest partition index any entry names (validation: must stay
+    /// below `sync_partitions`).
+    pub fn max_partition(&self) -> Option<usize> {
+        self.entries.iter().map(|(_, _, hi)| *hi).max()
+    }
+
+    fn overlaps(&self) -> bool {
+        for (i, (_, lo_a, hi_a)) in self.entries.iter().enumerate() {
+            for (_, lo_b, hi_b) in &self.entries[i + 1..] {
+                if lo_a <= hi_b && lo_b <= hi_a {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+impl std::str::FromStr for CodecMap {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let part = part.trim();
+            // the codec itself may contain ':' (topk:0.25), so the range is
+            // everything after the LAST colon
+            let (codec_s, range) = part
+                .rsplit_once(':')
+                .ok_or_else(|| anyhow!("wire-codec map entry {part:?} is not codec:lo-hi"))?;
+            let (lo, hi) = match range.trim().split_once('-') {
+                Some((a, b)) => (a.trim().parse::<usize>()?, b.trim().parse::<usize>()?),
+                None => {
+                    let i = range.trim().parse::<usize>().with_context(|| {
+                        format!("wire-codec map entry {part:?}: range {range:?} is not lo-hi")
+                    })?;
+                    (i, i)
+                }
+            };
+            if lo > hi {
+                bail!("wire-codec map range {range:?} is reversed");
+            }
+            let codec: WireCodec = codec_s.trim().parse().map_err(|e| anyhow!("{e}"))?;
+            entries.push((codec, lo, hi));
+        }
+        if entries.is_empty() {
+            bail!("empty wire-codec map");
+        }
+        let map = Self { entries };
+        if map.overlaps() {
+            bail!("wire-codec map partition ranges overlap");
+        }
+        Ok(map)
+    }
+}
+
+/// Parse the `--wire-codec` flag value: either one uniform codec for every
+/// partition (`fp16`, `topk:0.25`) or a per-partition map
+/// (`fp16:0-1,topk:0.25:2-3`), applied onto `cfg`.
+pub fn apply_wire_codec_flag(cfg: &mut RunConfig, s: &str) -> Result<()> {
+    if let Ok(codec) = s.parse::<WireCodec>() {
+        cfg.wire_codec = codec;
+        return Ok(());
+    }
+    match s.parse::<CodecMap>() {
+        Ok(map) => {
+            cfg.codec_map = Some(map);
+            Ok(())
+        }
+        Err(e) => bail!(
+            "bad --wire-codec {s:?}: neither a codec (fp32|fp16|int8|topk:R) \
+             nor a per-partition map (e.g. fp16:0-1,topk:0.25:2-3): {e}"
+        ),
+    }
+}
+
+/// A codec built programmatically (not via `FromStr`, which already
+/// enforces this) can carry a degenerate top-k ratio; validation catches it
+/// before the fabric floors `k` at 1 and silently sends almost nothing.
+fn validate_codec(codec: WireCodec) -> Result<()> {
+    if let WireCodec::TopK(r) = codec {
+        if !(r > 0.0 && r <= 1.0) {
+            bail!("top-k wire-codec ratio must be in (0, 1], got {r}");
+        }
+    }
+    Ok(())
+}
+
 /// Shadow (background thread, free-running) vs fixed-rate (foreground,
 /// every-k-iterations) synchronization — the paper's central comparison.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -367,6 +497,15 @@ pub struct RunConfig {
     /// optional per-partition algorithm map (`--algo-map easgd:0-1,ma:2-3`);
     /// unmapped partitions run `algo`
     pub algo_map: Option<AlgoMap>,
+    /// wire codec for sync payloads (`--wire-codec fp32|fp16|int8|topk:R`):
+    /// EASGD push/reply legs and ring reduce-scatter / all-gather hops all
+    /// move codec-sized messages, with per-trainer error-feedback residuals
+    /// carrying whatever a lossy codec rounds away. Fp32 is the identity —
+    /// bit-for-bit the pre-codec fabric
+    pub wire_codec: WireCodec,
+    /// optional per-partition codec map (the map form of `--wire-codec`,
+    /// e.g. `fp16:0-1,topk:0.25:2-3`); unmapped partitions use `wire_codec`
+    pub codec_map: Option<CodecMap>,
     /// measured-cost adaptive repartitioning: every N shadow sweeps (per
     /// trainer, aggregated across trainers) the partition plan is rebuilt
     /// with a cost-balanced cut over the measured per-range write rates,
@@ -455,6 +594,8 @@ impl Default for RunConfig {
             sync_partitions: 1,
             shadow_threads: 1,
             algo_map: None,
+            wire_codec: WireCodec::Fp32,
+            codec_map: None,
             repartition_every: 0,
             allreduce_chunks: 8,
             reduce_engine: crate::sync::ReduceEngine::Overlapped,
@@ -516,6 +657,23 @@ impl RunConfig {
                 }
             }
         }
+        if let Some(m) = &self.codec_map {
+            if let Some(max) = m.max_partition() {
+                if max >= self.sync_partitions {
+                    bail!(
+                        "--wire-codec map names partition {max} but only {} partitions exist",
+                        self.sync_partitions
+                    );
+                }
+            }
+            if !matches!(self.mode, SyncMode::Shadow) {
+                bail!("a per-partition --wire-codec map is shadow-mode only (like --algo-map)");
+            }
+            for (codec, _, _) in m.entries() {
+                validate_codec(*codec)?;
+            }
+        }
+        validate_codec(self.wire_codec)?;
         if self.any_easgd() && self.num_sync_ps == 0 {
             bail!("EASGD partitions are centralized: need at least one sync PS");
         }
@@ -593,6 +751,15 @@ impl RunConfig {
     /// covering it, or the run-level `algo` otherwise.
     pub fn partition_algo(&self, idx: usize) -> SyncAlgo {
         self.algo_map.as_ref().and_then(|m| m.algo_for(idx)).unwrap_or(self.algo)
+    }
+
+    /// The wire codec partition `idx` syncs with: the `--wire-codec` map
+    /// entry covering it, or the run-level `wire_codec` otherwise.
+    pub fn partition_codec(&self, idx: usize) -> WireCodec {
+        self.codec_map
+            .as_ref()
+            .and_then(|m| m.codec_for(idx))
+            .unwrap_or(self.wire_codec)
     }
 
     /// Does any partition run EASGD (and therefore need the sync-PS tier
@@ -842,6 +1009,72 @@ mod tests {
         c.health_adaptive = false;
         c.heartbeat_timeout_ms = 100;
         c.mode = SyncMode::FixedRate { gap: 5 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn codec_map_parses_ranges_and_single_indices() {
+        let m: CodecMap = "fp16:0-1,topk:0.25:2-3,int8:4".parse().unwrap();
+        assert_eq!(m.codec_for(0), Some(WireCodec::Fp16));
+        assert_eq!(m.codec_for(2), Some(WireCodec::TopK(0.25)));
+        assert_eq!(m.codec_for(4), Some(WireCodec::Int8));
+        assert_eq!(m.codec_for(5), None, "unmapped partitions fall back to --wire-codec");
+        assert_eq!(m.max_partition(), Some(4));
+        assert!("".parse::<CodecMap>().is_err());
+        assert!("fp16".parse::<CodecMap>().is_err(), "bare codec is not a map");
+        assert!("fp8:0-1".parse::<CodecMap>().is_err());
+        assert!("fp16:3-1".parse::<CodecMap>().is_err());
+        assert!("fp16:0-3,int8:2-5".parse::<CodecMap>().is_err(), "overlap must fail");
+        assert!(CodecMap::from_entries(vec![]).is_err());
+        assert!(CodecMap::from_entries(vec![(WireCodec::Fp16, 3, 1)]).is_err());
+    }
+
+    #[test]
+    fn wire_codec_flag_accepts_uniform_or_map() {
+        let mut c = RunConfig { sync_partitions: 4, shadow_threads: 2, ..RunConfig::default() };
+        apply_wire_codec_flag(&mut c, "fp16").unwrap();
+        assert_eq!(c.wire_codec, WireCodec::Fp16);
+        assert!(c.codec_map.is_none());
+        assert_eq!(c.partition_codec(3), WireCodec::Fp16);
+        c.validate().unwrap();
+
+        apply_wire_codec_flag(&mut c, "topk:0.1").unwrap();
+        assert_eq!(c.wire_codec, WireCodec::TopK(0.1));
+
+        apply_wire_codec_flag(&mut c, "int8:0-1,fp32:2-3").unwrap();
+        assert_eq!(c.partition_codec(0), WireCodec::Int8);
+        assert_eq!(c.partition_codec(2), WireCodec::Fp32);
+        c.validate().unwrap();
+
+        assert!(apply_wire_codec_flag(&mut c, "fp8").is_err());
+        assert!(apply_wire_codec_flag(&mut c, "topk:2.0").is_err());
+    }
+
+    #[test]
+    fn codec_map_validation() {
+        let mut c = RunConfig { sync_partitions: 4, shadow_threads: 2, ..RunConfig::default() };
+        // the codec map must stay inside the partition count
+        c.codec_map = Some("fp16:0-7".parse().unwrap());
+        assert!(c.validate().is_err());
+        c.codec_map = Some("fp16:0-3".parse().unwrap());
+        c.validate().unwrap();
+        // per-partition codec maps ride the partitioned fabric: shadow only
+        c.sync_partitions = 1;
+        c.shadow_threads = 1;
+        c.codec_map = Some("fp16:0".parse().unwrap());
+        c.mode = SyncMode::FixedRate { gap: 5 };
+        assert!(c.validate().is_err());
+        c.mode = SyncMode::Shadow;
+        c.validate().unwrap();
+        // a uniform codec works in any mode
+        c.codec_map = None;
+        c.wire_codec = WireCodec::Int8;
+        c.mode = SyncMode::FixedRate { gap: 5 };
+        c.validate().unwrap();
+        // degenerate programmatic top-k ratios are caught at validation
+        c.wire_codec = WireCodec::TopK(0.0);
+        assert!(c.validate().is_err());
+        c.wire_codec = WireCodec::TopK(f32::NAN);
         assert!(c.validate().is_err());
     }
 

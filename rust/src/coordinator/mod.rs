@@ -138,12 +138,18 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         // either leg, and recorded sync bytes are the measured traffic.
         // The group-level gate serves the legacy whole-vector API; the
         // strategies the fabric builds carry their own per-partition gates
-        Some(Arc::new(
-            SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net)
-                .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold)
-                .with_adaptive_gate(cfg.delta_skip_target)
-                .with_push_retry(cfg.push_retries, Duration::from_millis(cfg.push_backoff_ms)),
-        ))
+        // when a heartbeat watchdog is armed, a push leg's summed backoff
+        // sleeps must never outlast the timeout, or a drop-heavy fault plan
+        // turns retry patience into a spurious proxy-depart
+        let mut group = SyncPsGroup::build(&model.w0, cfg.num_sync_ps, &mut net)
+            .with_push_chunking(cfg.easgd_chunk_elems, cfg.delta_threshold)
+            .with_adaptive_gate(cfg.delta_skip_target)
+            .with_push_retry(cfg.push_retries, Duration::from_millis(cfg.push_backoff_ms));
+        if cfg.heartbeat_timeout_ms > 0 {
+            group = group
+                .with_push_backoff_budget(Duration::from_millis(cfg.heartbeat_timeout_ms) / 2);
+        }
+        Some(Arc::new(group))
     } else {
         None
     };
@@ -154,7 +160,9 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         .partitions
         .iter()
         .map(|p| match p.algo {
-            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(crate::sync::build_group(cfg, p.range.len)),
+            SyncAlgo::Ma | SyncAlgo::Bmuf => {
+                Some(crate::sync::build_group(cfg, p.index, p.range.len))
+            }
             _ => None,
         })
         .collect();
@@ -396,7 +404,7 @@ fn env(cluster: &Cluster) -> WorkerEnv {
 /// same per-instance gate wiring as the shadow fabric's partition
 /// strategies, via the one shared constructor.
 fn foreground_easgd(cfg: &RunConfig, cluster: &Cluster) -> EasgdSync {
-    crate::sync::easgd_from_cfg(cfg, cluster.sync_ps.clone().expect("easgd sync ps"))
+    crate::sync::easgd_from_cfg(cfg, 0, cluster.sync_ps.clone().expect("easgd sync ps"))
 }
 
 /// Evaluate `w^(1)` + `h` on the held-out range and assemble the outcome.

@@ -16,6 +16,7 @@ use crate::sync::driver::{spawn_shadow_pool_adaptive, ShadowTask};
 use crate::sync::prim::AtomicBool;
 use crate::sync::{
     build_strategy, AllReduceGroup, PartitionPlan, RepartitionController, SyncPsGroup,
+    WireCodec,
 };
 use crate::tensor::HogwildBuffer;
 use crate::util::rng::Rng;
@@ -427,6 +428,65 @@ pub fn run_repartition(opts: &ExpOpts) -> Result<String> {
     r.table(
         &["repartitioning", "eval loss", "eval NE", "worst part gap", "repartitions"],
         &rows2,
+    );
+    Ok(r.finish())
+}
+
+/// Wire-codec ablation: quantized (fp16/int8) and top-k-sparsified sync
+/// traffic with per-trainer error feedback, vs the uncompressed fp32 wire.
+/// NE should hold (fp16 within 1% of fp32) while the measured NIC bytes
+/// drop with the wire format — and `metrics.sync_bytes` must equal the
+/// sync-PS NIC counters bit-exactly under every codec.
+pub fn run_codec(opts: &ExpOpts) -> Result<String> {
+    let rt = Runtime::cpu()?;
+    let codecs = [
+        WireCodec::Fp32,
+        WireCodec::Fp16,
+        WireCodec::Int8,
+        WireCodec::TopK(0.25),
+    ];
+    let mut rows = Vec::new();
+    let mut base: Option<(f64, u64)> = None; // fp32 (NE, sync bytes)
+    for codec in codecs {
+        let mut cfg = quality_cfg(opts, 4, 3, SyncAlgo::Easgd, SyncMode::Shadow, TRAIN_EXAMPLES);
+        cfg.wire_codec = codec;
+        let o = run_quality(&cfg, &rt)?;
+        let ne = o.eval.ne();
+        let bytes = o.metrics.sync_bytes;
+        // the invariant the codec layer must not bend: recorded sync bytes
+        // are exactly what the sync-PS NICs moved (EASGD-only run: no rings)
+        let exact = bytes == o.sync_ps_bytes;
+        let (base_ne, base_bytes) = *base.get_or_insert((ne, bytes));
+        let ratio = if bytes > 0 { base_bytes as f64 / bytes as f64 } else { f64::INFINITY };
+        rows.push(vec![
+            codec.to_string(),
+            format!("{ne:.4}"),
+            format!("{:+.2}%", 100.0 * (ne - base_ne) / base_ne),
+            format!("{bytes}"),
+            format!("{ratio:.2}×"),
+            if exact { "✓".into() } else { format!("✗ (NIC {})", o.sync_ps_bytes) },
+        ]);
+    }
+    let mut r = Report::new(
+        "Ablation: wire codecs for the sync fabric",
+        "compressed background sync traffic with error feedback (extension of §3.2)",
+    );
+    r.para(
+        "4 trainers × 3 threads, S-EASGD, 1 sync PS; each arm encodes both \
+         push legs with the codec, with per-trainer error-feedback residuals \
+         carrying the encode loss into the next round. \"compression\" is \
+         measured fp32 NIC bytes over the arm's measured NIC bytes.",
+    );
+    r.table(
+        &["codec", "eval NE", "ΔNE vs fp32", "sync bytes", "compression", "bytes exact"],
+        &rows,
+    );
+    r.para(
+        "Expected: fp16 halves the measured wire (≥ 40% drop) at an NE within \
+         1% of fp32; int8 and top-k cut deeper with modest NE cost, the \
+         error feedback keeping the loss bounded instead of accumulating; \
+         and the byte-exactness column holds for every codec — compression \
+         changes what the fabric moves, never how it is accounted.",
     );
     Ok(r.finish())
 }

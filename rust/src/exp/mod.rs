@@ -75,6 +75,7 @@ pub const ALL_IDS: &[&str] = &[
     "ablate-partitions",
     "ablate-repartition",
     "ablate-faults",
+    "ablate-codec",
     "calibrate",
 ];
 
@@ -96,6 +97,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "ablate-partitions" => ablate::run_partitions(opts)?,
         "ablate-repartition" => ablate::run_repartition(opts)?,
         "ablate-faults" => faults::run(opts)?,
+        "ablate-codec" => ablate::run_codec(opts)?,
         "calibrate" => calibrate::run(opts)?,
         _ => bail!("unknown experiment {id:?}; known: {}", ALL_IDS.join(", ")),
     };

@@ -21,6 +21,13 @@
 //!                                from the measured per-range write rates
 //!                                (hot partitions shrink, cold ones grow)
 //!                                with a live cutover; 0 = static plan
+//!   --wire-codec <codec|map>     compress sync traffic on the wire:
+//!                                fp32 (default), fp16, int8, or topk:R
+//!                                (keep the R fraction of largest-|x|
+//!                                coordinates); lossy codecs carry
+//!                                per-trainer error-feedback residuals.
+//!                                A per-partition map composes with
+//!                                --algo-map, e.g. int8:0-1,topk:0.1:2-3
 //!
 //! Delta gating (EASGD pushes against the sync PSs):
 //!   --sync-chunk <elems>         elements per push chunk (0 = whole shard)
@@ -148,6 +155,9 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(m) = args.get("algo-map") {
         cfg.algo_map = Some(m.parse()?);
+    }
+    if let Some(c) = args.get("wire-codec") {
+        shadowsync::config::apply_wire_codec_flag(&mut cfg, c)?;
     }
     // the sync-PS tier exists iff some (possibly algo-mapped) partition
     // runs the centralized algorithm — or the health controller may demote
@@ -288,6 +298,11 @@ fn cmd_list() -> Result<()> {
          (shadow mode only)"
     );
     println!("reduce engines: --reduce-engine overlapped|striped|serial");
+    println!(
+        "wire codecs: --wire-codec fp32|fp16|int8|topk:R (uniform) or a \
+         per-partition map like int8:0-1,topk:0.1:2-3 (composes with \
+         --algo-map; lossy codecs use error feedback)"
+    );
     println!(
         "fault injection: --fault-plan crash:t2@sweep40,stall:t1@sweep10+8,... \
          --push-retries <N>, --allreduce-timeout-ms <ms>, \

@@ -159,6 +159,49 @@ impl FaultPlan {
                 other => bail!("unknown fault kind `{other}` in `{entry}`"),
             }
         }
+        // Reject plans that schedule contradictory states for one trainer:
+        // two crash windows that overlap (which window owns the sweep?), or
+        // a crash overlapping a stall (a dead trainer cannot also straggle).
+        // Windows are half-open [start, start+d); a permanent crash is
+        // [start, ∞). Back-to-back windows (one ends where the next starts)
+        // are fine.
+        let crash_end = |c: &CrashWindow| c.down.map(|d| c.start + d);
+        let overlaps = |s0: u64, e0: Option<u64>, s1: u64, e1: Option<u64>| {
+            e0.is_none_or(|e| s1 < e) && e1.is_none_or(|e| s0 < e)
+        };
+        for (i, a) in crashes.iter().enumerate() {
+            for b in &crashes[i + 1..] {
+                if a.trainer == b.trainer
+                    && overlaps(a.start, crash_end(a), b.start, crash_end(b))
+                {
+                    bail!(
+                        "conflicting fault plan: trainer t{} has two overlapping crash \
+                         windows (sweep {}{} and sweep {}{}) — schedule them disjoint",
+                        a.trainer,
+                        a.start,
+                        fmt_window(a.down),
+                        b.start,
+                        fmt_window(b.down),
+                    );
+                }
+            }
+            for s in &stalls {
+                if a.trainer == s.trainer
+                    && overlaps(a.start, crash_end(a), s.start, Some(s.start + s.down))
+                {
+                    bail!(
+                        "conflicting fault plan: trainer t{} is both crashed (sweep {}{}) \
+                         and stalled (sweep {}+{}) over the same sweeps — a crashed \
+                         trainer cannot straggle",
+                        a.trainer,
+                        a.start,
+                        fmt_window(a.down),
+                        s.start,
+                        s.down,
+                    );
+                }
+            }
+        }
         let max_t = crashes
             .iter()
             .map(|c| c.trainer)
@@ -307,6 +350,14 @@ fn parse_trainer_window(rest: &str, entry: &str) -> Result<(usize, u64, Option<u
     Ok((trainer, start, down))
 }
 
+/// Render a crash window length for conflict diagnostics.
+fn fmt_window(down: Option<u64>) -> String {
+    match down {
+        Some(d) => format!("+{d}"),
+        None => " (permanent)".to_string(),
+    }
+}
+
 /// splitmix64 finalizer mapped to [0,1) — the plan's only randomness, so a
 /// seed fully determines every drop decision.
 fn hash01(x: u64) -> f64 {
@@ -348,8 +399,29 @@ mod tests {
             "drop:t0@1.5",            // probability out of range
             "teleport:t0@sweep1",     // unknown kind
             "crash",                  // no colon
+            // conflicting schedules for one trainer:
+            "crash:t0@sweep1+5,crash:t0@sweep3+5",  // overlapping crash windows
+            "crash:t1@sweep2,crash:t1@sweep10+2",   // permanent crash overlaps everything after
+            "crash:t0@sweep5,crash:t0@sweep1+5",    // finite window runs into a permanent one
+            "crash:t2@sweep1+8,stall:t2@sweep4+2",  // crashed trainer cannot also stall
+            "stall:t0@sweep3+4,crash:t0@sweep6",    // ...in either entry order
         ] {
             assert!(FaultPlan::parse(bad, 0).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn disjoint_windows_per_trainer_are_fine() {
+        // back-to-back half-open windows don't overlap, and entries naming
+        // different trainers never conflict
+        for ok in [
+            "crash:t0@sweep1+2,crash:t0@sweep3+2",
+            "crash:t0@sweep1+2,crash:t0@sweep10",
+            "crash:t0@sweep1+3,stall:t0@sweep4+2",
+            "crash:t0@sweep1+8,stall:t1@sweep4+2",
+            "stall:t0@sweep1+2,stall:t0@sweep1+2", // stalls may stack freely
+        ] {
+            assert!(FaultPlan::parse(ok, 0).is_ok(), "`{ok}` should parse");
         }
     }
 

@@ -30,7 +30,7 @@
 
 use crate::config::{SyncAlgo, SyncMode};
 use crate::sync::ps::PsTrafficSnapshot;
-use crate::sync::traffic::RingTraffic;
+use crate::sync::traffic::{RingTraffic, WireCodec};
 
 /// Calibrated constants describing one testbed.
 #[derive(Debug, Clone)]
@@ -78,6 +78,12 @@ pub struct CostModel {
     /// only the straggler's own contribution shrinks. This is the pricing
     /// behind `exp ablate-faults`' static-vs-adaptive EPS comparison.
     pub straggler_factor: f64,
+    /// wire codec the ring schedule's hops are priced under (mirrors
+    /// `RunConfig::wire_codec`; `Fp32` = the uncompressed legacy pricing).
+    /// EASGD compression needs no knob here: it flows in through the
+    /// measured push fraction / partition byte shares, which already see
+    /// codec-reduced bytes.
+    pub ring_codec: WireCodec,
 }
 
 /// One simulated operating point.
@@ -114,7 +120,17 @@ impl CostModel {
             shadow_threads: 1,
             partition_shares: Vec::new(),
             straggler_factor: 1.0,
+            ring_codec: WireCodec::Fp32,
         }
+    }
+
+    /// Price ring collectives under `codec` — hop bytes come from the same
+    /// `codec_segment_bytes` schedule the live fabric meters, so compressed
+    /// wire formats shrink the priced collective exactly as they shrink the
+    /// measured NIC counters. `Fp32` is bit-identical to the legacy pricing.
+    pub fn with_ring_codec(mut self, codec: WireCodec) -> Self {
+        self.ring_codec = codec;
+        self
     }
 
     /// Price the partitioned shadow fabric: `p` contiguous partitions
@@ -317,7 +333,8 @@ impl CostModel {
             return 0.0;
         }
         let elems = (self.w_bytes / 4.0).round() as usize;
-        let measured = RingTraffic::measure(elems, self.ring_chunks, trainers);
+        let measured =
+            RingTraffic::measure_codec(self.ring_codec, elems, self.ring_chunks, trainers);
         measured.max_member_bytes() as f64 / self.nic_bytes_per_sec
     }
 
@@ -328,7 +345,8 @@ impl CostModel {
         if trainers <= 1 {
             return 0.0;
         }
-        let measured = RingTraffic::measure(elems, self.ring_chunks, trainers);
+        let measured =
+            RingTraffic::measure_codec(self.ring_codec, elems, self.ring_chunks, trainers);
         measured.max_member_bytes() as f64 / self.nic_bytes_per_sec
     }
 
@@ -494,6 +512,32 @@ mod tests {
                 "n={n}: measured {measured} vs closed form {closed}"
             );
         }
+    }
+
+    #[test]
+    fn codec_ring_pricing_shrinks_with_the_wire_format() {
+        // fp16 halves the ring's wall time (2-byte elements vs 4); the
+        // default fp32 codec must be bit-identical to the legacy pricing
+        let m = CostModel::paper_scale();
+        let fp16 = CostModel::paper_scale().with_ring_codec(WireCodec::Fp16);
+        for n in [2usize, 5, 20] {
+            let base = m.ring_secs(n);
+            assert_eq!(
+                CostModel::paper_scale().with_ring_codec(WireCodec::Fp32).ring_secs(n),
+                base,
+                "explicit fp32 must not perturb the default pricing"
+            );
+            let half = fp16.ring_secs(n);
+            assert!(
+                (half - base / 2.0).abs() <= base * 1e-3,
+                "n={n}: fp16 ring {half} should be ~half of fp32 {base}"
+            );
+        }
+        // a sweep priced under int8 is cheaper than fp32 end-to-end
+        let int8 = CostModel::paper_scale().with_ring_codec(WireCodec::Int8);
+        let a = int8.simulate(8, 24, SyncAlgo::Ma, SyncMode::Shadow, 2);
+        let b = m.simulate(8, 24, SyncAlgo::Ma, SyncMode::Shadow, 2);
+        assert!(a.avg_sync_gap <= b.avg_sync_gap, "cheaper rings sync at least as often");
     }
 
     #[test]

@@ -277,6 +277,8 @@ pub struct AllReduceGroup {
     pub len: usize,
     /// Chunk count `C` of the ring schedule (1 = flat single-chunk rings).
     pub chunks: usize,
+    /// Wire codec every ring hop's bytes are priced with (fp32 = identity).
+    pub codec: traffic::WireCodec,
 }
 
 impl AllReduceGroup {
@@ -303,6 +305,7 @@ impl AllReduceGroup {
             round_timeout: None,
             len,
             chunks: 1,
+            codec: traffic::WireCodec::Fp32,
         };
         g.rebuild_engine();
         g
@@ -326,6 +329,16 @@ impl AllReduceGroup {
 
     pub fn engine(&self) -> ReduceEngine {
         self.engine
+    }
+
+    /// Price every ring hop with `codec` — what the member NICs then see.
+    /// The in-process reduction itself stays exact; codec loss is applied
+    /// by the strategies to their *contributions* (with error feedback)
+    /// before depositing, which is where a real compressed collective loses
+    /// precision too.
+    pub fn with_codec(mut self, codec: traffic::WireCodec) -> Self {
+        self.codec = codec;
+        self
     }
 
     /// Test-only hook: sleep `stall` inside every chunk reduction, so tests
@@ -738,15 +751,19 @@ impl AllReduceGroup {
         let mut tx = 0u64;
         for hop in 0..n - 1 {
             let seg = traffic::reduce_scatter_segment(my_pos, n, hop);
-            let bytes = traffic::segment_bytes(self.len, self.chunks, n, seg);
-            if net.try_transfer(me, succ, bytes).is_ok() {
+            let bytes = traffic::codec_segment_bytes(self.codec, self.len, self.chunks, n, seg);
+            // degenerate shapes (len < n) produce zero-length segments: a
+            // hop that carries nothing must never touch the network — no
+            // NIC bytes, no fault-plan drop accounting for a phantom
+            // transfer
+            if bytes > 0 && net.try_transfer(me, succ, bytes).is_ok() {
                 tx += bytes;
             }
         }
         for hop in 0..n - 1 {
             let seg = traffic::all_gather_segment(my_pos, n, hop);
-            let bytes = traffic::segment_bytes(self.len, self.chunks, n, seg);
-            if net.try_transfer(me, succ, bytes).is_ok() {
+            let bytes = traffic::codec_segment_bytes(self.codec, self.len, self.chunks, n, seg);
+            if bytes > 0 && net.try_transfer(me, succ, bytes).is_ok() {
                 tx += bytes;
             }
         }

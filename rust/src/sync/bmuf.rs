@@ -13,6 +13,7 @@
 use anyhow::Result;
 
 use super::prim::Arc;
+use super::traffic::WireCodec;
 use super::{AllReduceGroup, RepartitionCarry, SyncCtx, SyncStrategy};
 use crate::optim::BlockMomentum;
 use crate::tensor::ops;
@@ -38,6 +39,11 @@ pub struct BmufSync {
     copy: Vec<f32>,
     /// `w^desc` descent direction scratch
     desc: Vec<f32>,
+    /// wire codec applied to this trainer's *contribution* before the
+    /// collective (the group's hop accounting carries the same codec)
+    codec: WireCodec,
+    /// per-trainer error-feedback residual for lossy codecs
+    residual: Vec<f32>,
     left: bool,
 }
 
@@ -50,8 +56,21 @@ impl BmufSync {
             global: w0.to_vec(),
             copy: vec![0.0; w0.len()],
             desc: vec![0.0; w0.len()],
+            codec: WireCodec::Fp32,
+            residual: Vec::new(),
             left: false,
         }
+    }
+
+    /// Compress this trainer's contribution with `codec` before each
+    /// collective, with error feedback — whatever the encode loses rides
+    /// into the next round. Normally set to the owning group's codec.
+    pub fn with_codec(mut self, codec: WireCodec) -> Self {
+        self.codec = codec;
+        if codec != WireCodec::Fp32 {
+            self.residual = vec![0.0; self.copy.len()];
+        }
+        self
     }
 }
 
@@ -64,6 +83,11 @@ impl SyncStrategy for BmufSync {
         );
         // w_copy <- local partition; w_copy <- AllReduce(w_copy)/n
         ctx.local.read_range_into(ctx.range.lo(), &mut self.copy);
+        // lossy codecs: the wire carries the encoded contribution — peers
+        // reduce what they'd decode, and the encode error feeds back
+        if self.codec != WireCodec::Fp32 {
+            self.codec.encode_with_feedback(&mut self.copy, &mut self.residual);
+        }
         let round = self.group.allreduce_mean(&mut self.copy, ctx.trainer_node, ctx.net)?;
         // w_desc <- w_copy - w_global
         ops::sub(&mut self.desc, &self.copy, &self.global);

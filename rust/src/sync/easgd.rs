@@ -20,6 +20,7 @@ use anyhow::Result;
 use super::prim::Arc;
 use super::{
     ps::{DeltaGate, DeltaScanCache, SyncPsGroup},
+    traffic::WireCodec,
     RepartitionCarry, SyncCtx, SyncStrategy,
 };
 
@@ -32,6 +33,15 @@ pub struct EasgdSync {
     /// this strategy's own delta gate (per trainer × partition); `None`
     /// falls back to the group-level gate
     gate: Option<DeltaGate>,
+    /// wire codec for both push legs (fp32 = the identity fabric)
+    codec: WireCodec,
+    /// per-trainer × per-partition error-feedback residual for lossy
+    /// codecs, indexed relative to the partition's `range.lo()`. Lazily
+    /// sized on the first round; a repartition cutover rebuilds strategies
+    /// and drops the residual with them — the un-flushed remainder is
+    /// bounded by one round's codec error, the same staleness class as a
+    /// skipped chunk
+    residual: Vec<f32>,
     /// BMUF state parked while this partition is health-demoted to EASGD,
     /// held untouched and re-emitted so a later promotion rehydrates it
     bmuf_parked: Option<super::bmuf::BmufCarry>,
@@ -39,7 +49,15 @@ pub struct EasgdSync {
 
 impl EasgdSync {
     pub fn new(group: Arc<SyncPsGroup>, alpha: f32) -> Self {
-        Self { group, alpha, cache: DeltaScanCache::new(), gate: None, bmuf_parked: None }
+        Self {
+            group,
+            alpha,
+            cache: DeltaScanCache::new(),
+            gate: None,
+            codec: WireCodec::Fp32,
+            residual: Vec::new(),
+            bmuf_parked: None,
+        }
     }
 
     /// Give this strategy its own [`DeltaGate`] — its private quantile
@@ -48,11 +66,27 @@ impl EasgdSync {
         self.gate = Some(gate);
         self
     }
+
+    /// Sync this partition with `codec` on the wire (both push legs).
+    /// Lossy codecs allocate this strategy's error-feedback residual on
+    /// first use.
+    pub fn with_codec(mut self, codec: WireCodec) -> Self {
+        self.codec = codec;
+        self
+    }
 }
 
 impl SyncStrategy for EasgdSync {
     fn sync_round(&mut self, ctx: &SyncCtx<'_>) -> Result<f32> {
-        let stats = self.group.elastic_sync_partition(
+        let residual = if self.codec == WireCodec::Fp32 {
+            None
+        } else {
+            if self.residual.len() != ctx.range.len {
+                self.residual = vec![0.0; ctx.range.len];
+            }
+            Some(self.residual.as_mut_slice())
+        };
+        let stats = self.group.elastic_sync_partition_codec(
             ctx.local,
             ctx.range,
             self.alpha,
@@ -60,6 +94,8 @@ impl SyncStrategy for EasgdSync {
             ctx.net,
             &mut self.cache,
             self.gate.as_ref(),
+            self.codec,
+            residual,
         );
         // record the bytes this round *actually* moved (delta-gated chunks
         // may skip), so metrics.sync_bytes always agrees with NIC counters;
@@ -76,7 +112,7 @@ impl SyncStrategy for EasgdSync {
         self.group.note_partition_round(
             ctx.partition,
             &stats,
-            2 * 4 * ctx.range.len as u64,
+            self.group.round_bytes_codec_scoped(self.codec, ctx.range),
         );
         Ok(stats.gap)
     }

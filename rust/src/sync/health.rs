@@ -479,7 +479,7 @@ mod tests {
             .iter()
             .map(|p| match p.algo {
                 SyncAlgo::Ma | SyncAlgo::Bmuf => {
-                    Some(crate::sync::build_group(cfg, p.range.len))
+                    Some(crate::sync::build_group(cfg, p.index, p.range.len))
                 }
                 _ => None,
             })

@@ -12,6 +12,7 @@
 use anyhow::Result;
 
 use super::prim::{thread, Arc};
+use super::traffic::WireCodec;
 use super::{AllReduceGroup, SyncCtx, SyncStrategy};
 use crate::tensor::ops;
 
@@ -23,6 +24,12 @@ pub struct MaSync {
     /// simulated collective wall time (models the paper's "time-consuming
     /// AllReduce" window during which Hogwild workers keep training)
     round_delay: std::time::Duration,
+    /// wire codec applied to this trainer's *contribution* before the
+    /// collective (the group's hop accounting carries the same codec)
+    codec: WireCodec,
+    /// per-trainer error-feedback residual for lossy codecs, one slot per
+    /// partition element
+    residual: Vec<f32>,
     left: bool,
 }
 
@@ -33,6 +40,8 @@ impl MaSync {
             alpha,
             global: vec![0.0; num_params],
             round_delay: std::time::Duration::ZERO,
+            codec: WireCodec::Fp32,
+            residual: Vec::new(),
             left: false,
         }
     }
@@ -40,6 +49,17 @@ impl MaSync {
     /// Model a collective that takes `d` of wall time (paper-scale wire).
     pub fn with_round_delay(mut self, d: std::time::Duration) -> Self {
         self.round_delay = d;
+        self
+    }
+
+    /// Compress this trainer's contribution with `codec` before each
+    /// collective, with error feedback — whatever the encode loses rides
+    /// into the next round. Normally set to the owning group's codec.
+    pub fn with_codec(mut self, codec: WireCodec) -> Self {
+        self.codec = codec;
+        if codec != WireCodec::Fp32 {
+            self.residual = vec![0.0; self.global.len()];
+        }
         self
     }
 
@@ -59,6 +79,11 @@ impl SyncStrategy for MaSync {
         );
         // w_global <- copy of the local partition
         ctx.local.read_range_into(ctx.range.lo(), &mut self.global);
+        // lossy codecs: the wire carries the encoded contribution — peers
+        // reduce what they'd decode, and the encode error feeds back
+        if self.codec != WireCodec::Fp32 {
+            self.codec.encode_with_feedback(&mut self.global, &mut self.residual);
+        }
         // w_global <- AllReduce(w_global) / n; workers keep training during
         // this window — exactly what copy-back (alpha=1) would throw away
         if !self.round_delay.is_zero() {

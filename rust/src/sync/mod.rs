@@ -174,48 +174,57 @@ pub use ma::MaSync;
 pub use partition::{ParamRange, Partition, PartitionPlan};
 pub use ps::{DeltaGate, DeltaScanCache, PushStats, QuantileSketch, SyncPsGroup};
 pub use repartition::{PlanEpoch, RepartitionController};
+pub use traffic::WireCodec;
 
 /// Build one chunked ring-AllReduce fabric over all trainers for a
 /// `num_params`-element partition (MA, BMUF): wire traffic is driven — and
 /// accounted per trainer NIC — through the explicit reduce-scatter +
 /// all-gather schedule, with the in-process reduction engine selected by
 /// `cfg.reduce_engine` (see [`allreduce`]). The partitioned fabric builds
-/// one group per decentralized partition, each sized to its range.
+/// one group per decentralized partition, each sized to its range and
+/// carrying that partition's wire codec (`cfg.partition_codec(partition)`),
+/// so every hop of the ring moves codec-sized messages.
 pub fn build_group(
     cfg: &crate::config::RunConfig,
+    partition: usize,
     num_params: usize,
 ) -> Arc<AllReduceGroup> {
-    build_group_sized(cfg, cfg.num_trainers, num_params)
+    build_group_sized(cfg, partition, cfg.num_trainers, num_params)
 }
 
 /// [`build_group`] for an explicit member count — repartition / rejoin
 /// epochs size their rings to the trainers still active, not the configured
-/// roster. The one place `--allreduce-timeout-ms` is wired, so every ring —
-/// initial, repartitioned, or rejoin-built — degrades the same way.
+/// roster. The one place `--allreduce-timeout-ms` and the ring's wire codec
+/// are wired, so every ring — initial, repartitioned, or rejoin-built —
+/// degrades and compresses the same way.
 pub fn build_group_sized(
     cfg: &crate::config::RunConfig,
+    partition: usize,
     members: usize,
     num_params: usize,
 ) -> Arc<AllReduceGroup> {
     let mut g = AllReduceGroup::new(members, num_params)
         .with_chunks(cfg.allreduce_chunks)
-        .with_engine(cfg.reduce_engine);
+        .with_engine(cfg.reduce_engine)
+        .with_codec(cfg.partition_codec(partition));
     if cfg.allreduce_timeout_ms > 0 {
         g = g.with_round_timeout(std::time::Duration::from_millis(cfg.allreduce_timeout_ms));
     }
     Arc::new(g)
 }
 
-/// The single place the config→gate wiring lives: an [`EasgdSync`]
-/// carrying its own per-instance [`DeltaGate`] whenever the run is
-/// delta-gated. Used for every EASGD strategy — shadow partitions and the
-/// foreground per-worker plans alike — so a new gating mode wired here
-/// reaches them all.
+/// The single place the config→gate (and config→codec) wiring lives: an
+/// [`EasgdSync`] carrying its own per-instance [`DeltaGate`] whenever the
+/// run is delta-gated, syncing with `cfg.partition_codec(partition)` on the
+/// wire. Used for every EASGD strategy — shadow partitions and the
+/// foreground per-worker plans alike — so a new gating mode or codec wired
+/// here reaches them all.
 pub fn easgd_from_cfg(
     cfg: &crate::config::RunConfig,
+    partition: usize,
     sync_ps: Arc<SyncPsGroup>,
 ) -> EasgdSync {
-    let mut s = EasgdSync::new(sync_ps, cfg.alpha);
+    let mut s = EasgdSync::new(sync_ps, cfg.alpha).with_codec(cfg.partition_codec(partition));
     if cfg.delta_gated() {
         s = s.with_gate(DeltaGate::new(cfg.delta_threshold, cfg.delta_skip_target));
     }
@@ -238,21 +247,26 @@ pub fn build_strategy(
 ) -> Result<Box<dyn SyncStrategy>> {
     use crate::config::SyncAlgo;
     let _ = rank; // ranks are implicit in-process; kept for API parity
+    let codec = cfg.partition_codec(part.index);
     Ok(match part.algo {
         SyncAlgo::Easgd => {
-            Box::new(easgd_from_cfg(cfg, sync_ps.expect("EASGD needs sync PSs")))
+            Box::new(easgd_from_cfg(cfg, part.index, sync_ps.expect("EASGD needs sync PSs")))
         }
         SyncAlgo::Ma => Box::new(
             MaSync::new(group.expect("MA needs an AllReduce group"), cfg.alpha, part.range.len)
-                .with_round_delay(std::time::Duration::from_millis(cfg.collective_wire_ms)),
+                .with_round_delay(std::time::Duration::from_millis(cfg.collective_wire_ms))
+                .with_codec(codec),
         ),
-        SyncAlgo::Bmuf => Box::new(BmufSync::new(
-            group.expect("BMUF needs an AllReduce group"),
-            cfg.alpha,
-            cfg.bmuf_eta,
-            cfg.bmuf_momentum,
-            &w0[part.range.lo()..part.range.hi()],
-        )),
+        SyncAlgo::Bmuf => Box::new(
+            BmufSync::new(
+                group.expect("BMUF needs an AllReduce group"),
+                cfg.alpha,
+                cfg.bmuf_eta,
+                cfg.bmuf_momentum,
+                &w0[part.range.lo()..part.range.hi()],
+            )
+            .with_codec(codec),
+        ),
         SyncAlgo::None => Box::new(NoSync),
     })
 }

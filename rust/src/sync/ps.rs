@@ -78,6 +78,7 @@ use super::prim::{
 };
 
 use super::partition::ParamRange;
+use super::traffic::WireCodec;
 use crate::net::{FaultError, Network, NodeId, Role};
 use crate::placement::equal_ranges;
 use crate::tensor::HogwildBuffer;
@@ -449,6 +450,9 @@ pub struct SyncPsGroup {
     push_retries: u32,
     /// initial backoff between retries, doubling per attempt
     push_backoff: Duration,
+    /// hard cap on the *summed* backoff sleeps of one push leg (see
+    /// [`SyncPsGroup::with_push_backoff_budget`]); None = unbounded
+    push_backoff_budget: Option<Duration>,
     /// per-partition round/byte counters (index = partition in the
     /// fabric's plan), recorded by the strategies after each round — a
     /// mutex, not atomics: rounds are off the training hot path and the
@@ -477,6 +481,7 @@ impl SyncPsGroup {
             chunks_scan_skipped: AtomicU64::new(0),
             push_retries: 3,
             push_backoff: Duration::from_millis(1),
+            push_backoff_budget: None,
             partition_traffic: Mutex::new(Vec::new()),
         };
         g.reset_chunk_versions();
@@ -519,8 +524,23 @@ impl SyncPsGroup {
         self
     }
 
+    /// Cap the *summed* doubling backoff sleeps of any single push leg at
+    /// `budget`. Without the cap, a large `--push-backoff-ms` against a
+    /// drop-heavy fabric lets a perfectly healthy trainer sleep through its
+    /// own heartbeat window mid-leg and get proxy-departed by the
+    /// `HealthController` watchdog — the retry loop must never out-sleep
+    /// the watchdog's patience. The coordinator wires this to a fraction of
+    /// `--heartbeat-timeout-ms` whenever the watchdog is armed.
+    pub fn with_push_backoff_budget(mut self, budget: Duration) -> Self {
+        self.push_backoff_budget = Some(budget);
+        self
+    }
+
     /// Deliver one push leg, retrying transient faults with bounded
-    /// exponential backoff. Returns `(delivered, retries_issued)`.
+    /// exponential backoff. The summed sleeps never exceed the configured
+    /// backoff budget: each sleep is clipped to the budget's remainder and
+    /// the leg gives up once the budget is spent. Returns
+    /// `(delivered, retries_issued)`.
     fn push_leg_with_retry(
         &self,
         net: &Network,
@@ -530,6 +550,7 @@ impl SyncPsGroup {
     ) -> (bool, u64) {
         let mut retries = 0u64;
         let mut backoff = self.push_backoff;
+        let mut slept = Duration::ZERO;
         loop {
             match net.try_transfer(src, dst, bytes) {
                 Ok(()) => return (true, retries),
@@ -540,8 +561,20 @@ impl SyncPsGroup {
                     if retries >= self.push_retries as u64 {
                         return (false, retries);
                     }
+                    let mut sleep = backoff;
+                    if let Some(budget) = self.push_backoff_budget {
+                        let remaining = budget.saturating_sub(slept);
+                        if remaining.is_zero() {
+                            // another doubling would sleep past the
+                            // heartbeat watchdog's patience: give the chunk
+                            // up (next round retries it from scratch)
+                            return (false, retries);
+                        }
+                        sleep = sleep.min(remaining);
+                    }
                     retries += 1;
-                    thread::sleep(backoff);
+                    slept += sleep;
+                    thread::sleep(sleep);
                     backoff = backoff.saturating_mul(2);
                 }
             }
@@ -584,7 +617,18 @@ impl SyncPsGroup {
         trainer: NodeId,
         net: &Network,
     ) -> PushStats {
-        self.elastic_sync_impl(local, alpha, trainer, net, None, None, 0, self.central.len())
+        self.elastic_sync_impl(
+            local,
+            alpha,
+            trainer,
+            net,
+            None,
+            None,
+            0,
+            self.central.len(),
+            WireCodec::Fp32,
+            None,
+        )
     }
 
     /// `elastic_sync_stats` with a per-trainer [`DeltaScanCache`]: when the
@@ -598,7 +642,18 @@ impl SyncPsGroup {
         net: &Network,
         cache: &mut DeltaScanCache,
     ) -> PushStats {
-        self.elastic_sync_impl(local, alpha, trainer, net, Some(cache), None, 0, self.central.len())
+        self.elastic_sync_impl(
+            local,
+            alpha,
+            trainer,
+            net,
+            Some(cache),
+            None,
+            0,
+            self.central.len(),
+            WireCodec::Fp32,
+            None,
+        )
     }
 
     /// Range-scoped elastic round for one partition of the replica: only
@@ -628,6 +683,47 @@ impl SyncPsGroup {
             gate,
             range.lo(),
             range.hi().min(self.central.len()),
+            WireCodec::Fp32,
+            None,
+        )
+    }
+
+    /// [`SyncPsGroup::elastic_sync_partition`] with a wire codec on both
+    /// legs. Pushed chunks move `codec.wire_bytes(chunk_elems)` per leg —
+    /// the compressed size flows straight into [`Network`] transfers and
+    /// [`PushStats::bytes`], so NIC counters and `metrics.sync_bytes` see
+    /// codec-reduced traffic through the existing single source of truth.
+    /// `residual` is the caller's per-trainer × per-partition error-feedback
+    /// buffer, indexed relative to `range.lo()` and exactly `range.len`
+    /// long; lossy codecs fold it into each push and store what the encode
+    /// lost back ([`WireCodec::encode_with_feedback`]). The reply leg
+    /// transcodes the moved central chunk without feedback — residual
+    /// ownership is per trainer, push leg only. Under [`WireCodec::Fp32`]
+    /// this is bit-identical to [`SyncPsGroup::elastic_sync_partition`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn elastic_sync_partition_codec(
+        &self,
+        local: &HogwildBuffer,
+        range: ParamRange,
+        alpha: f32,
+        trainer: NodeId,
+        net: &Network,
+        cache: &mut DeltaScanCache,
+        gate: Option<&DeltaGate>,
+        codec: WireCodec,
+        residual: Option<&mut [f32]>,
+    ) -> PushStats {
+        self.elastic_sync_impl(
+            local,
+            alpha,
+            trainer,
+            net,
+            Some(cache),
+            gate,
+            range.lo(),
+            range.hi().min(self.central.len()),
+            codec,
+            residual,
         )
     }
 
@@ -642,6 +738,8 @@ impl SyncPsGroup {
         gate_override: Option<&DeltaGate>,
         lo: usize,
         hi: usize,
+        codec: WireCodec,
+        mut residual: Option<&mut [f32]>,
     ) -> PushStats {
         debug_assert_eq!(local.len(), self.central.len());
         debug_assert!(lo <= hi && hi <= self.central.len());
@@ -721,7 +819,7 @@ impl SyncPsGroup {
                     c.entry(k).valid = false;
                 }
             }
-            let chunk_bytes = ((chi - clo) * 4) as u64;
+            let chunk_bytes = codec.wire_bytes(chi - clo);
             // trainer pushes the chunk, PS answers with the moved chunk;
             // either leg may fault under an installed fault plan
             let (leg1_ok, leg1_retries) =
@@ -735,7 +833,12 @@ impl SyncPsGroup {
                 skipped += 1;
                 continue;
             }
-            let gap = HogwildBuffer::elastic_pair(local, &self.central, clo, chi, alpha);
+            let gap = if codec == WireCodec::Fp32 {
+                HogwildBuffer::elastic_pair(local, &self.central, clo, chi, alpha)
+            } else {
+                let res = residual.as_deref_mut().map(|r| &mut r[clo - lo..chi - lo]);
+                self.elastic_pair_codec(local, clo, chi, alpha, codec, res)
+            };
             let (leg2_ok, leg2_retries) =
                 self.push_leg_with_retry(net, node, trainer, chunk_bytes);
             retries += leg2_retries;
@@ -765,6 +868,57 @@ impl SyncPsGroup {
             chunks_scan_skipped: scan_skipped,
             push_retries: retries,
         }
+    }
+
+    /// The codec-path elastic move for one pushed chunk `[lo, hi)` — the
+    /// lossy counterpart of [`HogwildBuffer::elastic_pair`]. Both directions
+    /// see what actually crossed the wire: central absorbs the
+    /// error-feedback-encoded *decoded* local payload, and the local replica
+    /// moves toward the transcoded (no-feedback) moved central. All loads
+    /// and stores are Relaxed Hogwild snapshots, the same racy-by-design
+    /// class as `elastic_pair`. Returns mean |local − central| before the
+    /// move, matching the fp32 path's gap semantics.
+    fn elastic_pair_codec(
+        &self,
+        local: &HogwildBuffer,
+        lo: usize,
+        hi: usize,
+        alpha: f32,
+        codec: WireCodec,
+        residual: Option<&mut [f32]>,
+    ) -> f32 {
+        let n = hi - lo;
+        let mut payload = vec![0f32; n];
+        local.read_range_into(lo, &mut payload);
+        let central = self.central.range(lo, hi);
+        let mut gap = 0f64;
+        for (p, a) in payload.iter().zip(central.iter()) {
+            gap += (p - f32::from_bits(a.load(Relaxed))).abs() as f64;
+        }
+        // push leg: what the PS decodes from the trainer's message
+        match residual {
+            Some(r) => codec.encode_with_feedback(&mut payload, r),
+            None => codec.transcode(&mut payload),
+        }
+        // central absorbs the decoded payload: w^PS += α (dec − w^PS)
+        let mut reply = Vec::with_capacity(n);
+        for (p, a) in payload.iter().zip(central.iter()) {
+            let c = f32::from_bits(a.load(Relaxed));
+            let moved = c + alpha * (p - c);
+            a.store(moved.to_bits(), Relaxed);
+            reply.push(moved);
+        }
+        self.central.mark_dirty_range(lo, hi);
+        // reply leg: the PS transcodes the moved chunk back (no feedback —
+        // residuals belong to the pushing trainer, push leg only)
+        codec.transcode(&mut reply);
+        // local moves toward the decoded central
+        for (r, a) in reply.iter().zip(local.range(lo, hi).iter()) {
+            let l = f32::from_bits(a.load(Relaxed));
+            a.store((l + alpha * (r - l)).to_bits(), Relaxed);
+        }
+        local.mark_dirty_range(lo, hi);
+        if n > 0 { (gap / n as f64) as f32 } else { 0.0 }
     }
 
     /// Max and summed |local − central| over `[lo, hi)` (racy snapshot).
@@ -869,6 +1023,20 @@ impl SyncPsGroup {
     /// actual bytes via [`PushStats`] / [`SyncPsGroup::traffic`].
     pub fn round_bytes(&self) -> u64 {
         2 * 4 * self.central.len() as u64
+    }
+
+    /// Bytes a *full* no-skip round over `range` would move under `codec`
+    /// (both legs), walking the same clipped push chunks the round itself
+    /// walks — the per-partition byte-fraction denominator the EASGD
+    /// strategies feed to [`SyncPsGroup::note_partition_round`]. Under
+    /// [`WireCodec::Fp32`] this is exactly `2 × 4 × range.len` (chunks
+    /// tile), so fp32 runs keep the historical denominator bit for bit.
+    pub fn round_bytes_codec_scoped(&self, codec: WireCodec, range: ParamRange) -> u64 {
+        let lo = range.lo();
+        let hi = range.hi().min(self.central.len());
+        self.push_chunks_scoped(lo, hi)
+            .map(|(_, l, h, _)| 2 * codec.wire_bytes(h - l))
+            .sum()
     }
 }
 
@@ -1370,5 +1538,41 @@ mod tests {
         assert_eq!(g.central.to_vec(), w0, "central untouched by failed pushes");
         assert_eq!(local.to_vec(), vec![5.0; 16], "replica untouched too");
         assert!(net.dropped_bytes() > 0, "attempts land in the dropped ledger");
+    }
+
+    #[test]
+    fn backoff_budget_caps_the_summed_sleeps_per_leg() {
+        use crate::net::FaultPlan;
+        use crate::sync::prim::Arc;
+        // everything drops: every leg exhausts. Uncapped, 30 retries at
+        // 1ms doubling would sleep ~12 days per leg; the 5ms budget must
+        // bound each leg's summed sleeps (and the whole round) instead.
+        let plan = Arc::new(FaultPlan::parse("drop:t0@1.0", 0).unwrap());
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let w0 = vec![1.0f32; 16];
+        let g = SyncPsGroup::build(&w0, 1, &mut net)
+            .with_push_chunking(8, 0.0)
+            .with_push_retry(30, Duration::from_millis(1))
+            .with_push_backoff_budget(Duration::from_millis(5));
+        let net = net.with_faults(plan);
+        let local = HogwildBuffer::from_slice(&vec![5.0; 16]);
+        let started = std::time::Instant::now();
+        let st = g.elastic_sync_stats(&local, 0.5, trainer, &net);
+        // 2 chunks × ≤5ms of budgeted sleep, with slack for a slow CI box
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "budget failed to cap the leg: slept {:?}",
+            started.elapsed()
+        );
+        assert_eq!(st.chunks_pushed, 0);
+        assert_eq!(st.chunks_skipped, 2, "budget-exhausted chunks are skipped, not failed");
+        assert_eq!(st.bytes, 0);
+        assert_eq!(net.role_bytes(Role::SyncPs), 0);
+        assert!(
+            st.push_retries < 2 * 30,
+            "the budget must cut retries short, not just clip sleeps: {}",
+            st.push_retries
+        );
     }
 }

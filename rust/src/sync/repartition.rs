@@ -371,7 +371,7 @@ impl RepartitionController {
             .iter()
             .map(|part| match part.algo {
                 SyncAlgo::Ma | SyncAlgo::Bmuf => {
-                    Some(super::build_group_sized(&cfg, active, part.range.len))
+                    Some(super::build_group_sized(&cfg, part.index, active, part.range.len))
                 }
                 _ => None,
             })
@@ -391,7 +391,7 @@ mod tests {
             .iter()
             .map(|p| match p.algo {
                 SyncAlgo::Ma | SyncAlgo::Bmuf => {
-                    Some(super::super::build_group(cfg, p.range.len))
+                    Some(super::super::build_group(cfg, p.index, p.range.len))
                 }
                 _ => None,
             })

@@ -12,6 +12,15 @@
 //! instead of the closed-form `2·(n-1)/n · bytes` textbook estimate (which
 //! survives only as a cross-check reference,
 //! `AllReduceGroup::ring_bytes_per_member`).
+//!
+//! It is also home to [`WireCodec`], the lossy wire formats the fabric can
+//! put on those hops (and on EASGD push legs): fp16 / int8 quantization and
+//! top-k sparsification, each with an exact wire-size rule so the measured
+//! NIC counters, `metrics.sync_bytes`, and the sim pricing all see the
+//! compressed sizes through the same chokepoints that already carry the
+//! fp32 sizes. Lossy codecs pair with per-trainer error-feedback residuals
+//! ([`WireCodec::encode_with_feedback`]): whatever a codec rounds away or
+//! drops is carried into the next round's payload instead of being lost.
 
 /// `len / parts` with the remainder spread over the leading parts — the
 /// same split rule as `placement::equal_ranges`.
@@ -26,16 +35,257 @@ pub fn part_offset(len: usize, parts: usize, idx: usize) -> usize {
     idx * (len / parts) + idx.min(len % parts)
 }
 
+/// A lossy (or identity) wire format for sync payloads.
+///
+/// Every variant defines two things and nothing else: what a message of
+/// `e` f32 elements costs on the wire ([`wire_bytes`](Self::wire_bytes)),
+/// and what the receiver decodes ([`transcode`](Self::transcode)). The
+/// fabric's byte accounting calls the former at the exact points where it
+/// used to hard-code `4 * elems`, so the signature invariant
+/// `metrics.sync_bytes == sync-PS + ring NIC counters` holds under every
+/// codec without any parallel bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum WireCodec {
+    /// Identity: 4 bytes/element, lossless. The default, and bit-identical
+    /// to the pre-codec fabric.
+    #[default]
+    Fp32,
+    /// IEEE binary16 quantization: 2 bytes/element, round-to-nearest-even.
+    Fp16,
+    /// Symmetric int8 quantization: 1 byte/element plus a 4-byte per-message
+    /// max-abs scale.
+    Int8,
+    /// Top-k sparsification: keep the `ceil(ratio · elems)` largest-|x|
+    /// coordinates (clamped to `[1, elems]`), 8 bytes per kept coordinate
+    /// (u32 index + f32 value). Unsent coordinates decode to zero — the
+    /// error-feedback residual is what keeps them from being lost.
+    TopK(f32),
+}
+
+impl WireCodec {
+    /// Number of coordinates a top-k message keeps for `elems` elements at
+    /// `ratio`: `ceil(elems · ratio)` clamped to `[1, elems]`.
+    pub fn topk_k(elems: usize, ratio: f32) -> usize {
+        if elems == 0 {
+            return 0;
+        }
+        ((elems as f64 * ratio as f64).ceil() as usize).clamp(1, elems)
+    }
+
+    /// Wire bytes of one message carrying `elems` f32 elements under this
+    /// codec. An empty message costs nothing under every codec — degenerate
+    /// ring segments (`len < n`) must never be priced as transfers, and the
+    /// int8 scale / top-k floor only apply to non-empty payloads.
+    pub fn wire_bytes(&self, elems: usize) -> u64 {
+        if elems == 0 {
+            return 0;
+        }
+        match *self {
+            WireCodec::Fp32 => 4 * elems as u64,
+            WireCodec::Fp16 => 2 * elems as u64,
+            WireCodec::Int8 => elems as u64 + 4,
+            WireCodec::TopK(ratio) => 8 * Self::topk_k(elems, ratio) as u64,
+        }
+    }
+
+    /// Encode-then-decode in place: after this call `data` holds exactly
+    /// what the receiver reconstructs from the wire message.
+    pub fn transcode(&self, data: &mut [f32]) {
+        match *self {
+            WireCodec::Fp32 => {}
+            WireCodec::Fp16 => {
+                for x in data.iter_mut() {
+                    *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+                }
+            }
+            WireCodec::Int8 => {
+                let max_abs = data.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                if max_abs == 0.0 {
+                    return;
+                }
+                let scale = max_abs / 127.0;
+                for x in data.iter_mut() {
+                    let q = (*x / scale).round().clamp(-127.0, 127.0);
+                    *x = q * scale;
+                }
+            }
+            WireCodec::TopK(ratio) => {
+                let k = Self::topk_k(data.len(), ratio);
+                if k >= data.len() {
+                    return;
+                }
+                let mut order: Vec<usize> = (0..data.len()).collect();
+                order.select_nth_unstable_by(k, |&a, &b| {
+                    data[b]
+                        .abs()
+                        .partial_cmp(&data[a].abs())
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                for &i in &order[k..] {
+                    data[i] = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Error-feedback encode: fold the residual from previous rounds into
+    /// the payload, transcode, and store what the codec lost back into the
+    /// residual. Postcondition per element: `decoded + residual == intended`
+    /// where `intended = payload_in + residual_in` — so nothing a lossy
+    /// codec rounds away or drops ever leaves the pipeline, it just arrives
+    /// later. Under [`WireCodec::Fp32`] the residual drains to zero.
+    ///
+    /// The residual buffer is owned by the sender (one per trainer ×
+    /// partition) and must be as long as `buf`.
+    pub fn encode_with_feedback(&self, buf: &mut [f32], residual: &mut [f32]) {
+        debug_assert_eq!(buf.len(), residual.len());
+        for (b, r) in buf.iter_mut().zip(residual.iter_mut()) {
+            *b += *r;
+            *r = *b;
+        }
+        self.transcode(buf);
+        for (b, r) in buf.iter().zip(residual.iter_mut()) {
+            *r -= *b;
+        }
+    }
+}
+
+impl std::fmt::Display for WireCodec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            WireCodec::Fp32 => write!(f, "fp32"),
+            WireCodec::Fp16 => write!(f, "fp16"),
+            WireCodec::Int8 => write!(f, "int8"),
+            WireCodec::TopK(r) => write!(f, "topk:{r}"),
+        }
+    }
+}
+
+impl std::str::FromStr for WireCodec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        match s {
+            "fp32" => Ok(WireCodec::Fp32),
+            "fp16" => Ok(WireCodec::Fp16),
+            "int8" => Ok(WireCodec::Int8),
+            _ => match s.strip_prefix("topk:") {
+                Some(r) => {
+                    let ratio: f32 = r
+                        .parse()
+                        .map_err(|_| format!("bad top-k ratio {r:?} (want a number in (0, 1])"))?;
+                    if !(ratio > 0.0 && ratio <= 1.0) {
+                        return Err(format!("top-k ratio must be in (0, 1], got {ratio}"));
+                    }
+                    Ok(WireCodec::TopK(ratio))
+                }
+                None => Err(format!(
+                    "unknown wire codec {s:?}; expected fp32|fp16|int8|topk:R"
+                )),
+            },
+        }
+    }
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (no half-float crate in
+/// the image, so the conversion lives here).
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan (keep nan's payload bit so it stays a nan)
+        return sign | 0x7c00 | u16::from(man != 0) << 9;
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e >= -14 {
+        // normal half: drop 13 mantissa bits with round-to-nearest-even
+        let mut m = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        return sign | ((he as u16) << 10) | m as u16;
+    }
+    if e < -25 {
+        return sign; // underflow to (signed) zero
+    }
+    // subnormal half
+    let full = man | 0x0080_0000;
+    let shift = (-14 - e) as u32 + 13;
+    let mut m = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && (m & 1) == 1) {
+        m += 1; // may carry into the normal range — the bit layout is contiguous
+    }
+    sign | m as u16
+}
+
+/// IEEE binary16 bits → f32 (exact).
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal half → normal f32
+            let mut e = 1i32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e - 15 + 127) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
 /// Bytes of ring segment `seg` summed over all `chunks` chunks of a
 /// `len`-element f32 vector split across `n` ring members: each chunk of
 /// length `L` contributes `part_len(L, n, seg)` elements.
 pub fn segment_bytes(len: usize, chunks: usize, n: usize, seg: usize) -> u64 {
-    let mut elems = 0u64;
+    codec_segment_bytes(WireCodec::Fp32, len, chunks, n, seg)
+}
+
+/// [`segment_bytes`] under an arbitrary wire codec. Each chunk's piece is
+/// one wire message (per-message overhead like the int8 scale applies per
+/// chunk piece); zero-length pieces — `len < n` shapes — cost nothing.
+pub fn codec_segment_bytes(
+    codec: WireCodec,
+    len: usize,
+    chunks: usize,
+    n: usize,
+    seg: usize,
+) -> u64 {
+    let mut bytes = 0u64;
     for c in 0..chunks {
         let chunk_len = part_len(len, chunks, c);
-        elems += part_len(chunk_len, n, seg) as u64;
+        bytes += codec.wire_bytes(part_len(chunk_len, n, seg));
     }
-    4 * elems
+    bytes
 }
 
 /// The segment a member at ring position `pos` sends on reduce-scatter hop
@@ -55,13 +305,24 @@ pub fn all_gather_segment(pos: usize, n: usize, hop: usize) -> usize {
 /// Total bytes the member at ring position `pos` transmits over one full
 /// round (both phases) of the chunked schedule.
 pub fn member_round_tx_bytes(len: usize, chunks: usize, n: usize, pos: usize) -> u64 {
+    codec_member_round_tx_bytes(WireCodec::Fp32, len, chunks, n, pos)
+}
+
+/// [`member_round_tx_bytes`] under an arbitrary wire codec.
+pub fn codec_member_round_tx_bytes(
+    codec: WireCodec,
+    len: usize,
+    chunks: usize,
+    n: usize,
+    pos: usize,
+) -> u64 {
     if n < 2 {
         return 0;
     }
     let mut tx = 0u64;
     for hop in 0..n - 1 {
-        tx += segment_bytes(len, chunks, n, reduce_scatter_segment(pos, n, hop));
-        tx += segment_bytes(len, chunks, n, all_gather_segment(pos, n, hop));
+        tx += codec_segment_bytes(codec, len, chunks, n, reduce_scatter_segment(pos, n, hop));
+        tx += codec_segment_bytes(codec, len, chunks, n, all_gather_segment(pos, n, hop));
     }
     tx
 }
@@ -78,9 +339,15 @@ impl RingTraffic {
     /// Walk the schedule for a `len`-element vector in `chunks` chunks over
     /// `n` members and collect every member's per-round tx bytes.
     pub fn measure(len: usize, chunks: usize, n: usize) -> Self {
+        Self::measure_codec(WireCodec::Fp32, len, chunks, n)
+    }
+
+    /// [`RingTraffic::measure`] under an arbitrary wire codec — the sim
+    /// prices compressed rings from exactly this.
+    pub fn measure_codec(codec: WireCodec, len: usize, chunks: usize, n: usize) -> Self {
         let chunks = chunks.max(1);
         let per_member_tx = (0..n)
-            .map(|pos| member_round_tx_bytes(len, chunks, n, pos))
+            .map(|pos| codec_member_round_tx_bytes(codec, len, chunks, n, pos))
             .collect();
         Self { per_member_tx }
     }
@@ -155,5 +422,225 @@ mod tests {
         let t = RingTraffic::measure(1_000, 8, 1);
         assert_eq!(t.total_bytes(), 0);
         assert_eq!(t.max_member_bytes(), 0);
+    }
+
+    // ---- degenerate shapes (satellite bugfix) ----------------------------
+
+    #[test]
+    fn measure_tiles_exactly_when_len_shorter_than_ring() {
+        // 3 elements across 8 members: five of the eight segments are empty.
+        // The tiling invariant must still hold and empty segments must cost
+        // exactly zero under every codec.
+        for codec in [WireCodec::Fp32, WireCodec::Fp16, WireCodec::Int8, WireCodec::TopK(0.25)] {
+            let (len, chunks, n) = (3usize, 1usize, 8usize);
+            let mut elems = 0usize;
+            for seg in 0..n {
+                let piece = part_len(len, n, seg);
+                elems += piece;
+                let priced = codec_segment_bytes(codec, len, chunks, n, seg);
+                if piece == 0 {
+                    assert_eq!(priced, 0, "{codec}: empty segment {seg} priced as a transfer");
+                } else {
+                    assert!(priced > 0, "{codec}: non-empty segment {seg} priced zero");
+                }
+            }
+            assert_eq!(elems, len);
+            let t = RingTraffic::measure_codec(codec, len, chunks, n);
+            let per_elem_total: u64 = (0..n)
+                .map(|seg| codec_segment_bytes(codec, len, chunks, n, seg))
+                .sum();
+            assert_eq!(t.total_bytes(), 2 * (n as u64 - 1) * per_elem_total);
+        }
+        // fp32 keeps the closed-form aggregate even in the degenerate shape
+        let t = RingTraffic::measure(3, 1, 8);
+        assert_eq!(t.total_bytes(), 2 * 7 * 3 * 4);
+    }
+
+    #[test]
+    fn measure_tiles_exactly_when_chunks_exceed_len() {
+        // 5 elements in 8 chunks over 4 members: three chunks are empty and
+        // every non-empty chunk is shorter than the ring.
+        let (len, chunks, n) = (5usize, 8usize, 4usize);
+        let t = RingTraffic::measure(len, chunks, n);
+        assert_eq!(t.total_bytes(), 2 * (n as u64 - 1) * len as u64 * 4);
+        // codec path: int8 charges its 4-byte scale only for non-empty
+        // chunk pieces, so the total stays below the fp32 total here
+        let t8 = RingTraffic::measure_codec(WireCodec::Int8, len, chunks, n);
+        assert!(t8.total_bytes() > 0);
+        for seg in 0..n {
+            let mut expect = 0u64;
+            for c in 0..chunks {
+                let piece = part_len(part_len(len, chunks, c), n, seg);
+                expect += if piece == 0 { 0 } else { piece as u64 + 4 };
+            }
+            assert_eq!(codec_segment_bytes(WireCodec::Int8, len, chunks, n, seg), expect);
+        }
+    }
+
+    #[test]
+    fn zero_length_vector_moves_nothing_under_every_codec() {
+        for codec in [WireCodec::Fp32, WireCodec::Fp16, WireCodec::Int8, WireCodec::TopK(0.5)] {
+            assert_eq!(codec.wire_bytes(0), 0, "{codec}");
+            let t = RingTraffic::measure_codec(codec, 0, 8, 4);
+            assert_eq!(t.total_bytes(), 0, "{codec}");
+        }
+    }
+
+    // ---- codec wire sizes ------------------------------------------------
+
+    #[test]
+    fn codec_wire_sizes_match_their_formats() {
+        assert_eq!(WireCodec::Fp32.wire_bytes(100), 400);
+        assert_eq!(WireCodec::Fp16.wire_bytes(100), 200);
+        assert_eq!(WireCodec::Int8.wire_bytes(100), 104); // payload + scale
+        assert_eq!(WireCodec::TopK(0.1).wire_bytes(100), 80); // 10 coords × 8 B
+        assert_eq!(WireCodec::TopK(0.001).wire_bytes(100), 8); // k floors at 1
+        assert_eq!(WireCodec::TopK(1.0).wire_bytes(100), 800); // dense top-k
+    }
+
+    #[test]
+    fn fp32_codec_paths_are_bit_identical_to_legacy() {
+        for &(len, chunks, n) in &[(101usize, 1usize, 3usize), (1_037, 8, 4), (3, 1, 8)] {
+            for seg in 0..n {
+                assert_eq!(
+                    codec_segment_bytes(WireCodec::Fp32, len, chunks, n, seg),
+                    segment_bytes(len, chunks, n, seg)
+                );
+            }
+            let a = RingTraffic::measure(len, chunks, n);
+            let b = RingTraffic::measure_codec(WireCodec::Fp32, len, chunks, n);
+            assert_eq!(a.per_member_tx, b.per_member_tx);
+        }
+    }
+
+    #[test]
+    fn codec_parse_and_display_round_trip() {
+        for s in ["fp32", "fp16", "int8", "topk:0.25"] {
+            let c: WireCodec = s.parse().unwrap();
+            assert_eq!(c.to_string(), s);
+        }
+        assert!("fp8".parse::<WireCodec>().is_err());
+        assert!("topk:0".parse::<WireCodec>().is_err());
+        assert!("topk:1.5".parse::<WireCodec>().is_err());
+        assert!("topk:x".parse::<WireCodec>().is_err());
+    }
+
+    // ---- transcode fidelity ----------------------------------------------
+
+    #[test]
+    fn fp16_transcode_is_exact_on_representable_values_and_bounded_elsewhere() {
+        let mut exact = vec![0.0f32, 1.0, -1.0, 0.5, -2.0, 1024.0, 0.25, -0.125];
+        let orig = exact.clone();
+        WireCodec::Fp16.transcode(&mut exact);
+        assert_eq!(exact, orig);
+
+        let mut vals: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let orig = vals.clone();
+        WireCodec::Fp16.transcode(&mut vals);
+        for (a, b) in vals.iter().zip(orig.iter()) {
+            // half has 11 significand bits: relative error ≤ 2^-11
+            assert!((a - b).abs() <= b.abs() * (1.0 / 2048.0) + 1e-7, "{b} -> {a}");
+        }
+    }
+
+    #[test]
+    fn fp16_handles_extremes() {
+        let mut v = vec![1e9f32, -1e9, 1e-9, f32::NAN];
+        WireCodec::Fp16.transcode(&mut v);
+        assert_eq!(v[0], f32::INFINITY); // overflow saturates to inf
+        assert_eq!(v[1], f32::NEG_INFINITY);
+        assert_eq!(v[2], 0.0); // underflows half's subnormal range
+        assert!(v[3].is_nan());
+    }
+
+    #[test]
+    fn int8_transcode_error_is_within_half_a_quantum() {
+        let mut vals: Vec<f32> = (0..257).map(|i| (i as f32 * 0.11).cos() * 5.0).collect();
+        let orig = vals.clone();
+        let max_abs = orig.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        WireCodec::Int8.transcode(&mut vals);
+        let quantum = max_abs / 127.0;
+        for (a, b) in vals.iter().zip(orig.iter()) {
+            assert!((a - b).abs() <= quantum / 2.0 + 1e-6, "{b} -> {a}");
+        }
+        // all-zero payload stays all-zero (no divide-by-zero scale)
+        let mut zeros = vec![0.0f32; 16];
+        WireCodec::Int8.transcode(&mut zeros);
+        assert!(zeros.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn topk_keeps_exactly_the_largest_coordinates() {
+        let mut v = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 4.0, 0.0, -2.5];
+        WireCodec::TopK(0.5).transcode(&mut v); // k = 4
+        assert_eq!(v, vec![0.0, -5.0, 0.0, 3.0, 0.0, 4.0, 0.0, -2.5]);
+        // ratio 1.0 is the identity
+        let mut w = vec![1.0f32, -2.0, 3.0];
+        WireCodec::TopK(1.0).transcode(&mut w);
+        assert_eq!(w, vec![1.0, -2.0, 3.0]);
+    }
+
+    // ---- error feedback --------------------------------------------------
+
+    #[test]
+    fn error_feedback_conserves_mass_per_round() {
+        // decoded + residual_out == payload_in + residual_in, elementwise
+        for codec in [WireCodec::Fp16, WireCodec::Int8, WireCodec::TopK(0.25)] {
+            let payload: Vec<f32> = (0..64).map(|i| (i as f32 * 0.71).sin() * 2.0).collect();
+            let res_in: Vec<f32> = (0..64).map(|i| (i as f32 * 0.31).cos() * 0.01).collect();
+            let mut buf = payload.clone();
+            let mut residual = res_in.clone();
+            codec.encode_with_feedback(&mut buf, &mut residual);
+            for i in 0..64 {
+                let intended = payload[i] + res_in[i];
+                assert!(
+                    (buf[i] + residual[i] - intended).abs() <= 1e-5,
+                    "{codec}: {} + {} != {}",
+                    buf[i],
+                    residual[i],
+                    intended
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_drains_residual_under_fp32() {
+        let mut buf = vec![1.0f32, -2.0, 3.0];
+        let mut residual = vec![0.5f32, 0.5, -0.5];
+        WireCodec::Fp32.encode_with_feedback(&mut buf, &mut residual);
+        assert_eq!(buf, vec![1.5, -1.5, 2.5]);
+        assert!(residual.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn error_feedback_decayed_drift_over_repeated_rounds() {
+        // Feeding the same vector through a lossy codec with feedback, the
+        // cumulative decoded sum tracks the cumulative intended sum: the
+        // per-round drift does not accumulate.
+        for codec in [WireCodec::Fp16, WireCodec::Int8, WireCodec::TopK(0.25)] {
+            let payload: Vec<f32> = (0..128).map(|i| (i as f32 * 0.53).sin()).collect();
+            let mut residual = vec![0.0f32; 128];
+            let mut cum_decoded = vec![0.0f64; 128];
+            let rounds = 50usize;
+            for _ in 0..rounds {
+                let mut buf = payload.clone();
+                codec.encode_with_feedback(&mut buf, &mut residual);
+                for (c, &b) in cum_decoded.iter_mut().zip(buf.iter()) {
+                    *c += b as f64;
+                }
+            }
+            // total decoded == total intended − final residual, so the mean
+            // drift is bounded by max|residual| / rounds → decays with rounds
+            let max_res = residual.iter().fold(0f32, |m, &r| m.max(r.abs()));
+            for (i, &c) in cum_decoded.iter().enumerate() {
+                let intended = payload[i] as f64 * rounds as f64;
+                let drift = (c - intended).abs() / rounds as f64;
+                assert!(
+                    drift <= (max_res as f64 + 1e-3) / rounds as f64 + 1e-6,
+                    "{codec}: coord {i} drift {drift}"
+                );
+            }
+        }
     }
 }

@@ -60,18 +60,24 @@ fn run_chaos(cfg: &RunConfig, faults: Arc<FaultPlan>, run: Duration) -> Chaos {
     let mut net = Network::new(None);
     let nodes: Vec<_> = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
     let w0 = vec![0.0f32; LEN];
-    let sync_ps = Arc::new(
-        SyncPsGroup::build(&w0, 2, &mut net)
-            .with_push_chunking(CHUNK, cfg.delta_threshold)
-            .with_push_retry(3, Duration::from_millis(1)),
-    );
+    // mirror the coordinator's wiring: retry knobs from the config, and —
+    // when a heartbeat watchdog is armed — a summed-backoff budget of half
+    // the timeout, so retry sleeps can never starve the heartbeat
+    let mut group = SyncPsGroup::build(&w0, 2, &mut net)
+        .with_push_chunking(CHUNK, cfg.delta_threshold)
+        .with_push_retry(cfg.push_retries, Duration::from_millis(cfg.push_backoff_ms));
+    if cfg.heartbeat_timeout_ms > 0 {
+        group =
+            group.with_push_backoff_budget(Duration::from_millis(cfg.heartbeat_timeout_ms) / 2);
+    }
+    let sync_ps = Arc::new(group);
     let net = Arc::new(net.with_faults(faults.clone()));
     let plan = PartitionPlan::build(LEN, cfg).unwrap();
     let groups: Vec<Option<Arc<AllReduceGroup>>> = plan
         .partitions
         .iter()
         .map(|p| match p.algo {
-            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(cfg, p.range.len)),
+            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(cfg, p.index, p.range.len)),
             _ => None,
         })
         .collect();
@@ -264,7 +270,7 @@ fn crash_during_pending_repartition_vacates_the_generation() {
         .partitions
         .iter()
         .map(|p| match p.algo {
-            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(&cfg, p.range.len)),
+            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(&cfg, p.index, p.range.len)),
             _ => None,
         })
         .collect();
@@ -355,4 +361,51 @@ fn transient_crash_departs_then_rejoins() {
     for g in c.controller.current_epoch().groups.iter().flatten() {
         assert_eq!(g.active(), 0, "leaked collective membership across a rejoin");
     }
+}
+
+/// Regression for the retry/backoff bug: a push leg's *summed* doubling
+/// backoff sleeps were unbounded — under a drop-heavy plan with generous
+/// retry settings a single exhausted leg slept for tens of seconds, far
+/// past any heartbeat timeout, wedging its shadow-pool thread (and at
+/// shutdown, the whole run) inside `thread::sleep`. The backoff budget
+/// caps the summed sleeps per leg at half `--heartbeat-timeout-ms`, so
+/// sync degrades to skipped chunks instead, nobody is spuriously departed,
+/// and the run winds down promptly.
+#[test]
+fn drop_heavy_retries_never_spuriously_depart_a_healthy_trainer() {
+    // p=0.6 drops on t0, no crashes anywhere: every depart is spurious.
+    // 12 retries × 10ms doubling backoff would sleep ~41s per exhausted
+    // leg uncapped — three orders past the 60ms heartbeat timeout. With
+    // the budget, no leg sleeps more than 30ms total.
+    let faults = Arc::new(FaultPlan::parse("drop:t0@0.6", 13).unwrap());
+    let cfg = RunConfig {
+        num_trainers: 2,
+        sync_partitions: 2,
+        shadow_threads: 2,
+        easgd_chunk_elems: CHUNK,
+        algo: SyncAlgo::Easgd,
+        push_retries: 12,
+        push_backoff_ms: 10,
+        heartbeat_timeout_ms: 60,
+        ..RunConfig::default()
+    };
+    let started = std::time::Instant::now();
+    let c = run_chaos(&cfg, faults.clone(), Duration::from_millis(400));
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "uncapped backoff: a 400ms run spent {:?} draining retry sleeps",
+        started.elapsed()
+    );
+    assert!(c.rounds > 0, "the fabric must keep syncing through the drops");
+    assert!(faults.dropped_bytes() > 0, "a 60% drop rate must actually drop");
+    assert_eq!(
+        c.mid_departs, 0,
+        "no trainer crashed — any depart here is spurious (retry sleeps outliving the watchdog)"
+    );
+    assert_eq!(c.mid_active, cfg.num_trainers, "the roster must stay whole");
+    // and the retried/abandoned legs never bent the byte accounting
+    let snap = c.metrics.snapshot();
+    let trainer_tx: u64 = c.nodes.iter().map(|&nd| c.net.tx(nd)).sum();
+    let ring_tx = trainer_tx - c.net.role_rx(Role::SyncPs);
+    assert_eq!(snap.sync_bytes, c.net.role_bytes(Role::SyncPs) + ring_tx);
 }

@@ -6,7 +6,7 @@ use shadowsync::metrics::{normalized_entropy, Metrics};
 use shadowsync::net::{Network, Role};
 use shadowsync::sim::CostModel;
 use shadowsync::sync::partition::{lpt_contiguous_ranges, lpt_contiguous_ranges_weighted};
-use shadowsync::sync::{DeltaScanCache, SyncPsGroup};
+use shadowsync::sync::{DeltaGate, DeltaScanCache, ParamRange, SyncPsGroup, WireCodec};
 use shadowsync::tensor::HogwildBuffer;
 use shadowsync::util::proptest::check;
 
@@ -262,6 +262,91 @@ fn repartition_never_loses_or_double_counts_a_chunk() {
                 "{name} plan lost or double-counted an element"
             );
         }
+    });
+}
+
+#[test]
+fn codec_rounds_keep_bytes_exact_and_residuals_bounded() {
+    // The wire-codec invariants, as properties over random codecs, shapes,
+    // gates, and a seeded drop plan:
+    //   1. `metrics.sync_bytes`-style exactness — the stats' delivered
+    //      bytes equal the sync-PS NIC counters, codec-compressed, with
+    //      gated/dropped chunks on neither side;
+    //   2. error-feedback residuals stay bounded (the encode loss is
+    //      re-folded each round, never accumulated) and the replica still
+    //      reaches consensus with the central copy through the lossy wire;
+    //   3. fp32 drains the residual to exact zero.
+    check("codec-bytes-and-residuals", 12, |g| {
+        let codec = match g.usize_in(0, 3) {
+            0 => WireCodec::Fp32,
+            1 => WireCodec::Fp16,
+            2 => WireCodec::Int8,
+            _ => WireCodec::TopK(g.f32_in(0.1, 0.9)),
+        };
+        let chunk = 8usize;
+        let p = chunk * g.usize_in(4, 12);
+        let drop_p = if g.bool() { 0.1 } else { 0.0 };
+        let plan = std::sync::Arc::new(
+            shadowsync::net::fault::FaultPlan::parse(
+                &format!("drop:t0@{drop_p}"),
+                g.rng.next_u64(),
+            )
+            .unwrap(),
+        );
+        let mut net = Network::new(None);
+        let trainer = net.add_node(Role::Trainer);
+        let group = SyncPsGroup::build(&vec![0.0; p], 2, &mut net)
+            .with_push_chunking(chunk, 0.0)
+            .with_push_retry(6, std::time::Duration::from_micros(1));
+        let net = net.with_faults(plan);
+        let amp = g.f32_in(0.5, 4.0);
+        let local = HogwildBuffer::from_slice(&vec![amp; p]);
+        let gate = DeltaGate::new(1e-5, 0.0);
+        let mut cache = DeltaScanCache::new();
+        let mut residual = vec![0.0f32; p];
+        let range = ParamRange::full(p);
+        let mut recorded = 0u64;
+        for _ in 0..30 {
+            let st = group.elastic_sync_partition_codec(
+                &local,
+                range,
+                0.4,
+                trainer,
+                &net,
+                &mut cache,
+                Some(&gate),
+                codec,
+                Some(&mut residual),
+            );
+            recorded += st.bytes;
+            // the residual never blows up: error feedback re-encodes the
+            // loss, it doesn't stack it. Top-k rotates coordinates in and
+            // out, so its residual can briefly hold a few rounds of value.
+            let worst = residual.iter().fold(0.0f32, |m, r| m.max(r.abs()));
+            assert!(
+                worst.is_finite() && worst <= 16.0 * amp,
+                "case {}: {codec} residual grew to {worst} (amp {amp})",
+                g.case
+            );
+        }
+        assert_eq!(
+            recorded,
+            net.role_bytes(Role::SyncPs),
+            "case {}: {codec} recorded bytes diverged from the NIC counters (drop {drop_p})",
+            g.case
+        );
+        if codec == WireCodec::Fp32 {
+            assert!(
+                residual.iter().all(|&r| r == 0.0),
+                "fp32 must drain the residual to exact zero"
+            );
+        }
+        // consensus through the lossy wire: the replica closed most of its
+        // initial gap to the (0-initialized) central copy
+        let lv = local.to_vec();
+        let cv = group.central.to_vec();
+        let gap = shadowsync::tensor::ops::mean_abs_diff(&lv, &cv);
+        assert!(gap < 0.35 * amp, "case {}: {codec} stuck at gap {gap} (amp {amp})", g.case);
     });
 }
 

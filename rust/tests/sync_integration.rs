@@ -17,7 +17,7 @@ use shadowsync::sync::partition::lpt_contiguous_ranges;
 use shadowsync::sync::{
     build_group, build_strategy, AllReduceGroup, BmufSync, DeltaGate, EasgdSync, MaSync,
     ParamRange, PartitionPlan, ReduceEngine, RepartitionController, SyncCtx, SyncPsGroup,
-    SyncStrategy,
+    SyncStrategy, WireCodec,
 };
 use shadowsync::tensor::HogwildBuffer;
 use shadowsync::util::rng::Rng;
@@ -607,9 +607,9 @@ fn p1_collective_partition_fabric_matches_single_strategy_path() {
             (replica.to_vec().iter().map(|x| x.to_bits()).collect(), metrics.snapshot().syncs)
         };
         let legacy: Box<dyn SyncStrategy> = match algo {
-            SyncAlgo::Ma => Box::new(MaSync::new(build_group(&cfg, p), cfg.alpha, p)),
+            SyncAlgo::Ma => Box::new(MaSync::new(build_group(&cfg, 0, p), cfg.alpha, p)),
             _ => Box::new(BmufSync::new(
-                build_group(&cfg, p),
+                build_group(&cfg, 0, p),
                 cfg.alpha,
                 cfg.bmuf_eta,
                 cfg.bmuf_momentum,
@@ -618,7 +618,7 @@ fn p1_collective_partition_fabric_matches_single_strategy_path() {
         };
         let plan = PartitionPlan::build(p, &cfg).unwrap();
         let partitioned =
-            build_strategy(&cfg, &plan.partitions[0], 0, &w0, None, Some(build_group(&cfg, p)))
+            build_strategy(&cfg, &plan.partitions[0], 0, &w0, None, Some(build_group(&cfg, 0, p)))
                 .unwrap();
         let a = drive(legacy, ParamRange::full(p));
         let b = drive(partitioned, plan.partitions[0].range);
@@ -744,7 +744,7 @@ fn mid_training_repartition_keeps_byte_accounting_exact() {
         .partitions
         .iter()
         .map(|p| match p.algo {
-            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(&cfg, p.range.len)),
+            SyncAlgo::Ma | SyncAlgo::Bmuf => Some(build_group(&cfg, p.index, p.range.len)),
             _ => None,
         })
         .collect();
@@ -926,4 +926,100 @@ fn repartition_preserves_every_chunk_of_the_replica() {
     }
     // byte accounting is exact here too
     assert_eq!(metrics.snapshot().sync_bytes, net.role_bytes(Role::SyncPs));
+}
+
+/// Acceptance (wire codecs): the hybrid EASGD+MA fabric under every lossy
+/// codec — delta gates on, a seeded drop plan faulting transfers, push
+/// retries riding them out — and the byte identity holds bit-exactly:
+/// `metrics.sync_bytes` equals the summed sync-PS NIC counters plus the
+/// ring tx, with every counter now seeing codec-compressed bytes.
+#[test]
+fn codec_fabric_accounts_every_byte_under_gating_and_faults() {
+    for codec in [WireCodec::Fp16, WireCodec::Int8, WireCodec::TopK(0.25)] {
+        let len = 1024usize;
+        let chunk = 64usize;
+        let ranges = lpt_contiguous_ranges(len, 4, chunk);
+        let mut net = Network::new(None);
+        let nodes = [net.add_node(Role::Trainer), net.add_node(Role::Trainer)];
+        let sync_ps = Arc::new(
+            SyncPsGroup::build(&vec![0.0; len], 2, &mut net)
+                .with_push_chunking(chunk, 1e-4)
+                .with_push_retry(8, Duration::from_micros(10)),
+        );
+        let ma_groups: Vec<Arc<AllReduceGroup>> = ranges[2..]
+            .iter()
+            .map(|r| Arc::new(AllReduceGroup::new(2, r.len).with_chunks(4).with_codec(codec)))
+            .collect();
+        let plan = Arc::new(
+            shadowsync::net::fault::FaultPlan::parse("drop:t0@0.05", 0xC0DEC).unwrap(),
+        );
+        let net = Arc::new(net.with_faults(plan.clone()));
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        let mut replicas = Vec::new();
+        for (t, &node) in nodes.iter().enumerate() {
+            let replica = Arc::new(
+                HogwildBuffer::from_slice(&vec![t as f32 + 1.0; len]).with_dirty_epochs(chunk),
+            );
+            replicas.push(replica.clone());
+            let tasks: Vec<ShadowTask> = ranges
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let strategy: Box<dyn SyncStrategy> = if i < 2 {
+                        Box::new(
+                            EasgdSync::new(sync_ps.clone(), 0.3)
+                                .with_gate(DeltaGate::new(1e-4, 0.0))
+                                .with_codec(codec),
+                        )
+                    } else {
+                        Box::new(
+                            MaSync::new(ma_groups[i - 2].clone(), 0.3, r.len).with_codec(codec),
+                        )
+                    };
+                    ShadowTask { partition: i, range: *r, strategy }
+                })
+                .collect();
+            handles.push(spawn_shadow_pool(
+                tasks,
+                replica,
+                node,
+                net.clone(),
+                metrics.clone(),
+                stop.clone(),
+                Duration::from_micros(200),
+                t,
+                2,
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(250));
+        stop.store(true, Relaxed);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert!(snap.syncs > 0, "{codec}: no sync rounds completed");
+        for (i, &s) in snap.partition_syncs.iter().enumerate() {
+            assert!(s > 0, "{codec}: partition {i} never synced");
+        }
+        let trainer_tx: u64 = nodes.iter().map(|&n| net.tx(n)).sum();
+        let ring_tx = trainer_tx - net.role_rx(Role::SyncPs);
+        assert_eq!(
+            snap.sync_bytes,
+            net.role_bytes(Role::SyncPs) + ring_tx,
+            "{codec}: metrics.sync_bytes diverged from the NIC counters"
+        );
+        // the per-partition ledger covers the same bytes, codec-compressed
+        let part_total: u64 = snap.partition_sync_bytes.iter().sum();
+        assert_eq!(part_total, snap.sync_bytes, "{codec}: per-partition ledger diverged");
+        // the compressed wire still pulls the replicas together: error
+        // feedback keeps the lossy legs converging instead of drifting
+        let (a, b) = (replicas[0].to_vec(), replicas[1].to_vec());
+        for r in &ranges {
+            let gap =
+                shadowsync::tensor::ops::mean_abs_diff(&a[r.lo()..r.hi()], &b[r.lo()..r.hi()]);
+            assert!(gap < 0.8, "{codec}: partition {r:?} never converged (gap {gap})");
+        }
+    }
 }
