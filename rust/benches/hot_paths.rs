@@ -7,6 +7,8 @@
 //! `BENCH_MS` overrides the per-benchmark budget (default 1500 ms).
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use shadowsync::config::{EmbeddingConfig, ModelMeta};
@@ -22,14 +24,79 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// SPSC ring microbenchmarks: single-threaded enqueue/dequeue (the pure
+/// protocol cost, no contention by construction) and a cross-thread
+/// delegation round-trip mirroring the shared-nothing engine's grant →
+/// fold → return handshake over a pair of rings.
+fn spsc_benches(budget: Duration) {
+    use shadowsync::sync::ring::SpscRing;
+
+    // raw enqueue + dequeue of an owned message, uncontended
+    let ring: SpscRing<u64> = SpscRing::new(64);
+    bench("spsc/enqueue_dequeue", budget, || {
+        ring.try_push(7).unwrap();
+        std::hint::black_box(ring.try_pop().unwrap());
+    });
+
+    // delegation round-trip: a "grant" (chunk range) travels to a borrower
+    // thread over one ring; the borrower sends the folded stripe back over
+    // another. One iteration = one full out-and-back, like one delegated
+    // sub-partition in a shared-nothing round.
+    const STRIPE: usize = 4096;
+    let grants: Arc<SpscRing<(usize, usize)>> = Arc::new(SpscRing::new(2));
+    let returns: Arc<SpscRing<Vec<f32>>> = Arc::new(SpscRing::new(2));
+    let stop = Arc::new(AtomicBool::new(false));
+    let borrower = {
+        let (grants, returns, stop) = (grants.clone(), returns.clone(), stop.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match grants.try_pop() {
+                    Some((lo, hi)) => {
+                        let mut out = vec![0.5f32; hi - lo];
+                        for x in &mut out {
+                            *x *= 0.25; // stand-in for the fold's scale pass
+                        }
+                        let mut msg = out;
+                        while let Err(back) = returns.try_push(msg) {
+                            msg = back;
+                            std::thread::yield_now();
+                        }
+                    }
+                    None => std::hint::spin_loop(),
+                }
+            }
+        })
+    };
+    bench("spsc/delegation_round_trip", budget, || {
+        grants.try_push((0, STRIPE)).unwrap();
+        let stripe = loop {
+            if let Some(s) = returns.try_pop() {
+                break s;
+            }
+            std::hint::spin_loop();
+        };
+        std::hint::black_box(stripe.len());
+    });
+    stop.store(true, Ordering::Relaxed);
+    borrower.join().unwrap();
+    println!();
+}
+
 fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500),
+    );
+
+    // SPSC ring hot path (no artifacts needed): raw enqueue/dequeue cost,
+    // then the shared-nothing delegation round-trip — a grant message out,
+    // a folded stripe back — which bounds how fine sub-partition delegation
+    // can slice before message cost eats the parallelism.
+    spsc_benches(budget);
+
     if !artifacts_dir().join("tiny.meta.json").exists() {
         eprintln!("run `make artifacts` first");
         return;
     }
-    let budget = Duration::from_millis(
-        std::env::var("BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500),
-    );
     let rt = Runtime::cpu().unwrap();
 
     for preset in ["tiny", "model_a", "model_c"] {

@@ -4,18 +4,32 @@
 //! single-mutex serial baseline. These correspond to the sync columns of
 //! the paper's Fig. 5/6 and feed the §Perf iteration log.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
 use shadowsync::net::{Network, Role};
 use shadowsync::sync::{AllReduceGroup, DeltaScanCache, ReduceEngine, SyncPsGroup};
 use shadowsync::tensor::{ops, HogwildBuffer};
-use shadowsync::util::bench::bench;
+use shadowsync::util::bench::{bench, BenchResult};
+use shadowsync::util::json::Json;
 
 fn main() {
     let budget = Duration::from_millis(
         std::env::var("BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1200),
     );
+    // `--json`: machine-readable mode for the CI bench job — run only the
+    // engine × members A/B matrix and write `BENCH_sync.json` next to the
+    // manifest so the workflow can upload it as an artifact
+    let json_mode = std::env::args().any(|a| a == "--json");
+    if json_mode {
+        let records = engine_members_matrix(budget);
+        let path = "BENCH_sync.json";
+        std::fs::write(path, render_bench_json(&records).to_string())
+            .expect("writing BENCH_sync.json");
+        println!("wrote {path} ({} records)", records.len());
+        return;
+    }
 
     // EASGD elastic round at dense-param sizes from tiny to paper-ish
     for p in [537usize, 9_009, 42_585, 1_000_000] {
@@ -134,19 +148,64 @@ fn main() {
     // The headline A/B: serial-mutex contribute (every member's full-vector
     // add serialized under one lock) vs the single-bank lock-striped engine
     // (deposits for round N+1 help round N drain first) vs the overlapped
-    // double-buffered engine (off-parity deposits land immediately), 1M
-    // params x {2, 4, 8} members. Serial round time grows ~linearly with
-    // members; striped stays ~flat; overlapped shaves the drain-wait off
-    // striped when rounds pipeline back-to-back.
-    println!("\n== serial vs striped vs overlapped contribute (1M params, 16 chunks) ==");
-    for members in [2usize, 4, 8] {
-        for engine in
-            [ReduceEngine::SerialMutex, ReduceEngine::Striped, ReduceEngine::Overlapped]
-        {
-            bench_allreduce(members, 1_048_576, 16, engine, budget);
+    // double-buffered engine (off-parity deposits land immediately) vs the
+    // shared-nothing engine (SPSC deposit rings + delegated sub-partition
+    // folding), 1M params x {2, 4, 8, 16} members. Serial round time grows
+    // ~linearly with members; striped stays ~flat; overlapped shaves the
+    // drain-wait off striped; shared-nothing should pull ahead at 8/16
+    // where deposit-bank contention starts to bite.
+    engine_members_matrix(budget);
+    println!("\nsync_ops done");
+}
+
+/// The engine × members A/B matrix (1M params, 16 chunks) — both the
+/// human-readable headline run and the `--json` CI artifact come from here
+/// so the two can never measure different configurations.
+fn engine_members_matrix(budget: Duration) -> Vec<(ReduceEngine, usize, BenchResult)> {
+    const P: usize = 1_048_576;
+    const CHUNKS: usize = 16;
+    println!(
+        "\n== serial vs striped vs overlapped vs shared-nothing contribute \
+         (1M params, 16 chunks) =="
+    );
+    let mut records = Vec::new();
+    for members in [2usize, 4, 8, 16] {
+        for engine in [
+            ReduceEngine::SerialMutex,
+            ReduceEngine::Striped,
+            ReduceEngine::Overlapped,
+            ReduceEngine::SharedNothing,
+        ] {
+            let r = bench_allreduce(members, P, CHUNKS, engine, budget);
+            records.push((engine, members, r));
         }
     }
-    println!("\nsync_ops done");
+    records
+}
+
+/// `BENCH_sync.json`: `{"bench": ..., "params": P, "chunks": C,
+/// "results": [{"engine", "members", "mean_ns", "p50_ns", ...}]}`.
+fn render_bench_json(records: &[(ReduceEngine, usize, BenchResult)]) -> Json {
+    let results: Vec<Json> = records
+        .iter()
+        .map(|(engine, members, r)| {
+            let mut o = BTreeMap::new();
+            o.insert("engine".to_string(), Json::Str(engine.to_string()));
+            o.insert("members".to_string(), Json::Num(*members as f64));
+            o.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+            o.insert("p50_ns".to_string(), Json::Num(r.p50_ns));
+            o.insert("p95_ns".to_string(), Json::Num(r.p95_ns));
+            o.insert("p99_ns".to_string(), Json::Num(r.p99_ns));
+            o.insert("iters".to_string(), Json::Num(r.iters as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("allreduce_mean".to_string()));
+    top.insert("params".to_string(), Json::Num(1_048_576.0));
+    top.insert("chunks".to_string(), Json::Num(16.0));
+    top.insert("results".to_string(), Json::Arr(results));
+    Json::Obj(top)
 }
 
 /// One AllReduce configuration: `members` looping threads on a shared
@@ -157,7 +216,7 @@ fn bench_allreduce(
     chunks: usize,
     engine: ReduceEngine,
     budget: Duration,
-) {
+) -> BenchResult {
     let group = Arc::new(AllReduceGroup::new(members, p).with_chunks(chunks).with_engine(engine));
     let mut net = Network::new(None);
     let nodes: Vec<_> = (0..members).map(|_| net.add_node(Role::Trainer)).collect();
@@ -201,4 +260,5 @@ fn bench_allreduce(
     for h in peers {
         h.join().unwrap();
     }
+    r
 }

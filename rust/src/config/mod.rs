@@ -519,8 +519,18 @@ pub struct RunConfig {
     pub allreduce_chunks: usize,
     /// in-process reduction engine of the AllReduce fabric: overlapped
     /// (double-buffered deposit banks, the default), single-bank striped,
-    /// or the single-mutex serial baseline
+    /// the single-mutex serial baseline, or shared-nothing (thread-per-core
+    /// SPSC deposit rings with delegated sub-partition folding)
     pub reduce_engine: crate::sync::ReduceEngine,
+    /// depth of the shared-nothing engine's per-member deposit rings: 2
+    /// (the default) lets round g+1's deposits land while round g folds
+    /// (depth-2 stripe pipelining); 1 serializes rounds via backpressure
+    pub reduce_ring_depth: usize,
+    /// pin shadow/reduce worker threads to cores (`--pin-cores`):
+    /// best-effort `sched_setaffinity` on x86_64 Linux, a no-op elsewhere —
+    /// a placement hint for the shared-nothing engine, never required for
+    /// correctness
+    pub pin_cores: bool,
     /// elements per EASGD push chunk against the sync PSs (0 = whole-shard
     /// pushes, the pre-chunking behaviour)
     pub easgd_chunk_elems: usize,
@@ -599,6 +609,8 @@ impl Default for RunConfig {
             repartition_every: 0,
             allreduce_chunks: 8,
             reduce_engine: crate::sync::ReduceEngine::Overlapped,
+            reduce_ring_depth: 2,
+            pin_cores: false,
             easgd_chunk_elems: 4096,
             delta_threshold: 0.0,
             delta_skip_target: 0.0,
@@ -683,6 +695,20 @@ impl RunConfig {
         if self.allreduce_chunks == 0 {
             bail!("allreduce_chunks must be >= 1 (1 = flat collective)");
         }
+        if self.allreduce_chunks as u64 > u32::MAX as u64 {
+            bail!(
+                "allreduce_chunks = {} does not fit the 32-bit chunk-claim cursor \
+                 (max {})",
+                self.allreduce_chunks,
+                u32::MAX
+            );
+        }
+        if self.reduce_ring_depth == 0 {
+            bail!(
+                "reduce_ring_depth (--ring-depth) must be >= 1: the shared-nothing \
+                 deposit rings need at least one slot per member"
+            );
+        }
         if !self.delta_threshold.is_finite() || self.delta_threshold < 0.0 {
             bail!("delta_threshold must be finite and >= 0 (0 = push everything)");
         }
@@ -734,6 +760,32 @@ impl RunConfig {
         }
         if self.heartbeat_timeout_ms > 0 && !matches!(self.mode, SyncMode::Shadow) {
             bail!("the heartbeat watchdog watches shadow laps: shadow mode only");
+        }
+        Ok(())
+    }
+
+    /// Validate the knobs that only make sense against the model's actual
+    /// parameter count — callable once `ModelMeta` (or any concrete dense
+    /// length) is known. Rejects degenerate chunk geometry at config time
+    /// with a clear error instead of letting the fabric silently clamp:
+    /// more AllReduce chunks than elements would leave empty chunks in the
+    /// ring schedule, and an EASGD push chunk wider than the whole dense
+    /// vector is almost certainly a mistyped `--sync-chunk` (0 = explicit
+    /// whole-shard pushes and stays legal).
+    pub fn validate_dims(&self, num_params: usize) -> Result<()> {
+        if self.allreduce_chunks > num_params {
+            bail!(
+                "--chunks {} exceeds the model's {num_params} dense parameters: \
+                 every ring chunk must cover at least one element",
+                self.allreduce_chunks
+            );
+        }
+        if self.easgd_chunk_elems > num_params {
+            bail!(
+                "--sync-chunk {} exceeds the model's {num_params} dense parameters: \
+                 use 0 for explicit whole-shard pushes",
+                self.easgd_chunk_elems
+            );
         }
         Ok(())
     }
@@ -834,7 +886,53 @@ mod tests {
         let c = RunConfig::default();
         assert!(c.allreduce_chunks >= 1);
         assert_eq!(c.reduce_engine, crate::sync::ReduceEngine::Overlapped);
+        assert_eq!(c.reduce_ring_depth, 2, "depth-2 stripe pipelining is the default");
+        assert!(!c.pin_cores);
         assert!(c.dirty_epoch_scan);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn degenerate_chunk_geometry_is_rejected_with_clear_errors() {
+        // --chunks 0 fails at parse/validate time, never a silent clamp
+        let mut c = RunConfig::default();
+        c.allreduce_chunks = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("allreduce_chunks must be >= 1"), "got: {err}");
+        // more chunks than the 32-bit claim cursor can index
+        c.allreduce_chunks = u32::MAX as usize + 1;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("32-bit chunk-claim cursor"), "got: {err}");
+        // dimension-aware checks: more chunks than dense parameters
+        c.allreduce_chunks = 600;
+        c.validate().unwrap();
+        let err = c.validate_dims(537).unwrap_err().to_string();
+        assert!(
+            err.contains("--chunks 600 exceeds the model's 537 dense parameters"),
+            "got: {err}"
+        );
+        c.allreduce_chunks = 8;
+        c.validate_dims(537).unwrap();
+        // an EASGD push chunk wider than the whole dense vector
+        c.easgd_chunk_elems = 4096;
+        let err = c.validate_dims(537).unwrap_err().to_string();
+        assert!(
+            err.contains("--sync-chunk 4096 exceeds the model's 537 dense parameters"),
+            "got: {err}"
+        );
+        assert!(err.contains("use 0 for explicit whole-shard pushes"), "got: {err}");
+        // 0 = whole-shard pushes stays legal at any model size
+        c.easgd_chunk_elems = 0;
+        c.validate_dims(537).unwrap();
+    }
+
+    #[test]
+    fn ring_depth_must_hold_at_least_one_deposit() {
+        let mut c = RunConfig::default();
+        c.reduce_ring_depth = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--ring-depth"), "got: {err}");
+        c.reduce_ring_depth = 1;
         c.validate().unwrap();
     }
 

@@ -109,6 +109,11 @@ pub struct Cluster {
 pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
     cfg.validate()?;
     let meta = ModelMeta::load(&cfg.artifacts_dir, &cfg.preset)?;
+    // knobs that only make sense against the model's actual parameter
+    // count fail here with a parse-time-quality error, not a silent clamp
+    cfg.validate_dims(meta.num_params)?;
+    // worker→core placement is a process-global hint consulted at spawn
+    crate::util::affinity::set_pinning(cfg.pin_cores);
     let model = runtime
         .load_model(&meta, &cfg.artifacts_dir)
         .with_context(|| format!("loading artifacts for preset {:?}", cfg.preset))?;

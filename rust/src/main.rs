@@ -29,6 +29,19 @@
 //!                                A per-partition map composes with
 //!                                --algo-map, e.g. int8:0-1,topk:0.1:2-3
 //!
+//! In-process reduce engine (MA/BMUF collectives):
+//!   --reduce-engine <e>          overlapped (default) | striped | serial |
+//!                                shared-nothing (thread-per-core SPSC
+//!                                deposit rings, delegated sub-partition
+//!                                folding, depth-2 stripe pipelining)
+//!   --ring-depth <D>             shared-nothing deposit-ring depth
+//!                                (default 2: round g+1's deposits land
+//!                                while round g folds; 1 = serialize
+//!                                rounds via backpressure)
+//!   --pin-cores                  pin shadow/reduce workers to cores
+//!                                (best-effort sched_setaffinity on x86_64
+//!                                Linux, no-op elsewhere)
+//!
 //! Delta gating (EASGD pushes against the sync PSs):
 //!   --sync-chunk <elems>         elements per push chunk (0 = whole shard)
 //!   --delta-threshold <abs>      fixed gate: skip chunks whose max
@@ -135,6 +148,8 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         repartition_every: args.parse_or("repartition-every", 0u64)?,
         allreduce_chunks: args.parse_or("chunks", 8usize)?,
         reduce_engine: args.parse_or("reduce-engine", ReduceEngine::Overlapped)?,
+        reduce_ring_depth: args.parse_or("ring-depth", 2usize)?,
+        pin_cores: args.has("pin-cores"),
         easgd_chunk_elems: args.parse_or("sync-chunk", 4096usize)?,
         delta_threshold: args.parse_or("delta-threshold", 0.0f32)?,
         delta_skip_target: args.parse_or("delta-skip-target", 0.0f32)?,
@@ -297,7 +312,11 @@ fn cmd_list() -> Result<()> {
          --algo-map easgd:0-1,ma:2-3, --repartition-every <N sweeps> \
          (shadow mode only)"
     );
-    println!("reduce engines: --reduce-engine overlapped|striped|serial");
+    println!(
+        "reduce engines: --reduce-engine overlapped|striped|serial|shared-nothing, \
+         --ring-depth <D> (shared-nothing deposit-ring depth, default 2), \
+         --pin-cores (best-effort worker→core affinity)"
+    );
     println!(
         "wire codecs: --wire-codec fp32|fp16|int8|topk:R (uniform) or a \
          per-partition map like int8:0-1,topk:0.1:2-3 (composes with \

@@ -52,6 +52,36 @@
 //! reducer that parks the previous round closes it immediately.
 //! [`ReduceEngine::Striped`] keeps the single-bank engine for A/B benches.
 //!
+//! ## The shared-nothing engine
+//!
+//! [`ReduceEngine::SharedNothing`] removes even the cooperative sharing the
+//! striped engines keep (contended chunk-claim cursor, shared stripe
+//! locks): every deposit *moves* through a bounded per-position SPSC ring
+//! ([`super::ring::SpscRing`], backpressure instead of blocking), one
+//! waiter claims the closed round and folds it **exclusively** — no other
+//! shard ever touches the deposits or the mean — and the result is
+//! published by an epoch-stamped pointer swap (the parked `Round` plus a
+//! `Release`-stored publication stamp). Two carried ROADMAP items fall out
+//! of the same ownership discipline:
+//!
+//! * **Sub-partition work stealing by delegation** — the round owner lends
+//!   waiters contiguous chunk ranges as *grant* messages over their rings
+//!   (a read-only handle on the round's deposits plus a `[lo, hi)` chunk
+//!   range); the borrower folds its range privately and returns the
+//!   reduced stripe over its own ring. Ownership moves over messages;
+//!   nothing is ever mutated by two shards.
+//! * **Depth-2 stripe pipelining** — the deposit rings are
+//!   [`AllReduceGroup::with_ring_depth`] deep (default 2), so round
+//!   `g+1`'s deposits drain into the rings while round `g` folds; a
+//!   depositor only waits when the ring still holds `ring_depth` older
+//!   rounds at its position.
+//!
+//! Folds use the same per-chunk, ring-position-order summation as the
+//! striped engines, so all four engines (bar the arrival-order serial
+//! baseline) produce bit-identical means. Pair with `--pin-cores`
+//! (`crate::util::affinity`) to keep each worker's deposits and stripes
+//! resident in one core's cache.
+//!
 //! ## The chunked wire schedule
 //!
 //! The parameter vector is split into `C` chunks
@@ -84,12 +114,16 @@
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use super::prim::{thread, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard, Ordering::SeqCst};
+use super::prim::{
+    thread, Arc, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard,
+    Ordering::{Acquire, Release, SeqCst},
+};
 
 use anyhow::{bail, ensure, Result};
 
 use crate::net::{Network, NodeId};
 
+use super::ring::SpscRing;
 use super::traffic;
 
 /// Which in-process reduction engine a group runs.
@@ -108,6 +142,13 @@ pub enum ReduceEngine {
     /// while round `N` is still being folded, so deposits never block on a
     /// draining reduction.
     Overlapped,
+    /// Shared-nothing: deposits *move* through bounded per-position SPSC
+    /// rings to a single round owner that folds the round exclusively
+    /// (position-order association, deterministic bits), delegating
+    /// contiguous chunk ranges to waiters over the same rings; results are
+    /// published by epoch-stamped pointer swap. No cross-shard locks or
+    /// contended cursors on the hot path.
+    SharedNothing,
 }
 
 impl std::str::FromStr for ReduceEngine {
@@ -117,7 +158,8 @@ impl std::str::FromStr for ReduceEngine {
             "overlapped" | "double" | "double-buffered" => Self::Overlapped,
             "striped" => Self::Striped,
             "serial" | "serial-mutex" => Self::SerialMutex,
-            _ => bail!("unknown reduce engine {s:?} (overlapped|striped|serial)"),
+            "shared-nothing" | "shared_nothing" | "sn" => Self::SharedNothing,
+            _ => bail!("unknown reduce engine {s:?} (overlapped|striped|serial|shared-nothing)"),
         })
     }
 }
@@ -128,6 +170,7 @@ impl std::fmt::Display for ReduceEngine {
             Self::SerialMutex => write!(f, "serial"),
             Self::Striped => write!(f, "striped"),
             Self::Overlapped => write!(f, "overlapped"),
+            Self::SharedNothing => write!(f, "shared-nothing"),
         }
     }
 }
@@ -178,6 +221,10 @@ struct ReducePlan {
     n: usize,
     /// Contributor NICs in join order, carried into the parked `Round`.
     ring: Vec<NodeId>,
+    /// Shared-nothing engine: whether a waiter has claimed this plan as
+    /// the round's exclusive owner. The striped engines leave it `false`
+    /// (their claim mechanism is the chunk cursor, not ownership).
+    owned: bool,
 }
 
 /// Round/membership bookkeeping — the *small* control lock. All O(len)
@@ -256,12 +303,97 @@ fn pack_cursor(generation: u64, idx: usize) -> u64 {
     ((generation & 0xFFFF_FFFF) << 32) | idx as u64
 }
 
+/// How many chunk ranges a shared-nothing round owner will delegate to
+/// waiting members, besides the range it always folds itself.
+const SN_DELEGATE_MAX: usize = 3;
+
+/// One member's contribution in flight to its round's owner over the
+/// position's deposit ring (shared-nothing engine). Epoch-stamped so the
+/// owner can assert ring discipline under depth-2 pipelining (the ring may
+/// hold deposits of two consecutive rounds at once).
+struct SnDeposit {
+    generation: u64,
+    data: Vec<f32>,
+}
+
+/// A sub-partition delegation: the round owner lends a waiter a contiguous
+/// chunk range plus a read-only handle on the round's deposits. This is
+/// ownership *delegation*, not work stealing — the borrower never touches
+/// shared mutable state; it folds privately and returns the reduced stripe
+/// over its own return ring.
+struct SnGrant {
+    generation: u64,
+    /// Chunk range `[lo_chunk, hi_chunk)` the borrower folds.
+    lo_chunk: usize,
+    hi_chunk: usize,
+    /// Contributors in the round (deposits to fold per chunk).
+    n: usize,
+    /// The round's deposits, position-ordered, shared read-only.
+    deposits: Arc<Vec<Vec<f32>>>,
+}
+
+/// The reduced mean stripe for a delegated chunk range, returned to the
+/// round owner over the borrower's return ring.
+struct SnReturn {
+    lo_chunk: usize,
+    /// The contiguous element range covering `[lo_chunk, hi_chunk)`.
+    data: Vec<f32>,
+}
+
+/// The shared-nothing engine's per-position rings and counters. Nothing
+/// here is ever mutated by two shards at once: deposits, grants, and
+/// returned stripes all *move* through SPSC rings, and the round owner is
+/// the only shard folding the (undelegated) chunks of its round.
+struct SnState {
+    /// One deposit ring per ring position: producer = the contributor at
+    /// that position (successive rounds' producers are serialized by the
+    /// control lock), consumer = the round owner. The configured depth
+    /// (default 2) *is* the stripe pipelining: round `g+1`'s deposits
+    /// drain in while round `g` folds.
+    deposit: Vec<SpscRing<SnDeposit>>,
+    /// Delegation grants, owner → the position's round-`g` waiter. Pushed
+    /// and polled under the control lock, so a grant is never lost to a
+    /// sleeping waiter.
+    grants: Vec<SpscRing<SnGrant>>,
+    /// Reduced stripes coming back, the position's waiter → owner.
+    returns: Vec<SpscRing<SnReturn>>,
+    /// Chunk ranges granted to / returned by borrowers. Observability
+    /// counters (equal whenever the fabric is quiescent); never `Relaxed`.
+    delegated: AtomicUsize,
+    returned: AtomicUsize,
+    /// Epoch stamp of the publication pointer swap: `generation + 1` of
+    /// the latest parked round, stored `Release` at park.
+    published: AtomicU64,
+}
+
+impl SnState {
+    fn new(capacity: usize, depth: usize) -> Self {
+        Self {
+            deposit: (0..capacity).map(|_| SpscRing::new(depth)).collect(),
+            // at most one grant (and one return) is outstanding per
+            // position per round; 2 leaves slack for the next round's
+            // grant landing before a slow gc
+            grants: (0..capacity).map(|_| SpscRing::new(2)).collect(),
+            returns: (0..capacity).map(|_| SpscRing::new(2)).collect(),
+            delegated: AtomicUsize::new(0),
+            returned: AtomicUsize::new(0),
+            published: AtomicU64::new(0),
+        }
+    }
+}
+
 /// A dynamic-membership mean-AllReduce group over a chunked ring schedule.
 pub struct AllReduceGroup {
     state: Mutex<Control>,
     cv: Condvar,
     /// Striped engine buffers (None for the serial baseline).
     striped: Option<StripedState>,
+    /// Shared-nothing engine rings (None under the other engines).
+    sn: Option<SnState>,
+    /// Per-position deposit-ring depth for the shared-nothing engine:
+    /// 2 (the default) is depth-2 stripe pipelining — round `g+1`'s
+    /// deposits queue behind round `g`'s while `g` folds.
+    ring_depth: usize,
     engine: ReduceEngine,
     /// Initial membership — the slot capacity of the striped engine.
     capacity: usize,
@@ -299,6 +431,8 @@ impl AllReduceGroup {
             }),
             cv: Condvar::new(),
             striped: None,
+            sn: None,
+            ring_depth: 2,
             engine: ReduceEngine::Overlapped,
             capacity: members,
             reduce_stall: None,
@@ -313,9 +447,30 @@ impl AllReduceGroup {
 
     /// Split the vector into `chunks` chunks for the ring schedule (and the
     /// striped engine's reduction work list).
+    ///
+    /// Degenerate chunk counts are a caller bug, not something to clamp
+    /// silently: `RunConfig::validate` / `RunConfig::validate_dims` reject
+    /// bad `--chunks` values at parse time with a real error message, so a
+    /// violation here means a code path skipped validation.
     pub fn with_chunks(mut self, chunks: usize) -> Self {
-        self.chunks = chunks.max(1);
-        debug_assert!(self.chunks as u64 <= u32::MAX as u64);
+        assert!(chunks >= 1, "chunk count must be >= 1 (1 = flat collective)");
+        assert!(
+            chunks as u64 <= u32::MAX as u64,
+            "chunk count must fit the 32-bit claim cursor (got {chunks})"
+        );
+        self.chunks = chunks;
+        self.rebuild_engine();
+        self
+    }
+
+    /// Depth of the shared-nothing engine's per-position SPSC deposit
+    /// rings (min 1, rounded up to a power of two). Depth 2 — the default
+    /// — is the depth-2 stripe pipeline: round `g+1`'s deposits drain into
+    /// the rings while round `g` folds; depth 1 serializes rounds at the
+    /// deposit (backpressure), deeper rings only buy slack against
+    /// stragglers since round `g+2` cannot close before `g` parks.
+    pub fn with_ring_depth(mut self, depth: usize) -> Self {
+        self.ring_depth = depth.max(1);
         self.rebuild_engine();
         self
     }
@@ -376,9 +531,16 @@ impl AllReduceGroup {
                     st.sum = vec![0.0; self.len];
                 }
                 self.striped = None;
+                self.sn = None;
+            }
+            ReduceEngine::SharedNothing => {
+                st.sum = Vec::new();
+                self.striped = None;
+                self.sn = Some(SnState::new(self.capacity, self.ring_depth));
             }
             ReduceEngine::Striped | ReduceEngine::Overlapped => {
                 st.sum = Vec::new();
+                self.sn = None;
                 let nbanks = self.engine.banks();
                 match self.striped.take() {
                     Some(mut ss)
@@ -486,11 +648,17 @@ impl AllReduceGroup {
                 }
                 st.done.push_back(Round { generation, mean, ring, readers_left: n });
             }
+            ReduceEngine::SharedNothing => {
+                // every contributor's deposit is already queued in its
+                // position's ring; the first waiter to observe this plan
+                // claims ownership and folds the round exclusively
+                st.plan = Some(ReducePlan { generation, n, ring, owned: false });
+            }
             ReduceEngine::Striped | ReduceEngine::Overlapped => {
                 let ss = self.striped.as_ref().expect("striped engine state");
                 ss.chunks_done.store(0, SeqCst);
                 ss.cursor.store(pack_cursor(generation, 0), SeqCst);
-                st.plan = Some(ReducePlan { generation, n, ring });
+                st.plan = Some(ReducePlan { generation, n, ring, owned: false });
             }
         }
     }
@@ -584,6 +752,184 @@ impl AllReduceGroup {
         self.cv.notify_all();
     }
 
+    /// Shared-nothing: fold chunks `[lo_chunk, hi_chunk)` of the
+    /// position-ordered `deposits` into `out`, where `out` starts at
+    /// element offset `base` of the full vector (0 for the owner's
+    /// full-length mean, the range's offset for a borrower's stripe).
+    /// Same per-chunk copy → add → scale association as
+    /// [`AllReduceGroup::reduce_chunk`], so every shard — owner or
+    /// borrower — produces bit-identical stripes.
+    fn sn_fold_chunks(
+        &self,
+        deposits: &[Vec<f32>],
+        out: &mut [f32],
+        base: usize,
+        lo_chunk: usize,
+        hi_chunk: usize,
+        n: usize,
+    ) {
+        for c in lo_chunk..hi_chunk {
+            if let Some(stall) = self.reduce_stall {
+                thread::sleep(stall);
+            }
+            let lo = traffic::part_offset(self.len, self.chunks, c);
+            let clen = traffic::part_len(self.len, self.chunks, c);
+            let dst = &mut out[lo - base..lo - base + clen];
+            for (pos, dep) in deposits.iter().take(n).enumerate() {
+                let src = &dep[lo..lo + clen];
+                if pos == 0 {
+                    dst.copy_from_slice(src);
+                } else {
+                    for (acc, &x) in dst.iter_mut().zip(src) {
+                        *acc += x;
+                    }
+                }
+            }
+            let inv = 1.0 / n as f32;
+            for acc in dst.iter_mut() {
+                *acc *= inv;
+            }
+        }
+    }
+
+    /// Shared-nothing: fold a delegated chunk range and send the reduced
+    /// stripe back over this position's return ring. Runs without any lock
+    /// — the grant carries everything the borrower needs, and the stripe
+    /// goes back as an owned message, never shared mutation.
+    fn sn_serve_grant(&self, my_pos: usize, grant: SnGrant) {
+        let sn = self.sn.as_ref().expect("shared-nothing engine state");
+        let SnGrant { generation: _, lo_chunk, hi_chunk, n, deposits } = grant;
+        let off = traffic::part_offset(self.len, self.chunks, lo_chunk);
+        let end = if hi_chunk == self.chunks {
+            self.len
+        } else {
+            traffic::part_offset(self.len, self.chunks, hi_chunk)
+        };
+        let mut out = vec![0.0f32; end - off];
+        self.sn_fold_chunks(&deposits, &mut out, off, lo_chunk, hi_chunk, n);
+        // drop our deposit handle before publishing the stripe so the
+        // owner's buffer-recycling `Arc::try_unwrap` can usually succeed
+        drop(deposits);
+        let mut msg = SnReturn { lo_chunk, data: out };
+        while let Err(back) = sn.returns[my_pos].try_push(msg) {
+            msg = back;
+            thread::yield_now();
+        }
+        sn.returned.fetch_add(1, SeqCst);
+    }
+
+    /// Shared-nothing: fold round `pg` (`pn` contributors) as its claimed
+    /// exclusive owner and publish the result. Called with the control
+    /// lock held (the plan was just marked `owned`); returns holding it
+    /// again. `my_gen`/`my_pos` identify the caller's own pending round so
+    /// the owner never grants a range to its own position.
+    fn sn_own_round<'a>(
+        &'a self,
+        mut st: MutexGuard<'a, Control>,
+        pg: u64,
+        pn: usize,
+        my_gen: u64,
+        my_pos: usize,
+    ) -> MutexGuard<'a, Control> {
+        let sn = self.sn.as_ref().expect("shared-nothing engine state");
+        // Drain exactly one epoch-stamped deposit per position — all
+        // present, because every contributor pushed before bumping
+        // `deposited` under this lock. Pops are O(1) buffer moves; doing
+        // them under the lock also serializes successive rounds' owners on
+        // the rings (the consumer half of the SPSC handoff).
+        let mut deposits = Vec::with_capacity(pn);
+        for ring in sn.deposit.iter().take(pn) {
+            let d = ring.try_pop().expect("closed round is missing a deposit");
+            debug_assert_eq!(d.generation, pg, "ring held a deposit from the wrong round");
+            deposits.push(d.data);
+        }
+        let mut mean = st.mean_pool.pop().unwrap_or_else(|| vec![0.0; self.len]);
+        // Sub-partition work stealing by delegation: hand contiguous chunk
+        // ranges to this round's waiters over their grant rings. Grants are
+        // pushed under the control lock, and waiters poll their grant ring
+        // under the same lock before sleeping, so no grant can be lost.
+        let mut helpers: Vec<usize> =
+            (0..pn).filter(|&p| my_gen != pg || p != my_pos).collect();
+        let parts =
+            helpers.len().min(SN_DELEGATE_MAX).min(self.chunks.saturating_sub(1)) + 1;
+        helpers.truncate(parts - 1);
+        let chunk_range = |j: usize| {
+            let lo = traffic::part_offset(self.chunks, parts, j);
+            (lo, lo + traffic::part_len(self.chunks, parts, j))
+        };
+        let mut own = vec![chunk_range(0)];
+        let mut granted: Vec<(usize, usize)> = Vec::new();
+        if parts > 1 {
+            let shared = Arc::new(deposits);
+            for (i, &p) in helpers.iter().enumerate() {
+                let (lo, hi) = chunk_range(i + 1);
+                let grant = SnGrant {
+                    generation: pg,
+                    lo_chunk: lo,
+                    hi_chunk: hi,
+                    n: pn,
+                    deposits: shared.clone(),
+                };
+                match sn.grants[p].try_push(grant) {
+                    Ok(()) => granted.push((p, lo)),
+                    // a full grant ring means that waiter is still a whole
+                    // round behind: fold the range ourselves instead
+                    Err(_) => own.push((lo, hi)),
+                }
+            }
+            sn.delegated.fetch_add(granted.len(), SeqCst);
+            drop(st);
+            // grantees may be asleep on the round condvar
+            self.cv.notify_all();
+            for &(lo, hi) in &own {
+                self.sn_fold_chunks(&shared, &mut mean, 0, lo, hi, pn);
+            }
+            // collect the borrowed ranges back; spin-yield rather than
+            // sleep — the borrowers are this round's waiters, guaranteed
+            // to pass their grant poll before they can exit the round
+            for &(p, lo) in &granted {
+                let ret = loop {
+                    if let Some(r) = sn.returns[p].try_pop() {
+                        break r;
+                    }
+                    thread::yield_now();
+                };
+                debug_assert_eq!(ret.lo_chunk, lo, "stripe came back for the wrong range");
+                let off = traffic::part_offset(self.len, self.chunks, lo);
+                mean[off..off + ret.data.len()].copy_from_slice(&ret.data);
+            }
+            st = self.state.lock().unwrap();
+            // recycle the deposit buffers; a borrower still holding its
+            // clone for another beat only means these buffers skip the
+            // pool this round
+            if let Ok(bufs) = Arc::try_unwrap(shared) {
+                st.mean_pool.extend(bufs);
+            }
+        } else {
+            drop(st);
+            let (lo, hi) = own[0];
+            self.sn_fold_chunks(&deposits, &mut mean, 0, lo, hi, pn);
+            st = self.state.lock().unwrap();
+            st.mean_pool.extend(deposits);
+        }
+        // Publish by epoch-stamped pointer swap: park the round under the
+        // generation stamp its waiters look up, then stamp `published`.
+        let plan = st.plan.take().expect("owner parked without a plan");
+        debug_assert!(plan.owned, "parked a plan nobody claimed");
+        debug_assert_eq!(plan.generation, pg);
+        st.done.push_back(Round { generation: pg, mean, ring: plan.ring, readers_left: plan.n });
+        sn.published.store(pg + 1, Release);
+        // depth-2 pipelining handoff: the next round's deposits drained
+        // into the rings while this one folded — close it now that the
+        // plan slot is free
+        if Self::round_complete(&st) {
+            self.close_round(&mut st);
+        }
+        drop(st);
+        self.cv.notify_all();
+        self.state.lock().unwrap()
+    }
+
     /// Retire fully-read rounds and recycle their buffers.
     fn gc(st: &mut Control) {
         let mut i = 0;
@@ -641,6 +987,35 @@ impl AllReduceGroup {
                     *s += d;
                 }
             }
+            ReduceEngine::SharedNothing => {
+                let sn = self.sn.as_ref().expect("shared-nothing engine state");
+                // O(len) copy outside the lock, into a pooled buffer the
+                // round owner will recycle after the fold
+                let mut buf = st.mean_pool.pop().unwrap_or_else(|| vec![0.0; self.len]);
+                drop(st);
+                buf.copy_from_slice(data);
+                let mut msg = SnDeposit { generation: my_gen, data: buf };
+                st = self.state.lock().unwrap();
+                // The push itself is an O(1) buffer move. Doing it under
+                // the control lock serializes successive rounds' producers
+                // on this position's ring (the producer half of the SPSC
+                // handoff) and makes the full-ring retry race-free: owners
+                // drain deposits under this same lock, so a drain can
+                // never slip between a failed push and the wait below.
+                loop {
+                    match sn.deposit[my_pos].try_push(msg) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            // Backpressure, not blocking: the ring still
+                            // holds `ring_depth` older rounds' deposits at
+                            // this position. Sleep on the round condvar
+                            // until an owner drains one, then retry.
+                            msg = back;
+                            st = self.wait_round(st);
+                        }
+                    }
+                }
+            }
             ReduceEngine::Striped | ReduceEngine::Overlapped => {
                 let ss = self.striped.as_ref().expect("striped engine state");
                 // Single-bank striped engine: the previous round may still
@@ -691,8 +1066,34 @@ impl AllReduceGroup {
         let mut delay = wake_delay;
         let mut st = self.state.lock().unwrap();
         let (n, succ) = loop {
-            let plan = st.plan.as_ref().map(|p| (p.generation, p.n));
-            if let Some((pg, pn)) = plan {
+            if self.engine == ReduceEngine::SharedNothing {
+                // claim an unowned plan: this waiter becomes the round's
+                // exclusive owner and folds it (delegating sub-ranges)
+                let mut claim = None;
+                if let Some(p) = st.plan.as_mut() {
+                    if !p.owned {
+                        p.owned = true;
+                        claim = Some((p.generation, p.n));
+                    }
+                }
+                if let Some((pg, pn)) = claim {
+                    st = self.sn_own_round(st, pg, pn, my_gen, my_pos);
+                    continue;
+                }
+                // serve a delegated chunk range. Only the waiter of the
+                // plan's *own* round may consume the grant ring at its
+                // position — one consumer per position per round, which is
+                // what keeps the ring single-consumer.
+                if st.plan.as_ref().map(|p| p.generation) == Some(my_gen) {
+                    let sn = self.sn.as_ref().expect("shared-nothing engine state");
+                    if let Some(grant) = sn.grants[my_pos].try_pop() {
+                        drop(st);
+                        self.sn_serve_grant(my_pos, grant);
+                        st = self.state.lock().unwrap();
+                        continue;
+                    }
+                }
+            } else if let Some((pg, pn)) = st.plan.as_ref().map(|p| (p.generation, p.n)) {
                 drop(st);
                 let claimed = self.help_reduce(pg, pn);
                 st = self.state.lock().unwrap();
@@ -819,6 +1220,23 @@ impl AllReduceGroup {
         self.state.lock().unwrap().generation
     }
 
+    /// Shared-nothing engine: the epoch stamp of the publication pointer
+    /// swap — `generation + 1` of the latest round parked by its owner.
+    /// 0 before the first publish, and always 0 under the other engines.
+    pub fn published_rounds(&self) -> u64 {
+        self.sn.as_ref().map_or(0, |s| s.published.load(Acquire))
+    }
+
+    /// Shared-nothing engine: cumulative `(granted, returned)` chunk-range
+    /// delegations over the group's lifetime. Every borrowed range comes
+    /// back with its stripe, so the two are equal whenever the fabric is
+    /// quiescent. `(0, 0)` under the other engines.
+    pub fn delegations(&self) -> (usize, usize) {
+        self.sn
+            .as_ref()
+            .map_or((0, 0), |s| (s.delegated.load(SeqCst), s.returned.load(SeqCst)))
+    }
+
     /// Closed-form ring bytes each member moves per direction per round —
     /// the cross-check reference for the measured per-hop traffic (the
     /// `sim/` cost model consumes the measured schedule via
@@ -846,8 +1264,17 @@ mod tests {
         (Arc::new(net), nodes)
     }
 
-    const ALL_ENGINES: [ReduceEngine; 3] =
-        [ReduceEngine::Overlapped, ReduceEngine::Striped, ReduceEngine::SerialMutex];
+    const ALL_ENGINES: [ReduceEngine; 4] = [
+        ReduceEngine::Overlapped,
+        ReduceEngine::Striped,
+        ReduceEngine::SerialMutex,
+        ReduceEngine::SharedNothing,
+    ];
+
+    /// The engines with a fixed position-order summation (everything but
+    /// the arrival-order serial baseline) — the bit-determinism set.
+    const DETERMINISTIC_ENGINES: [ReduceEngine; 3] =
+        [ReduceEngine::Overlapped, ReduceEngine::Striped, ReduceEngine::SharedNothing];
 
     #[test]
     fn mean_matches_sequential_sum() {
@@ -1137,63 +1564,66 @@ mod tests {
     }
 
     #[test]
-    fn striped_means_bit_identical_to_position_order_reference() {
+    fn means_bit_identical_to_position_order_reference() {
         // Satellite regression: n threads contributing *simultaneously*
-        // through the chunk-parallel engine must produce bit-identical
+        // through each deterministic engine must produce bit-identical
         // means to a single-threaded reference that sums in the engine's
         // fixed (position-major) chunk-wise order — for every round, under
-        // real thread interleaving.
-        let (n, p, chunks, rounds) = (4usize, 257usize, 5usize, 25usize);
-        let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(chunks));
-        let (net, nodes) = net_with(n);
-        let mut hs = Vec::new();
-        for t in 0..n {
-            let g = g.clone();
-            let net = net.clone();
-            let node = nodes[t];
-            hs.push(std::thread::spawn(move || {
-                let mut rng = Rng::new(0xD37E ^ t as u64);
-                let mut log = Vec::with_capacity(rounds);
-                for _ in 0..rounds {
-                    // fractional values whose f32 sum is association-order
-                    // sensitive — any reordering would change the bits
-                    let v: Vec<f32> = (0..p)
-                        .map(|_| (rng.next_u64() % 1_000_003) as f32 * 1e-3 - 500.0)
-                        .collect();
-                    let mut buf = v.clone();
-                    let out = g.allreduce_mean(&mut buf, node, &net).unwrap();
-                    log.push((out.generation, out.position, v, buf));
-                }
-                log
-            }));
-        }
-        let mut by_gen: HashMap<u64, Vec<(usize, Vec<f32>, Vec<f32>)>> = HashMap::new();
-        for h in hs {
-            for (gen, pos, v, mean) in h.join().unwrap() {
-                by_gen.entry(gen).or_default().push((pos, v, mean));
+        // real thread interleaving. The shared-nothing engine runs the
+        // same reference: ownership delegation must not change a bit.
+        for engine in DETERMINISTIC_ENGINES {
+            let (n, p, chunks, rounds) = (4usize, 257usize, 5usize, 25usize);
+            let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(chunks).with_engine(engine));
+            let (net, nodes) = net_with(n);
+            let mut hs = Vec::new();
+            for t in 0..n {
+                let g = g.clone();
+                let net = net.clone();
+                let node = nodes[t];
+                hs.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(0xD37E ^ t as u64);
+                    let mut log = Vec::with_capacity(rounds);
+                    for _ in 0..rounds {
+                        // fractional values whose f32 sum is association-
+                        // order sensitive — reordering would change bits
+                        let v: Vec<f32> = (0..p)
+                            .map(|_| (rng.next_u64() % 1_000_003) as f32 * 1e-3 - 500.0)
+                            .collect();
+                        let mut buf = v.clone();
+                        let out = g.allreduce_mean(&mut buf, node, &net).unwrap();
+                        log.push((out.generation, out.position, v, buf));
+                    }
+                    log
+                }));
             }
-        }
-        assert_eq!(by_gen.len(), rounds);
-        for (gen, mut entries) in by_gen {
-            entries.sort_by_key(|e| e.0);
-            assert_eq!(entries.len(), n, "gen {gen}");
-            let mut reference = entries[0].1.clone();
-            for e in &entries[1..] {
-                for (r, &x) in reference.iter_mut().zip(&e.1) {
-                    *r += x;
+            let mut by_gen: HashMap<u64, Vec<(usize, Vec<f32>, Vec<f32>)>> = HashMap::new();
+            for h in hs {
+                for (gen, pos, v, mean) in h.join().unwrap() {
+                    by_gen.entry(gen).or_default().push((pos, v, mean));
                 }
             }
-            let inv = 1.0 / n as f32;
-            for r in reference.iter_mut() {
-                *r *= inv;
-            }
-            for (pos, _, mean) in &entries {
-                for (a, b) in mean.iter().zip(&reference) {
-                    assert_eq!(
-                        a.to_bits(),
-                        b.to_bits(),
-                        "gen {gen} pos {pos}: {a} != reference {b}"
-                    );
+            assert_eq!(by_gen.len(), rounds, "{engine}");
+            for (gen, mut entries) in by_gen {
+                entries.sort_by_key(|e| e.0);
+                assert_eq!(entries.len(), n, "{engine} gen {gen}");
+                let mut reference = entries[0].1.clone();
+                for e in &entries[1..] {
+                    for (r, &x) in reference.iter_mut().zip(&e.1) {
+                        *r += x;
+                    }
+                }
+                let inv = 1.0 / n as f32;
+                for r in reference.iter_mut() {
+                    *r *= inv;
+                }
+                for (pos, _, mean) in &entries {
+                    for (a, b) in mean.iter().zip(&reference) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{engine} gen {gen} pos {pos}: {a} != reference {b}"
+                        );
+                    }
                 }
             }
         }
@@ -1262,10 +1692,127 @@ mod tests {
         assert_eq!("SERIAL-MUTEX".parse::<ReduceEngine>().unwrap(), ReduceEngine::SerialMutex);
         assert_eq!("overlapped".parse::<ReduceEngine>().unwrap(), ReduceEngine::Overlapped);
         assert_eq!("double-buffered".parse::<ReduceEngine>().unwrap(), ReduceEngine::Overlapped);
-        assert!("quantum".parse::<ReduceEngine>().is_err());
+        assert_eq!(
+            "shared-nothing".parse::<ReduceEngine>().unwrap(),
+            ReduceEngine::SharedNothing
+        );
+        assert_eq!(
+            "Shared_Nothing".parse::<ReduceEngine>().unwrap(),
+            ReduceEngine::SharedNothing
+        );
+        assert_eq!("sn".parse::<ReduceEngine>().unwrap(), ReduceEngine::SharedNothing);
+        let err = "quantum".parse::<ReduceEngine>().unwrap_err().to_string();
+        assert!(err.contains("shared-nothing"), "error must list every engine: {err}");
         assert_eq!(ReduceEngine::Striped.to_string(), "striped");
         assert_eq!(ReduceEngine::SerialMutex.to_string(), "serial");
         assert_eq!(ReduceEngine::Overlapped.to_string(), "overlapped");
+        assert_eq!(ReduceEngine::SharedNothing.to_string(), "shared-nothing");
+    }
+
+    #[test]
+    fn shared_nothing_publishes_epoch_stamped_rounds() {
+        // the publication stamp advances by pointer swap at every park:
+        // after k rounds it reads exactly k (generation + 1 of the last)
+        let g = AllReduceGroup::new(1, 16).with_engine(ReduceEngine::SharedNothing);
+        let (net, nodes) = net_with(1);
+        assert_eq!(g.published_rounds(), 0);
+        for k in 1..=5u64 {
+            let mut v = vec![k as f32; 16];
+            let out = g.allreduce_mean(&mut v, nodes[0], &net).unwrap();
+            assert_eq!(out.generation, k - 1);
+            assert_eq!(v, vec![k as f32; 16], "singleton round must be identity");
+            assert_eq!(g.published_rounds(), k);
+        }
+        assert_eq!(g.completed_rounds(), 5);
+        // the other engines never touch the stamp
+        let g = AllReduceGroup::new(1, 4);
+        let (net, nodes) = net_with(1);
+        let mut v = vec![1.0; 4];
+        g.allreduce_mean(&mut v, nodes[0], &net).unwrap();
+        assert_eq!(g.published_rounds(), 0);
+    }
+
+    #[test]
+    fn shared_nothing_delegates_and_returns_every_chunk_range() {
+        // with 4 members and 8 chunks every round grants SN_DELEGATE_MAX
+        // ranges; once quiescent, granted == returned (every borrowed
+        // range came back with its stripe) and the means are exact
+        let (n, p, chunks, rounds) = (4usize, 512usize, 8usize, 40usize);
+        let g = Arc::new(
+            AllReduceGroup::new(n, p)
+                .with_chunks(chunks)
+                .with_engine(ReduceEngine::SharedNothing),
+        );
+        let (net, nodes) = net_with(n);
+        let mut hs = Vec::new();
+        for t in 0..n {
+            let g = g.clone();
+            let net = net.clone();
+            let node = nodes[t];
+            hs.push(std::thread::spawn(move || {
+                for r in 0..rounds {
+                    let mut v = vec![(t * rounds + r) as f32; p];
+                    let out = g.allreduce_mean(&mut v, node, &net).unwrap();
+                    assert_eq!(out.contributors, n);
+                    let want =
+                        (0..n).map(|u| (u * rounds + r) as f32).sum::<f32>() / n as f32;
+                    assert!(v.iter().all(|&x| x == want), "round {r}: {} != {want}", v[0]);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let (granted, returned) = g.delegations();
+        assert_eq!(granted, returned, "a borrowed range never came back");
+        assert_eq!(
+            granted,
+            rounds * SN_DELEGATE_MAX,
+            "4 members x 8 chunks must delegate {SN_DELEGATE_MAX} ranges per round"
+        );
+        assert_eq!(g.published_rounds(), rounds as u64);
+    }
+
+    #[test]
+    fn shared_nothing_ring_depth_one_still_exact_under_backpressure() {
+        // depth 1 disables the pipelining: a round-g+1 deposit finds its
+        // ring full until the owner drains round g, exercising the
+        // backpressure wait path on every round; results stay exact
+        let (n, rounds) = (3usize, 60usize);
+        let g = Arc::new(
+            AllReduceGroup::new(n, 32)
+                .with_chunks(4)
+                .with_engine(ReduceEngine::SharedNothing)
+                .with_ring_depth(1),
+        );
+        let (net, nodes) = net_with(n);
+        let mut hs = Vec::new();
+        for t in 0..n {
+            let g = g.clone();
+            let net = net.clone();
+            let node = nodes[t];
+            hs.push(std::thread::spawn(move || {
+                for r in 0..rounds {
+                    let mut v = vec![(t + r) as f32; 32];
+                    g.allreduce_mean(&mut v, node, &net).unwrap();
+                    let want = (0..n).map(|u| (u + r) as f32).sum::<f32>() / n as f32;
+                    assert!(v.iter().all(|&x| x == want), "round {r}");
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(g.completed_rounds(), rounds as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk count must be >= 1")]
+    fn zero_chunks_panics_instead_of_silently_clamping() {
+        // the silent `.max(1)` clamp is gone: degenerate --chunks values
+        // are rejected at config parse time, and a builder violation is a
+        // loud caller bug
+        let _ = AllReduceGroup::new(2, 8).with_chunks(0);
     }
 
     #[test]

@@ -337,7 +337,17 @@ pub fn spawn_shadow_pool_adaptive(
                 workers.push(
                     thread::Builder::new()
                         .name(format!("shadow-{trainer_id}.{k}"))
-                        .spawn(move || worker_loop(k, &core, &ctx))
+                        .spawn(move || {
+                            // --pin-cores: best-effort worker→core affinity,
+                            // spread so co-located trainers don't stack on
+                            // the same cores; never a correctness dependency
+                            if crate::util::affinity::pinning_enabled() {
+                                crate::util::affinity::pin_current_thread(
+                                    trainer_id * nworkers + k,
+                                );
+                            }
+                            worker_loop(k, &core, &ctx)
+                        })
                         .expect("spawn shadow pool worker"),
                 );
             }

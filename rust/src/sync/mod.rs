@@ -68,6 +68,7 @@ pub mod partition;
 pub mod prim;
 pub mod ps;
 pub mod repartition;
+pub mod ring;
 pub mod traffic;
 
 use anyhow::Result;
@@ -206,6 +207,7 @@ pub fn build_group_sized(
     let mut g = AllReduceGroup::new(members, num_params)
         .with_chunks(cfg.allreduce_chunks)
         .with_engine(cfg.reduce_engine)
+        .with_ring_depth(cfg.reduce_ring_depth)
         .with_codec(cfg.partition_codec(partition));
     if cfg.allreduce_timeout_ms > 0 {
         g = g.with_round_timeout(std::time::Duration::from_millis(cfg.allreduce_timeout_ms));

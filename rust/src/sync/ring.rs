@@ -1,0 +1,221 @@
+//! Bounded single-producer / single-consumer rings — the shared-nothing
+//! reduce engine's only cross-shard channel.
+//!
+//! [`SpscRing`] moves *owned* messages between exactly one producer and one
+//! consumer at a time: two cache-line-padded cursors, plain loads/stores
+//! with Acquire/Release publication, no locks and no CAS on the transfer
+//! path. The producer writes the slot, then publishes it with a `Release`
+//! store of `tail`; the consumer observes `tail` with `Acquire`, takes the
+//! slot, then vacates it with a `Release` store of `head`. Neither cursor
+//! is ever touched with `Relaxed` — both are registered with the xtask
+//! Relaxed-ordering lint (see `docs/CONCURRENCY.md`), and the loom model in
+//! `tests/loom_models.rs` proves a `Relaxed` tail store is caught by the
+//! checker's store-buffer semantics.
+//!
+//! **Backpressure instead of blocking**: [`SpscRing::try_push`] hands the
+//! message back when the ring is full and [`SpscRing::try_pop`] returns
+//! `None` when it is empty — the ring itself never waits. Callers decide
+//! what full/empty mean (the reduce engine sleeps on its round condvar and
+//! retries under the round lock, so a drain can never be missed).
+//!
+//! The "single producer / single consumer" contract is per *epoch*, not per
+//! OS thread: the shadow fabric hands the producing and consuming roles
+//! from round to round (round `g`'s depositor at ring position `p` produces
+//! into the same ring as round `g+1`'s), which is sound because successive
+//! role holders are serialized by the group's control mutex — the handoff
+//! itself provides the happens-before edge between them.
+
+use std::cell::UnsafeCell;
+
+use super::prim::{
+    AtomicUsize,
+    Ordering::{Acquire, Release},
+};
+
+/// Pad to a cache line so the producer's `tail` and the consumer's `head`
+/// never false-share — the whole point of a shared-nothing hot path is
+/// that the two sides ping-pong no lines except the slots themselves.
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+/// A bounded SPSC ring of owned `T` messages. Capacity is rounded up to
+/// the next power of two (minimum 1) so cursor wrap is a mask.
+pub struct SpscRing<T> {
+    /// Consumer cursor: index of the next slot to pop. Monotonic; the slot
+    /// is `head & mask`. Stored `Release` (vacating the slot), loaded
+    /// `Acquire` by the producer's full-check.
+    head: CachePadded<AtomicUsize>,
+    /// Producer cursor: index of the next slot to fill. Monotonic; stored
+    /// `Release` (publishing the slot write), loaded `Acquire` by the
+    /// consumer's empty-check.
+    tail: CachePadded<AtomicUsize>,
+    slots: Box<[UnsafeCell<Option<T>>]>,
+    mask: usize,
+}
+
+// SAFETY: the ring moves owned `T` values across threads (producer writes
+// a slot, consumer takes it), so `T: Send` is required and sufficient; the
+// ring never shares a `&T` between threads.
+unsafe impl<T: Send> Send for SpscRing<T> {}
+// SAFETY: concurrent `&SpscRing` use is the SPSC protocol itself: the
+// producer exclusively writes the slot at `tail & mask` before publishing
+// it (Release tail store), the consumer exclusively takes the slot at
+// `head & mask` after observing it published (Acquire tail load), and the
+// full/empty checks keep the two index sets disjoint. With one producer
+// and one consumer at a time, no slot is ever accessed by both sides.
+unsafe impl<T: Send> Sync for SpscRing<T> {}
+
+impl<T> SpscRing<T> {
+    /// A ring holding at most `capacity.next_power_of_two().max(1)`
+    /// queued messages.
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(1);
+        Self {
+            head: CachePadded(AtomicUsize::new(0)),
+            tail: CachePadded(AtomicUsize::new(0)),
+            slots: (0..cap).map(|_| UnsafeCell::new(None)).collect(),
+            mask: cap - 1,
+        }
+    }
+
+    /// Messages the ring can hold before `try_push` reports full.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Messages currently queued (racy by nature; exact only from the
+    /// producer or consumer side itself).
+    pub fn len(&self) -> usize {
+        let tail = self.tail.0.load(Acquire);
+        let head = self.head.0.load(Acquire);
+        tail.wrapping_sub(head)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Producer side: enqueue `v`, or hand it back when the ring is full —
+    /// backpressure is the caller's policy, never a hidden block.
+    pub fn try_push(&self, v: T) -> Result<(), T> {
+        let tail = self.tail.0.load(Acquire);
+        let head = self.head.0.load(Acquire);
+        if tail.wrapping_sub(head) == self.slots.len() {
+            return Err(v);
+        }
+        // SAFETY: this slot is exclusively the producer's. The consumer
+        // only touches slots strictly before `tail` (it Acquire-loads
+        // `tail` and stops there), and the full-check above proved the
+        // consumer has already vacated this slot's previous lap (`head`
+        // advanced past `tail - capacity`, and the Acquire load of `head`
+        // synchronizes with the consumer's Release store after its take).
+        unsafe {
+            *self.slots[tail & self.mask].get() = Some(v);
+        }
+        // publish the slot write; a consumer that Acquire-observes the new
+        // tail also observes the message
+        self.tail.0.store(tail.wrapping_add(1), Release);
+        Ok(())
+    }
+
+    /// Consumer side: dequeue the oldest message, or `None` when empty.
+    pub fn try_pop(&self) -> Option<T> {
+        let head = self.head.0.load(Acquire);
+        let tail = self.tail.0.load(Acquire);
+        if head == tail {
+            return None;
+        }
+        // SAFETY: `head < tail` (mod wrap) means the producer published
+        // this slot — the Acquire load of `tail` synchronizes with the
+        // producer's Release store after its write — and the producer will
+        // not rewrite it until `head` passes it, which only this consumer
+        // does (below, after the take).
+        let v = unsafe { (*self.slots[head & self.mask].get()).take() };
+        debug_assert!(v.is_some(), "published slot was empty");
+        // vacate the slot; a producer that Acquire-observes the new head
+        // also observes the slot is free for reuse
+        self.head.0.store(head.wrapping_add(1), Release);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_capacity_rounding() {
+        let r: SpscRing<u32> = SpscRing::new(3);
+        assert_eq!(r.capacity(), 4, "capacity rounds up to a power of two");
+        for i in 0..4 {
+            r.try_push(i).unwrap();
+        }
+        assert_eq!(r.len(), 4);
+        for i in 0..4 {
+            assert_eq!(r.try_pop(), Some(i));
+        }
+        assert_eq!(r.try_pop(), None);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn full_ring_hands_the_message_back() {
+        let r: SpscRing<String> = SpscRing::new(2);
+        r.try_push("a".into()).unwrap();
+        r.try_push("b".into()).unwrap();
+        let back = r.try_push("c".to_string());
+        assert_eq!(back, Err("c".to_string()), "backpressure returns ownership");
+        assert_eq!(r.try_pop().as_deref(), Some("a"));
+        r.try_push("c".into()).unwrap();
+        assert_eq!(r.try_pop().as_deref(), Some("b"));
+        assert_eq!(r.try_pop().as_deref(), Some("c"));
+    }
+
+    #[test]
+    fn zero_capacity_request_still_holds_one() {
+        let r: SpscRing<u8> = SpscRing::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.try_push(7).unwrap();
+        assert!(r.try_push(8).is_err());
+        assert_eq!(r.try_pop(), Some(7));
+    }
+
+    #[test]
+    fn concurrent_producer_consumer_loses_nothing() {
+        // one producer thread, one consumer thread, 100k messages through a
+        // tiny ring: every message arrives exactly once, in order
+        const N: u64 = 100_000;
+        let r: Arc<SpscRing<u64>> = Arc::new(SpscRing::new(4));
+        let rp = r.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                let mut v = i;
+                while let Err(back) = rp.try_push(v) {
+                    v = back;
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let mut expected = 0u64;
+        while expected < N {
+            match r.try_pop() {
+                Some(v) => {
+                    assert_eq!(v, expected, "FIFO order violated");
+                    expected += 1;
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        producer.join().unwrap();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn owned_payloads_round_trip() {
+        // messages are moved, not copied: a Vec payload survives intact
+        let r: SpscRing<Vec<f32>> = SpscRing::new(2);
+        r.try_push(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(r.try_pop(), Some(vec![1.0, 2.0, 3.0]));
+    }
+}

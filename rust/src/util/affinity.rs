@@ -1,0 +1,90 @@
+//! Best-effort CPU pinning for the shadow/reduce workers (`--pin-cores`).
+//!
+//! The shared-nothing reduce engine's whole premise is that a worker's
+//! deposit banks and mean stripes stay resident in one core's cache;
+//! letting the OS migrate the thread undoes that. `--pin-cores` asks for
+//! a stable thread→core placement via `sched_setaffinity`, issued as a
+//! raw syscall on x86_64 Linux (the crate carries no libc binding) and a
+//! portable no-op everywhere else — pinning is a *hint*, never a
+//! correctness requirement, so failure is reported, not fatal.
+//!
+//! The toggle is process-global: the pool spawn path
+//! (`sync::driver::spawn_shadow_pool_adaptive`) is a public API with many
+//! callers, so the config layer flips [`set_pinning`] once at startup and
+//! workers consult it as they come up.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static PIN_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable worker pinning process-wide (`--pin-cores`).
+/// Flipped once at startup from `RunConfig::pin_cores`; workers read it
+/// as they spawn, so toggling mid-run only affects later pools.
+pub fn set_pinning(on: bool) {
+    PIN_ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Whether `--pin-cores` is in effect for newly spawned workers.
+pub fn pinning_enabled() -> bool {
+    PIN_ENABLED.load(Ordering::SeqCst)
+}
+
+/// Pin the calling thread to `core` (modulo the mask width). Returns
+/// `true` when the kernel accepted the mask, `false` on failure or on
+/// platforms where pinning is a no-op — callers treat both the same way.
+pub fn pin_current_thread(core: usize) -> bool {
+    pin_impl(core)
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64", not(miri)))]
+fn pin_impl(core: usize) -> bool {
+    // a 1024-bit cpu mask, the kernel's default cpu_set_t width
+    let mut mask = [0u64; 16];
+    let core = core % (mask.len() * 64);
+    mask[core / 64] = 1u64 << (core % 64);
+    let ret: i64;
+    // SAFETY: sched_setaffinity(pid=0 → calling thread, len, mask_ptr)
+    // only reads `mask` from this stack frame, writes no user memory, and
+    // reports failure through the return value; rcx/r11 are declared
+    // clobbered because the syscall instruction overwrites them.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr() as usize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64", not(miri))))]
+fn pin_impl(_core: usize) -> bool {
+    false // portable fallback: pinning is advisory, so "didn't" is fine
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toggle_is_observable() {
+        set_pinning(true);
+        assert!(pinning_enabled());
+        set_pinning(false);
+        assert!(!pinning_enabled());
+    }
+
+    #[cfg(all(target_os = "linux", target_arch = "x86_64", not(miri)))]
+    #[test]
+    fn pinning_to_core_zero_succeeds_on_linux() {
+        // core 0 always exists; the call must not crash and should stick
+        assert!(pin_current_thread(0), "sched_setaffinity(0) failed");
+        // out-of-range cores wrap into the mask width rather than erroring
+        let _ = pin_current_thread(usize::MAX);
+    }
+}

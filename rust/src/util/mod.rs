@@ -6,6 +6,7 @@
 //! criterion, proptest, rand) are implemented here at the scale this project
 //! needs. Each submodule is tested in place.
 
+pub mod affinity;
 pub mod bench;
 pub mod cli;
 pub mod json;

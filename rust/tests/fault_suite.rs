@@ -175,8 +175,9 @@ fn run_chaos(cfg: &RunConfig, faults: Arc<FaultPlan>, run: Duration) -> Chaos {
 }
 
 /// The CI chaos matrix entry: run whatever `SHADOWSYNC_FAULT_PLAN` +
-/// `SHADOWSYNC_PROPTEST_SEED` name (defaults: a permanent single-trainer
-/// crash, seed 7) through the full fabric and check both invariants.
+/// `SHADOWSYNC_PROPTEST_SEED` + `SHADOWSYNC_REDUCE_ENGINE` name (defaults:
+/// a permanent single-trainer crash, seed 7, the overlapped engine)
+/// through the full fabric and check both invariants.
 #[test]
 fn chaos_plan_preserves_byte_exactness_and_membership() {
     let spec = std::env::var("SHADOWSYNC_FAULT_PLAN")
@@ -185,6 +186,10 @@ fn chaos_plan_preserves_byte_exactness_and_membership() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(7);
+    let engine = std::env::var("SHADOWSYNC_REDUCE_ENGINE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(RunConfig::default().reduce_engine);
     let faults = Arc::new(FaultPlan::parse(&spec, seed).expect("CI plan must parse"));
     let n = faults.trainers_referenced().max(2);
     // drop plans run an all-EASGD fabric so the push-retry path is what
@@ -200,6 +205,7 @@ fn chaos_plan_preserves_byte_exactness_and_membership() {
         algo: SyncAlgo::Easgd,
         algo_map: (!drops).then(|| "easgd:0-2,ma:3".parse().unwrap()),
         heartbeat_timeout_ms: 40,
+        reduce_engine: engine,
         ..RunConfig::default()
     };
     let c = run_chaos(&cfg, faults.clone(), Duration::from_millis(400));

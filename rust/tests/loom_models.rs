@@ -28,13 +28,17 @@
 //!    terminal goodbye — the proxy-leave runs exactly once);
 //! 6. the resume/depart TOCTOU closure (a tick that measured dark-window
 //!    silence re-validates staleness under the lock a resume stamps
-//!    through, so no schedule departs a resumed trainer).
+//!    through, so no schedule departs a resumed trainer);
+//! 7. the shared-nothing engine's SPSC rings: the real `SpscRing` under a
+//!    producer/consumer race (FIFO, exactly-once, backpressure) and the
+//!    grant → fold → return delegation handshake over a ring pair, plus
+//!    the real engine's two-member pipelined-round scenario.
 //!
-//! Two distilled *mutation* pairs close the loop on checker power: the
-//! pre-epoch-tag claim cursor (the PR-1 generation race) and a
-//! `Relaxed`-weakened dirty bump are each shown to FAIL model checking,
-//! while their fixed twins — the accounting the fabric actually ships —
-//! pass exhaustively.
+//! Three distilled *mutation* pairs close the loop on checker power: the
+//! pre-epoch-tag claim cursor (the PR-1 generation race), a
+//! `Relaxed`-weakened dirty bump, and a `Relaxed`-weakened SPSC tail
+//! publication are each shown to FAIL model checking, while their fixed
+//! twins — the accounting the fabric actually ships — pass exhaustively.
 #![cfg(shadowsync_loom)]
 
 use shadowsync::config::{RunConfig, SyncAlgo};
@@ -44,9 +48,10 @@ use shadowsync::sync::prim::{
     thread, Arc, AtomicU32, AtomicU64, AtomicUsize, Mutex,
     Ordering::{Acquire, Relaxed, Release, SeqCst},
 };
+use shadowsync::sync::ring::SpscRing;
 use shadowsync::sync::{
     AllReduceGroup, DeltaScanCache, HealthController, ParamRange, PartitionPlan,
-    RepartitionController, SyncPsGroup,
+    ReduceEngine, RepartitionController, SyncPsGroup,
 };
 use shadowsync::tensor::HogwildBuffer;
 
@@ -628,4 +633,190 @@ fn relaxed_dirty_bump_is_caught() {
 fn release_dirty_bump_is_safe() {
     // the shipped ordering: the Release bump publishes the store
     model(|| dirty_cell(Release));
+}
+
+// ---------------------------------------------------------------------------
+// Model 7: the shared-nothing engine's SPSC rings
+// ---------------------------------------------------------------------------
+
+/// The real `SpscRing` under a producer/consumer race: three messages
+/// through a capacity-2 ring, so the full/backpressure path (try_push
+/// handing the message back) is explored alongside the publish/consume
+/// protocol. Every schedule must deliver all three messages exactly once,
+/// in order — a lost Release edge on either cursor would surface as a
+/// duplicated or vanished message in some interleaving.
+#[test]
+fn spsc_ring_never_loses_or_duplicates_a_message() {
+    let stats = Model::new().clamp_preemptions(2).check(|| {
+        let ring: Arc<SpscRing<u32>> = Arc::new(SpscRing::new(2));
+        let producer = {
+            let ring = Arc::clone(&ring);
+            thread::spawn(move || {
+                for v in [10u32, 20, 30] {
+                    let mut msg = v;
+                    while let Err(back) = ring.try_push(msg) {
+                        msg = back; // full: backpressure, retry
+                        thread::yield_now();
+                    }
+                }
+            })
+        };
+        let mut got = Vec::new();
+        while got.len() < 3 {
+            match ring.try_pop() {
+                Some(v) => got.push(v),
+                None => thread::yield_now(),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, [10, 20, 30], "FIFO, exactly once");
+        assert!(ring.try_pop().is_none());
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+/// The delegation handshake over a ring pair, exactly as the shared-nothing
+/// owner runs it: two chunk-range grants travel to a borrower over one
+/// ring, the borrower folds each stripe privately and sends it back over
+/// the other, and the owner copies the returned stripes into the result at
+/// their offsets. In every interleaving the assembled vector must hold
+/// each element exactly once — a grant consumed twice, a stripe lost, or a
+/// stripe landing at the wrong offset all corrupt the exact comparison.
+#[test]
+fn delegation_handshake_returns_every_granted_stripe() {
+    let stats = Model::new().clamp_preemptions(2).check(|| {
+        let grants: Arc<SpscRing<(usize, usize)>> = Arc::new(SpscRing::new(2));
+        let returns: Arc<SpscRing<(usize, Vec<f32>)>> = Arc::new(SpscRing::new(2));
+        let borrower = {
+            let grants = Arc::clone(&grants);
+            let returns = Arc::clone(&returns);
+            thread::spawn(move || {
+                let mut served = 0;
+                while served < 2 {
+                    match grants.try_pop() {
+                        Some((lo, hi)) => {
+                            let stripe: Vec<f32> = (lo..hi).map(|i| i as f32 * 0.5).collect();
+                            let mut msg = (lo, stripe);
+                            while let Err(back) = returns.try_push(msg) {
+                                msg = back;
+                                thread::yield_now();
+                            }
+                            served += 1;
+                        }
+                        None => thread::yield_now(),
+                    }
+                }
+            })
+        };
+        // the owner: delegate [0,2) and [2,3), fold its own [3,4) range,
+        // then collect the returned stripes at their offsets
+        grants.try_push((0, 2)).unwrap();
+        grants.try_push((2, 3)).unwrap();
+        let mut out = vec![0.0f32; 4];
+        out[3] = 1.5;
+        let mut collected = 0;
+        while collected < 2 {
+            match returns.try_pop() {
+                Some((lo, stripe)) => {
+                    out[lo..lo + stripe.len()].copy_from_slice(&stripe);
+                    collected += 1;
+                }
+                None => thread::yield_now(),
+            }
+        }
+        borrower.join().unwrap();
+        assert_eq!(out, [0.0, 0.5, 1.0, 1.5], "every stripe landed exactly once");
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+/// Model 1's pipelined two-round scenario through the *shared-nothing*
+/// engine: deposits move over the SPSC rings, the first waiter owns the
+/// fold, round 2's deposits may drain into the depth-2 rings while round
+/// 1 folds, and results publish by epoch-stamped pointer swap. Every
+/// interleaving must still produce the exact means of both rounds.
+#[test]
+fn shared_nothing_rounds_produce_exact_means() {
+    let stats = Model::new().clamp_preemptions(2).check(|| {
+        let mut net = Network::new(None);
+        let node_a = net.add_node(Role::Trainer);
+        let node_b = net.add_node(Role::Trainer);
+        let net = Arc::new(net);
+        let group = Arc::new(
+            AllReduceGroup::new(2, 2)
+                .with_chunks(2)
+                .with_engine(ReduceEngine::SharedNothing),
+        );
+
+        let member_b = {
+            let group = Arc::clone(&group);
+            let net = Arc::clone(&net);
+            thread::spawn(move || {
+                let mut buf = [3.0f32, 5.0];
+                let r1 = group.allreduce_mean(&mut buf, node_b, &net).unwrap();
+                assert_eq!((r1.generation, r1.contributors), (0, 2));
+                assert_eq!(buf, [2.0, 4.0]);
+                buf = [7.0, 11.0];
+                let r2 = group.allreduce_mean(&mut buf, node_b, &net).unwrap();
+                assert_eq!((r2.generation, r2.contributors), (1, 2));
+                assert_eq!(buf, [6.0, 10.0]);
+            })
+        };
+
+        let mut buf = [1.0f32, 3.0];
+        let r1 = group.allreduce_mean(&mut buf, node_a, &net).unwrap();
+        assert_eq!((r1.generation, r1.contributors), (0, 2));
+        assert_eq!(buf, [2.0, 4.0]);
+        buf = [5.0, 9.0];
+        let r2 = group.allreduce_mean(&mut buf, node_a, &net).unwrap();
+        assert_eq!((r2.generation, r2.contributors), (1, 2));
+        assert_eq!(buf, [6.0, 10.0]);
+
+        member_b.join().unwrap();
+        assert_eq!(group.completed_rounds(), 2);
+        assert_eq!(group.published_rounds(), 2);
+    });
+    assert!(stats.executions > 1, "model never branched");
+}
+
+// ---------------------------------------------------------------------------
+// Mutation pair C: the SPSC tail publication's Release ordering
+// ---------------------------------------------------------------------------
+
+/// `SpscRing::try_push` distilled to one slot, with the payload mirrored
+/// as an atomic (the checker's store buffer tracks atomics, not
+/// `UnsafeCell` contents): slot write, then the tail publication with the
+/// ordering under test. A consumer that Acquire-observes the new tail
+/// must observe the slot write behind it — the ring's entire contract.
+fn spsc_publish(tail_order: shadowsync::sync::prim::Ordering) {
+    let slot = Arc::new(AtomicU32::new(0));
+    let tail = Arc::new(AtomicUsize::new(0));
+    let producer = {
+        let slot = Arc::clone(&slot);
+        let tail = Arc::clone(&tail);
+        thread::spawn(move || {
+            slot.store(42, Relaxed); // the slot write
+            tail.store(1, tail_order); // the publication
+        })
+    };
+    if tail.load(Acquire) == 1 {
+        assert_eq!(slot.load(Relaxed), 42, "tail visible but the slot write lost");
+    }
+    producer.join().unwrap();
+}
+
+#[test]
+fn relaxed_spsc_tail_store_is_caught() {
+    // weakened mutant: a Relaxed tail store can land while the slot write
+    // is still buffered, so some schedule pops an unwritten slot
+    assert!(
+        model_finds_bug(|| spsc_publish(Relaxed)),
+        "a Relaxed SPSC tail publication must be caught by the checker"
+    );
+}
+
+#[test]
+fn release_spsc_tail_store_is_safe() {
+    // the shipped ordering: the Release tail store publishes the slot
+    model(|| spsc_publish(Release));
 }

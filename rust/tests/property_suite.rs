@@ -6,9 +6,12 @@ use shadowsync::metrics::{normalized_entropy, Metrics};
 use shadowsync::net::{Network, Role};
 use shadowsync::sim::CostModel;
 use shadowsync::sync::partition::{lpt_contiguous_ranges, lpt_contiguous_ranges_weighted};
-use shadowsync::sync::{DeltaGate, DeltaScanCache, ParamRange, SyncPsGroup, WireCodec};
+use shadowsync::sync::{
+    AllReduceGroup, DeltaGate, DeltaScanCache, ParamRange, ReduceEngine, SyncPsGroup, WireCodec,
+};
 use shadowsync::tensor::HogwildBuffer;
 use shadowsync::util::proptest::check;
+use shadowsync::util::rng::Rng;
 
 #[test]
 fn sim_eps_is_monotone_in_trainers_for_every_mode() {
@@ -347,6 +350,94 @@ fn codec_rounds_keep_bytes_exact_and_residuals_bounded() {
         let cv = group.central.to_vec();
         let gap = shadowsync::tensor::ops::mean_abs_diff(&lv, &cv);
         assert!(gap < 0.35 * amp, "case {}: {codec} stuck at gap {gap} (amp {amp})", g.case);
+    });
+}
+
+#[test]
+fn deterministic_reduce_engines_agree_bit_for_bit() {
+    // For ANY (members, length, chunk count, values): the overlapped,
+    // striped, and shared-nothing engines all produce means bit-identical
+    // to a single-threaded fold of the round's contributions in
+    // ring-position order. The mean depends only on the position -> value
+    // mapping — never on deposit timing, reduce interleaving, delegation
+    // splits, or which engine folds — so swapping the engine can never
+    // change a training run's trajectory.
+    check("reduce-engines-bit-identical", 6, |g| {
+        let n = g.usize_in(2, 5);
+        let p = g.usize_in(1, 257);
+        let chunks = g.usize_in(1, 8).min(p);
+        let rounds = 6usize;
+        let seed = g.rng.next_u64();
+        // association-order-sensitive fractional values, keyed per
+        // (thread, round); the reference fold below reorders each round's
+        // contributions by the ring positions the engine actually assigned
+        let values = move |label: usize, round: usize| -> Vec<f32> {
+            let mut rng = Rng::new(seed ^ ((label as u64) << 32) ^ round as u64);
+            (0..p).map(|_| (rng.next_u64() % 1_000_003) as f32 * 1e-3 - 500.0).collect()
+        };
+        for engine in
+            [ReduceEngine::Overlapped, ReduceEngine::Striped, ReduceEngine::SharedNothing]
+        {
+            let grp = std::sync::Arc::new(
+                AllReduceGroup::new(n, p).with_chunks(chunks).with_engine(engine),
+            );
+            let mut net = Network::new(None);
+            let nodes: Vec<_> = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
+            let net = std::sync::Arc::new(net);
+            let hs: Vec<_> = (0..n)
+                .map(|t| {
+                    let grp = grp.clone();
+                    let net = net.clone();
+                    let node = nodes[t];
+                    std::thread::spawn(move || {
+                        let mut log = Vec::with_capacity(rounds);
+                        for r in 0..rounds {
+                            let v = values(t, r);
+                            let mut buf = v.clone();
+                            let out = grp.allreduce_mean(&mut buf, node, &net).unwrap();
+                            log.push((out.generation, out.position, out.contributors, v, buf));
+                        }
+                        grp.leave();
+                        log
+                    })
+                })
+                .collect();
+            let mut by_gen: std::collections::HashMap<u64, Vec<(usize, Vec<f32>, Vec<f32>)>> =
+                std::collections::HashMap::new();
+            for h in hs {
+                for (gen, pos, parts, v, mean) in h.join().unwrap() {
+                    assert_eq!(parts, n, "case {}: {engine} gen {gen}: wrong count", g.case);
+                    by_gen.entry(gen).or_default().push((pos, v, mean));
+                }
+            }
+            assert_eq!(by_gen.len(), rounds, "case {}: {engine} round drift", g.case);
+            for (gen, mut entries) in by_gen {
+                entries.sort_by_key(|e| e.0);
+                // single-threaded fold in ring-position order — the same
+                // copy -> add -> scale association every engine commits to
+                let mut reference = entries[0].1.clone();
+                for e in &entries[1..] {
+                    for (acc, &x) in reference.iter_mut().zip(&e.1) {
+                        *acc += x;
+                    }
+                }
+                let inv = 1.0 / n as f32;
+                for acc in reference.iter_mut() {
+                    *acc *= inv;
+                }
+                for (pos, _, mean) in &entries {
+                    for (a, b) in mean.iter().zip(&reference) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "case {}: {engine} gen {gen} pos {pos} diverged from the \
+                             position-order fold",
+                            g.case
+                        );
+                    }
+                }
+            }
+        }
     });
 }
 

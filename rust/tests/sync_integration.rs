@@ -284,17 +284,17 @@ fn delta_gated_easgd_metrics_agree_with_nic_counters() {
     assert!(snap.sync_bytes < 30 * group.round_bytes());
 }
 
-/// Churn stress for the overlapped (double-buffered) engine: members leave
-/// and rejoin at staggered points while rounds pipeline across the two
-/// parity banks, and *every* generation's mean must stay bit-identical to a
-/// single-threaded fold of its contributions in ring-position order — the
-/// engine's fixed summation order survives deposit/reduce overlap and
+/// Churn stress, engine-parameterized: members leave and rejoin at
+/// staggered points while rounds pipeline (across the overlapped engine's
+/// two parity banks, or through the shared-nothing engine's depth-2
+/// deposit rings), and *every* generation's mean must stay bit-identical
+/// to a single-threaded fold of its contributions in ring-position order —
+/// the fixed summation order survives deposit/reduce overlap and
 /// membership churn.
-#[test]
-fn churn_with_overlapped_rounds_stays_bit_identical_to_position_order_reference() {
+fn churn_stays_bit_identical(engine: ReduceEngine) {
     let (n, p, chunks) = (6usize, 193usize, 5usize);
-    let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(chunks));
-    assert_eq!(g.engine(), ReduceEngine::Overlapped);
+    let g = Arc::new(AllReduceGroup::new(n, p).with_chunks(chunks).with_engine(engine));
+    assert_eq!(g.engine(), engine);
     let mut net = Network::new(None);
     let nodes: Vec<_> = (0..n).map(|_| net.add_node(Role::Trainer)).collect();
     let net = Arc::new(net);
@@ -375,6 +375,38 @@ fn churn_with_overlapped_rounds_stays_bit_identical_to_position_order_reference(
     // churn must actually have produced shrunken rounds for this test to
     // mean anything (6 staggered leave/rejoin windows over ~60 rounds)
     assert!(shrunk_rounds > 0, "no round ever closed during a churn window");
+}
+
+#[test]
+fn churn_with_overlapped_rounds_stays_bit_identical_to_position_order_reference() {
+    churn_stays_bit_identical(ReduceEngine::Overlapped);
+}
+
+#[test]
+fn churn_with_shared_nothing_rounds_stays_bit_identical_to_position_order_reference() {
+    churn_stays_bit_identical(ReduceEngine::SharedNothing);
+}
+
+/// The engine CI's stress/chaos matrix selects via `SHADOWSYNC_REDUCE_ENGINE`
+/// (defaults to the run's normal default when unset or unparseable).
+fn engine_from_env(default: ReduceEngine) -> ReduceEngine {
+    std::env::var("SHADOWSYNC_REDUCE_ENGINE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The same churn property under whatever engine the CI matrix points at —
+/// release-mode stress rows exercise each engine dimension through here.
+#[test]
+fn churn_with_env_selected_engine_stays_bit_identical() {
+    let engine = engine_from_env(ReduceEngine::Overlapped);
+    if engine == ReduceEngine::SerialMutex {
+        // the serial baseline folds in arrival order by design: the
+        // position-order reference does not apply
+        return;
+    }
+    churn_stays_bit_identical(engine);
 }
 
 /// Acceptance: the adaptive quantile gate + dirty-epoch scan skips keep
@@ -946,9 +978,19 @@ fn codec_fabric_accounts_every_byte_under_gating_and_faults() {
                 .with_push_chunking(chunk, 1e-4)
                 .with_push_retry(8, Duration::from_micros(10)),
         );
+        // the CI matrix rotates the reduce engine through this byte-identity
+        // check too: ring accounting is engine-independent by construction
+        let engine = engine_from_env(ReduceEngine::Overlapped);
         let ma_groups: Vec<Arc<AllReduceGroup>> = ranges[2..]
             .iter()
-            .map(|r| Arc::new(AllReduceGroup::new(2, r.len).with_chunks(4).with_codec(codec)))
+            .map(|r| {
+                Arc::new(
+                    AllReduceGroup::new(2, r.len)
+                        .with_chunks(4)
+                        .with_engine(engine)
+                        .with_codec(codec),
+                )
+            })
             .collect();
         let plan = Arc::new(
             shadowsync::net::fault::FaultPlan::parse("drop:t0@0.05", 0xC0DEC).unwrap(),

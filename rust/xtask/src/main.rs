@@ -50,6 +50,11 @@ const RELAXED_REGISTRY: &[&str] = &[
     "filled",         // quantile-sketch filled watermark
     "heartbeat",      // per-trainer liveness stamps (HealthController)
     "departed",       // lock-claimed roster-exit flags (HealthController)
+    "head",           // SPSC ring consume cursor (SpscRing)
+    "tail",           // SPSC ring publish cursor (SpscRing)
+    "delegated",      // shared-nothing outstanding-grant counter (SnState)
+    "returned",       // shared-nothing folded-stripe return counter (SnState)
+    "published",      // shared-nothing parked-round epoch stamp (SnState)
 ];
 
 /// A deliberately-Relaxed use of a registry identifier, with the argument
