@@ -14,6 +14,7 @@ use std::time::Duration;
 use shadowsync::config::{EmbeddingConfig, ModelMeta};
 use shadowsync::data::{Batch, TeacherModel};
 use shadowsync::embedding::EmbeddingSystem;
+use shadowsync::metrics::Metrics;
 use shadowsync::net::{Network, Role};
 use shadowsync::optim::HogwildAdagrad;
 use shadowsync::runtime::Runtime;
@@ -107,6 +108,7 @@ fn main() {
         let emb_cfg = EmbeddingConfig::default();
         let model = rt.load_model(&meta, &artifacts_dir()).unwrap();
         let mut net = Network::new(None);
+        let metrics = Metrics::new();
         let trainer = net.add_node(Role::Trainer);
         let embeddings = EmbeddingSystem::build(&meta, &emb_cfg, 2, &mut net, 7).unwrap();
         let teacher = TeacherModel::new(&meta, &emb_cfg, 7);
@@ -125,7 +127,14 @@ fn main() {
         let gen_eps = r.throughput(meta.batch as f64);
 
         bench(&format!("{preset}/emb_lookup"), budget, || {
-            embeddings.lookup_batch(&batch.indices, batch.size, &mut io.pooled_host, trainer, &net);
+            embeddings.lookup_batch(
+                &batch.indices,
+                batch.size,
+                &mut io.pooled_host,
+                trainer,
+                &net,
+                &metrics,
+            );
             std::hint::black_box(&io.pooled_host);
         });
 
@@ -141,15 +150,22 @@ fn main() {
         });
 
         bench(&format!("{preset}/emb_update"), budget, || {
-            embeddings.update_batch(&batch.indices, batch.size, &io.grad_emb, trainer, &net);
+            embeddings.update_batch(&batch.indices, batch.size, &io.grad_emb, trainer, &net, &metrics);
         });
 
         let r = bench(&format!("{preset}/full_worker_iteration"), budget, || {
-            embeddings.lookup_batch(&batch.indices, batch.size, &mut io.pooled_host, trainer, &net);
+            embeddings.lookup_batch(
+                &batch.indices,
+                batch.size,
+                &mut io.pooled_host,
+                trainer,
+                &net,
+                &metrics,
+            );
             replica.read_into(&mut io.w_host);
             let loss = model.train_step(&mut io, &batch.dense, &batch.labels).unwrap();
             opt.apply(&replica, &io.grad_w);
-            embeddings.update_batch(&batch.indices, batch.size, &io.grad_emb, trainer, &net);
+            embeddings.update_batch(&batch.indices, batch.size, &io.grad_emb, trainer, &net, &metrics);
             std::hint::black_box(loss);
         });
         println!(

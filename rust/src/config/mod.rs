@@ -438,6 +438,15 @@ pub struct EmbeddingConfig {
     pub learning_rate: f32,
     pub adagrad_eps: f32,
     pub optimizer: EmbOptimizer,
+    /// per-trainer embedding-row cache capacity (`--emb-cache`, rows;
+    /// 0 = caching off, the seed-tier behavior)
+    pub cache_rows: usize,
+    /// lookahead window depth (`--emb-lookahead`, batches prefetched ahead
+    /// of the one being trained; 0 = no prefetch pipeline; requires a cache)
+    pub lookahead: usize,
+    /// row buckets per table (`--emb-buckets`, the unit of placement and
+    /// hot-key rebalancing; 0 = auto-size like the seed tier)
+    pub buckets_per_table: usize,
 }
 
 impl Default for EmbeddingConfig {
@@ -448,6 +457,9 @@ impl Default for EmbeddingConfig {
             learning_rate: 0.04,
             adagrad_eps: 1e-8,
             optimizer: EmbOptimizer::Adagrad,
+            cache_rows: 0,
+            lookahead: 0,
+            buckets_per_table: 0,
         }
     }
 }
@@ -635,6 +647,12 @@ impl RunConfig {
         }
         if self.num_embedding_ps == 0 {
             bail!("need at least one embedding PS");
+        }
+        if self.embedding.lookahead > 0 && self.embedding.cache_rows == 0 {
+            bail!(
+                "--emb-lookahead prefetches into the row cache: it needs a \
+                 positive --emb-cache capacity"
+            );
         }
         if self.sync_partitions == 0 {
             bail!("sync_partitions must be >= 1");
@@ -879,6 +897,19 @@ mod tests {
         c.alpha = 0.5;
         c.allreduce_chunks = 0;
         assert!(c.validate().is_err()); // ring schedule needs >= 1 chunk
+    }
+
+    #[test]
+    fn lookahead_requires_a_cache() {
+        let mut c = RunConfig::default();
+        c.embedding.lookahead = 3;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--emb-cache"), "got: {err}");
+        c.embedding.cache_rows = 1024;
+        c.validate().unwrap();
+        // cache without lookahead is fine (demand caching only)
+        c.embedding.lookahead = 0;
+        c.validate().unwrap();
     }
 
     #[test]

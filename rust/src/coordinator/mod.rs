@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 use crate::config::{ModelMeta, RunConfig, SyncAlgo, SyncMode};
 use crate::data::reader::{Reader, Shard};
 use crate::data::TeacherModel;
-use crate::embedding::EmbeddingSystem;
+use crate::embedding::{EmbCache, EmbeddingSystem};
 use crate::metrics::{EpsMeter, EvalAccum, Metrics, MetricsSnapshot};
 use crate::net::fault::FaultPlan;
 use crate::net::{Network, Role};
@@ -69,6 +69,16 @@ pub struct TrainOutcome {
     /// attempted-but-not-delivered bytes under the fault plan (never on
     /// the NIC counters — the attempted-vs-delivered split stays exact)
     pub dropped_bytes: u64,
+    /// bytes through the embedding-PS tier (lookups, updates, prefetch,
+    /// bucket migrations) — always equal to `metrics.embedding_bytes`
+    pub embedding_bytes: u64,
+    /// embedding-cache hits/misses summed over the trainers' caches
+    /// (both 0 when `--emb-cache` is off)
+    pub emb_cache_hits: u64,
+    pub emb_cache_misses: u64,
+    /// hot-bucket migrations the repartition controller drove on the
+    /// embedding tier
+    pub emb_migrations: u64,
     pub elp: u64,
 }
 
@@ -103,6 +113,8 @@ pub struct Cluster {
     pub health: Option<Arc<HealthController>>,
     pub trainers: Vec<Trainer>,
     pub teacher: Arc<TeacherModel>,
+    /// one embedding-row cache per trainer (`--emb-cache`; empty when off)
+    pub emb_caches: Vec<Arc<EmbCache>>,
 }
 
 /// Build the cluster: roles, placement, artifacts — the master's plan.
@@ -208,18 +220,32 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         }
         _ => None,
     };
-    let trainers = trainer_nodes
+    let trainers: Vec<Trainer> = trainer_nodes
         .iter()
         .enumerate()
         .map(|(i, &node)| Trainer::new(i, node, &model.w0, cfg))
         .collect();
     let teacher = Arc::new(TeacherModel::new(&meta, &cfg.embedding, cfg.data_seed));
+    let net = Arc::new(net);
+    let metrics = Arc::new(Metrics::new());
+    // the controller's dense replans drag the embedding tier along: hot
+    // buckets rebalance in the same breath as hot dense ranges
+    if let Some(c) = &repartition {
+        c.attach_embeddings(embeddings.clone(), net.clone(), metrics.clone());
+    }
+    let emb_caches: Vec<Arc<EmbCache>> = if cfg.embedding.cache_rows > 0 {
+        (0..cfg.num_trainers)
+            .map(|_| Arc::new(EmbCache::new(cfg.embedding.cache_rows)))
+            .collect()
+    } else {
+        Vec::new()
+    };
     Ok(Cluster {
         cfg: cfg.clone(),
         meta,
         model,
-        net: Arc::new(net),
-        metrics: Arc::new(Metrics::new()),
+        net,
+        metrics,
         embeddings,
         plan,
         sync_ps,
@@ -228,6 +254,7 @@ pub fn build(cfg: &RunConfig, runtime: &Runtime) -> Result<Cluster> {
         health,
         trainers,
         teacher,
+        emb_caches,
     })
 }
 
@@ -313,7 +340,7 @@ pub fn train(cluster: &Cluster) -> Result<()> {
                     worker_handles.push(spawn_worker(
                         trainer,
                         w,
-                        env(cluster),
+                        env(cluster, trainer.id),
                         queue.clone(),
                         ForegroundPlan::None,
                     ));
@@ -334,7 +361,7 @@ pub fn train(cluster: &Cluster) -> Result<()> {
                         _ => ForegroundPlan::None,
                     };
                     worker_handles
-                        .push(spawn_worker(trainer, w, env(cluster), queue.clone(), plan));
+                        .push(spawn_worker(trainer, w, env(cluster, trainer.id), queue.clone(), plan));
                 }
             }
             SyncMode::FixedRate { gap } => {
@@ -362,7 +389,7 @@ pub fn train(cluster: &Cluster) -> Result<()> {
                         _ => ForegroundPlan::None,
                     };
                     worker_handles
-                        .push(spawn_worker(trainer, w, env(cluster), queue.clone(), plan));
+                        .push(spawn_worker(trainer, w, env(cluster, trainer.id), queue.clone(), plan));
                 }
             }
         }
@@ -395,13 +422,15 @@ pub fn train(cluster: &Cluster) -> Result<()> {
     }
 }
 
-fn env(cluster: &Cluster) -> WorkerEnv {
+fn env(cluster: &Cluster, trainer_id: usize) -> WorkerEnv {
     WorkerEnv {
         model: cluster.model.clone(),
         embeddings: cluster.embeddings.clone(),
         net: cluster.net.clone(),
         metrics: cluster.metrics.clone(),
         health: cluster.health.clone(),
+        cache: cluster.emb_caches.get(trainer_id).cloned(),
+        lookahead: cluster.cfg.embedding.lookahead,
     }
 }
 
@@ -445,6 +474,10 @@ pub fn finish(cluster: Cluster) -> Result<TrainOutcome> {
         health_demotions: cluster.health.as_ref().map_or(0, |h| h.demotions()),
         health_promotions: cluster.health.as_ref().map_or(0, |h| h.promotions()),
         dropped_bytes: cluster.net.faults().map_or(0, |f| f.dropped_bytes()),
+        embedding_bytes: cluster.net.role_bytes(Role::EmbeddingPs),
+        emb_cache_hits: cluster.emb_caches.iter().map(|c| c.stats().hits).sum(),
+        emb_cache_misses: cluster.emb_caches.iter().map(|c| c.stats().misses).sum(),
+        emb_migrations: cluster.repartition.as_ref().map_or(0, |c| c.embedding_migrations()),
         metrics: m,
         elp: cfg.elp(cluster.meta.batch),
     })
@@ -487,6 +520,7 @@ pub fn evaluate(cluster: &Cluster, n: u64) -> Result<EvalAccum> {
             &mut io.pooled_host,
             trainer_node,
             &cluster.net,
+            &cluster.metrics,
         );
         let out = cluster.model.eval_step(&mut io, &batch.dense, &batch.labels)?;
         accum.add(
@@ -508,24 +542,10 @@ pub fn checkpoint(cluster: &Cluster, dir: &Path) -> Result<()> {
         bytes.extend_from_slice(&v.to_le_bytes());
     }
     std::fs::write(dir.join("w.bin"), &bytes)?;
-    let mut manifest = String::from("table,row_lo,row_hi,dim\n");
-    for shard in cluster.embeddings.shards() {
-        manifest.push_str(&format!(
-            "{},{},{},{}\n",
-            shard.table, shard.row_lo, shard.row_hi, shard.dim
-        ));
-        let mut sb = Vec::new();
-        for r in shard.row_lo..shard.row_hi {
-            for v in shard.row(r) {
-                sb.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        std::fs::write(
-            dir.join(format!("emb_t{}_r{}.bin", shard.table, shard.row_lo)),
-            &sb,
-        )?;
-    }
-    std::fs::write(dir.join("MANIFEST.csv"), manifest)?;
+    // embedding shards + MANIFEST.csv in the sharded tier's own layout
+    // (round-trips through `EmbeddingSystem::load_into` bit-exactly, even
+    // across hot-key rebalances)
+    cluster.embeddings.save(dir)?;
     Ok(())
 }
 

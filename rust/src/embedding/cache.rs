@@ -1,0 +1,251 @@
+//! Per-trainer versioned embedding-row cache.
+//!
+//! A cache entry is a snapshot of one embedding row stamped with two
+//! validity tokens:
+//!
+//! - the **placement version** of the embedding system when the snapshot
+//!   was taken ([`crate::embedding::EmbeddingSystem::placement_version`]) —
+//!   any topology or placement change (hot-bucket rebalance, PS retirement
+//!   or revival) bumps it, invalidating every cached row at once;
+//! - the row's **dirty signature** ([`crate::embedding::TableShard::row_signature`])
+//!   — a Hogwild update to the row bumps its write epoch, so a cached
+//!   snapshot is served only while the *live* signature still equals the
+//!   stamped one (equal signatures bracket a write-free window).
+//!
+//! Snapshots are only inserted when a sandwich read (`sig → copy → sig`)
+//! observes equal signatures, so a cached vector is always a consistent
+//! point-in-time copy of the row — which is what makes the cached lookup
+//! path bit-identical to the uncached one (the property suite's core
+//! invariant). Hits are accumulated into the destination in the same
+//! element order as [`crate::tensor::HogwildBuffer::accumulate_range`].
+//!
+//! The cache is a plain mutex-guarded map with an LRU stamp: lookups are
+//! per-trainer and the map is small (`--emb-cache` rows), so contention is
+//! bounded by the trainer's own worker count. Stats counters are Relaxed —
+//! they are reporting estimators, not synchronization edges.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// One cached row snapshot.
+struct CacheEntry {
+    /// placement version at snapshot time
+    version: u64,
+    /// the row's dirty signature at snapshot time (always `Some`: raceless
+    /// sandwich reads are a precondition of insertion)
+    sig: Option<u64>,
+    vec: Vec<f32>,
+    /// LRU stamp (monotone tick, maintained under the map lock)
+    stamp: u64,
+}
+
+struct CacheInner {
+    map: HashMap<(usize, u32), CacheEntry>,
+    tick: u64,
+}
+
+/// Counter snapshot from [`EmbCache::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// stale entries discarded on access (placement moved or a Hogwild
+    /// write landed on the row since the snapshot)
+    pub invalidations: u64,
+}
+
+impl CacheStats {
+    /// Hits over lookups through the cache (0.0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A bounded, versioned, signature-checked row cache (one per trainer).
+pub struct EmbCache {
+    inner: Mutex<CacheInner>,
+    /// maximum resident rows (`0` disables insertion entirely)
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl EmbCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+        }
+    }
+
+    /// Serve a pooled lookup from the cache if the entry is still valid
+    /// against the live `(version, live_sig)` pair: on a hit the snapshot
+    /// is accumulated into `dst` (element-wise `+=`, the pooling order) and
+    /// `true` is returned. A stale entry is removed and counted as an
+    /// invalidation (plus a miss).
+    pub fn pool_hit(
+        &self,
+        table: usize,
+        row: u32,
+        version: u64,
+        live_sig: Option<u64>,
+        dst: &mut [f32],
+    ) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&(table, row)) {
+            if e.version == version && e.sig.is_some() && e.sig == live_sig {
+                e.stamp = tick;
+                for (o, v) in dst.iter_mut().zip(&e.vec) {
+                    *o += *v;
+                }
+                self.hits.fetch_add(1, Relaxed);
+                return true;
+            }
+            inner.map.remove(&(table, row));
+            self.invalidations.fetch_add(1, Relaxed);
+        }
+        self.misses.fetch_add(1, Relaxed);
+        false
+    }
+
+    /// Whether a *valid* entry for the row is resident, without touching
+    /// the hit/miss counters — the lookahead pipeline's dedup probe.
+    pub fn is_valid(&self, table: usize, row: u32, version: u64, live_sig: Option<u64>) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .map
+            .get(&(table, row))
+            .is_some_and(|e| e.version == version && e.sig.is_some() && e.sig == live_sig)
+    }
+
+    /// Insert a snapshot taken under `(version, sig)`. Refused when the
+    /// cache is disabled (`capacity == 0`) or the snapshot was torn
+    /// (`sig == None` — the sandwich read raced a writer). At capacity the
+    /// least-recently-used entry is evicted.
+    pub fn insert(&self, table: usize, row: u32, version: u64, sig: Option<u64>, vec: &[f32]) {
+        if self.capacity == 0 || sig.is_none() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if inner.map.len() >= self.capacity && !inner.map.contains_key(&(table, row)) {
+            // O(n) victim scan: capacity is a few thousand rows at most and
+            // evictions only happen once the cache is full
+            if let Some(&victim) =
+                inner.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k)
+            {
+                inner.map.remove(&victim);
+            }
+        }
+        inner.map.insert(
+            (table, row),
+            CacheEntry { version, sig, vec: vec.to_vec(), stamp: tick },
+        );
+    }
+
+    /// Resident entries (valid or not — validity is checked on access).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every resident entry (tests / explicit flush).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().map.clear();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Relaxed),
+            misses: self.misses.load(Relaxed),
+            invalidations: self.invalidations.load(Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(cache: &EmbCache, table: usize, row: u32, ver: u64, sig: Option<u64>) -> Option<Vec<f32>> {
+        let mut dst = vec![0f32; 4];
+        cache.pool_hit(table, row, ver, sig, &mut dst).then_some(dst)
+    }
+
+    #[test]
+    fn hit_accumulates_the_snapshot() {
+        let c = EmbCache::new(8);
+        c.insert(1, 7, 3, Some(42), &[1.0, 2.0, 3.0, 4.0]);
+        let mut dst = vec![0.5f32; 4];
+        assert!(c.pool_hit(1, 7, 3, Some(42), &mut dst));
+        assert_eq!(dst, vec![1.5, 2.5, 3.5, 4.5]);
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 0, invalidations: 0 });
+    }
+
+    #[test]
+    fn version_or_signature_mismatch_invalidates() {
+        let c = EmbCache::new(8);
+        c.insert(0, 1, 5, Some(10), &[1.0; 4]);
+        // a Hogwild write moved the row's signature: stale
+        assert!(pool(&c, 0, 1, 5, Some(11)).is_none());
+        assert_eq!(c.stats().invalidations, 1);
+        assert_eq!(c.len(), 0, "stale entries are dropped, not retried");
+        // placement version moved: stale even with a matching signature
+        c.insert(0, 1, 5, Some(10), &[1.0; 4]);
+        assert!(pool(&c, 0, 1, 6, Some(10)).is_none());
+        assert_eq!(c.stats().invalidations, 2);
+        // fresh insert under the new version hits again
+        c.insert(0, 1, 6, Some(10), &[2.0; 4]);
+        assert_eq!(pool(&c, 0, 1, 6, Some(10)).unwrap(), vec![2.0; 4]);
+    }
+
+    #[test]
+    fn torn_snapshots_and_disabled_caches_never_insert() {
+        let c = EmbCache::new(8);
+        c.insert(0, 0, 1, None, &[1.0; 4]); // sandwich read raced a writer
+        assert!(c.is_empty());
+        let off = EmbCache::new(0);
+        off.insert(0, 0, 1, Some(1), &[1.0; 4]);
+        assert!(off.is_empty());
+        assert!(pool(&off, 0, 0, 1, Some(1)).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_keeps_recently_used_rows() {
+        let c = EmbCache::new(2);
+        c.insert(0, 1, 1, Some(1), &[1.0; 4]);
+        c.insert(0, 2, 1, Some(1), &[2.0; 4]);
+        // touch row 1 so row 2 is the LRU victim
+        assert!(pool(&c, 0, 1, 1, Some(1)).is_some());
+        c.insert(0, 3, 1, Some(1), &[3.0; 4]);
+        assert_eq!(c.len(), 2);
+        assert!(c.is_valid(0, 1, 1, Some(1)));
+        assert!(!c.is_valid(0, 2, 1, Some(1)), "LRU row must have been evicted");
+        assert!(c.is_valid(0, 3, 1, Some(1)));
+    }
+
+    #[test]
+    fn is_valid_probe_leaves_stats_untouched() {
+        let c = EmbCache::new(4);
+        c.insert(2, 9, 1, Some(7), &[0.0; 4]);
+        assert!(c.is_valid(2, 9, 1, Some(7)));
+        assert!(!c.is_valid(2, 9, 2, Some(7)));
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+}

@@ -1,16 +1,27 @@
-//! Embedding tables, sharding, and the embedding parameter servers.
+//! Embedding tables, sharding, caching, and the embedding parameter servers.
 //!
 //! Model parallelism exactly as in the paper (§3.1–3.2): the embedding
-//! tables are partitioned into row-range shards, bin-packed onto embedding
-//! PSs by profiled cost, and there is **one** copy of `h` in the system.
-//! Trainer worker threads look up *pooled* embeddings (each shard pools the
-//! rows it owns — "local embedding pooling" — and the trainer sums the
-//! partials) and push gradients back, which the PS applies with row-wise
-//! Adagrad in a lock-free Hogwild fashion. All optimizer state collocates
-//! with the rows.
+//! tables are partitioned into row-range buckets, rendezvous-placed onto
+//! embedding PSs (hot buckets rebalance live by measured load), and there
+//! is **one** copy of `h` in the system. Trainer worker threads look up
+//! *pooled* embeddings (each shard pools the rows it owns — "local
+//! embedding pooling" — and the trainer sums the partials) and push
+//! gradients back, which the PS applies with row-wise Adagrad in a
+//! lock-free Hogwild fashion. All optimizer state collocates with the rows.
+//!
+//! On top of the PS tier sit two trainer-side layers (off by default):
+//! a versioned row cache ([`EmbCache`], `--emb-cache`) whose entries
+//! invalidate on placement changes and Hogwild writes, and a BagPipe-style
+//! lookahead pipeline ([`Lookahead`], `--emb-lookahead`) that prefetches
+//! the union of row ids for the next k batches and dedups duplicate keys
+//! within the window.
 
+pub mod cache;
+pub mod lookahead;
 pub mod ps;
 pub mod table;
 
+pub use cache::{CacheStats, EmbCache};
+pub use lookahead::Lookahead;
 pub use ps::EmbeddingSystem;
 pub use table::TableShard;

@@ -1,5 +1,6 @@
-//! The embedding-PS tier: shard placement + the trainer-facing lookup/update
-//! API.
+//! The sharded embedding-PS tier: rendezvous bucket placement, the
+//! trainer-facing lookup/update API, cache-aware pooling, prefetch, and
+//! live hot-bucket rebalancing.
 //!
 //! In-process realization: a PS is a passive shared object and the "request
 //! handler thread" is the calling trainer thread — identical Hogwild
@@ -8,28 +9,73 @@
 //! this 1-core box. Network traffic is accounted per transfer on the
 //! [`Network`] fabric; queueing/saturation at paper scale is modelled in
 //! `sim/`.
+//!
+//! ## Placement and the version protocol
+//!
+//! Each table is split into fixed contiguous row **buckets**
+//! (`--emb-buckets`, auto-sized by default); a bucket is a [`TableShard`]
+//! and the unit of placement. Initial bucket→PS assignment is rendezvous
+//! hashing ([`crate::placement::rendezvous_pick`] over the PS node ids), so
+//! retiring or reviving a PS moves only the minimal bucket set. Hot-key
+//! rebalancing ([`EmbeddingSystem::rebalance`]) overrides rendezvous with an
+//! LPT pack over measured per-bucket lookup rates — the same
+//! profile-then-bin-pack move the dense repartitioner makes.
+//!
+//! Every placement change bumps a single monotone **placement version**
+//! (Release; readers Acquire via [`EmbeddingSystem::placement_version`]).
+//! Trainer-side caches stamp entries with the version they snapshotted
+//! under and re-validate on every hit, so a topology change invalidates all
+//! cached rows at once without touching the caches themselves.
+//!
+//! ## Byte accounting
+//!
+//! Every wire leg goes through [`Network::try_transfer`] *and* mirrors its
+//! delivered bytes into [`Metrics::record_embedding_bytes`], so
+//! `metrics.embedding_bytes == net.role_bytes(Role::EmbeddingPs)` holds
+//! exactly — under cache hits (no leg at all), prefetch, dedup, bucket
+//! migrations (both endpoints are embedding PSs: counted twice, once per
+//! NIC), and seeded fault-plan drops (a dropped leg moves zero bytes on
+//! both ledgers). Only buckets a batch actually touches are billed.
 
+use std::path::Path;
+use std::sync::atomic::{
+    AtomicBool, AtomicU64,
+    Ordering::{AcqRel, Acquire, Release},
+};
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::config::{EmbeddingConfig, ModelMeta};
+use crate::metrics::Metrics;
 use crate::net::{Network, NodeId, Role};
-use crate::placement::{lpt, Item, Placement};
+use crate::placement::{lpt, rendezvous_pick, Item, Placement};
 
-
+use super::cache::EmbCache;
 use super::table::TableShard;
 
 /// All embedding tables, sharded over the embedding-PS tier.
 pub struct EmbeddingSystem {
-    /// tables[t] = row shards of table t, ordered by row_lo
+    /// tables[t] = row buckets of table t, ordered by row_lo
     tables: Vec<Vec<Arc<TableShard>>>,
     pub dim: usize,
     pub rows_per_table: usize,
     pub indices_per_feature: usize,
+    /// rows per bucket (fixed: bucket k of any table is rows
+    /// `[k*rows_per_shard, (k+1)*rows_per_shard)`)
     rows_per_shard: usize,
     pub ps_nodes: Vec<NodeId>,
+    /// liveness per PS (false after [`Self::retire_ps`]); Release on flips,
+    /// Acquire on reads, same pairing as the shards' host pointers
+    alive: Vec<AtomicBool>,
+    /// build-time placement snapshot (bin_load = rows per PS) — live
+    /// assignment is each shard's `ps_node()`, which rebalancing mutates
     pub placement: Placement,
+    /// monotone placement/topology version; bumped (AcqRel) after any
+    /// bucket migration, retirement or revival, Acquire-read by caches
+    placement_version: AtomicU64,
+    /// rendezvous seed (placement is a pure function of it + the roster)
+    seed: u64,
     lr: f32,
     eps: f32,
 }
@@ -37,9 +83,11 @@ pub struct EmbeddingSystem {
 impl EmbeddingSystem {
     /// Build and place the tables over `num_ps` servers.
     ///
-    /// Each table is split into `shards_per_table` row-range shards; shard
-    /// cost is profiled as expected traffic (uniform here: rows), and shards
-    /// are LPT-bin-packed onto the PSs (§3.1's profiling + bin-packing).
+    /// Each table is split into row buckets and every bucket independently
+    /// rendezvous-picks its host among the PS node ids — deterministic in
+    /// `seed`, minimal-movement under roster changes. `emb.buckets_per_table
+    /// == 0` auto-sizes the bucket count the way the seed tier did
+    /// (`num_ps` clamped to [1, 4]).
     pub fn build(
         meta: &ModelMeta,
         emb: &EmbeddingConfig,
@@ -49,34 +97,30 @@ impl EmbeddingSystem {
     ) -> Result<Self> {
         ensure!(num_ps > 0, "need at least one embedding PS");
         let ps_nodes: Vec<NodeId> = (0..num_ps).map(|_| net.add_node(Role::EmbeddingPs)).collect();
+        let tokens: Vec<u64> = ps_nodes.iter().map(|n| n.0 as u64).collect();
 
-        // shard each table enough that load spreads even with few tables
-        let shards_per_table = num_ps.clamp(1, 4);
+        let buckets_per_table = if emb.buckets_per_table == 0 {
+            num_ps.clamp(1, 4)
+        } else {
+            emb.buckets_per_table
+        };
         let rows = emb.rows_per_table;
-        let rows_per_shard = rows.div_ceil(shards_per_table);
+        let rows_per_shard = rows.div_ceil(buckets_per_table);
 
-        // profiled cost: rows held (uniform traffic assumption)
-        let mut items = Vec::new();
-        for t in 0..meta.num_tables {
-            for s in 0..shards_per_table {
-                items.push(Item {
-                    id: t * shards_per_table + s,
-                    cost: rows_per_shard.min(rows - s * rows_per_shard) as f64,
-                });
-            }
-        }
-        let placement = lpt(&items, num_ps);
-
+        let mut assignment = vec![usize::MAX; meta.num_tables * buckets_per_table];
+        let mut bin_load = vec![0f64; num_ps];
         let mut tables = Vec::with_capacity(meta.num_tables);
         for t in 0..meta.num_tables {
-            let mut shards = Vec::with_capacity(shards_per_table);
-            for s in 0..shards_per_table {
-                let lo = (s * rows_per_shard) as u32;
-                let hi = ((s + 1) * rows_per_shard).min(rows) as u32;
+            let mut shards = Vec::with_capacity(buckets_per_table);
+            for k in 0..buckets_per_table {
+                let lo = (k * rows_per_shard) as u32;
+                let hi = ((k + 1) * rows_per_shard).min(rows) as u32;
                 if lo >= hi {
                     continue;
                 }
-                let ps = placement.assignment[t * shards_per_table + s];
+                let ps = rendezvous_pick(seed, ((t as u64) << 32) | k as u64, &tokens);
+                assignment[t * buckets_per_table + k] = ps;
+                bin_load[ps] += (hi - lo) as f64;
                 shards.push(Arc::new(TableShard::with_optimizer(
                     t, lo, hi, meta.emb_dim, ps_nodes[ps], seed, emb.optimizer,
                 )));
@@ -89,15 +133,20 @@ impl EmbeddingSystem {
             rows_per_table: rows,
             indices_per_feature: emb.indices_per_feature,
             rows_per_shard,
+            alive: (0..num_ps).map(|_| AtomicBool::new(true)).collect(),
             ps_nodes,
-            placement,
+            placement: Placement { assignment, bin_load },
+            placement_version: AtomicU64::new(0),
+            seed,
             lr: emb.learning_rate,
             eps: emb.adagrad_eps,
         })
     }
 
+    /// The bucket owning `row` of `table` (buckets are fixed row ranges, so
+    /// routing is a division — only the *host* of a bucket ever changes).
     #[inline]
-    fn shard_of(&self, table: usize, row: u32) -> &TableShard {
+    pub fn shard_of(&self, table: usize, row: u32) -> &Arc<TableShard> {
         &self.tables[table][row as usize / self.rows_per_shard]
     }
 
@@ -105,11 +154,15 @@ impl EmbeddingSystem {
         self.tables.len()
     }
 
-    /// Sum-pool lookups for a whole batch into `out` = [B, T, D] row-major.
-    ///
-    /// `indices[t]` holds `batch * indices_per_feature` row ids. Traffic:
-    /// per (table, shard) pair touched, the trainer sends the ids and the
-    /// PS returns a partially-pooled [B, D] block.
+    /// Current placement/topology version (Acquire: pairs with the AcqRel
+    /// bump after migrations, so a reader that sees version `v` also sees
+    /// every host pointer the change that published `v` wrote).
+    pub fn placement_version(&self) -> u64 {
+        self.placement_version.load(Acquire)
+    }
+
+    /// Sum-pool lookups for a whole batch into `out` = [B, T, D] row-major,
+    /// billing only the buckets the batch actually touches.
     pub fn lookup_batch(
         &self,
         indices: &[Vec<u32>],
@@ -117,31 +170,114 @@ impl EmbeddingSystem {
         out: &mut [f32],
         trainer: NodeId,
         net: &Network,
+        metrics: &Metrics,
+    ) {
+        self.pooled_lookup(None, indices, batch, out, trainer, net, metrics);
+    }
+
+    /// [`Self::lookup_batch`] through a per-trainer cache: ids with a valid
+    /// cached snapshot are pooled locally (no wire leg); misses are fetched,
+    /// pooled, and — when the snapshot read is raceless — inserted.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lookup_batch_cached(
+        &self,
+        cache: &EmbCache,
+        indices: &[Vec<u32>],
+        batch: usize,
+        out: &mut [f32],
+        trainer: NodeId,
+        net: &Network,
+        metrics: &Metrics,
+    ) {
+        self.pooled_lookup(Some(cache), indices, batch, out, trainer, net, metrics);
+    }
+
+    /// Shared pooling core. Wire accounting per (table, bucket):
+    /// ids-up = missed slots × 4 bytes, pools-down = batch items with ≥ 1
+    /// missed id on the bucket × D × 4 bytes. An id served by the cache
+    /// contributes to neither leg — that is the "bytes saved" the ablation
+    /// reports. A dropped up-leg suppresses the down-leg (the request never
+    /// arrived); pooling itself always proceeds from the shared tables (the
+    /// fabric models traffic, not payload loss, exactly like the dense tier).
+    #[allow(clippy::too_many_arguments)]
+    fn pooled_lookup(
+        &self,
+        cache: Option<&EmbCache>,
+        indices: &[Vec<u32>],
+        batch: usize,
+        out: &mut [f32],
+        trainer: NodeId,
+        net: &Network,
+        metrics: &Metrics,
     ) {
         let (d, l) = (self.dim, self.indices_per_feature);
         let t_count = self.tables.len();
         debug_assert_eq!(indices.len(), t_count);
         debug_assert_eq!(out.len(), batch * t_count * d);
         out.fill(0.0);
+        let ver = self.placement_version();
+        let mut snap = vec![0f32; d];
         for (t, idx) in indices.iter().enumerate() {
             debug_assert_eq!(idx.len(), batch * l);
+            let nb = self.tables[t].len();
+            let mut missed_slots = vec![0u64; nb];
+            let mut missed_items = vec![0u64; nb];
+            let mut last_item = vec![usize::MAX; nb];
             for b in 0..batch {
                 let dst = &mut out[(b * t_count + t) * d..(b * t_count + t + 1) * d];
                 for &row in &idx[b * l..(b + 1) * l] {
-                    self.shard_of(t, row).pool_row_into(row, dst);
+                    let k = row as usize / self.rows_per_shard;
+                    let shard = &self.tables[t][k];
+                    if let Some(c) = cache {
+                        let sig = shard.row_signature(row);
+                        if c.pool_hit(t, row, ver, sig, dst) {
+                            continue; // served locally: no wire leg
+                        }
+                        // miss: sandwich-read a snapshot so the pooled value
+                        // and the cached value are the same bits
+                        snap.fill(0.0);
+                        shard.pool_row_into(row, &mut snap);
+                        let sig_after = shard.row_signature(row);
+                        for (o, v) in dst.iter_mut().zip(&snap) {
+                            *o += *v;
+                        }
+                        if sig.is_some() && sig == sig_after {
+                            c.insert(t, row, ver, sig_after, &snap);
+                        }
+                    } else {
+                        shard.pool_row_into(row, dst);
+                    }
+                    missed_slots[k] += 1;
+                    if last_item[k] != b {
+                        last_item[k] = b;
+                        missed_items[k] += 1;
+                    }
                 }
             }
-            // accounting: ids up, partial pools down, per shard touched
-            for shard in &self.tables[t] {
-                net.transfer(trainer, shard.ps_node, (idx.len() * 4) as u64);
-                net.transfer(shard.ps_node, trainer, (batch * d * 4) as u64);
+            for (k, shard) in self.tables[t].iter().enumerate() {
+                if missed_slots[k] == 0 {
+                    continue;
+                }
+                shard.note_hits(missed_slots[k]);
+                let ps = shard.ps_node();
+                let up = missed_slots[k] * 4;
+                if net.try_transfer(trainer, ps, up).is_ok() {
+                    metrics.record_embedding_bytes(up);
+                    let down = missed_items[k] * (d * 4) as u64;
+                    if net.try_transfer(ps, trainer, down).is_ok() {
+                        metrics.record_embedding_bytes(down);
+                    }
+                }
             }
         }
     }
 
     /// Scatter `grad` = [B, T, D] (gradient w.r.t. the pooled embeddings)
     /// back into the tables with Hogwild row-wise Adagrad. Sum pooling means
-    /// each contributing row receives the pooled gradient unchanged.
+    /// each contributing row receives the pooled gradient unchanged. Wire:
+    /// one [B', D] gradient block per bucket actually touched (B' = batch
+    /// items with ≥ 1 id on the bucket).
+    #[allow(clippy::too_many_arguments)]
     pub fn update_batch(
         &self,
         indices: &[Vec<u32>],
@@ -149,21 +285,262 @@ impl EmbeddingSystem {
         grad: &[f32],
         trainer: NodeId,
         net: &Network,
+        metrics: &Metrics,
     ) {
         let (d, l) = (self.dim, self.indices_per_feature);
         let t_count = self.tables.len();
         debug_assert_eq!(grad.len(), batch * t_count * d);
         for (t, idx) in indices.iter().enumerate() {
+            let nb = self.tables[t].len();
+            let mut touched_items = vec![0u64; nb];
+            let mut last_item = vec![usize::MAX; nb];
             for b in 0..batch {
                 let g = &grad[(b * t_count + t) * d..(b * t_count + t + 1) * d];
                 for &row in &idx[b * l..(b + 1) * l] {
-                    self.shard_of(t, row).update_row(row, g, self.lr, self.eps);
+                    let k = row as usize / self.rows_per_shard;
+                    self.tables[t][k].update_row(row, g, self.lr, self.eps);
+                    if last_item[k] != b {
+                        last_item[k] = b;
+                        touched_items[k] += 1;
+                    }
                 }
             }
-            for shard in &self.tables[t] {
-                net.transfer(trainer, shard.ps_node, (batch * d * 4) as u64);
+            for (k, shard) in self.tables[t].iter().enumerate() {
+                if touched_items[k] == 0 {
+                    continue;
+                }
+                let bytes = touched_items[k] * (d * 4) as u64;
+                if net.try_transfer(trainer, shard.ps_node(), bytes).is_ok() {
+                    metrics.record_embedding_bytes(bytes);
+                }
             }
         }
+    }
+
+    /// Prefetch `keys` = (table, row) pairs into `cache` (the lookahead
+    /// pipeline's fetch). Rows already validly cached are skipped — that is
+    /// the cross-batch dedup. Wire per bucket: ids-up (n × 4) and whole
+    /// rows down (n × D × 4). Returns the number of rows fetched.
+    pub fn prefetch_rows(
+        &self,
+        cache: &EmbCache,
+        keys: &[(usize, u32)],
+        trainer: NodeId,
+        net: &Network,
+        metrics: &Metrics,
+    ) -> usize {
+        let ver = self.placement_version();
+        let mut fetched: Vec<Vec<u64>> =
+            self.tables.iter().map(|b| vec![0u64; b.len()]).collect();
+        let mut total = 0usize;
+        for &(t, row) in keys {
+            let k = row as usize / self.rows_per_shard;
+            let shard = &self.tables[t][k];
+            let sig = shard.row_signature(row);
+            if cache.is_valid(t, row, ver, sig) {
+                continue;
+            }
+            let snap = shard.row(row);
+            let sig_after = shard.row_signature(row);
+            if sig.is_some() && sig == sig_after {
+                cache.insert(t, row, ver, sig_after, &snap);
+            }
+            fetched[t][k] += 1;
+            total += 1;
+        }
+        for (t, per_bucket) in fetched.iter().enumerate() {
+            for (k, &n) in per_bucket.iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                let shard = &self.tables[t][k];
+                shard.note_hits(n);
+                let ps = shard.ps_node();
+                let up = n * 4;
+                if net.try_transfer(trainer, ps, up).is_ok() {
+                    metrics.record_embedding_bytes(up);
+                    let down = n * (self.dim * 4) as u64;
+                    if net.try_transfer(ps, trainer, down).is_ok() {
+                        metrics.record_embedding_bytes(down);
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Rebalance buckets over the live PSs by measured hot-key load (LPT
+    /// over `hits + 1`, the dense repartitioner's profile-then-pack move),
+    /// migrate reassigned buckets over the wire (PS→PS, billed on both
+    /// NICs), halve every hit counter, and bump the placement version.
+    /// Returns the number of buckets moved.
+    pub fn rebalance(&self, net: &Network, metrics: &Metrics) -> usize {
+        let bins: Vec<usize> =
+            (0..self.ps_nodes.len()).filter(|&i| self.alive[i].load(Acquire)).collect();
+        if bins.is_empty() {
+            return 0;
+        }
+        let shards: Vec<&Arc<TableShard>> = self.tables.iter().flatten().collect();
+        let items: Vec<Item> = shards
+            .iter()
+            .enumerate()
+            .map(|(gid, s)| Item { id: gid, cost: (s.hits() + 1) as f64 })
+            .collect();
+        let plan = lpt(&items, bins.len());
+        let mut moved = 0usize;
+        for (gid, shard) in shards.iter().enumerate() {
+            let dst = self.ps_nodes[bins[plan.assignment[gid]]];
+            let src = shard.ps_node();
+            if src != dst {
+                let bytes = shard.bytes();
+                if net.try_transfer(src, dst, bytes).is_ok() {
+                    // both endpoints are embedding PSs: 2× on the role ledger
+                    metrics.record_embedding_bytes(2 * bytes);
+                }
+                shard.set_ps_node(dst);
+                moved += 1;
+            }
+            shard.decay_hits();
+        }
+        if moved > 0 {
+            self.placement_version.fetch_add(1, AcqRel);
+        }
+        moved
+    }
+
+    /// Retire PS `idx` (crash or planned drain): its buckets rendezvous
+    /// onto the survivors — and *only* its buckets move (the minimal set).
+    /// Refused (returns 0) for the last live PS. Always bumps the placement
+    /// version: the roster changed.
+    pub fn retire_ps(&self, idx: usize, net: &Network, metrics: &Metrics) -> usize {
+        let survivors: Vec<usize> = (0..self.ps_nodes.len())
+            .filter(|&i| i != idx && self.alive[i].load(Acquire))
+            .collect();
+        if survivors.is_empty() || !self.alive[idx].load(Acquire) {
+            return 0;
+        }
+        self.alive[idx].store(false, Release);
+        let tokens: Vec<u64> = survivors.iter().map(|&i| self.ps_nodes[i].0 as u64).collect();
+        let retired = self.ps_nodes[idx];
+        let mut moved = 0usize;
+        for (t, buckets) in self.tables.iter().enumerate() {
+            for (k, shard) in buckets.iter().enumerate() {
+                if shard.ps_node() != retired {
+                    continue;
+                }
+                let pick = rendezvous_pick(self.seed, ((t as u64) << 32) | k as u64, &tokens);
+                let dst = self.ps_nodes[survivors[pick]];
+                let bytes = shard.bytes();
+                if net.try_transfer(retired, dst, bytes).is_ok() {
+                    metrics.record_embedding_bytes(2 * bytes);
+                }
+                shard.set_ps_node(dst);
+                moved += 1;
+            }
+        }
+        self.placement_version.fetch_add(1, AcqRel);
+        moved
+    }
+
+    /// Revive PS `idx`: re-run rendezvous over the enlarged roster and pull
+    /// back exactly the buckets the revived token wins — buckets whose
+    /// winner is a surviving token stay where they are (minimal movement on
+    /// add, the mirror of [`Self::retire_ps`]).
+    pub fn restore_ps(&self, idx: usize, net: &Network, metrics: &Metrics) -> usize {
+        if self.alive[idx].swap(true, AcqRel) {
+            return 0; // already live
+        }
+        let live: Vec<usize> =
+            (0..self.ps_nodes.len()).filter(|&i| self.alive[i].load(Acquire)).collect();
+        let tokens: Vec<u64> = live.iter().map(|&i| self.ps_nodes[i].0 as u64).collect();
+        let revived = self.ps_nodes[idx];
+        let mut moved = 0usize;
+        for (t, buckets) in self.tables.iter().enumerate() {
+            for (k, shard) in buckets.iter().enumerate() {
+                let pick = rendezvous_pick(self.seed, ((t as u64) << 32) | k as u64, &tokens);
+                let winner = self.ps_nodes[live[pick]];
+                let src = shard.ps_node();
+                if winner != revived || src == revived {
+                    continue;
+                }
+                let bytes = shard.bytes();
+                if net.try_transfer(src, revived, bytes).is_ok() {
+                    metrics.record_embedding_bytes(2 * bytes);
+                }
+                shard.set_ps_node(revived);
+                moved += 1;
+            }
+        }
+        self.placement_version.fetch_add(1, AcqRel);
+        moved
+    }
+
+    /// Write every shard to `dir` in the checkpoint layout: one
+    /// `emb_t{table}_r{row_lo}.bin` of little-endian f32 rows per bucket,
+    /// indexed by `MANIFEST.csv`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut manifest = String::from("table,row_lo,row_hi,dim\n");
+        for shard in self.shards() {
+            manifest.push_str(&format!(
+                "{},{},{},{}\n",
+                shard.table, shard.row_lo, shard.row_hi, shard.dim
+            ));
+            let mut sb = Vec::with_capacity(shard.num_rows() * shard.dim * 4);
+            for r in shard.row_lo..shard.row_hi {
+                for v in shard.row(r) {
+                    sb.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            std::fs::write(dir.join(format!("emb_t{}_r{}.bin", shard.table, shard.row_lo)), &sb)?;
+        }
+        std::fs::write(dir.join("MANIFEST.csv"), manifest)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`Self::save`] back into the live
+    /// tables, routing rows through the *current* bucketing — a reload
+    /// after any number of rebalances or roster changes restores identical
+    /// table contents (the round-trip test's invariant). Row writes bump
+    /// dirty epochs, so stale cache entries self-invalidate.
+    pub fn load_into(&self, dir: &Path) -> Result<()> {
+        let manifest = std::fs::read_to_string(dir.join("MANIFEST.csv"))
+            .with_context(|| format!("reading embedding manifest in {}", dir.display()))?;
+        for line in manifest.lines().skip(1).filter(|l| !l.is_empty()) {
+            let mut parts = line.split(',');
+            let mut field = |name: &str| -> Result<u64> {
+                parts
+                    .next()
+                    .with_context(|| format!("manifest line {line:?}: missing {name}"))?
+                    .trim()
+                    .parse::<u64>()
+                    .with_context(|| format!("manifest line {line:?}: bad {name}"))
+            };
+            let t = field("table")? as usize;
+            let lo = field("row_lo")? as u32;
+            let hi = field("row_hi")? as u32;
+            let dim = field("dim")? as usize;
+            ensure!(t < self.tables.len(), "manifest table {t} out of range");
+            ensure!(dim == self.dim, "manifest dim {dim} != system dim {}", self.dim);
+            ensure!(hi as usize <= self.rows_per_table && lo < hi, "bad manifest range");
+            let data = std::fs::read(dir.join(format!("emb_t{t}_r{lo}.bin")))?;
+            ensure!(
+                data.len() == (hi - lo) as usize * dim * 4,
+                "emb_t{t}_r{lo}.bin: {} bytes, want {}",
+                data.len(),
+                (hi - lo) as usize * dim * 4
+            );
+            let mut row = vec![0f32; dim];
+            for r in lo..hi {
+                let off = (r - lo) as usize * dim * 4;
+                for (d, v) in row.iter_mut().enumerate() {
+                    let b = off + d * 4;
+                    *v = f32::from_le_bytes(data[b..b + 4].try_into().unwrap());
+                }
+                self.shard_of(t, r).set_row(r, &row);
+            }
+        }
+        Ok(())
     }
 
     /// Total embedding parameters (for ~100M-param e2e sizing).
@@ -194,17 +571,17 @@ mod tests {
         .unwrap()
     }
 
-    fn system(num_ps: usize, rows: usize) -> (EmbeddingSystem, Network, NodeId) {
+    fn system(num_ps: usize, rows: usize) -> (EmbeddingSystem, Network, NodeId, Metrics) {
         let mut net = Network::new(None);
         let trainer = net.add_node(Role::Trainer);
         let emb = EmbeddingConfig { rows_per_table: rows, ..Default::default() };
         let sys = EmbeddingSystem::build(&meta(), &emb, num_ps, &mut net, 11).unwrap();
-        (sys, net, trainer)
+        (sys, net, trainer, Metrics::new())
     }
 
     #[test]
     fn lookup_is_sum_of_rows() {
-        let (sys, net, tr) = system(2, 100);
+        let (sys, net, tr, m) = system(2, 100);
         let batch = 4;
         let l = sys.indices_per_feature;
         let mut indices = vec![vec![0u32; batch * l]; 4];
@@ -214,7 +591,7 @@ mod tests {
             }
         }
         let mut out = vec![0f32; batch * 4 * 8];
-        sys.lookup_batch(&indices, batch, &mut out, tr, &net);
+        sys.lookup_batch(&indices, batch, &mut out, tr, &net, &m);
         // manual check for (b=1, t=2)
         let mut want = vec![0f32; 8];
         for &row in &indices[2][l..2 * l] {
@@ -231,16 +608,16 @@ mod tests {
 
     #[test]
     fn update_then_lookup_sees_change() {
-        let (sys, net, tr) = system(2, 50);
+        let (sys, net, tr, m) = system(2, 50);
         let batch = 4;
         let l = sys.indices_per_feature;
         let indices: Vec<Vec<u32>> = (0..4).map(|_| vec![7u32; batch * l]).collect();
         let mut before = vec![0f32; batch * 4 * 8];
-        sys.lookup_batch(&indices, batch, &mut before, tr, &net);
+        sys.lookup_batch(&indices, batch, &mut before, tr, &net, &m);
         let grad = vec![1.0f32; batch * 4 * 8];
-        sys.update_batch(&indices, batch, &grad, tr, &net);
+        sys.update_batch(&indices, batch, &grad, tr, &net, &m);
         let mut after = vec![0f32; batch * 4 * 8];
-        sys.lookup_batch(&indices, batch, &mut after, tr, &net);
+        sys.lookup_batch(&indices, batch, &mut after, tr, &net, &m);
         // positive gradient -> weights decreased
         assert!(crate::tensor::ops::mean_abs_diff(&before, &after) > 0.0);
         for (b, a) in before.iter().zip(&after) {
@@ -253,7 +630,7 @@ mod tests {
         check("emb-shards", 15, |g| {
             let num_ps = g.usize_in(1, 5);
             let rows = g.usize_in(1, 300);
-            let (sys, _, _) = system(num_ps, rows);
+            let (sys, _, _, _) = system(num_ps, rows);
             for t in 0..sys.num_tables() {
                 let shards = &sys.tables[t];
                 let covered: usize = shards.iter().map(|s| s.num_rows()).sum();
@@ -268,20 +645,155 @@ mod tests {
 
     #[test]
     fn traffic_accounted_on_both_sides() {
-        let (sys, net, tr) = system(2, 64);
+        let (sys, net, tr, m) = system(2, 64);
         let batch = 4;
         let l = sys.indices_per_feature;
         let indices: Vec<Vec<u32>> = (0..4).map(|_| vec![1u32; batch * l]).collect();
         let mut out = vec![0f32; batch * 4 * 8];
-        sys.lookup_batch(&indices, batch, &mut out, tr, &net);
+        sys.lookup_batch(&indices, batch, &mut out, tr, &net, &m);
         assert!(net.role_bytes(Role::EmbeddingPs) > 0);
         assert_eq!(net.role_bytes(Role::Trainer), net.role_bytes(Role::EmbeddingPs));
+        // the metrics ledger mirrors the NIC counters exactly
+        assert_eq!(m.snapshot().embedding_bytes, net.role_bytes(Role::EmbeddingPs));
     }
 
     #[test]
-    fn placement_is_balanced() {
-        let (sys, _, _) = system(3, 999);
-        assert!(sys.placement.imbalance() < 1.5, "imbalance {}", sys.placement.imbalance());
+    fn billing_counts_only_touched_buckets() {
+        // the seed tier billed every bucket of a table per batch; the
+        // regression: a batch whose ids all land in bucket 0 must bill
+        // bucket 0's PS and no other
+        let (sys, net, tr, m) = system(4, 100); // 4 buckets of 25 rows each
+        let batch = 4;
+        let l = sys.indices_per_feature;
+        // all ids in [0, 25): bucket 0 of every table
+        let indices: Vec<Vec<u32>> =
+            (0..4).map(|t| (0..batch * l).map(|k| ((t * 5 + k * 3) % 25) as u32).collect()).collect();
+        let mut out = vec![0f32; batch * 4 * 8];
+        sys.lookup_batch(&indices, batch, &mut out, tr, &net, &m);
+        let grad = vec![1.0f32; batch * 4 * 8];
+        sys.update_batch(&indices, batch, &grad, tr, &net, &m);
+        // per-bucket reference count: per table, lookups move (batch*l) ids
+        // up + batch pooled rows down; updates move batch grad rows up
+        let per_table = (batch * l * 4 + batch * 8 * 4 + batch * 8 * 4) as u64;
+        let want = 4 * per_table;
+        assert_eq!(net.role_bytes(Role::EmbeddingPs), want);
+        assert_eq!(m.snapshot().embedding_bytes, want);
+        // and it all landed on the hosts of the four bucket-0 shards
+        let hosts: Vec<NodeId> = (0..4).map(|t| sys.shard_of(t, 0).ps_node()).collect();
+        for (i, &ps) in sys.ps_nodes.iter().enumerate() {
+            let expected: u64 = hosts
+                .iter()
+                .filter(|&&h| h == ps)
+                .map(|_| (batch * l * 4 + batch * 8 * 4 + batch * 8 * 4) as u64)
+                .sum();
+            assert_eq!(
+                net.tx(ps) + net.rx(ps),
+                expected,
+                "ps {i} billed for untouched buckets"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_lookup_is_bit_identical_and_cheaper() {
+        let (sys, net, tr, m) = system(3, 80);
+        let cache = EmbCache::new(512);
+        let batch = 4;
+        let l = sys.indices_per_feature;
+        // heavy duplication: every item of every table reuses 2 hot rows
+        let indices: Vec<Vec<u32>> =
+            (0..4).map(|t| (0..batch * l).map(|k| ((t + k) % 2) as u32).collect()).collect();
+        let mut plain = vec![0f32; batch * 4 * 8];
+        sys.lookup_batch(&indices, batch, &mut plain, tr, &net, &m);
+        let uncached_bytes = net.role_bytes(Role::EmbeddingPs);
+        let mut cached = vec![0f32; batch * 4 * 8];
+        // first cached pass warms the cache, second is pure hits
+        sys.lookup_batch_cached(&cache, &indices, batch, &mut cached, tr, &net, &m);
+        assert_eq!(plain, cached, "cached pooling must be bit-identical");
+        sys.lookup_batch_cached(&cache, &indices, batch, &mut cached, tr, &net, &m);
+        assert_eq!(plain, cached);
+        let s = cache.stats();
+        assert!(s.hits > 0, "second pass must hit");
+        // the all-hit pass moved zero bytes
+        let warm_bytes = net.role_bytes(Role::EmbeddingPs) - uncached_bytes;
+        assert!(warm_bytes < uncached_bytes, "cache must save wire bytes");
+        assert_eq!(m.snapshot().embedding_bytes, net.role_bytes(Role::EmbeddingPs));
+    }
+
+    #[test]
+    fn rebalance_spreads_buckets_and_bumps_version() {
+        let (sys, net, _, m) = system(3, 999);
+        assert_eq!(sys.placement_version(), 0);
+        let moved = sys.rebalance(&net, &m);
+        // LPT over uniform costs: 12 buckets over 3 PSs -> 4 each
+        let mut per_ps = vec![0usize; sys.ps_nodes.len()];
+        for s in sys.shards() {
+            let i = sys.ps_nodes.iter().position(|&n| n == s.ps_node()).unwrap();
+            per_ps[i] += 1;
+        }
+        assert!(per_ps.iter().all(|&c| c == 4), "unbalanced after rebalance: {per_ps:?}");
+        if moved > 0 {
+            assert_eq!(sys.placement_version(), 1);
+            // migrations are PS<->PS: 2x bytes on both ledgers, still equal
+            assert_eq!(m.snapshot().embedding_bytes, net.role_bytes(Role::EmbeddingPs));
+        }
         assert_eq!(sys.num_params(), (4 * 999 * 8) as u64);
+    }
+
+    #[test]
+    fn retire_moves_only_the_retired_ps_buckets() {
+        let (sys, net, _, m) = system(3, 60);
+        let before: Vec<(usize, u32, NodeId)> =
+            sys.shards().map(|s| (s.table, s.row_lo, s.ps_node())).collect();
+        let retired = sys.ps_nodes[1];
+        let moved = sys.retire_ps(1, &net, &m);
+        let owned_before = before.iter().filter(|(_, _, n)| *n == retired).count();
+        assert_eq!(moved, owned_before, "exactly the retired PS's buckets move");
+        for ((t, lo, old), s) in before.iter().zip(sys.shards()) {
+            assert_eq!((s.table, s.row_lo), (*t, *lo));
+            if *old == retired {
+                assert_ne!(s.ps_node(), retired);
+            } else {
+                assert_eq!(s.ps_node(), *old, "survivor bucket must not move");
+            }
+        }
+        assert_eq!(sys.placement_version(), 1, "roster change must bump the version");
+        assert_eq!(m.snapshot().embedding_bytes, net.role_bytes(Role::EmbeddingPs));
+        // restoring pulls back only buckets the revived token wins
+        let back = sys.restore_ps(1, &net, &m);
+        for ((_, _, old), s) in before.iter().zip(sys.shards()) {
+            if s.ps_node() == retired {
+                assert_eq!(*old, retired, "revival must only reclaim its own buckets");
+            }
+        }
+        assert!(back <= owned_before);
+        assert_eq!(sys.placement_version(), 2);
+    }
+
+    #[test]
+    fn checkpoint_round_trip_is_bit_equal() {
+        let (sys, net, tr, m) = system(2, 40);
+        // perturb away from init so the round trip carries real state
+        let l = sys.indices_per_feature;
+        let indices: Vec<Vec<u32>> = (0..4).map(|t| vec![(t * 3) as u32; 4 * l]).collect();
+        let grad = vec![0.5f32; 4 * 4 * 8];
+        sys.update_batch(&indices, 4, &grad, tr, &net, &m);
+        let golden: Vec<Vec<f32>> = sys
+            .shards()
+            .flat_map(|s| (s.row_lo..s.row_hi).map(|r| s.row(r)).collect::<Vec<_>>())
+            .collect();
+        let dir = std::env::temp_dir().join(format!("ss_emb_ckpt_{}", std::process::id()));
+        sys.save(&dir).unwrap();
+        // reload into a *differently placed* system (more PSs, same seed
+        // tier shape) and compare every row
+        let (sys2, _, _, _) = system(2, 40);
+        sys2.rebalance(&net, &m);
+        sys2.load_into(&dir).unwrap();
+        let restored: Vec<Vec<f32>> = sys2
+            .shards()
+            .flat_map(|s| (s.row_lo..s.row_hi).map(|r| s.row(r)).collect::<Vec<_>>())
+            .collect();
+        assert_eq!(golden, restored, "checkpoint round trip must be bit-equal");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

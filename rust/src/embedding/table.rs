@@ -1,4 +1,24 @@
-//! One row-range shard of an embedding table, with Hogwild row-wise Adagrad.
+//! One row-range bucket of an embedding table, with Hogwild row-wise Adagrad.
+//!
+//! A [`TableShard`] is the unit of placement in the sharded embedding tier:
+//! a fixed contiguous row range whose *host* PS can change at runtime (hot-key
+//! rebalancing migrates whole buckets). Three pieces of per-bucket state
+//! support the caching tier built on top:
+//!
+//! - **row dirty signatures** — the weights buffer tracks per-row write
+//!   epochs ([`HogwildBuffer::with_dirty_epochs`] at `dim` granularity), so
+//!   a cache can stamp an entry with [`TableShard::row_signature`] and later
+//!   know whether any Hogwild update landed on that row in between;
+//! - **an atomic host node** — [`TableShard::ps_node`] /
+//!   [`TableShard::set_ps_node`] with Acquire/Release pairing, so lookups
+//!   racing a live migration bill a coherent endpoint;
+//! - **hot-key hit counters** — [`TableShard::note_hits`] feeds the
+//!   measured per-bucket lookup rates the repartition planner rebalances on.
+
+use std::sync::atomic::{
+    AtomicU64, AtomicUsize,
+    Ordering::{Acquire, Relaxed, Release},
+};
 
 use crate::config::EmbOptimizer;
 use crate::net::NodeId;
@@ -11,9 +31,18 @@ pub struct TableShard {
     pub row_lo: u32,
     pub row_hi: u32,
     pub dim: usize,
-    /// PS node hosting this shard (for traffic accounting)
-    pub ps_node: NodeId,
-    /// [(hi-lo) * dim] embedding weights, Hogwild-shared
+    /// PS node currently hosting this bucket. Atomic because hot-key
+    /// rebalancing migrates buckets live: the rebalancer Release-stores the
+    /// new host *before* bumping the system's placement version, and every
+    /// lookup Acquire-loads it, so traffic is always billed to a node that
+    /// actually held the rows.
+    host: AtomicUsize,
+    /// lookups pooled from this bucket since the last rebalance sweep —
+    /// the hot-key statistic the repartition planner bin-packs on. Relaxed:
+    /// a monotone estimator, not a happens-before edge.
+    hot_hits: AtomicU64,
+    /// [(hi-lo) * dim] embedding weights, Hogwild-shared, with per-row
+    /// dirty-epoch tracking (chunk = one row) for cache coherence
     weights: HogwildBuffer,
     /// [(hi-lo)] row-wise second-moment state (Adagrad sum / RMSProp /
     /// Adam v), collocated with the rows (paper §3.2)
@@ -63,8 +92,9 @@ impl TableShard {
             row_lo,
             row_hi,
             dim,
-            ps_node,
-            weights: HogwildBuffer::from_slice(&w),
+            host: AtomicUsize::new(ps_node.0),
+            hot_hits: AtomicU64::new(0),
+            weights: HogwildBuffer::from_slice(&w).with_dirty_epochs(dim.max(1)),
             accum: HogwildBuffer::zeros(rows),
             moment: match opt {
                 EmbOptimizer::Adam { .. } => Some(HogwildBuffer::zeros(rows * dim)),
@@ -72,6 +102,50 @@ impl TableShard {
             },
             opt,
         }
+    }
+
+    /// PS node currently hosting this bucket.
+    #[inline]
+    pub fn ps_node(&self) -> NodeId {
+        NodeId(self.host.load(Acquire))
+    }
+
+    /// Migrate this bucket to a new host (hot-key rebalancing). Callers
+    /// bill the shard-to-shard wire move and bump the system placement
+    /// version *after* this store.
+    pub fn set_ps_node(&self, ps: NodeId) {
+        self.host.store(ps.0, Release);
+    }
+
+    /// Record `n` pooled-row lookups against this bucket's hot-key counter.
+    #[inline]
+    pub fn note_hits(&self, n: u64) {
+        self.hot_hits.fetch_add(n, Relaxed);
+    }
+
+    /// Lookups recorded since construction, decayed at each rebalance.
+    pub fn hits(&self) -> u64 {
+        self.hot_hits.load(Relaxed)
+    }
+
+    /// Halve the hot-key counter — the same exponential forgetting the
+    /// dense repartitioner applies to its write profile at each rebuild,
+    /// so a bucket that *was* hot but cooled stops dominating the plan.
+    pub fn decay_hits(&self) {
+        let h = self.hot_hits.load(Relaxed);
+        self.hot_hits.store(h / 2, Relaxed);
+    }
+
+    /// Write-epoch signature of one row (`None` never happens in practice —
+    /// shard weights always track dirty epochs — but the Option mirrors
+    /// [`HogwildBuffer::dirty_signature`]). Two equal signatures bracket a
+    /// window in which no tracked update touched the row: the cache's
+    /// validity stamp.
+    #[inline]
+    pub fn row_signature(&self, row: u32) -> Option<u64> {
+        debug_assert!(self.owns(row));
+        let base = (row - self.row_lo) as usize * self.dim;
+        self.weights.dirty_signature(base, base + self.dim)
     }
 
     #[inline]
@@ -134,6 +208,18 @@ impl TableShard {
     pub fn row(&self, row: u32) -> Vec<f32> {
         let base = (row - self.row_lo) as usize * self.dim;
         (0..self.dim).map(|d| self.weights.get(base + d)).collect()
+    }
+
+    /// Overwrite one row (checkpoint restore). Bumps the row's dirty epoch
+    /// (through the buffer's bulk-write path), so caches holding the old
+    /// value invalidate on their next signature check.
+    pub fn set_row(&self, row: u32, values: &[f32]) {
+        debug_assert!(self.owns(row));
+        debug_assert_eq!(values.len(), self.dim);
+        let base = (row - self.row_lo) as usize * self.dim;
+        for (d, &v) in values.iter().enumerate() {
+            self.weights.set(base + d, v);
+        }
     }
 
     /// Total parameter bytes held by this shard (weights + optimizer state).
@@ -219,6 +305,44 @@ mod tests {
         );
         // + first-moment state
         assert_eq!(adam.bytes(), (10 * 4 * 4 + 10 * 4 + 10 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn row_signature_tracks_updates_not_reads() {
+        let s = shard();
+        let sig0 = s.row_signature(12).expect("shard weights track dirty epochs");
+        // pooling is a read: the signature must not move
+        let mut out = vec![0f32; 4];
+        s.pool_row_into(12, &mut out);
+        assert_eq!(s.row_signature(12), Some(sig0));
+        // an update bumps exactly the touched row
+        let other = s.row_signature(13).unwrap();
+        s.update_row(12, &[1.0; 4], 0.1, 1e-8);
+        assert_ne!(s.row_signature(12), Some(sig0));
+        assert_eq!(s.row_signature(13), Some(other), "neighbour row stays clean");
+        // a checkpoint restore bumps it too (caches must refresh)
+        let sig1 = s.row_signature(12).unwrap();
+        s.set_row(12, &[0.5; 4]);
+        assert_ne!(s.row_signature(12), Some(sig1));
+        assert_eq!(s.row(12), vec![0.5; 4]);
+    }
+
+    #[test]
+    fn host_migration_and_hot_hits() {
+        let s = shard();
+        assert_eq!(s.ps_node(), NodeId(0));
+        s.set_ps_node(NodeId(3));
+        assert_eq!(s.ps_node(), NodeId(3));
+        assert_eq!(s.hits(), 0);
+        s.note_hits(9);
+        s.note_hits(1);
+        assert_eq!(s.hits(), 10);
+        s.decay_hits();
+        assert_eq!(s.hits(), 5);
+        s.decay_hits();
+        s.decay_hits();
+        s.decay_hits();
+        assert_eq!(s.hits(), 0, "repeated decay forgets a cooled bucket");
     }
 
     #[test]

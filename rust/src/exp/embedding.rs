@@ -1,0 +1,232 @@
+//! `ablate-embedding`: the sharded embedding tier ablation — row caching
+//! and BagPipe-style lookahead prefetch under real quality runs.
+//!
+//! Three arms over the same stream: the seed path (every lookup round-trips
+//! to the embedding PSs), the versioned row cache (`--emb-cache`), and the
+//! cache fed by the lookahead pipeline (`--emb-lookahead`), which prefetches
+//! the union of row ids for the next k batches and dedups duplicate keys
+//! within the window.
+//!
+//! The invariants are `ensure!`d, not just tabulated:
+//!
+//! 1. **Byte exactness** — `metrics.embedding_bytes` equals the
+//!    embedding-PS NIC counters byte-for-byte in every arm (cache hits and
+//!    prefetches included);
+//! 2. **Bytes saved** — the cached arm moves strictly fewer bytes than the
+//!    seed path and its hit rate is nonzero;
+//! 3. **Quality** — cached/prefetched lookups are bit-identical per batch
+//!    (property-tested in `tests/embedding_suite.rs`), so eval NE stays
+//!    within Hogwild noise of the seed arm.
+
+use anyhow::{ensure, Result};
+
+use crate::config::{RunConfig, SyncAlgo, SyncMode};
+use crate::coordinator::TrainOutcome;
+use crate::runtime::Runtime;
+use crate::sim::CostModel;
+
+use super::{fmt_loss, quality_cfg, run_quality, ExpOpts, Report};
+
+const TRAIN_EXAMPLES: u64 = 90_000;
+const SMOKE_EXAMPLES: u64 = 30_000;
+
+/// Trainer-side row-cache capacity for the cached arms: large enough to
+/// hold the power-law head of every table at the quality-run scale.
+const CACHE_ROWS: usize = 4_096;
+/// Lookahead window (batches) for the prefetched arm.
+const LOOKAHEAD: usize = 3;
+
+/// 3 trainers × 2 Hogwild threads, shadow EASGD — the same quality-run
+/// shape as the other ablations; only the embedding knobs vary per arm.
+fn base_cfg(opts: &ExpOpts) -> RunConfig {
+    let examples = if opts.smoke { SMOKE_EXAMPLES } else { TRAIN_EXAMPLES };
+    quality_cfg(opts, 3, 2, SyncAlgo::Easgd, SyncMode::Shadow, examples)
+}
+
+fn hit_rate(o: &TrainOutcome) -> f64 {
+    let total = o.emb_cache_hits + o.emb_cache_misses;
+    if total == 0 {
+        0.0
+    } else {
+        o.emb_cache_hits as f64 / total as f64
+    }
+}
+
+fn outcome_row(label: &str, o: &TrainOutcome) -> Vec<String> {
+    vec![
+        label.to_string(),
+        fmt_loss(o.train_loss),
+        fmt_loss(o.eval.ne()),
+        format!("{:.0}", o.eps),
+        o.embedding_bytes.to_string(),
+        format!("{:.1}%", 100.0 * hit_rate(o)),
+        o.emb_cache_hits.to_string(),
+    ]
+}
+
+const ROW_HEADERS: [&str; 7] =
+    ["arm", "train loss", "eval NE", "EPS", "emb bytes", "hit rate", "cache hits"];
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let rt = Runtime::cpu()?;
+    let mut r = Report::new(
+        "Embedding ablation: sharded PS tier, row cache, lookahead prefetch",
+        "embedding-tier ablation (no direct paper figure; exercises the §3.1–3.2 \
+         model-parallel tier with BagPipe-style caching)",
+    );
+
+    r.para(&format!(
+        "Three arms over the same one-pass stream (3 trainers × 2 Hogwild threads, \
+         shadow EASGD): the seed path (every lookup round-trips to the rendezvous-\
+         sharded embedding PSs), a {CACHE_ROWS}-row versioned cache per trainer, and \
+         the cache fed by a {LOOKAHEAD}-batch lookahead window that prefetches the \
+         deduped union of upcoming row ids. Cache entries invalidate on placement \
+         changes and on Hogwild writes to the underlying row, so every arm computes \
+         bit-identical pooled embeddings for a given batch."
+    ));
+
+    let seed_cfg = base_cfg(opts);
+    let o_seed = run_quality(&seed_cfg, &rt)?;
+
+    let mut cache_cfg = base_cfg(opts);
+    cache_cfg.embedding.cache_rows = CACHE_ROWS;
+    let o_cache = run_quality(&cache_cfg, &rt)?;
+
+    let mut look_cfg = base_cfg(opts);
+    look_cfg.embedding.cache_rows = CACHE_ROWS;
+    look_cfg.embedding.lookahead = LOOKAHEAD;
+    let o_look = run_quality(&look_cfg, &rt)?;
+
+    for (label, o) in
+        [("seed", &o_seed), ("cache", &o_cache), ("cache+lookahead", &o_look)]
+    {
+        ensure!(
+            o.train_loss.is_finite() && o.eval.ne().is_finite(),
+            "{label} arm did not converge to finite losses"
+        );
+        ensure!(o.metrics.examples > 0, "{label} arm trained no examples");
+        ensure!(
+            o.embedding_bytes == o.metrics.embedding_bytes,
+            "{label} arm broke embedding byte exactness: NIC counters saw {} but \
+             metrics recorded {}",
+            o.embedding_bytes,
+            o.metrics.embedding_bytes
+        );
+    }
+    ensure!(o_seed.emb_cache_hits == 0, "the seed arm has no cache to hit");
+    ensure!(
+        o_cache.emb_cache_hits > 0,
+        "a {CACHE_ROWS}-row cache never hit under a power-law stream"
+    );
+    ensure!(
+        o_cache.embedding_bytes < o_seed.embedding_bytes,
+        "cache hits must shed wire bytes: cached arm moved {} vs seed {}",
+        o_cache.embedding_bytes,
+        o_seed.embedding_bytes
+    );
+    ensure!(
+        o_look.emb_cache_hits > 0,
+        "the lookahead window prefetched nothing the consumer could hit"
+    );
+    let ne_drift = (o_cache.eval.ne() - o_seed.eval.ne()).abs() / o_seed.eval.ne().abs();
+    ensure!(
+        ne_drift < 0.1,
+        "cached arm's NE drifted {:.1}% from the seed path (lookups are \
+         bit-identical; only Hogwild noise may separate them)",
+        100.0 * ne_drift
+    );
+
+    r.table(
+        &ROW_HEADERS,
+        &[
+            outcome_row("seed (uncached)", &o_seed),
+            outcome_row(&format!("cache {CACHE_ROWS}"), &o_cache),
+            outcome_row(&format!("cache + lookahead {LOOKAHEAD}"), &o_look),
+        ],
+    );
+    let saved = o_seed.embedding_bytes.saturating_sub(o_cache.embedding_bytes);
+    r.para(&format!(
+        "Cached arm: {:.1}% hit rate shed {} bytes ({:.1}% of the seed path's {}); \
+         eval NE moved {:.2}% (Hogwild noise — per-batch lookups are bit-identical). \
+         Lookahead arm: {:.1}% hit rate with the prefetch traffic itself on the same \
+         byte ledger. All byte ledgers matched the embedding-PS NIC counters exactly.",
+        100.0 * hit_rate(&o_cache),
+        saved,
+        100.0 * saved as f64 / (o_seed.embedding_bytes.max(1)) as f64,
+        o_seed.embedding_bytes,
+        100.0 * ne_drift,
+        100.0 * hit_rate(&o_look),
+    ));
+
+    // paper-scale EPS under the measured traffic profile: the cost model's
+    // embedding feed cap binds the trainer NIC when every lookup
+    // round-trips, and the measured hit rate buys the headroom back
+    let bytes_per_example =
+        o_seed.embedding_bytes as f64 / o_seed.metrics.examples.max(1) as f64;
+    // the quality testbed's rows are tiny; scale the per-example footprint
+    // to the paper's table sizes (~1000x more rows, same power law) so the
+    // feed cap is visible against a 25 Gbit NIC
+    let paper_bytes = bytes_per_example * 1000.0;
+    let measured_hit = hit_rate(&o_look);
+    let dense = CostModel::paper_scale();
+    let cold = CostModel::paper_scale().with_embedding_traffic(paper_bytes, 0.0);
+    let warm = CostModel::paper_scale().with_embedding_traffic(paper_bytes, measured_hit);
+    let s_dense = dense.simulate(20, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+    let s_cold = cold.simulate(20, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+    let s_warm = warm.simulate(20, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+    ensure!(
+        s_warm.eps >= s_cold.eps,
+        "the cost model must not price a cache hit as extra wire time"
+    );
+    r.para(&format!(
+        "Paper scale (20 trainers × 24 threads, cost model): at {:.0} embedding \
+         bytes/example the uncached tier caps the trainer NIC; the measured \
+         {:.1}% hit rate recovers EPS toward the dense-only ceiling:",
+        paper_bytes,
+        100.0 * measured_hit
+    ));
+    r.table(
+        &["embedding tier", "EPS", "of dense-only"],
+        &[
+            vec!["dense-only ceiling".into(), format!("{:.0}", s_dense.eps), "100.0%".into()],
+            vec![
+                "uncached lookups".into(),
+                format!("{:.0}", s_cold.eps),
+                format!("{:.1}%", 100.0 * s_cold.eps / s_dense.eps),
+            ],
+            vec![
+                format!("measured {:.1}% hit rate", 100.0 * measured_hit),
+                format!("{:.0}", s_warm.eps),
+                format!("{:.1}%", 100.0 * s_warm.eps / s_dense.eps),
+            ],
+        ],
+    );
+    r.para("All invariants held (they are asserted, not just reported).");
+
+    Ok(r.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedding_arm_configs_validate() {
+        let opts = ExpOpts::default();
+        base_cfg(&opts).validate().unwrap();
+
+        let mut cache = base_cfg(&opts);
+        cache.embedding.cache_rows = CACHE_ROWS;
+        cache.validate().unwrap();
+
+        let mut look = base_cfg(&opts);
+        look.embedding.cache_rows = CACHE_ROWS;
+        look.embedding.lookahead = LOOKAHEAD;
+        look.validate().unwrap();
+
+        // lookahead without a cache to prefetch into is rejected
+        let mut bad = base_cfg(&opts);
+        bad.embedding.lookahead = LOOKAHEAD;
+        assert!(bad.validate().is_err());
+    }
+}

@@ -15,6 +15,7 @@
 
 pub mod ablate;
 pub mod calibrate;
+pub mod embedding;
 pub mod faults;
 pub mod fig5;
 pub mod fig6;
@@ -76,6 +77,7 @@ pub const ALL_IDS: &[&str] = &[
     "ablate-repartition",
     "ablate-faults",
     "ablate-codec",
+    "ablate-embedding",
     "calibrate",
 ];
 
@@ -98,6 +100,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "ablate-repartition" => ablate::run_repartition(opts)?,
         "ablate-faults" => faults::run(opts)?,
         "ablate-codec" => ablate::run_codec(opts)?,
+        "ablate-embedding" => embedding::run(opts)?,
         "calibrate" => calibrate::run(opts)?,
         _ => bail!("unknown experiment {id:?}; known: {}", ALL_IDS.join(", ")),
     };

@@ -58,6 +58,18 @@
 //!                                reuses that scan instead of re-reading
 //!                                every element)
 //!
+//! Sharded embedding tier (lookups/updates against the embedding PSs):
+//!   --emb-cache <rows>           trainer-side versioned row cache capacity
+//!                                (entries invalidate on placement changes
+//!                                and Hogwild writes; 0 = no cache)
+//!   --emb-lookahead <k>          BagPipe-style lookahead: prefetch the
+//!                                deduped union of row ids for the next k
+//!                                batches into the row cache (needs
+//!                                --emb-cache; 0 = off)
+//!   --emb-buckets <B>            row-range buckets per table placed by
+//!                                rendezvous hashing over the PS nodes
+//!                                (0 = auto: one per PS, capped at 4)
+//!
 //! Fault injection and health (shadow mode only):
 //!   --fault-plan <spec>          seeded fault schedule, e.g.
 //!                                crash:t2@sweep40,stall:t1@sweep10+8,
@@ -165,6 +177,10 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     };
     cfg.embedding.rows_per_table = args.parse_or("rows", cfg.embedding.rows_per_table)?;
     cfg.embedding.optimizer = args.parse_or("emb-opt", cfg.embedding.optimizer)?;
+    cfg.embedding.cache_rows = args.parse_or("emb-cache", cfg.embedding.cache_rows)?;
+    cfg.embedding.lookahead = args.parse_or("emb-lookahead", cfg.embedding.lookahead)?;
+    cfg.embedding.buckets_per_table =
+        args.parse_or("emb-buckets", cfg.embedding.buckets_per_table)?;
     if let Some(r) = args.get("reader-rate") {
         cfg.reader_rate_limit = Some(r.parse()?);
     }
@@ -231,6 +247,14 @@ fn print_outcome(out: &coordinator::TrainOutcome) {
     }
     println!("sync rounds   {}", out.metrics.syncs);
     println!("sync bytes    {}", out.metrics.sync_bytes);
+    println!("emb bytes     {}", out.embedding_bytes);
+    if out.emb_cache_hits + out.emb_cache_misses > 0 {
+        let total = (out.emb_cache_hits + out.emb_cache_misses) as f64;
+        println!("emb cache     {:.1}% hit rate", 100.0 * out.emb_cache_hits as f64 / total);
+    }
+    if out.emb_migrations > 0 {
+        println!("emb moves     {}", out.emb_migrations);
+    }
     if out.repartitions > 0 {
         println!("repartitions  {}", out.repartitions);
     }
@@ -326,6 +350,11 @@ fn cmd_list() -> Result<()> {
         "fault injection: --fault-plan crash:t2@sweep40,stall:t1@sweep10+8,... \
          --push-retries <N>, --allreduce-timeout-ms <ms>, \
          --heartbeat-timeout-ms <ms>, --health-adaptive (shadow mode only)"
+    );
+    println!(
+        "embedding tier: --emb-cache <rows> (versioned row cache), \
+         --emb-lookahead <k> (prefetch the next k batches' row ids), \
+         --emb-buckets <B> (row-range buckets per table, 0 = auto)"
     );
     Ok(())
 }

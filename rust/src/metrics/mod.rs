@@ -98,6 +98,16 @@ impl Metrics {
         self.sync_push_retries.fetch_add(retries, Relaxed);
     }
 
+    /// Record delivered embedding-tier wire bytes (lookups, updates,
+    /// prefetches, hot-key shard migrations). The embedding tier's
+    /// byte-exactness invariant is `embedding_bytes` == the embedding-PS
+    /// NIC counters, so callers record exactly what `Network::try_transfer`
+    /// delivered — dropped legs record nothing here, matching the zero NIC
+    /// bytes they moved.
+    pub fn record_embedding_bytes(&self, bytes: u64) {
+        self.embedding_bytes.fetch_add(bytes, Relaxed);
+    }
+
     /// Record one completed shadow round of `partition` (driven by the
     /// shadow pool; grows the table on first sight of a partition).
     pub fn record_partition_sync(&self, partition: usize) {
@@ -340,6 +350,15 @@ mod tests {
         assert_eq!(s.sync_chunks_skipped, 5);
         assert_eq!(s.sync_scan_skipped, 5);
         assert!((s.sync_skip_rate() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn embedding_bytes_accumulate() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().embedding_bytes, 0);
+        m.record_embedding_bytes(96);
+        m.record_embedding_bytes(32);
+        assert_eq!(m.snapshot().embedding_bytes, 128);
     }
 
     #[test]

@@ -5,6 +5,16 @@
 //! the same for sync-PS parameter shards). We implement the classic LPT
 //! (longest-processing-time-first) greedy: sort items by cost descending,
 //! always assign to the least-loaded bin — 4/3-optimal for makespan.
+//!
+//! The sharded embedding tier adds *rendezvous* (highest-random-weight)
+//! hashing ([`rendezvous_pick`]): every key independently scores every
+//! live server token and picks the argmax. Unlike modular hashing, when a
+//! token joins only the keys whose new score wins move (to the new token,
+//! from everywhere), and when a token leaves only its own keys move
+//! (redistributed over the survivors) — the minimal-movement property the
+//! embedding cache's placement-version invalidation relies on.
+
+use crate::util::rng::mix3;
 
 /// An item to place: id + profiled cost (e.g. expected lookups/sec × rows).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -60,6 +70,29 @@ pub fn lpt(items: &[Item], bins: usize) -> Placement {
         bin_load[best] += it.cost;
     }
     Placement { assignment, bin_load }
+}
+
+/// Rendezvous (highest-random-weight) pick: score every token against the
+/// key with the repo's deterministic mixer and return the *index into
+/// `tokens`* of the winner. Scores depend only on `(seed, key, token)`, so
+/// adding a token moves exactly the keys the new token wins, and removing
+/// one moves exactly the removed token's keys — nothing else reshuffles.
+///
+/// Ties (astronomically unlikely under a 64-bit mix, but the planner must
+/// be total) break toward the smaller token value, which is itself
+/// deterministic across any reordering of `tokens`.
+pub fn rendezvous_pick(seed: u64, key: u64, tokens: &[u64]) -> usize {
+    assert!(!tokens.is_empty(), "rendezvous over an empty token set");
+    let mut best = 0usize;
+    let mut best_score = (mix3(seed, key, tokens[0]), !tokens[0]);
+    for (i, &tok) in tokens.iter().enumerate().skip(1) {
+        let score = (mix3(seed, key, tok), !tok);
+        if score > best_score {
+            best = i;
+            best_score = score;
+        }
+    }
+    best
 }
 
 /// Split a parameter vector of `len` into `shards` near-equal contiguous
@@ -143,6 +176,85 @@ mod tests {
         assert!(pz.assignment.iter().all(|&b| b < 2));
         assert_eq!(pz.max_load(), 0.0);
         assert_eq!(pz.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_total() {
+        let tokens = [3u64, 11, 42, 7];
+        for key in 0..200u64 {
+            let a = rendezvous_pick(9, key, &tokens);
+            let b = rendezvous_pick(9, key, &tokens);
+            assert_eq!(a, b);
+            assert!(a < tokens.len());
+        }
+        // the pick follows the token, not its position: any permutation of
+        // the token set selects the same winning *token value*
+        let perm = [42u64, 7, 3, 11];
+        for key in 0..200u64 {
+            let w1 = tokens[rendezvous_pick(9, key, &tokens)];
+            let w2 = perm[rendezvous_pick(9, key, &perm)];
+            assert_eq!(w1, w2, "key {key}");
+        }
+    }
+
+    #[test]
+    fn rendezvous_add_moves_keys_only_to_the_new_token() {
+        check("rendezvous-add", 25, |g| {
+            let n = g.usize_in(1, 6);
+            let seed = g.rng.next_u64();
+            let tokens: Vec<u64> = (0..n as u64).map(|i| i * 7 + 1).collect();
+            let mut grown = tokens.clone();
+            let newcomer = 1000 + g.rng.below(1000);
+            grown.push(newcomer);
+            let mut moved = 0usize;
+            for key in 0..500u64 {
+                let before = tokens[rendezvous_pick(seed, key, &tokens)];
+                let after = grown[rendezvous_pick(seed, key, &grown)];
+                if before != after {
+                    assert_eq!(
+                        after, newcomer,
+                        "key {key} moved between two surviving tokens"
+                    );
+                    moved += 1;
+                }
+            }
+            // the newcomer wins roughly 1/(n+1) of the keyspace
+            assert!(moved < 500, "the new token must not capture everything");
+        });
+    }
+
+    #[test]
+    fn rendezvous_remove_moves_only_the_departed_tokens_keys() {
+        check("rendezvous-remove", 25, |g| {
+            let n = g.usize_in(2, 7);
+            let seed = g.rng.next_u64();
+            let tokens: Vec<u64> = (0..n as u64).map(|i| i * 13 + 5).collect();
+            let gone = tokens[g.usize_in(0, n - 1)];
+            let survivors: Vec<u64> =
+                tokens.iter().copied().filter(|&t| t != gone).collect();
+            for key in 0..500u64 {
+                let before = tokens[rendezvous_pick(seed, key, &tokens)];
+                let after = survivors[rendezvous_pick(seed, key, &survivors)];
+                if before != gone {
+                    assert_eq!(before, after, "key {key} moved although its token survived");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rendezvous_spreads_keys_across_tokens() {
+        let tokens: Vec<u64> = (0..4u64).collect();
+        let mut counts = [0usize; 4];
+        for key in 0..4000u64 {
+            counts[rendezvous_pick(0xE0B, key, &tokens)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (500..=1500).contains(&c),
+                "token {i} owns {c}/4000 keys — far from uniform"
+            );
+        }
     }
 
     #[test]

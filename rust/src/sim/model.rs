@@ -84,6 +84,14 @@ pub struct CostModel {
     /// measured push fraction / partition byte shares, which already see
     /// codec-reduced bytes.
     pub ring_codec: WireCodec,
+    /// embedding-tier bytes per example over the trainer NIC (ids up,
+    /// pooled rows down, gradients back), before caching. `0.0` = the
+    /// embedding tier is not priced (the dense-only legacy figures).
+    pub emb_bytes_per_example: f64,
+    /// measured trainer-side row-cache hit rate in `[0, 1]`; the hit
+    /// fraction of `emb_bytes_per_example` is served locally and never
+    /// touches the NIC
+    pub emb_cache_hit_rate: f64,
 }
 
 /// One simulated operating point.
@@ -121,6 +129,8 @@ impl CostModel {
             partition_shares: Vec::new(),
             straggler_factor: 1.0,
             ring_codec: WireCodec::Fp32,
+            emb_bytes_per_example: 0.0,
+            emb_cache_hit_rate: 0.0,
         }
     }
 
@@ -130,6 +140,23 @@ impl CostModel {
     /// measured NIC counters. `Fp32` is bit-identical to the legacy pricing.
     pub fn with_ring_codec(mut self, codec: WireCodec) -> Self {
         self.ring_codec = codec;
+        self
+    }
+
+    /// Price the sharded embedding tier: each example moves
+    /// `bytes_per_example` over the trainer NIC (sparse ids up, pooled
+    /// rows down, gradients back), of which the measured cache `hit_rate`
+    /// fraction is served from the trainer-local row cache. The lookahead
+    /// pipeline prefetches ahead of the consumer, so embedding traffic
+    /// overlaps compute: the trainer is bound by the *slower* of its
+    /// compute rate and the NIC feed rate, not their sum.
+    /// `bytes_per_example = 0` (the default) leaves every figure
+    /// bit-identical to the dense-only pricing.
+    pub fn with_embedding_traffic(mut self, bytes_per_example: f64, hit_rate: f64) -> Self {
+        self.emb_bytes_per_example =
+            if bytes_per_example.is_finite() { bytes_per_example.max(0.0) } else { 0.0 };
+        self.emb_cache_hit_rate =
+            if hit_rate.is_finite() { hit_rate.clamp(0.0, 1.0) } else { 0.0 };
         self
     }
 
@@ -210,9 +237,24 @@ impl CostModel {
         m / (1.0 + (m / c).powf(p)).powf(1.0 / p)
     }
 
-    /// Unconstrained batches/sec of one trainer running m worker threads.
+    /// Batches/sec the trainer NIC can feed with pooled embeddings after
+    /// the cache absorbs its hit fraction (`f64::INFINITY` when the tier
+    /// is unpriced or fully cached — `.min()` with it is a no-op, keeping
+    /// the dense-only pricing bit-identical).
+    fn emb_feed_cap(&self) -> f64 {
+        let bytes_per_batch =
+            self.batch as f64 * self.emb_bytes_per_example * (1.0 - self.emb_cache_hit_rate);
+        if bytes_per_batch <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.nic_bytes_per_sec / bytes_per_batch
+        }
+    }
+
+    /// Unconstrained batches/sec of one trainer running m worker threads,
+    /// bounded by the embedding feed cap when the tier is priced.
     fn trainer_rate(&self, m: usize) -> f64 {
-        self.effective_threads(m) / self.batch_secs
+        (self.effective_threads(m) / self.batch_secs).min(self.emb_feed_cap())
     }
 
     /// Simulate one operating point.
@@ -686,6 +728,31 @@ mod tests {
         let hfr = healthy.simulate(10, 24, Bmuf, SyncMode::FixedRate { gap: 10 }, 0);
         let dfr = degraded.simulate(10, 24, Bmuf, SyncMode::FixedRate { gap: 10 }, 0);
         assert!(dfr.eps < hfr.eps * 0.5, "FR ring EPS {} vs healthy {}", dfr.eps, hfr.eps);
+    }
+
+    #[test]
+    fn embedding_feed_cap_prices_cache_hits_as_recovered_eps() {
+        let base = CostModel::paper_scale();
+        let pb = base.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+        // an unpriced tier, and a fully-cached one, are bit-identical to
+        // the dense-only figures
+        let zero = CostModel::paper_scale().with_embedding_traffic(0.0, 0.0);
+        assert_eq!(zero.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2).eps, pb.eps);
+        let full = CostModel::paper_scale().with_embedding_traffic(1.0e6, 1.0);
+        assert_eq!(full.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2).eps, pb.eps);
+        // heavy uncached traffic binds the trainer NIC: 200 ex x 1 MB over
+        // 3.125 GB/s is ~15.6 batches/s, well under the ~42 compute allows
+        let cold = CostModel::paper_scale().with_embedding_traffic(1.0e6, 0.0);
+        let pc = cold.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+        assert!(pc.eps < pb.eps * 0.5, "cold tier {} !<< dense {}", pc.eps, pb.eps);
+        // a measured 50% hit rate halves the wire bytes and claws EPS back
+        let warm = CostModel::paper_scale().with_embedding_traffic(1.0e6, 0.5);
+        let pw = warm.simulate(10, 24, SyncAlgo::Easgd, SyncMode::Shadow, 2);
+        assert!(pw.eps > pc.eps && pw.eps < pb.eps, "cold {} warm {} dense {}", pc.eps, pw.eps, pb.eps);
+        // garbage knobs degrade to the unpriced tier
+        let junk = CostModel::paper_scale().with_embedding_traffic(f64::NAN, f64::INFINITY);
+        assert_eq!(junk.emb_bytes_per_example, 0.0);
+        assert_eq!(junk.emb_cache_hit_rate, 0.0);
     }
 
     #[test]

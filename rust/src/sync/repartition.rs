@@ -54,6 +54,16 @@ use super::prim::{
 use super::ps::SyncPsGroup;
 use super::{AllReduceGroup, RepartitionCarry};
 
+/// The embedding tier's rebalancing handle: everything the controller
+/// needs to drag hot embedding buckets along with a dense replan. Attached
+/// after cluster build (the tier and the controller are constructed
+/// independently), consulted at every published epoch.
+pub struct EmbHook {
+    pub sys: Arc<crate::embedding::EmbeddingSystem>,
+    pub net: Arc<crate::net::Network>,
+    pub metrics: Arc<crate::metrics::Metrics>,
+}
+
 /// One published generation of the fabric's layout: the plan plus the
 /// per-partition ring fabrics (None for centralized/none partitions),
 /// shared by every trainer that adopts the generation.
@@ -96,6 +106,11 @@ pub struct RepartitionController {
     /// live replacement for `cfg.algo_map`, published by the health
     /// controller (straggler demotions); `None` = run the configured map
     algo_override: Mutex<Option<AlgoMap>>,
+    /// embedding tier to rebalance alongside dense replans (attached after
+    /// build; separate lock from `state` — the hook never locks back)
+    emb: Mutex<Option<EmbHook>>,
+    /// cumulative hot-bucket migrations driven through the hook (stat)
+    emb_moves: AtomicU64,
     state: Mutex<CtrlState>,
 }
 
@@ -124,12 +139,41 @@ impl RepartitionController {
             gen: AtomicU64::new(0),
             adopted_gen: AtomicU64::new(0),
             algo_override: Mutex::new(None),
+            emb: Mutex::new(None),
+            emb_moves: AtomicU64::new(0),
             state: Mutex::new(CtrlState {
                 active: cfg.num_trainers,
                 adopted: cfg.num_trainers,
                 sweeps: 0,
                 epoch: Arc::new(PlanEpoch { gen: 0, plan, groups }),
             }),
+        }
+    }
+
+    /// Attach the embedding tier: from now on, every published epoch —
+    /// periodic, forced, or rejoin — also rebalances hot embedding buckets
+    /// by their measured lookup rates, so the embedding tier follows the
+    /// same "profile, then repack" cadence as the dense ranges.
+    pub fn attach_embeddings(
+        &self,
+        sys: Arc<crate::embedding::EmbeddingSystem>,
+        net: Arc<crate::net::Network>,
+        metrics: Arc<crate::metrics::Metrics>,
+    ) {
+        *self.emb.lock().unwrap() = Some(EmbHook { sys, net, metrics });
+    }
+
+    /// Hot-bucket migrations driven through the attached embedding tier.
+    pub fn embedding_migrations(&self) -> u64 {
+        self.emb_moves.load(Relaxed)
+    }
+
+    /// Rebalance the attached embedding tier (no-op when none is attached).
+    /// Called with `state` held; the hook takes no controller locks back.
+    fn rebalance_embeddings(&self) {
+        if let Some(h) = &*self.emb.lock().unwrap() {
+            let moved = h.sys.rebalance(&h.net, &h.metrics);
+            self.emb_moves.fetch_add(moved as u64, Relaxed);
         }
     }
 
@@ -163,6 +207,7 @@ impl RepartitionController {
             st.epoch = Arc::new(epoch);
             st.adopted = 0;
             st.sweeps = 0;
+            self.rebalance_embeddings();
             // Release: a pool thread that observes the new generation (even
             // without the lock) must also observe the epoch it names
             self.gen.store(st.epoch.gen, Release);
@@ -287,6 +332,7 @@ impl RepartitionController {
         st.epoch = Arc::new(epoch);
         st.adopted = 0;
         st.sweeps = 0;
+        self.rebalance_embeddings();
         self.gen.store(st.epoch.gen, Release);
         true
     }
@@ -312,6 +358,7 @@ impl RepartitionController {
         st.epoch = Arc::new(epoch);
         st.adopted = 1; // the rejoiner itself
         st.sweeps = 0;
+        self.rebalance_embeddings();
         self.adopted_gen.fetch_max(st.epoch.gen, AcqRel);
         self.gen.store(st.epoch.gen, Release);
         Some(st.epoch.clone())
@@ -549,6 +596,57 @@ mod tests {
             let got: Vec<_> = ep.plan.partitions.iter().map(|p| p.range).collect();
             assert_eq!(&got, r0, "forced rebuilds must preserve ranges");
         }
+    }
+
+    #[test]
+    fn published_epochs_rebalance_the_attached_embedding_tier() {
+        let cfg = RunConfig {
+            num_trainers: 1,
+            sync_partitions: 2,
+            shadow_threads: 1,
+            easgd_chunk_elems: 8,
+            repartition_every: 1,
+            algo: SyncAlgo::None,
+            ..RunConfig::default()
+        };
+        let c = ctrl(&cfg, 64);
+        let meta = crate::config::ModelMeta::parse(
+            r#"{
+          "batch": 4, "bot_mlp": [16, 8], "emb_dim": 8,
+          "name": "t", "num_dense": 4, "num_feats": 5, "num_interactions": 10,
+          "num_params": 537, "num_tables": 4, "seed": 1, "top_mlp": [16]
+        }"#,
+        )
+        .unwrap();
+        let mut net = crate::net::Network::new(None);
+        let emb_cfg =
+            crate::config::EmbeddingConfig { rows_per_table: 48, ..Default::default() };
+        let sys = Arc::new(
+            crate::embedding::EmbeddingSystem::build(&meta, &emb_cfg, 2, &mut net, 7).unwrap(),
+        );
+        let net = Arc::new(net);
+        let metrics = Arc::new(crate::metrics::Metrics::new());
+        // load all hot-key mass onto whichever PS hosts >= 2 buckets, so the
+        // LPT repack provably has to move at least one bucket off it
+        let on_ps0 = sys.shards().filter(|s| s.ps_node() == sys.ps_nodes[0]).count();
+        let heavy = if on_ps0 >= 2 { sys.ps_nodes[0] } else { sys.ps_nodes[1] };
+        for s in sys.shards() {
+            if s.ps_node() == heavy {
+                s.note_hits(1_000);
+            }
+        }
+        c.attach_embeddings(sys.clone(), net.clone(), metrics.clone());
+        assert_eq!(c.embedding_migrations(), 0);
+        c.record_sweep(&[]); // every=1, active=1: publishes gen 1 + rebalances
+        assert_eq!(c.generation(), 1);
+        assert!(c.embedding_migrations() >= 1, "hot buckets must migrate with the replan");
+        assert!(sys.placement_version() >= 1, "migrations must bump the placement version");
+        // the migrations kept the embedding byte ledger exact (PS<->PS legs
+        // are counted once per NIC on both ledgers)
+        assert_eq!(
+            metrics.snapshot().embedding_bytes,
+            net.role_bytes(crate::net::Role::EmbeddingPs)
+        );
     }
 
     #[test]

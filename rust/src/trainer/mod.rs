@@ -23,7 +23,7 @@ use anyhow::Result;
 
 use crate::config::RunConfig;
 use crate::data::Batch;
-use crate::embedding::EmbeddingSystem;
+use crate::embedding::{EmbCache, EmbeddingSystem, Lookahead};
 use crate::metrics::Metrics;
 use crate::net::{Network, NodeId};
 use crate::optim::HogwildAdagrad;
@@ -104,6 +104,12 @@ pub struct WorkerEnv {
     /// don't block on sync, so a healthy trainer parked behind a straggler
     /// in a rendezvous round still beats at full rate
     pub health: Option<Arc<HealthController>>,
+    /// this trainer's embedding-row cache (`--emb-cache`; None = the
+    /// uncached seed path), shared by the trainer's worker threads
+    pub cache: Option<Arc<EmbCache>>,
+    /// lookahead window depth (`--emb-lookahead`; 0 = pull batches
+    /// directly off the reader queue, no prefetch)
+    pub lookahead: usize,
 }
 
 /// Spawn one worker thread. `queue` is the trainer's shared reader output.
@@ -127,6 +133,11 @@ pub fn spawn_worker(
             let mut my_iters = 0u64;
             let mut last_collective = 0u64;
             let mut last_decay_sync = 0u64;
+            // BagPipe-style lookahead: this worker's window over the shared
+            // reader queue, prefetching the union of upcoming row ids into
+            // the trainer's cache (validated: lookahead implies a cache)
+            let mut la = (env.lookahead > 0 && env.cache.is_some())
+                .then(|| Lookahead::new(queue.clone(), env.lookahead));
             loop {
                 // a crashed trainer trains nothing: its workers go silent
                 // (no batches, no heartbeats) for the window — or for good
@@ -143,20 +154,28 @@ pub fn spawn_worker(
                     }
                 }
                 // pull next batch; the queue lock is held across recv, which
-                // is fine: idle peers sleep on the same batch source anyway
-                let batch = {
-                    let q = queue.lock().unwrap();
-                    match q.recv() {
-                        Ok(b) => b,
-                        Err(_) => {
-                            // shard exhausted: the silence about to start is
-                            // legitimate — the watchdog must not read it as
-                            // a crash or a straggle
-                            if let Some(h) = &env.health {
-                                h.mark_done(tid);
-                            }
-                            break;
+                // is fine: idle peers sleep on the same batch source anyway.
+                // With a lookahead window the pull goes through it, so the
+                // next k batches' rows prefetch before they are needed.
+                let next = match (la.as_mut(), env.cache.as_deref()) {
+                    (Some(w), Some(cache)) => {
+                        w.next(&env.embeddings, cache, node, &env.net, &env.metrics)
+                    }
+                    _ => {
+                        let q = queue.lock().unwrap();
+                        q.recv().ok()
+                    }
+                };
+                let batch = match next {
+                    Some(b) => b,
+                    None => {
+                        // shard exhausted: the silence about to start is
+                        // legitimate — the watchdog must not read it as
+                        // a crash or a straggle
+                        if let Some(h) = &env.health {
+                            h.mark_done(tid);
                         }
+                        break;
                     }
                 };
                 // an active stall window stretches every iteration, which
@@ -168,13 +187,25 @@ pub fn spawn_worker(
                     // training itself happens under the gate's read lock so
                     // foreground collectives can stop-the-world
                     let _working = gate.working();
-                    env.embeddings.lookup_batch(
-                        &batch.indices,
-                        batch.size,
-                        &mut io.pooled_host,
-                        node,
-                        &env.net,
-                    );
+                    match env.cache.as_deref() {
+                        Some(cache) => env.embeddings.lookup_batch_cached(
+                            cache,
+                            &batch.indices,
+                            batch.size,
+                            &mut io.pooled_host,
+                            node,
+                            &env.net,
+                            &env.metrics,
+                        ),
+                        None => env.embeddings.lookup_batch(
+                            &batch.indices,
+                            batch.size,
+                            &mut io.pooled_host,
+                            node,
+                            &env.net,
+                            &env.metrics,
+                        ),
+                    }
                     replica.read_into(&mut io.w_host);
                     let loss = env.model.train_step(&mut io, &batch.dense, &batch.labels)?;
                     optimizer.apply(&replica, &io.grad_w);
@@ -184,6 +215,7 @@ pub fn spawn_worker(
                         &io.grad_emb,
                         node,
                         &env.net,
+                        &env.metrics,
                     );
                     env.metrics.record_batch(batch.size, loss as f64);
                 }

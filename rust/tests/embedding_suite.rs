@@ -1,0 +1,319 @@
+//! Embedding-tier property/coherence suite: the sharded PS tier, the
+//! versioned row cache, and the lookahead pipeline, locked down end to end.
+//!
+//! The invariants (ISSUE acceptance, asserted bitwise where it matters):
+//!
+//! - cached/prefetched lookups are **bit-identical** to uncached pooling,
+//!   including under concurrent Hogwild updates to disjoint rows;
+//! - rendezvous placement moves only the minimal bucket set on PS
+//!   retirement/revival, and revival converges back to the original
+//!   placement;
+//! - dedup'd lookahead batches pool to the same sums as naive per-batch
+//!   lookups while moving strictly fewer bytes;
+//! - `metrics.embedding_bytes` equals the embedding-PS NIC counters
+//!   exactly under any interleaving of cached lookups, prefetches,
+//!   updates, rebalances, and roster changes;
+//! - a checkpoint written after a hot-key rebalance reloads bit-equal into
+//!   a system with a different roster/bucketing.
+//!
+//! `SHADOWSYNC_EMB_CACHE` (CI stress axis) overrides the cache capacity in
+//! the concurrency test — 0 degrades the cache to a pure pass-through,
+//! which must *still* be bit-identical.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use shadowsync::config::{EmbeddingConfig, ModelMeta};
+use shadowsync::data::Batch;
+use shadowsync::embedding::{EmbCache, EmbeddingSystem, Lookahead};
+use shadowsync::metrics::Metrics;
+use shadowsync::net::{Network, NodeId, Role};
+use shadowsync::util::proptest::check;
+
+fn meta() -> ModelMeta {
+    ModelMeta::parse(
+        r#"{
+      "batch": 4, "bot_mlp": [16, 8], "emb_dim": 8,
+      "name": "t", "num_dense": 4, "num_feats": 5, "num_interactions": 10,
+      "num_params": 537, "num_tables": 4, "seed": 1, "top_mlp": [16]
+    }"#,
+    )
+    .unwrap()
+}
+
+fn system(num_ps: usize, rows: usize, seed: u64) -> (EmbeddingSystem, Network, NodeId, Metrics) {
+    let mut net = Network::new(None);
+    let trainer = net.add_node(Role::Trainer);
+    let emb = EmbeddingConfig { rows_per_table: rows, ..Default::default() };
+    let sys = EmbeddingSystem::build(&meta(), &emb, num_ps, &mut net, seed).unwrap();
+    (sys, net, trainer, Metrics::new())
+}
+
+/// CI stress axis: cache capacity for the concurrency test (0 = cache
+/// effectively off; correctness must not depend on it).
+fn cache_capacity() -> usize {
+    std::env::var("SHADOWSYNC_EMB_CACHE").ok().and_then(|s| s.parse().ok()).unwrap_or(1024)
+}
+
+#[test]
+fn cached_lookups_are_bit_identical_under_concurrent_hogwild_updates() {
+    // 64 rows over 2 PSs = 2 buckets of 32: updater threads hammer rows
+    // [32, 64) (bucket 1) while the main thread pools rows [0, 32)
+    // (bucket 0) — disjoint rows, so every looked-up signature is stable
+    // and the cached result must equal the live tables bit for bit.
+    let (sys, net, tr, m) = system(2, 64, 11);
+    let (sys, net, m) = (Arc::new(sys), Arc::new(net), Arc::new(m));
+    let cache = EmbCache::new(cache_capacity());
+    let (d, l, t_count, batch) = (sys.dim, sys.indices_per_feature, sys.num_tables(), 4);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let updaters: Vec<_> = (0..2)
+        .map(|u| {
+            let (sys, net, m, stop) = (sys.clone(), net.clone(), m.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let idx: Vec<Vec<u32>> = (0..t_count)
+                    .map(|t| {
+                        (0..batch * l).map(|k| (32 + (t * 13 + k * 5 + u) % 32) as u32).collect()
+                    })
+                    .collect();
+                let grad = vec![0.1f32; batch * t_count * d];
+                while !stop.load(Ordering::Relaxed) {
+                    sys.update_batch(&idx, batch, &grad, tr, &net, &m);
+                }
+            })
+        })
+        .collect();
+
+    let idx: Vec<Vec<u32>> = (0..t_count)
+        .map(|t| (0..batch * l).map(|k| ((t * 31 + k * 7) % 32) as u32).collect())
+        .collect();
+    let mut plain = vec![0f32; batch * t_count * d];
+    let mut cached = vec![0f32; batch * t_count * d];
+    for _ in 0..50 {
+        sys.lookup_batch(&idx, batch, &mut plain, tr, &net, &m);
+        sys.lookup_batch_cached(&cache, &idx, batch, &mut cached, tr, &net, &m);
+        for (p, c) in plain.iter().zip(&cached) {
+            assert_eq!(
+                p.to_bits(),
+                c.to_bits(),
+                "cached pooling diverged from the live tables under concurrent updates"
+            );
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    for u in updaters {
+        u.join().unwrap();
+    }
+    // the byte ledger stayed exact through the concurrent churn
+    assert_eq!(m.snapshot().embedding_bytes, net.role_bytes(Role::EmbeddingPs));
+}
+
+#[test]
+fn roster_changes_move_only_the_minimal_bucket_set() {
+    check("emb-roster-minimal", 15, |g| {
+        let num_ps = g.usize_in(3, 5);
+        let rows = g.usize_in(40, 400);
+        let (sys, net, _tr, m) = system(num_ps, rows, g.rng.next_u64());
+        let hosts: Vec<NodeId> = sys.shards().map(|s| s.ps_node()).collect();
+        let idx = g.usize_in(0, num_ps - 1);
+        let retired = sys.ps_nodes[idx];
+        let v0 = sys.placement_version();
+        sys.retire_ps(idx, &net, &m);
+        for (s, &h0) in sys.shards().zip(&hosts) {
+            if h0 == retired {
+                assert_ne!(s.ps_node(), retired, "retired PS still hosts a bucket");
+            } else {
+                assert_eq!(s.ps_node(), h0, "a surviving PS's bucket moved on retire");
+            }
+        }
+        assert!(sys.placement_version() > v0, "a roster change must bump the version");
+        // revival pulls back exactly the buckets the revived token wins —
+        // with no rebalance in between, that is the original rendezvous
+        // placement, bucket for bucket
+        sys.restore_ps(idx, &net, &m);
+        for (s, &h0) in sys.shards().zip(&hosts) {
+            assert_eq!(s.ps_node(), h0, "restore did not converge to the rendezvous placement");
+        }
+        assert_eq!(m.snapshot().embedding_bytes, net.role_bytes(Role::EmbeddingPs));
+    });
+}
+
+/// A batch whose ids all land in the 8-row power-law head, varying with
+/// `salt` so consecutive batches overlap heavily but are not identical.
+fn hot_batch(m: &ModelMeta, emb: &EmbeddingConfig, salt: u32) -> Batch {
+    let mut b = Batch::empty(m, emb);
+    for (t, idx) in b.indices.iter_mut().enumerate() {
+        for (k, v) in idx.iter_mut().enumerate() {
+            *v = (t as u32 * 5 + k as u32 * 3 + salt) % 8;
+        }
+    }
+    b
+}
+
+#[test]
+fn lookahead_dedup_pools_the_same_sums_with_fewer_bytes() {
+    let m = meta();
+    let emb = EmbeddingConfig { rows_per_table: 64, ..Default::default() };
+    let batches: Vec<Batch> = (0..6).map(|i| hot_batch(&m, &emb, i)).collect();
+    let batch = m.batch;
+    let out_len = batch * m.num_tables * m.emb_dim;
+
+    // naive arm: every batch round-trips to the PSs
+    let mut net_n = Network::new(None);
+    let tr_n = net_n.add_node(Role::Trainer);
+    let sys_n = EmbeddingSystem::build(&m, &emb, 2, &mut net_n, 21).unwrap();
+    let m_n = Metrics::new();
+    let mut naive_out = Vec::new();
+    for b in &batches {
+        let mut out = vec![0f32; out_len];
+        sys_n.lookup_batch(&b.indices, batch, &mut out, tr_n, &net_n, &m_n);
+        naive_out.push(out);
+    }
+
+    // lookahead arm: same seed (identical initial tables), batches flow
+    // through a depth-2 window that prefetches the deduped id union
+    let mut net_l = Network::new(None);
+    let tr_l = net_l.add_node(Role::Trainer);
+    let sys_l = EmbeddingSystem::build(&m, &emb, 2, &mut net_l, 21).unwrap();
+    let m_l = Metrics::new();
+    let cache = EmbCache::new(256);
+    let (tx, rx) = channel();
+    for b in &batches {
+        tx.send(b.clone()).unwrap();
+    }
+    drop(tx);
+    let mut la = Lookahead::new(Arc::new(Mutex::new(rx)), 2);
+    let mut i = 0;
+    while let Some(b) = la.next(&sys_l, &cache, tr_l, &net_l, &m_l) {
+        let mut out = vec![0f32; out_len];
+        sys_l.lookup_batch_cached(&cache, &b.indices, batch, &mut out, tr_l, &net_l, &m_l);
+        for (x, y) in out.iter().zip(&naive_out[i]) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "lookahead batch {i} pooled different bits than the naive path"
+            );
+        }
+        i += 1;
+    }
+    assert_eq!(i, batches.len(), "the window must drain every batch");
+    assert!(la.prefetched() > 0, "the window never prefetched");
+
+    // both ledgers exact, and the deduped pipeline moved strictly fewer
+    // bytes than six naive round-trips over the same hot rows
+    assert_eq!(m_n.snapshot().embedding_bytes, net_n.role_bytes(Role::EmbeddingPs));
+    assert_eq!(m_l.snapshot().embedding_bytes, net_l.role_bytes(Role::EmbeddingPs));
+    assert!(
+        net_l.role_bytes(Role::EmbeddingPs) < net_n.role_bytes(Role::EmbeddingPs),
+        "dedup'd lookahead moved {} bytes, naive {}",
+        net_l.role_bytes(Role::EmbeddingPs),
+        net_n.role_bytes(Role::EmbeddingPs)
+    );
+}
+
+#[test]
+fn byte_ledger_is_exact_under_random_cache_prefetch_and_migration_traffic() {
+    check("emb-byte-exact", 10, |g| {
+        let num_ps = g.usize_in(2, 4);
+        let rows = g.usize_in(32, 200);
+        let (sys, net, tr, m) = system(num_ps, rows, g.rng.next_u64());
+        let cache = EmbCache::new(g.usize_in(0, 64));
+        let (d, l, t_count, batch) = (sys.dim, sys.indices_per_feature, sys.num_tables(), 4);
+        let mut out = vec![0f32; batch * t_count * d];
+        let grad = vec![0.05f32; batch * t_count * d];
+        for _ in 0..g.usize_in(5, 20) {
+            let idx: Vec<Vec<u32>> = (0..t_count)
+                .map(|_| (0..batch * l).map(|_| g.rng.below(rows as u64) as u32).collect())
+                .collect();
+            match g.usize_in(0, 5) {
+                0 => sys.lookup_batch(&idx, batch, &mut out, tr, &net, &m),
+                1 | 2 => sys.lookup_batch_cached(&cache, &idx, batch, &mut out, tr, &net, &m),
+                3 => {
+                    let keys: Vec<(usize, u32)> = idx
+                        .iter()
+                        .enumerate()
+                        .flat_map(|(t, v)| v.iter().map(move |&r| (t, r)))
+                        .collect();
+                    sys.prefetch_rows(&cache, &keys, tr, &net, &m);
+                }
+                4 => sys.update_batch(&idx, batch, &grad, tr, &net, &m),
+                _ => {
+                    sys.rebalance(&net, &m);
+                }
+            }
+        }
+        sys.retire_ps(g.usize_in(0, num_ps - 1), &net, &m);
+        assert_eq!(
+            m.snapshot().embedding_bytes,
+            net.role_bytes(Role::EmbeddingPs),
+            "metrics and NIC ledgers diverged (cache capacity {})",
+            cache.len()
+        );
+    });
+}
+
+#[test]
+fn placement_changes_invalidate_cached_rows() {
+    let (sys, net, tr, m) = system(3, 60, 5);
+    let cache = EmbCache::new(256);
+    let (d, l, t_count, batch) = (sys.dim, sys.indices_per_feature, sys.num_tables(), 4);
+    let idx: Vec<Vec<u32>> = (0..t_count)
+        .map(|t| (0..batch * l).map(|k| ((t * 7 + k) % 60) as u32).collect())
+        .collect();
+    let mut out = vec![0f32; batch * t_count * d];
+    sys.lookup_batch_cached(&cache, &idx, batch, &mut out, tr, &net, &m); // warm
+    assert!(!cache.is_empty());
+    sys.lookup_batch_cached(&cache, &idx, batch, &mut out, tr, &net, &m);
+    assert!(cache.stats().hits > 0, "a repeated lookup over an idle table must hit");
+
+    let inv0 = cache.stats().invalidations;
+    sys.retire_ps(0, &net, &m); // topology change: version bump
+    let mut cached = vec![0f32; batch * t_count * d];
+    sys.lookup_batch_cached(&cache, &idx, batch, &mut cached, tr, &net, &m);
+    assert!(
+        cache.stats().invalidations > inv0,
+        "stale-version entries must be evicted, not served"
+    );
+    // the refetched pooling still equals the uncached truth bit for bit
+    let mut plain = vec![0f32; batch * t_count * d];
+    sys.lookup_batch(&idx, batch, &mut plain, tr, &net, &m);
+    for (p, c) in plain.iter().zip(&cached) {
+        assert_eq!(p.to_bits(), c.to_bits());
+    }
+    assert_eq!(m.snapshot().embedding_bytes, net.role_bytes(Role::EmbeddingPs));
+}
+
+#[test]
+fn checkpoint_round_trip_after_hot_key_rebalance_is_bit_equal() {
+    let (sys, net, tr, m) = system(3, 96, 17);
+    let (d, l, t_count, batch) = (sys.dim, sys.indices_per_feature, sys.num_tables(), 4);
+    // drift the weights off init and skew the hot-key stats onto the head
+    let idx: Vec<Vec<u32>> =
+        (0..t_count).map(|t| (0..batch * l).map(|k| ((t + k) % 16) as u32).collect()).collect();
+    let mut out = vec![0f32; batch * t_count * d];
+    let grad = vec![0.2f32; batch * t_count * d];
+    for _ in 0..3 {
+        sys.lookup_batch(&idx, batch, &mut out, tr, &net, &m);
+        sys.update_batch(&idx, batch, &grad, tr, &net, &m);
+    }
+    sys.rebalance(&net, &m);
+
+    let dir = std::env::temp_dir().join(format!("ss_emb_suite_ckpt_{}", std::process::id()));
+    sys.save(&dir).unwrap();
+    // reload into a system with a different roster (2 PSs -> different
+    // bucketing) and a different init seed: rows must route through the
+    // new placement and land bit-equal to the live tables
+    let (sys2, _net2, _tr2, _m2) = system(2, 96, 99);
+    sys2.load_into(&dir).unwrap();
+    for t in 0..t_count {
+        for r in 0..96u32 {
+            let a = sys.shard_of(t, r).row(r);
+            let b = sys2.shard_of(t, r).row(r);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "table {t} row {r} changed across reload");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

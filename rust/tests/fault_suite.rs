@@ -369,6 +369,62 @@ fn transient_crash_departs_then_rejoins() {
     }
 }
 
+/// The embedding tier under a lossy fabric: `metrics.embedding_bytes`
+/// must equal the embedding-PS NIC counters *exactly* while a seeded plan
+/// drops half the transfers touching the trainer — a dropped up-leg
+/// suppresses its down-leg, and neither ledger moves for a faulted leg.
+/// Cache hits, prefetches, and a mid-run hot-key rebalance are all in the
+/// mix (the rebalance's PS↔PS migrations don't touch the trainer, so the
+/// drop plan never intercepts them — but they land on both ledgers too).
+#[test]
+fn embedding_drop_plan_keeps_byte_ledger_exact() {
+    use shadowsync::config::{EmbeddingConfig, ModelMeta};
+    use shadowsync::embedding::{EmbCache, EmbeddingSystem};
+
+    let meta = ModelMeta::parse(
+        r#"{
+      "batch": 4, "bot_mlp": [16, 8], "emb_dim": 8,
+      "name": "t", "num_dense": 4, "num_feats": 5, "num_interactions": 10,
+      "num_params": 537, "num_tables": 4, "seed": 1, "top_mlp": [16]
+    }"#,
+    )
+    .unwrap();
+    let mut net = Network::new(None);
+    let trainer = net.add_node(Role::Trainer);
+    let emb = EmbeddingConfig { rows_per_table: 80, ..Default::default() };
+    let sys = EmbeddingSystem::build(&meta, &emb, 3, &mut net, 9).unwrap();
+    let faults = Arc::new(FaultPlan::parse("drop:t0@0.5", 31).unwrap());
+    let net = net.with_faults(faults.clone());
+    let m = Metrics::new();
+    let cache = EmbCache::new(64);
+    let (d, l, t_count, batch) = (sys.dim, sys.indices_per_feature, sys.num_tables(), 4);
+    let mut rng = Rng::new(0xE0B);
+    let mut out = vec![0f32; batch * t_count * d];
+    let grad = vec![0.1f32; batch * t_count * d];
+    for i in 0..40 {
+        let idx: Vec<Vec<u32>> = (0..t_count)
+            .map(|_| (0..batch * l).map(|_| rng.below(80) as u32).collect())
+            .collect();
+        let keys: Vec<(usize, u32)> = idx
+            .iter()
+            .enumerate()
+            .flat_map(|(t, v)| v.iter().map(move |&r| (t, r)))
+            .collect();
+        sys.prefetch_rows(&cache, &keys, trainer, &net, &m);
+        sys.lookup_batch_cached(&cache, &idx, batch, &mut out, trainer, &net, &m);
+        sys.update_batch(&idx, batch, &grad, trainer, &net, &m);
+        if i == 20 {
+            sys.rebalance(&net, &m);
+        }
+    }
+    assert!(faults.dropped_bytes() > 0, "a 50% drop plan must actually drop");
+    assert_eq!(
+        m.snapshot().embedding_bytes,
+        net.role_bytes(Role::EmbeddingPs),
+        "embedding byte accounting diverged from the NIC counters under drops"
+    );
+}
+
 /// Regression for the retry/backoff bug: a push leg's *summed* doubling
 /// backoff sleeps were unbounded — under a drop-heavy plan with generous
 /// retry settings a single exhausted leg slept for tens of seconds, far

@@ -55,6 +55,7 @@ const RELAXED_REGISTRY: &[&str] = &[
     "delegated",      // shared-nothing outstanding-grant counter (SnState)
     "returned",       // shared-nothing folded-stripe return counter (SnState)
     "published",      // shared-nothing parked-round epoch stamp (SnState)
+    "placement_version", // embedding bucket-placement epoch (EmbeddingSystem)
 ];
 
 /// A deliberately-Relaxed use of a registry identifier, with the argument
